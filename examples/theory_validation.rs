@@ -1,0 +1,51 @@
+//! Theorems 1 & 2, empirically (the `repro validate-theory` path as API).
+//!
+//! Runs the production FedAsync coordinator on closed-form problems where
+//! the optimality gap `F(x_t) − F(x*)` is exactly computable, and compares
+//! the measured geometric contraction to the paper's β:
+//!
+//! * Theorem 1: strongly convex, Option I, `β = 1−α+α(1−γμ)^H`.
+//! * Theorem 2: weakly convex (non-convex!), Option II,
+//!   `β = 1−α+α(1−γ(ρ−μ)/2)^H`.
+//! * Remark 3: the α ↔ variance-floor trade-off under gradient noise.
+//!
+//! ```bash
+//! cargo run --release --example theory_validation
+//! ```
+
+use fedasync::analysis::theory::{
+    alpha_tradeoff_sweep, validate_strongly_convex, validate_weakly_convex, TheoryParams,
+};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    fedasync::util::logging::init();
+    let p = TheoryParams { epochs: 400, ..TheoryParams::default() };
+
+    println!("Theorem 1 — strongly convex quadratic, Option I");
+    println!("  α={} γ={} H={} staleness≤{}", p.alpha, p.gamma, p.h, p.max_staleness);
+    let r1 = validate_strongly_convex(p)?;
+    println!("  β (theory)              = {:.6}", r1.beta);
+    println!("  measured rate per epoch = {:.6}", r1.measured_rate);
+    println!("  gap: {:.3e} → {:.3e}", r1.gap_initial, r1.gap_final);
+    println!("  near-linear convergence, rate ≤ β: {}\n", r1.holds(0.02));
+
+    println!("Theorem 2 — weakly convex (cosine ripple, w=0.1), Option II, ρ=1.0");
+    let r2 = validate_weakly_convex(p, 0.1, 1.0)?;
+    println!("  β (theory)              = {:.6}", r2.beta);
+    println!("  measured rate per epoch = {:.6}", r2.measured_rate);
+    println!("  gap: {:.3e} → {:.3e}", r2.gap_initial, r2.gap_final);
+    println!("  near-linear convergence, rate ≤ β: {}\n", r2.holds(0.05));
+
+    println!("Remark 3 — α controls the convergence/variance trade-off");
+    println!("  (gradient noise σ=0.5; larger α → faster rate but higher floor)");
+    println!("  {:<8} {:<12} {:<12}", "α", "β", "final gap");
+    for (alpha, beta, gap) in alpha_tradeoff_sweep(&[0.1, 0.3, 0.6, 0.9], 0.5, 400, 7)? {
+        println!("  {alpha:<8} {beta:<12.6} {gap:<12.6}");
+    }
+
+    if !(r1.holds(0.02) && r2.holds(0.05)) {
+        return Err("theorem validation failed".into());
+    }
+    println!("\nAll checks passed: FedAsync contracts at least as fast as the paper's β.");
+    Ok(())
+}

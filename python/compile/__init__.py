@@ -1,0 +1,6 @@
+"""Build-time compile stack: L1 Pallas kernels, L2 JAX model, AOT driver.
+
+Nothing in this package is imported at runtime; ``make artifacts`` runs
+``python -m compile.aot`` once, and the rust coordinator consumes only the
+emitted ``artifacts/`` directory (HLO text + manifest + initial params).
+"""

@@ -1,0 +1,160 @@
+"""AOT driver: lower every model entry point to HLO text + manifest.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Per model variant this emits::
+
+    artifacts/<model>/<entry>.hlo.txt      # HLO text, one per entry point
+    artifacts/<model>/init_params_s<k>.bin # raw little-endian f32[P], per seed
+    artifacts/<model>/manifest.json        # shapes/dtypes for the rust loader
+
+**Interchange is HLO text, not a serialized HloModuleProto**: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Lowering uses ``return_tuple=True`` so every output is an HLO tuple the
+rust side unwraps with ``to_tuple()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+from jax.flatten_util import ravel_pytree
+
+from compile.model import MODELS, init_params, layer_summary, make_entries
+
+FORMAT_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> list[dict]:
+    out = []
+    for a in avals:
+        dtype = {"float32": "f32", "int32": "i32"}.get(str(a.dtype), str(a.dtype))
+        out.append({"dtype": dtype, "shape": [int(d) for d in a.shape]})
+    return out
+
+
+def compile_model(name: str, out_root: pathlib.Path, seeds: int, quiet: bool) -> dict:
+    spec = MODELS[name]
+    out_dir = out_root / name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries = make_entries(spec)
+
+    manifest_entries = {}
+    for entry_name, (fn, example_args) in entries.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{entry_name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        out_avals = jax.eval_shape(fn, *example_args)
+        out_avals = jax.tree.leaves(out_avals)
+        manifest_entries[entry_name] = {
+            "file": fname,
+            "inputs": _sig(example_args),
+            "outputs": _sig(out_avals),
+        }
+        if not quiet:
+            print(f"  {name}/{fname}: {len(text):,d} chars")
+
+    init_files = []
+    pcount = None
+    for seed in range(seeds):
+        params = init_params(spec, seed)
+        flat, _ = ravel_pytree(params)
+        arr = np.asarray(flat, dtype="<f4")
+        pcount = int(arr.shape[0])
+        fname = f"init_params_s{seed}.bin"
+        (out_dir / fname).write_bytes(arr.tobytes())
+        init_files.append(fname)
+
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "model": name,
+        "kind": spec.kind,
+        "input_shape": list(spec.input_shape),
+        "num_classes": spec.num_classes,
+        "param_count": pcount,
+        "batch_size": spec.batch_size,
+        "local_iters": spec.local_iters,
+        "eval_batch": spec.eval_batch,
+        "init_params": init_files,
+        "entries": manifest_entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def _inputs_digest(models: list[str]) -> str:
+    """Digest of the compile stack + model list, for the staleness stamp."""
+    h = hashlib.sha256()
+    root = pathlib.Path(__file__).parent
+    for path in sorted(root.rglob("*.py")):
+        h.update(path.read_bytes())
+    h.update(",".join(models).encode())
+    return h.hexdigest()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output root")
+    ap.add_argument(
+        "--models",
+        default="mlp_synth,cnn_small",
+        help="comma-separated model variants (see compile.model.MODELS)",
+    )
+    ap.add_argument("--seeds", type=int, default=3, help="# init-param seeds")
+    ap.add_argument(
+        "--summary", action="store_true", help="print layer summaries and exit"
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    for m in models:
+        if m not in MODELS:
+            ap.error(f"unknown model {m!r}; available: {sorted(MODELS)}")
+
+    if args.summary:
+        for m in models:
+            print("\n".join(layer_summary(MODELS[m])))
+        return 0
+
+    out_root = pathlib.Path(args.out)
+    out_root.mkdir(parents=True, exist_ok=True)
+    digest = _inputs_digest(models)
+    stamp = out_root / "STAMP"
+    if stamp.exists() and stamp.read_text().strip() == digest:
+        print(f"artifacts up to date ({digest[:12]})")
+        return 0
+
+    for m in models:
+        manifest = compile_model(m, out_root, args.seeds, args.quiet)
+        print(
+            f"compiled {m}: {manifest['param_count']:,d} params, "
+            f"{len(manifest['entries'])} entries"
+        )
+    stamp.write_text(digest + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the model HLO).
+
+Every kernel has a pure-jnp oracle in :mod:`compile.kernels.ref`; pytest
+asserts elementwise agreement over hypothesis-generated shapes.
+"""
+
+from compile.kernels.dense import dense, matmul
+from compile.kernels.mixing import mix
+from compile.kernels.prox_sgd import prox_sgd
+
+__all__ = ["dense", "matmul", "mix", "prox_sgd"]

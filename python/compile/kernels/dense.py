@@ -1,0 +1,136 @@
+"""Tiled Pallas matmul + fused dense layer for the model's FC layers.
+
+The paper's CNN (Table 2) ends in fully-connected layers; the MLP variant
+used for the large figure sweeps is dense-only.  Both route their matmuls
+through the tiled kernel here.
+
+Kernel shape
+------------
+Classic MXU-oriented tiling: grid ``(M/bm, N/bn, K/bk)`` with the K axis
+innermost, accumulating partial products into the output block (revisited
+across the K steps, so no scratch accumulator is needed).  Inputs whose
+dims are not multiples of the block are zero-padded by the wrapper (zero
+rows/cols contribute nothing to the product) and the result is sliced back.
+
+Block defaults ``(bm, bk, bn) = (256, 2048, 256)``: each block pair is a
+whole multiple of the 128×128 MXU tile (the systolic array stays saturated)
+and the worst-case VMEM residency is ``bm·bk + bk·bn + bm·bn`` f32 ≈ 4.3 MiB
+— well inside the ~16 MiB budget.  Large blocks matter doubly here: on TPU
+they amortize the K-loop pipeline; on the CPU-interpret path every grid
+step pays ~0.5 ms of dispatch (EXPERIMENTS.md §Perf), so fewer, larger
+steps dominate.  (The original 128³ tiling cost 18 K-steps for the CNN's
+2304×128 FC layer; these defaults cover it in 2.)
+
+Autodiff
+--------
+Pallas kernels have no automatic VJP, so ``dense`` is a ``jax.custom_vjp``
+whose forward *and* backward both route through the tiled ``matmul``:
+
+    y  = act(x @ w + b)
+    dx = dy' @ wᵀ        dw = xᵀ @ dy'       db = Σ_rows dy'
+
+with ``dy' = dy ⊙ act'``.  The elementwise bias/activation epilogue stays
+in jnp — XLA fuses it into the surrounding ops, and keeping it out of the
+kernel keeps the VJP exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BK, BN = 256, 2048, 256
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(a: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    pm, pn = (-a.shape[0]) % m, (-a.shape[1]) % n
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+) -> jnp.ndarray:
+    """Tiled Pallas matmul ``a[M,K] @ b[K,N] -> f32[M,N]``."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    # Shrink blocks to the (8-aligned) padded dims so tiny layers don't pad
+    # all the way to 128; the padded dims stay divisible by the block.
+    bm_ = min(bm, _round_up(m, 8))
+    bk_ = min(bk, _round_up(k, 8))
+    bn_ = min(bn, _round_up(n, 8))
+    a = _pad2(a.astype(jnp.float32), bm_, bk_)
+    b = _pad2(b.astype(jnp.float32), bk_, bn_)
+    mp, kp = a.shape
+    _, np_ = b.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return x + (-x) % m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "none"):
+    """Fused dense layer ``act(x @ w + b)`` with a Pallas-tiled matmul."""
+    return _dense_fwd(x, w, b, activation)[0]
+
+
+def _dense_fwd(x, w, b, activation):
+    y = matmul(x, w) + b
+    if activation == "relu":
+        out = jnp.maximum(y, 0.0)
+    elif activation == "none":
+        out = y
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return out, (x, w, y)
+
+
+def _dense_bwd(activation, res, dy):
+    x, w, y = res
+    if activation == "relu":
+        dy = dy * (y > 0.0).astype(dy.dtype)
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

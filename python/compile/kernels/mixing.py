@@ -1,0 +1,86 @@
+"""Pallas kernel for the FedAsync server mixing update (paper §4).
+
+``x_t = (1 - α)·x_{t-1} + α·x_new`` over the flat parameter vector.
+
+This is the *only* compute the server performs per global epoch, so it is
+the L3 hot path.  The kernel is a single streaming pass: each grid step
+pulls one VMEM-sized block of ``x`` and ``x_new`` from HBM, blends, and
+writes one block back — arithmetic intensity ≈ 3 FLOPs / 12 bytes, i.e.
+bandwidth-bound; the right objective is "one pass, no re-reads", which the
+BlockSpec below encodes.
+
+On real TPU each f32 block of ``BLOCK`` elements occupies ``BLOCK*4`` bytes
+of VMEM per operand (3 operands live at once), so ``BLOCK=262144`` ⇒ 3 MiB
+of VMEM — comfortably under the ~16 MiB budget while still leaving the
+Mosaic pipeline room to double-buffer.  ``interpret=True`` is mandatory
+here: the CPU PJRT plugin cannot execute Mosaic custom-calls, so the kernel
+lowers to plain HLO (a fori over the grid of dynamic-slices).
+
+Block-size choice (EXPERIMENTS.md §Perf): under interpretation each grid
+step costs ~0.5 ms of dispatch regardless of block size (measured sweep at
+P=165k: 8 KiB-blocks → 4.4 ms, 64 KiB → 1.2 ms, one block → 0.13 ms), so
+the default block is the largest VMEM-valid one — minimizing grid steps is
+the right objective on both the CPU-interpret path and a bandwidth-bound
+TPU stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Streaming block: multiple of the (8, 128) f32 VMEM tile; see module doc.
+BLOCK = 262144
+
+
+def _mix_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    a = alpha_ref[0]
+    o_ref[...] = (1.0 - a) * x_ref[...] + a * y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def mix(
+    x: jnp.ndarray,
+    x_new: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Blend flat parameter vectors: ``(1-α)·x + α·x_new``.
+
+    Args:
+      x: flat ``f32[P]`` current global model.
+      x_new: flat ``f32[P]`` locally-trained model pushed by a worker.
+      alpha: scalar mixing weight ``α_t`` (already staleness-adapted by the
+        caller; see ``coordinator/staleness.rs`` on the rust side).
+      block: streaming block size (elements).
+
+    Returns:
+      flat ``f32[P]`` updated global model.
+    """
+    if x.shape != x_new.shape or x.ndim != 1:
+        raise ValueError(f"mix expects equal flat vectors, got {x.shape} vs {x_new.shape}")
+    p = x.shape[0]
+    block = min(block, max(p, 1))
+    pad = (-p) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        x_new = jnp.pad(x_new, (0, pad))
+    alpha = jnp.asarray(alpha, jnp.float32).reshape((1,))
+    grid = (x.shape[0] // block,)
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # alpha, replicated
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(alpha, x, x_new)
+    return out[:p]

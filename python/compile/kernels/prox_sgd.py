@@ -1,0 +1,86 @@
+"""Pallas kernel for the fused worker update (paper Algorithm 1).
+
+Option II (weakly-convex ``F``) runs SGD on the regularized surrogate
+``g_{x_t}(x; z) = f(x; z) + ρ/2·‖x − x_t‖²`` whose gradient is
+``∇f + ρ·(x − x_t)``, so the parameter update is
+
+    ``x ← x − γ·(∇f(x;z) + ρ·(x − anchor))``
+
+Option I (strongly-convex ``F``) is the special case ``ρ = 0``.
+
+Fusing the proximal pull into the SGD apply matters: done naively this is
+three elementwise passes over the parameter vector (compute ``x − anchor``,
+axpy into the gradient, apply the step), i.e. 3× the HBM traffic of the
+single streaming pass below.  Same VMEM accounting as ``mixing.py``:
+4 operands × BLOCK × 4 B = 4 MiB at the default block — VMEM-valid, and
+the large block minimizes interpret-mode grid steps (see the measured
+sweep in ``mixing.py``'s module doc / EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 262144
+
+
+def _prox_sgd_kernel(scalars_ref, x_ref, g_ref, a_ref, o_ref):
+    gamma = scalars_ref[0]
+    rho = scalars_ref[1]
+    x = x_ref[...]
+    o_ref[...] = x - gamma * (g_ref[...] + rho * (x - a_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def prox_sgd(
+    x: jnp.ndarray,
+    grad: jnp.ndarray,
+    anchor: jnp.ndarray,
+    gamma: jnp.ndarray,
+    rho: jnp.ndarray,
+    *,
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Apply one fused (prox-)SGD step to the flat parameter vector.
+
+    Args:
+      x: flat ``f32[P]`` current local model.
+      grad: flat ``f32[P]`` minibatch gradient ``∇f(x; z)``.
+      anchor: flat ``f32[P]`` global model ``x_t`` the task started from.
+      gamma: scalar learning rate ``γ``.
+      rho: scalar proximal weight ``ρ`` (0 disables the proximal term).
+      block: streaming block size (elements).
+    """
+    if not (x.shape == grad.shape == anchor.shape) or x.ndim != 1:
+        raise ValueError(
+            f"prox_sgd expects equal flat vectors, got {x.shape}/{grad.shape}/{anchor.shape}"
+        )
+    p = x.shape[0]
+    block = min(block, max(p, 1))
+    pad = (-p) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        grad = jnp.pad(grad, (0, pad))
+        anchor = jnp.pad(anchor, (0, pad))
+    scalars = jnp.stack(
+        [jnp.asarray(gamma, jnp.float32), jnp.asarray(rho, jnp.float32)]
+    )
+    grid = (x.shape[0] // block,)
+    out = pl.pallas_call(
+        _prox_sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),  # (gamma, rho), replicated
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(scalars, x, grad, anchor)
+    return out[:p]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (``python/tests``) asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated shapes
+and dtypes.  Keep each oracle a direct transcription of the math in the
+paper, with no tiling/padding tricks, so a mismatch always indicts the
+kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mix_ref(x: jnp.ndarray, x_new: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """FedAsync server update (paper §4): ``x_t = (1-α)·x_{t-1} + α·x_new``."""
+    alpha = jnp.asarray(alpha, x.dtype)
+    return (1.0 - alpha) * x + alpha * x_new
+
+
+def prox_sgd_ref(
+    x: jnp.ndarray,
+    grad: jnp.ndarray,
+    anchor: jnp.ndarray,
+    gamma: jnp.ndarray,
+    rho: jnp.ndarray,
+) -> jnp.ndarray:
+    """Worker-side fused prox-SGD step (paper Algorithm 1, Option II).
+
+    ``x ← x − γ·(∇f(x;z) + ρ·(x − x_t))`` where ``anchor = x_t`` is the global
+    model the worker started from.  Option I is the special case ``ρ = 0``.
+    """
+    gamma = jnp.asarray(gamma, x.dtype)
+    rho = jnp.asarray(rho, x.dtype)
+    return x - gamma * (grad + rho * (x - anchor))
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle for the tiled Pallas matmul."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def dense_ref(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str = "none"
+) -> jnp.ndarray:
+    """Fused dense layer oracle: ``act(x @ w + b)``."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y

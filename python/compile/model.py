@@ -1,0 +1,312 @@
+"""Layer-2 JAX model: the paper's CNN (Table 2) plus a fast MLP variant.
+
+All entry points exposed to the rust runtime operate on a **flat** ``f32[P]``
+parameter vector — the pytree (un)flattening is compiled into the HLO — so
+the coordinator never needs to know the model structure.  The worker-side
+update (paper Algorithm 1, Options I/II) and the server-side mixing (paper
+§4) both route through the Layer-1 Pallas kernels.
+
+Differences from Table 2, documented as substitutions in DESIGN.md:
+
+* BatchNorm and Dropout are omitted.  Both require per-call state (running
+  moments / RNG) that does not fit a stateless flat-vector AOT interface,
+  and neither interacts with the paper's contribution (the asynchronous
+  server update).  Topology, kernel sizes, pooling, and the FC head match.
+* Channel widths are configurable; ``cnn_paper`` uses the paper's
+  (64, 64, 128, 128, fc=512), ``cnn_small`` a width-scaled variant for the
+  1-core CPU budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.kernels import dense, mix, prox_sgd
+
+
+# --------------------------------------------------------------------------
+# Model specs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one compiled model variant."""
+
+    name: str
+    kind: str  # "mlp" | "cnn"
+    input_shape: tuple[int, ...]
+    num_classes: int = 10
+    hidden: tuple[int, ...] = ()  # mlp only
+    channels: tuple[int, int, int, int] = (64, 64, 128, 128)  # cnn only
+    fc_width: int = 512  # cnn only
+    batch_size: int = 50  # paper §6.1: minibatch size 50
+    local_iters: int = 10  # H: paper uses one full local pass = 500/50
+    eval_batch: int = 256
+    # Unroll the H-step lax.scan in train_epoch_*. Measured on CPU-PJRT
+    # (EXPERIMENTS.md §Perf): conv graphs inside a rolled scan defeat XLA's
+    # fusion/layout hoisting (7.0 s/epoch scanned vs 0.48 s unrolled for
+    # cnn_small), while the tiny MLP is *faster* rolled (1.0 ms vs 2.1 ms).
+    unroll_epoch: bool = False
+
+    @property
+    def input_size(self) -> int:
+        size = 1
+        for d in self.input_shape:
+            size *= d
+        return size
+
+
+MODELS: dict[str, ModelSpec] = {
+    # Fast variant for the large figure sweeps (feature-mode dataset).
+    "mlp_synth": ModelSpec(
+        name="mlp_synth",
+        kind="mlp",
+        input_shape=(32,),
+        hidden=(64, 64),
+        eval_batch=256,
+    ),
+    # Width-scaled Table-2 CNN for the e2e driver on 1 CPU core.
+    "cnn_small": ModelSpec(
+        name="cnn_small",
+        kind="cnn",
+        input_shape=(24, 24, 3),
+        channels=(16, 16, 32, 32),
+        fc_width=128,
+        eval_batch=100,
+        unroll_epoch=True,
+    ),
+    # The paper's CNN at full width (compile-on-demand; heavy on CPU).
+    "cnn_paper": ModelSpec(
+        name="cnn_paper",
+        kind="cnn",
+        input_shape=(24, 24, 3),
+        channels=(64, 64, 128, 128),
+        fc_width=512,
+        eval_batch=100,
+        unroll_epoch=True,
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_params(spec: ModelSpec, seed: int = 0):
+    """He-initialized parameter pytree for ``spec``."""
+    key = jax.random.PRNGKey(seed)
+    params: dict[str, jnp.ndarray] = {}
+    if spec.kind == "mlp":
+        dims = (spec.input_size, *spec.hidden, spec.num_classes)
+        for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+            key, sub = jax.random.split(key)
+            params[f"w{i}"] = _he(sub, (din, dout), din)
+            params[f"b{i}"] = jnp.zeros((dout,), jnp.float32)
+    elif spec.kind == "cnn":
+        h, w, cin = spec.input_shape
+        chans = (cin, *spec.channels)
+        for i, (ci, co) in enumerate(zip(chans[:-1], chans[1:])):
+            key, sub = jax.random.split(key)
+            params[f"conv{i}_w"] = _he(sub, (3, 3, ci, co), 9 * ci)
+            params[f"conv{i}_b"] = jnp.zeros((co,), jnp.float32)
+        # Two 2x2 max-pools halve each spatial dim twice.
+        flat_dim = (h // 4) * (w // 4) * spec.channels[-1]
+        key, sub = jax.random.split(key)
+        params["fc0_w"] = _he(sub, (flat_dim, spec.fc_width), flat_dim)
+        params["fc0_b"] = jnp.zeros((spec.fc_width,), jnp.float32)
+        key, sub = jax.random.split(key)
+        params["fc1_w"] = _he(sub, (spec.fc_width, spec.num_classes), spec.fc_width)
+        params["fc1_b"] = jnp.zeros((spec.num_classes,), jnp.float32)
+    else:
+        raise ValueError(f"unknown model kind {spec.kind!r}")
+    return params
+
+
+def flatten_spec(spec: ModelSpec):
+    """Return ``(param_count, unravel_fn)`` for ``spec``'s parameter pytree."""
+    template = jax.eval_shape(lambda: init_params(spec, 0))
+    flat, unravel = ravel_pytree(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+    )
+    return int(flat.shape[0]), unravel
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+
+def _conv_relu(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jnp.maximum(y + b, 0.0)
+
+
+def _max_pool2(x):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def forward(spec: ModelSpec, params, images: jnp.ndarray) -> jnp.ndarray:
+    """Logits ``f32[B, num_classes]`` for a batch of inputs."""
+    if spec.kind == "mlp":
+        x = images.reshape(images.shape[0], -1)
+        nl = len(spec.hidden)
+        for i in range(nl):
+            x = dense(x, params[f"w{i}"], params[f"b{i}"], "relu")
+        return dense(x, params[f"w{nl}"], params[f"b{nl}"], "none")
+    # CNN per Table 2 (BN/dropout omitted, see module docstring):
+    # [conv-relu ×2, pool] ×2, fc(relu), fc(logits).
+    x = images
+    x = _conv_relu(x, params["conv0_w"], params["conv0_b"])
+    x = _conv_relu(x, params["conv1_w"], params["conv1_b"])
+    x = _max_pool2(x)
+    x = _conv_relu(x, params["conv2_w"], params["conv2_b"])
+    x = _conv_relu(x, params["conv3_w"], params["conv3_b"])
+    x = _max_pool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = dense(x, params["fc0_w"], params["fc0_b"], "relu")
+    return dense(x, params["fc1_w"], params["fc1_b"], "none")
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; ``labels`` are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Entry points (flat-vector interface, AOT-lowered by aot.py)
+# --------------------------------------------------------------------------
+
+
+def make_entries(spec: ModelSpec) -> dict[str, tuple[Callable, tuple]]:
+    """Build ``{entry_name: (fn, example_args)}`` for AOT lowering.
+
+    Every ``fn`` consumes/produces flat ``f32[P]`` parameter vectors and
+    returns a tuple (lowered with ``return_tuple=True``, unwrapped as an
+    HLO tuple on the rust side).
+    """
+    pcount, unravel = flatten_spec(spec)
+
+    def loss_from_flat(flat, images, labels):
+        return cross_entropy(forward(spec, unravel(flat), images), labels)
+
+    loss_and_grad = jax.value_and_grad(loss_from_flat)
+
+    def train_step_sgd(flat, images, labels, gamma):
+        """Paper Algorithm 1, Option I: one plain SGD minibatch step."""
+        loss, g = loss_and_grad(flat, images, labels)
+        # rho=0 disables the proximal pull; same fused kernel either way.
+        return prox_sgd(flat, g, flat, gamma, jnp.float32(0.0)), loss
+
+    def train_step_prox(flat, anchor, images, labels, gamma, rho):
+        """Paper Algorithm 1, Option II: fused prox-SGD minibatch step."""
+        loss, g = loss_and_grad(flat, images, labels)
+        return prox_sgd(flat, g, anchor, gamma, rho), loss
+
+    # See ModelSpec.unroll_epoch for why CNNs unroll and the MLP does not.
+    # The unroll is a *python* loop (fully inlined at trace time), not
+    # lax.scan(unroll=H): the latter emits `call`s to a shared step
+    # computation, which the runtime's XLA (xla_extension 0.5.1) fails to
+    # optimize across — measured 7.2 s/epoch vs 0.95 s for the inline form
+    # on cnn_small (EXPERIMENTS.md §Perf).
+    def _epoch(flat, anchor_of, images, labels, gamma, rho):
+        if spec.unroll_epoch:
+            losses = []
+            for h in range(spec.local_iters):
+                loss, g = loss_and_grad(flat, images[h], labels[h])
+                flat = prox_sgd(flat, g, anchor_of(flat), gamma, rho)
+                losses.append(loss)
+            return flat, jnp.mean(jnp.stack(losses))
+
+        def body(carry, batch):
+            im, lb = batch
+            loss, g = loss_and_grad(carry, im, lb)
+            return prox_sgd(carry, g, anchor_of(carry), gamma, rho), loss
+
+        flat, losses = jax.lax.scan(body, flat, (images, labels))
+        return flat, jnp.mean(losses)
+
+    def train_epoch_sgd(flat, images, labels, gamma):
+        """H Option-I steps fused into one call (hot path)."""
+        return _epoch(flat, lambda x: x, images, labels, gamma, jnp.float32(0.0))
+
+    def train_epoch_prox(flat, anchor, images, labels, gamma, rho):
+        """H Option-II steps fused into one call (hot path)."""
+        return _epoch(flat, lambda _: anchor, images, labels, gamma, rho)
+
+    def eval_batch(flat, images, labels):
+        """Summed loss + correct count over one eval batch."""
+        logits = forward(spec, unravel(flat), images)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        )
+        return jnp.sum(nll), correct
+
+    def mix_entry(x, x_new, alpha):
+        """Server mixing update via the Pallas kernel."""
+        return (mix(x, x_new, alpha),)
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    p = jax.ShapeDtypeStruct((pcount,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    b, h, be = spec.batch_size, spec.local_iters, spec.eval_batch
+    img = jax.ShapeDtypeStruct((b, *spec.input_shape), f32)
+    lbl = jax.ShapeDtypeStruct((b,), i32)
+    imgs = jax.ShapeDtypeStruct((h, b, *spec.input_shape), f32)
+    lbls = jax.ShapeDtypeStruct((h, b), i32)
+    eimg = jax.ShapeDtypeStruct((be, *spec.input_shape), f32)
+    elbl = jax.ShapeDtypeStruct((be,), i32)
+
+    return {
+        "train_step_sgd": (train_step_sgd, (p, img, lbl, scalar)),
+        "train_step_prox": (train_step_prox, (p, p, img, lbl, scalar, scalar)),
+        "train_epoch_sgd": (train_epoch_sgd, (p, imgs, lbls, scalar)),
+        "train_epoch_prox": (train_epoch_prox, (p, p, imgs, lbls, scalar, scalar)),
+        "eval_batch": (eval_batch, (p, eimg, elbl)),
+        "mix": (mix_entry, (p, p, scalar)),
+    }
+
+
+def layer_summary(spec: ModelSpec) -> list[str]:
+    """Human-readable Table-2-style layer summary."""
+    rows = [f"model {spec.name} (kind={spec.kind}, input={spec.input_shape})"]
+    params = jax.eval_shape(functools.partial(init_params, spec), 0)
+    total = 0
+    for name in sorted(params):
+        shape = params[name].shape
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+        rows.append(f"  {name:<10} {str(shape):<20} {n:>10,d} params")
+    rows.append(f"  {'total':<10} {'':<20} {total:>10,d} params")
+    return rows

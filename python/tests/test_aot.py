@@ -1,0 +1,119 @@
+"""AOT pipeline: manifests, HLO text, and init-param binaries.
+
+Requires ``make artifacts`` to have run (skips otherwise) — these validate
+the on-disk contract the rust loader (`rust/src/runtime/manifest.rs`)
+consumes.
+"""
+
+import json
+import pathlib
+import struct
+
+import numpy as np
+import pytest
+
+from compile.model import MODELS, flatten_spec
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+REQUIRED_ENTRIES = {
+    "train_step_sgd",
+    "train_step_prox",
+    "train_epoch_sgd",
+    "train_epoch_prox",
+    "eval_batch",
+    "mix",
+}
+
+
+def _model_dirs():
+    if not ARTIFACTS.exists():
+        return []
+    return sorted(d for d in ARTIFACTS.iterdir() if (d / "manifest.json").exists())
+
+
+pytestmark = pytest.mark.skipif(
+    not _model_dirs(), reason="artifacts/ not built (run `make artifacts`)"
+)
+
+
+@pytest.mark.parametrize("mdir", _model_dirs(), ids=lambda d: d.name)
+def test_manifest_schema(mdir):
+    man = json.loads((mdir / "manifest.json").read_text())
+    assert man["format_version"] == 1
+    assert man["model"] == mdir.name
+    assert man["param_count"] > 0
+    assert REQUIRED_ENTRIES <= set(man["entries"])
+    for entry in man["entries"].values():
+        assert (mdir / entry["file"]).exists()
+        for sig in entry["inputs"] + entry["outputs"]:
+            assert sig["dtype"] in ("f32", "i32")
+            assert all(isinstance(d, int) for d in sig["shape"])
+
+
+@pytest.mark.parametrize("mdir", _model_dirs(), ids=lambda d: d.name)
+def test_param_count_matches_model(mdir):
+    man = json.loads((mdir / "manifest.json").read_text())
+    pcount, _ = flatten_spec(MODELS[mdir.name])
+    assert man["param_count"] == pcount
+
+
+@pytest.mark.parametrize("mdir", _model_dirs(), ids=lambda d: d.name)
+def test_init_param_binaries(mdir):
+    man = json.loads((mdir / "manifest.json").read_text())
+    p = man["param_count"]
+    seen = []
+    for fname in man["init_params"]:
+        raw = (mdir / fname).read_bytes()
+        assert len(raw) == 4 * p, fname
+        arr = np.frombuffer(raw, dtype="<f4")
+        assert np.all(np.isfinite(arr)), fname
+        assert float(np.abs(arr).max()) < 10.0, "init params implausibly large"
+        seen.append(arr)
+    # Different seeds must differ.
+    for i in range(1, len(seen)):
+        assert not np.array_equal(seen[0], seen[i])
+
+
+@pytest.mark.parametrize("mdir", _model_dirs(), ids=lambda d: d.name)
+def test_hlo_text_parses_as_module(mdir):
+    """HLO text (not proto) is the interchange; sanity-check its header and
+    that every entry computation declares the manifest's parameter count."""
+    man = json.loads((mdir / "manifest.json").read_text())
+    for name, entry in man["entries"].items():
+        text = (mdir / entry["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+@pytest.mark.parametrize("mdir", _model_dirs(), ids=lambda d: d.name)
+def test_entry_shapes_consistent(mdir):
+    """Cross-field consistency: batch/H/eval sizes vs entry signatures."""
+    man = json.loads((mdir / "manifest.json").read_text())
+    p = man["param_count"]
+    b = man["batch_size"]
+    h = man["local_iters"]
+    be = man["eval_batch"]
+    ishape = man["input_shape"]
+
+    e = man["entries"]["train_step_sgd"]
+    assert e["inputs"][0]["shape"] == [p]
+    assert e["inputs"][1]["shape"] == [b, *ishape]
+    assert e["outputs"][0]["shape"] == [p]
+
+    e = man["entries"]["train_epoch_prox"]
+    assert e["inputs"][0]["shape"] == [p]
+    assert e["inputs"][1]["shape"] == [p]
+    assert e["inputs"][2]["shape"] == [h, b, *ishape]
+    assert e["inputs"][3]["shape"] == [h, b]
+
+    e = man["entries"]["eval_batch"]
+    assert e["inputs"][1]["shape"] == [be, *ishape]
+
+    e = man["entries"]["mix"]
+    assert [s["shape"] for s in e["inputs"]] == [[p], [p], []]
+    assert e["outputs"][0]["shape"] == [p]
+
+
+def test_stamp_present():
+    assert (ARTIFACTS / "STAMP").exists()

@@ -1,0 +1,206 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-block-multiple and degenerate
+sizes) and value scales; assert_allclose at float32 tolerances.  This is
+the core correctness signal for the compiled artifacts: the same kernels
+are lowered into every train/mix HLO the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import dense, matmul, mix, prox_sgd
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def _vec(rng, n, scale=1.0):
+    return jnp.asarray(rng.normal(scale=scale, size=n), jnp.float32)
+
+
+# ---------------------------------------------------------------- mixing ---
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 20000),
+    alpha=st.floats(0.0, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mix_matches_ref(n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _vec(rng, n), _vec(rng, n)
+    got = mix(x, y, alpha)
+    want = ref.mix_ref(x, y, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("block", [8, 128, 1024, 8192])
+def test_mix_block_invariance(block):
+    """The streaming block size is a perf knob, never a numerics knob."""
+    rng = np.random.default_rng(0)
+    x, y = _vec(rng, 5000), _vec(rng, 5000)
+    base = ref.mix_ref(x, y, 0.37)
+    np.testing.assert_allclose(mix(x, y, 0.37, block=block), base, rtol=1e-5, atol=1e-6)
+
+
+def test_mix_endpoints():
+    rng = np.random.default_rng(1)
+    x, y = _vec(rng, 777), _vec(rng, 777)
+    np.testing.assert_allclose(mix(x, y, 0.0), x, rtol=1e-6)
+    np.testing.assert_allclose(mix(x, y, 1.0), y, rtol=1e-6)
+
+
+def test_mix_is_convex_combination():
+    """x_t must lie on the segment [x, x_new] coordinatewise."""
+    rng = np.random.default_rng(2)
+    x, y = _vec(rng, 513), _vec(rng, 513)
+    out = np.asarray(mix(x, y, 0.25))
+    lo = np.minimum(np.asarray(x), np.asarray(y)) - 1e-6
+    hi = np.maximum(np.asarray(x), np.asarray(y)) + 1e-6
+    assert np.all(out >= lo) and np.all(out <= hi)
+
+
+def test_mix_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        mix(jnp.zeros(4), jnp.zeros(5), 0.5)
+
+
+# -------------------------------------------------------------- prox sgd ---
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 20000),
+    gamma=st.floats(1e-4, 1.0, allow_nan=False),
+    rho=st.floats(0.0, 2.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prox_sgd_matches_ref(n, gamma, rho, seed):
+    rng = np.random.default_rng(seed)
+    x, g, a = _vec(rng, n), _vec(rng, n), _vec(rng, n)
+    got = prox_sgd(x, g, a, gamma, rho)
+    want = ref.prox_sgd_ref(x, g, a, gamma, rho)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_prox_sgd_rho_zero_is_plain_sgd():
+    rng = np.random.default_rng(3)
+    x, g, a = _vec(rng, 999), _vec(rng, 999), _vec(rng, 999)
+    got = prox_sgd(x, g, a, 0.05, 0.0)
+    np.testing.assert_allclose(got, x - 0.05 * g, rtol=1e-5, atol=1e-6)
+
+
+def test_prox_sgd_pulls_toward_anchor():
+    """With g=0, the prox step strictly contracts ‖x − anchor‖."""
+    rng = np.random.default_rng(4)
+    x, a = _vec(rng, 1000), _vec(rng, 1000)
+    g = jnp.zeros(1000, jnp.float32)
+    out = prox_sgd(x, g, a, 0.1, 1.0)
+    assert float(jnp.linalg.norm(out - a)) < float(jnp.linalg.norm(x - a))
+
+
+def test_prox_sgd_fixed_point():
+    """x = anchor, g = 0 is a fixed point."""
+    rng = np.random.default_rng(5)
+    a = _vec(rng, 321)
+    out = prox_sgd(a, jnp.zeros_like(a), a, 0.3, 0.7)
+    np.testing.assert_allclose(out, a, rtol=1e-6, atol=1e-7)
+
+
+def test_prox_sgd_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        prox_sgd(jnp.zeros(4), jnp.zeros(4), jnp.zeros(3), 0.1, 0.1)
+
+
+# ---------------------------------------------------------------- matmul ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_multi_tile():
+    """Exercise a grid with >1 block along every axis."""
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(size=(300, 260)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(260, 200)), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_matmul_identity():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    np.testing.assert_allclose(matmul(a, eye), a, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_mismatch():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+# ----------------------------------------------------------------- dense ---
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    np.testing.assert_allclose(
+        dense(x, w, b, act), ref.dense_ref(x, w, b, act), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("act", ["none", "relu"])
+def test_dense_vjp_matches_ref(act):
+    """custom_vjp gradients vs jax.grad through the jnp oracle."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(50, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+
+    def f(x, w, b):
+        return jnp.sum(jnp.sin(dense(x, w, b, act)))
+
+    def fr(x, w, b):
+        return jnp.sum(jnp.sin(ref.dense_ref(x, w, b, act)))
+
+    gx, gw, gb = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    rx, rw, rb = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gb, rb, rtol=1e-3, atol=1e-4)
+
+
+def test_dense_rejects_unknown_activation():
+    with pytest.raises(ValueError):
+        dense(jnp.zeros((2, 2)), jnp.zeros((2, 2)), jnp.zeros((2,)), "gelu")

@@ -1,0 +1,206 @@
+"""L2 correctness: model shapes, gradients, and entry-point semantics.
+
+These tests exercise exactly the functions that aot.py lowers, so passing
+here means the *math* inside the artifacts is right; the rust integration
+tests then only need to check the FFI plumbing.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    MODELS,
+    cross_entropy,
+    flatten_spec,
+    forward,
+    init_params,
+    layer_summary,
+    make_entries,
+)
+
+SPEC = MODELS["mlp_synth"]
+
+
+def _batch(spec, n, seed=0):
+    rng = np.random.default_rng(seed)
+    images = jnp.asarray(rng.normal(size=(n, *spec.input_shape)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, spec.num_classes, size=n), jnp.int32)
+    return images, labels
+
+
+def _flat_params(spec, seed=0):
+    from jax.flatten_util import ravel_pytree
+
+    flat, _ = ravel_pytree(init_params(spec, seed))
+    return flat
+
+
+# ------------------------------------------------------------- structure ---
+
+
+@pytest.mark.parametrize("name", ["mlp_synth", "cnn_small"])
+def test_forward_shapes(name):
+    spec = MODELS[name]
+    params = init_params(spec, 0)
+    images, _ = _batch(spec, 4)
+    logits = forward(spec, params, images)
+    assert logits.shape == (4, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ["mlp_synth", "cnn_small", "cnn_paper"])
+def test_flatten_roundtrip(name):
+    spec = MODELS[name]
+    pcount, unravel = flatten_spec(spec)
+    from jax.flatten_util import ravel_pytree
+
+    params = init_params(spec, 1)
+    flat, _ = ravel_pytree(params)
+    assert flat.shape == (pcount,)
+    back = unravel(flat)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(back[k]))
+
+
+def test_init_params_seed_determinism():
+    a = _flat_params(SPEC, 7)
+    b = _flat_params(SPEC, 7)
+    c = _flat_params(SPEC, 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+def test_layer_summary_counts_match_flatten():
+    for name in ["mlp_synth", "cnn_small"]:
+        spec = MODELS[name]
+        pcount, _ = flatten_spec(spec)
+        total_row = layer_summary(spec)[-1]
+        assert f"{pcount:,d}" in total_row
+
+
+def test_cross_entropy_uniform_logits():
+    """CE of all-equal logits is log(C)."""
+    logits = jnp.zeros((8, 10))
+    labels = jnp.arange(8, dtype=jnp.int32) % 10
+    np.testing.assert_allclose(
+        cross_entropy(logits, labels), np.log(10.0), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------- entry points ---
+
+
+def test_train_step_sgd_decreases_loss_on_fixed_batch():
+    entries = make_entries(SPEC)
+    fn, _ = entries["train_step_sgd"]
+    flat = _flat_params(SPEC)
+    images, labels = _batch(SPEC, SPEC.batch_size)
+    losses = []
+    for _ in range(20):
+        flat, loss = fn(flat, images, labels, jnp.float32(0.1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_train_epoch_equals_composed_steps():
+    """train_epoch_sgd(H batches) ≡ H sequential train_step_sgd calls."""
+    entries = make_entries(SPEC)
+    step, _ = entries["train_step_sgd"]
+    epoch, _ = entries["train_epoch_sgd"]
+    h, b = SPEC.local_iters, SPEC.batch_size
+    rng = np.random.default_rng(1)
+    images = jnp.asarray(rng.normal(size=(h, b, *SPEC.input_shape)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, size=(h, b)), jnp.int32)
+    flat0 = _flat_params(SPEC)
+    gamma = jnp.float32(0.05)
+
+    flat_seq = flat0
+    step_losses = []
+    for i in range(h):
+        flat_seq, loss = step(flat_seq, images[i], labels[i], gamma)
+        step_losses.append(float(loss))
+    flat_epoch, mean_loss = epoch(flat0, images, labels, gamma)
+    np.testing.assert_allclose(
+        np.asarray(flat_epoch), np.asarray(flat_seq), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(float(mean_loss), np.mean(step_losses), rtol=1e-5)
+
+
+def test_train_epoch_prox_equals_composed_steps():
+    entries = make_entries(SPEC)
+    step, _ = entries["train_step_prox"]
+    epoch, _ = entries["train_epoch_prox"]
+    h, b = SPEC.local_iters, SPEC.batch_size
+    rng = np.random.default_rng(2)
+    images = jnp.asarray(rng.normal(size=(h, b, *SPEC.input_shape)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, size=(h, b)), jnp.int32)
+    flat0 = _flat_params(SPEC)
+    anchor = _flat_params(SPEC, 3)
+    gamma, rho = jnp.float32(0.05), jnp.float32(0.1)
+
+    flat_seq = flat0
+    for i in range(h):
+        flat_seq, _ = step(flat_seq, anchor, images[i], labels[i], gamma, rho)
+    flat_epoch, _ = epoch(flat0, anchor, images, labels, gamma, rho)
+    np.testing.assert_allclose(
+        np.asarray(flat_epoch), np.asarray(flat_seq), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_prox_keeps_iterate_closer_to_anchor():
+    """Option II with large ρ stays closer to the anchor than Option I."""
+    entries = make_entries(SPEC)
+    sgd, _ = entries["train_epoch_sgd"]
+    prox, _ = entries["train_epoch_prox"]
+    h, b = SPEC.local_iters, SPEC.batch_size
+    rng = np.random.default_rng(3)
+    images = jnp.asarray(rng.normal(size=(h, b, *SPEC.input_shape)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, size=(h, b)), jnp.int32)
+    anchor = _flat_params(SPEC)
+    gamma = jnp.float32(0.1)
+
+    out_sgd, _ = sgd(anchor, images, labels, gamma)
+    out_prox, _ = prox(anchor, anchor, images, labels, gamma, jnp.float32(5.0))
+    d_sgd = float(jnp.linalg.norm(out_sgd - anchor))
+    d_prox = float(jnp.linalg.norm(out_prox - anchor))
+    assert d_prox < d_sgd
+
+
+def test_eval_batch_counts():
+    entries = make_entries(SPEC)
+    fn, _ = entries["eval_batch"]
+    flat = _flat_params(SPEC)
+    images, labels = _batch(SPEC, SPEC.eval_batch)
+    loss_sum, correct = fn(flat, images, labels)
+    assert 0.0 <= float(correct) <= SPEC.eval_batch
+    assert float(loss_sum) > 0.0
+    # Cross-check against forward().
+    logits = forward(SPEC, init_params(SPEC, 0), images)
+    want_correct = float(jnp.sum(jnp.argmax(logits, -1) == labels))
+    np.testing.assert_allclose(float(correct), want_correct)
+
+
+def test_mix_entry_matches_formula():
+    entries = make_entries(SPEC)
+    fn, _ = entries["mix"]
+    pcount, _ = flatten_spec(SPEC)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=pcount), jnp.float32)
+    y = jnp.asarray(rng.normal(size=pcount), jnp.float32)
+    (out,) = fn(x, y, jnp.float32(0.6))
+    np.testing.assert_allclose(
+        np.asarray(out), 0.4 * np.asarray(x) + 0.6 * np.asarray(y), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_entry_signatures_are_concrete():
+    """Every example arg must be fully static (AOT needs fixed shapes)."""
+    for name in ["mlp_synth", "cnn_small"]:
+        entries = make_entries(MODELS[name])
+        for entry, (fn, args) in entries.items():
+            for a in args:
+                assert all(isinstance(d, int) for d in a.shape), (name, entry)
+            # eval_shape must succeed (traces the fn once).
+            jax.eval_shape(fn, *args)

@@ -1,0 +1,82 @@
+//! End-to-end coordinator throughput: global epochs per second for each
+//! algorithm on the real PJRT model — the systems counterpart of the
+//! paper's efficiency claim (FedAsync advances one epoch per *single*
+//! worker response; FedAvg needs k).
+//!
+//! Also reports the paper's per-epoch cost model: gradients and
+//! communications per global epoch, confirming the 10× comms ratio the
+//! evaluation section quotes (k=10).
+
+use std::time::Instant;
+
+use fedasync::config::presets::{named, Scale};
+use fedasync::config::{Algo, LocalUpdate};
+use fedasync::experiment::runner;
+use fedasync::runtime::{model_dir, ModelRuntime};
+
+fn main() {
+    let dir = model_dir("mlp_synth");
+    if !dir.join("manifest.json").exists() {
+        println!("(skip: artifacts not built — run `make artifacts`)");
+        return;
+    }
+    let rt = ModelRuntime::load(&dir).expect("load");
+    println!("== bench_e2e: coordinator throughput (mlp_synth) ==\n");
+
+    let mk = |algo: Algo| {
+        let mut cfg = named("fedasync", Scale::Fast).unwrap();
+        cfg.algo = algo;
+        cfg.epochs = 150;
+        cfg.repeats = 1;
+        cfg.eval_every = cfg.epochs; // eval only at ends: measure training
+        cfg.federation.devices = 50;
+        cfg.federation.samples_per_device = 100;
+        cfg.federation.test_samples = 256;
+        if matches!(cfg.algo, Algo::FedAvg { .. } | Algo::Sgd) {
+            cfg.local_update = LocalUpdate::Sgd;
+        }
+        cfg
+    };
+
+    println!(
+        "{:<12} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "algo", "epochs", "wall_s", "epochs/s", "grads/epoch", "comms/epoch"
+    );
+    for algo in [Algo::FedAsync, Algo::FedAvg { k: 10 }, Algo::Sgd] {
+        let cfg = mk(algo);
+        let t0 = Instant::now();
+        let log = runner::run(&rt, &cfg).expect("run");
+        let wall = t0.elapsed().as_secs_f64();
+        let last = log.rows.last().unwrap();
+        println!(
+            "{:<12} {:>8} {:>12.2} {:>12.1} {:>12.1} {:>12.1}",
+            log.label,
+            last.epoch,
+            wall,
+            last.epoch as f64 / wall,
+            last.gradients as f64 / last.epoch as f64,
+            last.comms as f64 / last.epoch as f64,
+        );
+    }
+
+    // Threaded server wallclock (architecture demo; PJRT is serialized on
+    // this 1-core box, so this measures coordination overhead).
+    let mut cfg = mk(Algo::FedAsync);
+    cfg.mode = fedasync::config::ExecMode::Threads;
+    cfg.epochs = 60;
+    cfg.worker_threads = 4;
+    cfg.max_inflight = 6;
+    let t0 = Instant::now();
+    let log = fedasync::coordinator::server::run_threaded(dir, &cfg, 1).expect("threaded");
+    let wall = t0.elapsed().as_secs_f64();
+    let last = log.rows.last().unwrap();
+    println!(
+        "{:<12} {:>8} {:>12.2} {:>12.1} {:>12} {:>12}",
+        "threaded",
+        last.epoch,
+        wall,
+        last.epoch as f64 / wall,
+        "-",
+        "-"
+    );
+}

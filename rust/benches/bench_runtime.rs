@@ -1,0 +1,78 @@
+//! PJRT runtime latencies: every artifact entry point, per model.
+//!
+//! These are the L2/L1 costs the coordinator pays per task: the fused
+//! H-step `train_epoch_*` (the hot path), the single `train_step_*`
+//! (shows the ×H dispatch saving that motivated the scan fusion), eval,
+//! and mix.  EXPERIMENTS.md §Perf tracks these numbers before/after the
+//! optimization pass.
+
+use fedasync::coordinator::Trainer;
+use fedasync::runtime::{model_dir, EpochBatch, ModelRuntime};
+use fedasync::util::rng::Rng;
+use fedasync::util::stats::BenchTimer;
+
+fn main() {
+    let timer = BenchTimer::default();
+    println!("== bench_runtime: PJRT entry-point latencies ==\n");
+
+    for model in ["mlp_synth", "cnn_small"] {
+        let dir = model_dir(model);
+        if !dir.join("manifest.json").exists() {
+            println!("(skip {model}: artifacts not built)");
+            continue;
+        }
+        let rt = ModelRuntime::load(&dir).expect("load");
+        let m = &rt.manifest;
+        let isz: usize = m.input_shape.iter().product();
+        let mut rng = Rng::seed_from(7);
+        let params = Trainer::init_params(&rt, 0).unwrap();
+        let batch = EpochBatch {
+            images: (0..m.local_iters * m.batch_size * isz)
+                .map(|_| rng.gaussian() as f32)
+                .collect(),
+            labels: (0..m.local_iters * m.batch_size)
+                .map(|_| rng.index(m.num_classes) as i32)
+                .collect(),
+        };
+        let eval_imgs: Vec<f32> =
+            (0..m.eval_batch * isz).map(|_| rng.gaussian() as f32).collect();
+        let eval_lbls: Vec<i32> =
+            (0..m.eval_batch).map(|_| rng.index(m.num_classes) as i32).collect();
+        let samples_per_epoch = (m.local_iters * m.batch_size) as f64;
+
+        println!(
+            "-- {model}: {} params, H={} B={} --",
+            m.param_count, m.local_iters, m.batch_size
+        );
+        let r = timer.run(&format!("{model}/train_epoch_sgd"), || {
+            std::hint::black_box(rt.train_epoch(&params, None, &batch, 0.1, 0.0).unwrap());
+        });
+        println!("{}", r.report(Some(samples_per_epoch)));
+        let r = timer.run(&format!("{model}/train_epoch_prox"), || {
+            std::hint::black_box(
+                rt.train_epoch(&params, Some(&params), &batch, 0.1, 0.01).unwrap(),
+            );
+        });
+        println!("{}", r.report(Some(samples_per_epoch)));
+
+        let step_imgs = &batch.images[..m.batch_size * isz];
+        let step_lbls = &batch.labels[..m.batch_size];
+        let r = timer.run(&format!("{model}/train_step_sgd(x1 of H)"), || {
+            std::hint::black_box(
+                rt.train_step(&params, None, step_imgs, step_lbls, 0.1, 0.0).unwrap(),
+            );
+        });
+        println!("{}", r.report(Some(m.batch_size as f64)));
+
+        let r = timer.run(&format!("{model}/eval_batch"), || {
+            std::hint::black_box(rt.eval(&params, &eval_imgs, &eval_lbls).unwrap());
+        });
+        println!("{}", r.report(Some(m.eval_batch as f64)));
+
+        let r = timer.run(&format!("{model}/mix"), || {
+            std::hint::black_box(rt.mix(&params, &params, 0.5).unwrap());
+        });
+        println!("{}", r.report(Some(m.param_count as f64)));
+        println!();
+    }
+}

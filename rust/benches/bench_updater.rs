@@ -1,0 +1,119 @@
+//! Updater-thread throughput: how many staleness-weighted updates per
+//! second the server core can absorb (paper §Scalability: "the server can
+//! receive the updates from the workers at any time").
+//!
+//! Measures (a) the single-threaded updater pipeline (α decision + mix +
+//! version bump + history push) across model sizes and staleness
+//! strategies, and (b) RwLock contention with concurrent reader threads
+//! playing the scheduler role (model snapshots), which is the real
+//! threaded-server topology.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use fedasync::config::{StalenessConfig, StalenessFn};
+use fedasync::coordinator::model_store::ModelStore;
+use fedasync::coordinator::staleness::AlphaController;
+use fedasync::coordinator::updater::{mix_inplace, MixEngine, Updater};
+use fedasync::util::rng::Rng;
+use fedasync::util::stats::BenchTimer;
+
+struct NoTrainer;
+impl fedasync::coordinator::Trainer for NoTrainer {
+    fn param_count(&self) -> usize {
+        0
+    }
+    fn init_params(&self, _: usize) -> Result<Vec<f32>, fedasync::runtime::RuntimeError> {
+        Ok(vec![])
+    }
+    fn local_train(
+        &self,
+        _: &[f32],
+        _: Option<&[f32]>,
+        _: &mut fedasync::federated::device::SimDevice,
+        _: &fedasync::federated::data::Dataset,
+        _: f32,
+        _: f32,
+    ) -> Result<(Vec<f32>, f32), fedasync::runtime::RuntimeError> {
+        unreachable!()
+    }
+    fn evaluate(
+        &self,
+        _: &[f32],
+        _: &fedasync::federated::data::Dataset,
+    ) -> Result<fedasync::runtime::EvalMetrics, fedasync::runtime::RuntimeError> {
+        unreachable!()
+    }
+    fn local_iters(&self) -> usize {
+        1
+    }
+}
+
+fn main() {
+    let timer = BenchTimer::default();
+    let mut rng = Rng::seed_from(2);
+    println!("== bench_updater: server update pipeline ==\n");
+
+    for &p in &[6_922usize, 165_530, 1_000_000] {
+        for (label, func) in [
+            ("const", StalenessFn::Constant),
+            ("poly", StalenessFn::Poly { a: 0.5 }),
+            ("hinge", StalenessFn::Hinge { a: 10.0, b: 4.0 }),
+        ] {
+            let updater = Updater::new(
+                AlphaController::new(
+                    0.6,
+                    0.5,
+                    1000,
+                    &StalenessConfig { max: 16, func, drop_above: None },
+                ),
+                MixEngine::Native,
+            );
+            let mut store = ModelStore::new(vec![0.0f32; p], 17);
+            let x_new: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+            let mut tau_rng = Rng::seed_from(3);
+            let r = timer.run(&format!("updater_apply/p={p}/{label}"), || {
+                let t = store.current_version();
+                let tau = t.saturating_sub(tau_rng.range_inclusive(1, 16).min(t + 1) - 1);
+                std::hint::black_box(
+                    updater.apply(&NoTrainer, &mut store, &x_new, tau).unwrap(),
+                );
+            });
+            println!("{}", r.report(Some(1.0))); // items = updates
+        }
+    }
+
+    // RwLock contention: 0/2/6 scheduler-like readers snapshotting while
+    // we apply updates under the write lock.
+    println!();
+    let p = 165_530usize;
+    for readers in [0usize, 2, 6] {
+        let global = Arc::new(RwLock::new(vec![0.0f32; p]));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..readers {
+            let g = Arc::clone(&global);
+            let s = Arc::clone(&stop);
+            handles.push(std::thread::spawn(move || {
+                let mut acc = 0.0f32;
+                while !s.load(Ordering::Relaxed) {
+                    let snap = g.read().unwrap();
+                    acc += snap[0]; // simulate a model snapshot read
+                    std::hint::black_box(&*snap);
+                    drop(snap);
+                }
+                std::hint::black_box(acc);
+            }));
+        }
+        let x_new: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let r = timer.run(&format!("rwlock_mix_under_{readers}_readers/p={p}"), || {
+            let mut g = global.write().unwrap();
+            mix_inplace(&mut g, &x_new, 0.3);
+        });
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            let _ = h.join();
+        }
+        println!("{}", r.report(Some(1.0)));
+    }
+}

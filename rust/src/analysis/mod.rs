@@ -1,0 +1,5 @@
+//! Theory-validation substrate: closed-form problems + empirical checks
+//! of the paper's Theorems 1–2 through the production coordinator.
+
+pub mod quadratic;
+pub mod theory;

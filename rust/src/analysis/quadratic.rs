@@ -1,0 +1,437 @@
+//! Closed-form optimization problems implementing [`Trainer`].
+//!
+//! The paper's convergence guarantees (Theorems 1–2) are statements about
+//! `E[F(x_T) − F(x*)]`.  On a neural network that gap is unobservable, so
+//! we validate the theory on problems where it is exact:
+//!
+//! * [`QuadraticProblem`] — each device holds
+//!   `F_i(x) = ½·(x−c_i)ᵀ·D_i·(x−c_i)` with diagonal curvatures
+//!   `D_i ∈ [μ, L]` and distinct centers `c_i` (the non-IID-ness).  The
+//!   global `F = (1/n)·Σ F_i` is L-smooth and μ-strongly convex with a
+//!   closed-form minimizer — Theorem 1 territory.
+//! * [`WeaklyConvexProblem`] — the quadratic plus a `w·Σ_j cos(x_j)`
+//!   ripple, which is `w`-weakly convex (Definition 3): non-convex but
+//!   `F(x) + w/2·‖x‖²` convex.  Theorem 2 territory (Option II).
+//!
+//! Both run through the *same* coordinator code as the PJRT model, so the
+//! theory checks also exercise the production control path.
+
+use std::cell::RefCell;
+
+use crate::coordinator::Trainer;
+use crate::federated::data::Dataset;
+use crate::federated::device::SimDevice;
+use crate::runtime::{EvalMetrics, ParamVec, RuntimeError};
+use crate::util::rng::Rng;
+
+/// Strongly convex per-device quadratics with a shared closed form.
+pub struct QuadraticProblem {
+    pub dim: usize,
+    /// `n × dim` device centers.
+    pub(crate) centers: Vec<Vec<f32>>,
+    /// `n × dim` diagonal curvatures, in `[mu, l]`.
+    pub(crate) curvatures: Vec<Vec<f32>>,
+    /// Std-dev of the additive gradient noise (≈ √V1).
+    pub noise_std: f64,
+    /// Local iterations per task (H).
+    pub h: usize,
+    /// Closed-form global minimizer and value.
+    x_star: Vec<f64>,
+    f_star: f64,
+    pub mu: f64,
+    pub l: f64,
+    rng: RefCell<Rng>,
+    init_scale: f64,
+}
+
+impl QuadraticProblem {
+    /// Build a problem with `n` devices in `dim` dimensions, curvature
+    /// range `[mu, l]`, center spread `spread`, gradient noise `noise_std`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n: usize,
+        dim: usize,
+        mu: f64,
+        l: f64,
+        spread: f64,
+        noise_std: f64,
+        h: usize,
+        seed: u64,
+    ) -> QuadraticProblem {
+        assert!(mu > 0.0 && l >= mu);
+        let mut rng = Rng::seed_from(seed ^ 0x0BAD_F00D);
+        let centers: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| (rng.gaussian() * spread) as f32).collect())
+            .collect();
+        let curvatures: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.uniform(mu, l) as f32).collect())
+            .collect();
+        // x*_j = (Σ_i d_ij·c_ij) / (Σ_i d_ij); F* = F(x*).
+        let mut x_star = vec![0.0f64; dim];
+        for j in 0..dim {
+            let (mut num, mut den) = (0.0f64, 0.0f64);
+            for i in 0..n {
+                num += curvatures[i][j] as f64 * centers[i][j] as f64;
+                den += curvatures[i][j] as f64;
+            }
+            x_star[j] = num / den;
+        }
+        let mut problem = QuadraticProblem {
+            dim,
+            centers,
+            curvatures,
+            noise_std,
+            h,
+            x_star,
+            f_star: 0.0,
+            mu,
+            l,
+            rng: RefCell::new(rng),
+            init_scale: spread.max(1.0) * 2.0,
+        };
+        let xs: Vec<f32> = problem.x_star.iter().map(|&v| v as f32).collect();
+        problem.f_star = problem.global_f(&xs);
+        problem
+    }
+
+    /// Global objective `F(x)`.
+    pub fn global_f(&self, x: &[f32]) -> f64 {
+        let n = self.centers.len();
+        let mut total = 0.0f64;
+        for i in 0..n {
+            for j in 0..self.dim {
+                let d = (x[j] - self.centers[i][j]) as f64;
+                total += 0.5 * self.curvatures[i][j] as f64 * d * d;
+            }
+        }
+        total / n as f64
+    }
+
+    /// Optimality gap `F(x) − F(x*)` (the quantity in Theorems 1–2).
+    pub fn gap(&self, x: &[f32]) -> f64 {
+        (self.global_f(x) - self.f_star).max(0.0)
+    }
+
+    pub fn x_star(&self) -> Vec<f32> {
+        self.x_star.iter().map(|&v| v as f32).collect()
+    }
+
+    fn device_grad(&self, device: usize, x: &[f32], out: &mut [f64]) {
+        if device == crate::coordinator::sgd::CENTRALIZED_DEVICE {
+            // The centralized SGD baseline sees the *global* objective.
+            let n = self.centers.len();
+            for j in 0..self.dim {
+                out[j] = (0..n)
+                    .map(|i| {
+                        self.curvatures[i][j] as f64 * (x[j] - self.centers[i][j]) as f64
+                    })
+                    .sum::<f64>()
+                    / n as f64;
+            }
+            return;
+        }
+        for j in 0..self.dim {
+            out[j] = self.curvatures[device][j] as f64
+                * (x[j] - self.centers[device][j]) as f64;
+        }
+    }
+}
+
+impl Trainer for QuadraticProblem {
+    fn param_count(&self) -> usize {
+        self.dim
+    }
+
+    fn init_params(&self, seed_idx: usize) -> Result<ParamVec, RuntimeError> {
+        let mut rng = Rng::seed_from(0x1217 + seed_idx as u64);
+        Ok((0..self.dim)
+            .map(|_| (rng.gaussian() * self.init_scale) as f32)
+            .collect())
+    }
+
+    fn local_train(
+        &self,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        device: &mut SimDevice,
+        _data: &Dataset,
+        gamma: f32,
+        rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError> {
+        let i = if device.id == crate::coordinator::sgd::CENTRALIZED_DEVICE {
+            device.id
+        } else {
+            device.id % self.centers.len()
+        };
+        let mut x: Vec<f32> = params.to_vec();
+        let mut g = vec![0.0f64; self.dim];
+        let mut rng = self.rng.borrow_mut();
+        let mut last_f = 0.0f64;
+        for _ in 0..self.h {
+            self.device_grad(i, &x, &mut g);
+            for j in 0..self.dim {
+                let noise = if self.noise_std > 0.0 {
+                    rng.gaussian() * self.noise_std
+                } else {
+                    0.0
+                };
+                let mut gj = g[j] + noise;
+                if let Some(a) = anchor {
+                    gj += rho as f64 * (x[j] - a[j]) as f64;
+                }
+                x[j] -= gamma * gj as f32;
+            }
+            last_f = self.global_f(&x);
+        }
+        Ok((x, last_f as f32))
+    }
+
+    fn evaluate(&self, params: &[f32], _test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
+        let gap = self.gap(params);
+        Ok(EvalMetrics {
+            loss: gap,
+            // Monotone proxy so "accuracy" plots still slope the right way.
+            accuracy: 1.0 / (1.0 + gap),
+            samples: 1,
+        })
+    }
+
+    fn local_iters(&self) -> usize {
+        self.h
+    }
+}
+
+/// Quadratic + `w·Σ cos(x_j)`: `w`-weakly convex (paper Definition 3).
+pub struct WeaklyConvexProblem {
+    pub base: QuadraticProblem,
+    /// Weak-convexity modulus `w` (= μ in Definition 3).
+    pub w: f64,
+}
+
+impl WeaklyConvexProblem {
+    pub fn new(base: QuadraticProblem, w: f64) -> WeaklyConvexProblem {
+        assert!(w >= 0.0);
+        WeaklyConvexProblem { base, w }
+    }
+
+    pub fn global_f(&self, x: &[f32]) -> f64 {
+        self.base.global_f(x) + self.w * x.iter().map(|&v| (v as f64).cos()).sum::<f64>()
+    }
+
+    /// Numerically locate the global optimum near the quadratic minimizer
+    /// (valid when `w ≪ μ·spread`: the ripple only shifts the basin).
+    pub fn approx_f_star(&self) -> f64 {
+        let mut x = self.base.x_star();
+        // Deterministic gradient descent on the true F (no noise).
+        for _ in 0..2000 {
+            for j in 0..x.len() {
+                let mut g = 0.0f64;
+                let n = self.base.centers.len();
+                for i in 0..n {
+                    g += self.base.curvatures[i][j] as f64
+                        * (x[j] - self.base.centers[i][j]) as f64;
+                }
+                g /= n as f64;
+                g -= self.w * (x[j] as f64).sin();
+                x[j] -= 0.1 * g as f32;
+            }
+        }
+        self.global_f(&x)
+    }
+}
+
+impl Trainer for WeaklyConvexProblem {
+    fn param_count(&self) -> usize {
+        self.base.dim
+    }
+
+    fn init_params(&self, seed_idx: usize) -> Result<ParamVec, RuntimeError> {
+        self.base.init_params(seed_idx)
+    }
+
+    fn local_train(
+        &self,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        device: &mut SimDevice,
+        _data: &Dataset,
+        gamma: f32,
+        rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError> {
+        let i = if device.id == crate::coordinator::sgd::CENTRALIZED_DEVICE {
+            device.id
+        } else {
+            device.id % self.base.centers.len()
+        };
+        let mut x: Vec<f32> = params.to_vec();
+        let mut g = vec![0.0f64; self.base.dim];
+        let mut rng = self.base.rng.borrow_mut();
+        for _ in 0..self.base.h {
+            self.base.device_grad(i, &x, &mut g);
+            for j in 0..self.base.dim {
+                let noise = if self.base.noise_std > 0.0 {
+                    rng.gaussian() * self.base.noise_std
+                } else {
+                    0.0
+                };
+                // d/dx_j [w·cos(x_j)] = −w·sin(x_j)
+                let mut gj = g[j] - self.w * (x[j] as f64).sin() + noise;
+                if let Some(a) = anchor {
+                    gj += rho as f64 * (x[j] - a[j]) as f64;
+                }
+                x[j] -= gamma * gj as f32;
+            }
+        }
+        let f = self.global_f(&x);
+        Ok((x, f as f32))
+    }
+
+    fn evaluate(&self, params: &[f32], _test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
+        let gap = (self.global_f(params) - self.approx_f_star()).max(0.0);
+        Ok(EvalMetrics { loss: gap, accuracy: 1.0 / (1.0 + gap), samples: 1 })
+    }
+
+    fn local_iters(&self) -> usize {
+        self.base.h
+    }
+}
+
+/// Theorem 1's contraction factor `β = 1 − α + α(1 − γμ)^{H_min}`.
+pub fn beta_theorem1(alpha: f64, gamma: f64, mu: f64, h_min: usize) -> f64 {
+    1.0 - alpha + alpha * (1.0 - gamma * mu).powi(h_min as i32)
+}
+
+/// Theorem 2's contraction factor `β = 1 − α + α(1 − γ(ρ−μ)/2)^{H_min}`.
+pub fn beta_theorem2(alpha: f64, gamma: f64, rho: f64, mu: f64, h_min: usize) -> f64 {
+    1.0 - alpha + alpha * (1.0 - gamma * (rho - mu) / 2.0).powi(h_min as i32)
+}
+
+/// Dummy dataset/fleet pieces so closed-form problems can reuse the
+/// federated coordinators (which thread `&Dataset` and `&mut SimDevice`
+/// through to the trainer).
+pub fn dummy_dataset() -> Dataset {
+    Dataset { features: vec![0.0; 4], labels: vec![0], input_size: 4, num_classes: 10 }
+}
+
+/// Fleet of `n` trivial devices (id is all the quadratic trainer reads).
+pub fn dummy_fleet(n: usize, seed: u64) -> Vec<SimDevice> {
+    use crate::federated::device::AvailabilityModel;
+    let mut rng = Rng::seed_from(seed);
+    (0..n)
+        .map(|id| {
+            SimDevice::new(
+                id,
+                vec![0],
+                1.0,
+                AvailabilityModel { mean_up: 1e18, mean_down: 1e-9 },
+                rng.split(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problem(noise: f64) -> QuadraticProblem {
+        QuadraticProblem::new(10, 8, 0.5, 2.0, 3.0, noise, 5, 42)
+    }
+
+    #[test]
+    fn x_star_is_a_stationary_point() {
+        let p = problem(0.0);
+        let xs = p.x_star();
+        // Mean gradient at x* must vanish.
+        let n = p.centers.len();
+        for j in 0..p.dim {
+            let g: f64 = (0..n)
+                .map(|i| p.curvatures[i][j] as f64 * (xs[j] - p.centers[i][j]) as f64)
+                .sum::<f64>()
+                / n as f64;
+            assert!(g.abs() < 1e-5, "grad[{j}]={g}");
+        }
+        assert!(p.gap(&xs) < 1e-9);
+    }
+
+    #[test]
+    fn gap_is_positive_away_from_optimum() {
+        let p = problem(0.0);
+        let mut x = p.x_star();
+        x[0] += 1.0;
+        assert!(p.gap(&x) > 0.1);
+    }
+
+    #[test]
+    fn local_train_descends_device_objective() {
+        let p = problem(0.0);
+        let data = dummy_dataset();
+        let mut fleet = dummy_fleet(4, 1);
+        let x0 = Trainer::init_params(&p, 0).unwrap();
+        let (x1, _) = p.local_train(&x0, None, &mut fleet[3], &data, 0.1, 0.0).unwrap();
+        // Device 3's own objective must decrease.
+        let f_dev = |x: &[f32]| -> f64 {
+            (0..p.dim)
+                .map(|j| {
+                    0.5 * p.curvatures[3][j] as f64 * ((x[j] - p.centers[3][j]) as f64).powi(2)
+                })
+                .sum()
+        };
+        assert!(f_dev(&x1) < f_dev(&x0));
+    }
+
+    #[test]
+    fn prox_anchoring_limits_drift() {
+        let p = problem(0.0);
+        let data = dummy_dataset();
+        let mut fleet = dummy_fleet(2, 2);
+        let anchor = Trainer::init_params(&p, 0).unwrap();
+        let (free, _) = p.local_train(&anchor, None, &mut fleet[1], &data, 0.2, 0.0).unwrap();
+        let (prox, _) = p
+            .local_train(&anchor, Some(&anchor), &mut fleet[1], &data, 0.2, 5.0)
+            .unwrap();
+        let dist = |x: &[f32]| -> f64 {
+            x.iter()
+                .zip(&anchor)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(dist(&prox) < dist(&free));
+    }
+
+    #[test]
+    fn beta_formulas() {
+        // α→1 ⇒ β = (1−γμ)^H; α→0 ⇒ β→1.
+        assert!((beta_theorem1(1.0, 0.1, 1.0, 3) - 0.9f64.powi(3)).abs() < 1e-12);
+        assert!((beta_theorem1(1e-9, 0.1, 1.0, 3) - 1.0).abs() < 1e-6);
+        // Theorem 2 reduces toward 1 as ρ→μ.
+        let b = beta_theorem2(0.5, 0.1, 1.0 + 1e-9, 1.0, 5);
+        assert!((b - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weakly_convex_ripple_changes_objective() {
+        let base = problem(0.0);
+        let f0 = base.global_f(&vec![0.0; 8]);
+        let wc = WeaklyConvexProblem::new(problem(0.0), 0.2);
+        let f1 = wc.global_f(&vec![0.0; 8]);
+        assert!((f1 - f0 - 0.2 * 8.0).abs() < 1e-9); // cos(0)=1 per dim
+    }
+
+    #[test]
+    fn approx_f_star_below_quadratic_center_value() {
+        let wc = WeaklyConvexProblem::new(problem(0.0), 0.05);
+        let xs = wc.base.x_star();
+        assert!(wc.approx_f_star() <= wc.global_f(&xs) + 1e-9);
+    }
+
+    #[test]
+    fn evaluate_reports_gap_as_loss() {
+        let p = problem(0.0);
+        let xs = p.x_star();
+        let m = p.evaluate(&xs, &dummy_dataset()).unwrap();
+        assert!(m.loss < 1e-9);
+        assert!((m.accuracy - 1.0).abs() < 1e-9);
+    }
+}

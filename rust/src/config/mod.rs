@@ -1,0 +1,631 @@
+//! Typed configuration system.
+//!
+//! A single [`ExperimentConfig`] describes one training run end-to-end:
+//! which algorithm (FedAsync / FedAvg / single-thread SGD), the model
+//! artifacts, the optimization hyperparameters from the paper (γ, ρ, α,
+//! staleness strategy `s(t-τ)`, α decay), the simulated federation (device
+//! count, partition, dataset), and the execution mode.
+//!
+//! Configs load from TOML files (`util::toml`), can be overridden from the
+//! CLI, validate themselves, and serialize back to JSON for embedding in
+//! result files (so every CSV row set is traceable to its exact config).
+
+pub mod presets;
+
+use crate::util::json::{Json, JsonObj};
+use crate::util::toml;
+
+/// Which algorithm drives the global model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Algo {
+    /// Paper Algorithm 1.
+    FedAsync,
+    /// Paper Algorithm 2 (synchronous baseline); `k` devices per epoch.
+    FedAvg { k: usize },
+    /// Paper Algorithm 3 (single-thread SGD baseline).
+    Sgd,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::FedAsync => "fedasync",
+            Algo::FedAvg { .. } => "fedavg",
+            Algo::Sgd => "sgd",
+        }
+    }
+}
+
+/// Staleness-adaptive mixing `α_t = α · s(t−τ)` (paper §4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StalenessFn {
+    /// `s ≡ 1` (plain FedAsync).
+    Constant,
+    /// `s_a(x) = 1 / (a·x + 1)`.
+    Linear { a: f64 },
+    /// `s_a(x) = (x + 1)^{-a}` — the paper's best performer (a = 0.5).
+    Poly { a: f64 },
+    /// `s_a(x) = exp(−a·x)`.
+    Exp { a: f64 },
+    /// `s_{a,b}(x) = 1` if `x ≤ b` else `1 / (a·(x−b) + 1)`.
+    Hinge { a: f64, b: f64 },
+}
+
+impl StalenessFn {
+    /// Evaluate `s(staleness)`; always in `(0, 1]` for staleness ≥ 0.
+    pub fn eval(&self, staleness: u64) -> f64 {
+        let x = staleness as f64;
+        match *self {
+            StalenessFn::Constant => 1.0,
+            StalenessFn::Linear { a } => 1.0 / (a * x + 1.0),
+            StalenessFn::Poly { a } => (x + 1.0).powf(-a),
+            StalenessFn::Exp { a } => (-a * x).exp(),
+            StalenessFn::Hinge { a, b } => {
+                if x <= b {
+                    1.0
+                } else {
+                    1.0 / (a * (x - b) + 1.0)
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            StalenessFn::Constant => "const".into(),
+            StalenessFn::Linear { a } => format!("linear(a={a})"),
+            StalenessFn::Poly { a } => format!("poly(a={a})"),
+            StalenessFn::Exp { a } => format!("exp(a={a})"),
+            StalenessFn::Hinge { a, b } => format!("hinge(a={a},b={b})"),
+        }
+    }
+}
+
+/// Local update rule (paper Algorithm 1, Options I and II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalUpdate {
+    /// Option I: plain SGD on `f`.
+    Sgd,
+    /// Option II: SGD on the ρ-regularized surrogate `g_{x_t}`.
+    Prox,
+}
+
+/// How training samples are spread over devices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// IID shuffle (control).
+    Iid,
+    /// Paper-style pathological non-IID: sort by label, deal contiguous
+    /// shards; `shards_per_device` labels' worth of data each.
+    Shards { shards_per_device: usize },
+    /// Dirichlet(β) label distribution per device (common FL benchmark).
+    Dirichlet { beta: f64 },
+}
+
+/// Which synthetic dataset family feeds the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    /// Low-dimensional feature vectors (fast; used for the figure sweeps).
+    Features,
+    /// 24×24×3 image tensors (CIFAR-shaped; used with the CNN models).
+    Images,
+}
+
+/// Asynchrony simulation mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The paper's evaluation protocol: sequential deterministic simulator,
+    /// staleness sampled uniformly from `[0, max_staleness]`.
+    Virtual,
+    /// Real threads: scheduler ∥ updater ∥ worker pool over channels.
+    Threads,
+}
+
+/// Federation / data generation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationConfig {
+    /// Number of devices `n` (paper: 100).
+    pub devices: usize,
+    /// Training samples per device (paper: 500).
+    pub samples_per_device: usize,
+    /// Held-out test samples (central, for accuracy eval).
+    pub test_samples: usize,
+    pub partition: Partition,
+    pub dataset: Dataset,
+    /// Fraction of training labels flipped uniformly (task difficulty).
+    pub label_noise: f64,
+    /// Class-separation scale; smaller = harder problem.
+    pub class_sep: f64,
+}
+
+/// Staleness control on the server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StalenessConfig {
+    /// Maximum simulated staleness (paper sweeps 4 and 16).
+    pub max: u64,
+    /// `s(t−τ)` for adaptive α.
+    pub func: StalenessFn,
+    /// Drop updates older than this (`None` = never drop). The paper's
+    /// "take α = 0 when staleness is too large" knob.
+    pub drop_above: Option<u64>,
+}
+
+/// Everything needed to run one experiment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Independent repeats (averaged by the harness; paper uses 10).
+    pub repeats: usize,
+    /// Artifact directory name under `artifacts/` (e.g. "mlp_synth").
+    pub model: String,
+    pub algo: Algo,
+    /// Global epochs `T` (paper: 2000).
+    pub epochs: usize,
+    /// Learning rate γ.
+    pub gamma: f32,
+    /// Proximal weight ρ (Option II).
+    pub rho: f32,
+    /// Base mixing weight α.
+    pub alpha: f64,
+    /// Multiply α by this factor at `alpha_decay_at` (paper: ×0.5 @ 800).
+    pub alpha_decay: f64,
+    pub alpha_decay_at: usize,
+    pub local_update: LocalUpdate,
+    /// Local iterations per task; `None` = the artifact's fused epoch H.
+    pub local_iters: Option<usize>,
+    pub staleness: StalenessConfig,
+    pub federation: FederationConfig,
+    pub mode: ExecMode,
+    /// Evaluate test metrics every this many global epochs.
+    pub eval_every: usize,
+    /// Worker threads in `Threads` mode.
+    pub worker_threads: usize,
+    /// Max in-flight tasks the scheduler keeps outstanding (Threads mode).
+    pub max_inflight: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config error: {0}")]
+pub struct ConfigError(pub String);
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 42,
+            repeats: 1,
+            model: "mlp_synth".into(),
+            algo: Algo::FedAsync,
+            epochs: 600,
+            gamma: 0.1,
+            rho: 0.01,
+            alpha: 0.6,
+            alpha_decay: 0.5,
+            alpha_decay_at: 240, // 0.4·T, mirroring the paper's 800/2000
+            local_update: LocalUpdate::Prox,
+            local_iters: None,
+            staleness: StalenessConfig {
+                max: 4,
+                func: StalenessFn::Constant,
+                drop_above: None,
+            },
+            federation: FederationConfig {
+                devices: 100,
+                samples_per_device: 500,
+                test_samples: 2048,
+                partition: Partition::Shards { shards_per_device: 2 },
+                dataset: Dataset::Features,
+                label_noise: 0.05,
+                class_sep: 2.5,
+            },
+            mode: ExecMode::Virtual,
+            eval_every: 20,
+            worker_threads: 4,
+            max_inflight: 8,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate invariants; call after any mutation path.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let e = |m: String| Err(ConfigError(m));
+        if self.epochs == 0 {
+            return e("epochs must be > 0".into());
+        }
+        if !(self.gamma > 0.0) {
+            return e(format!("gamma must be > 0, got {}", self.gamma));
+        }
+        if !(0.0 < self.alpha && self.alpha <= 1.0) {
+            return e(format!("alpha must be in (0, 1], got {}", self.alpha));
+        }
+        if self.rho < 0.0 {
+            return e(format!("rho must be >= 0, got {}", self.rho));
+        }
+        if self.federation.devices == 0 {
+            return e("devices must be > 0".into());
+        }
+        if self.federation.samples_per_device == 0 {
+            return e("samples_per_device must be > 0".into());
+        }
+        if let Algo::FedAvg { k } = self.algo {
+            if k == 0 || k > self.federation.devices {
+                return e(format!(
+                    "fedavg k={k} must be in [1, devices={}]",
+                    self.federation.devices
+                ));
+            }
+        }
+        if self.eval_every == 0 {
+            return e("eval_every must be > 0".into());
+        }
+        if let Some(d) = self.staleness.drop_above {
+            if d > self.staleness.max {
+                return e(format!(
+                    "drop_above={d} exceeds max staleness {}",
+                    self.staleness.max
+                ));
+            }
+        }
+        if let StalenessFn::Linear { a } | StalenessFn::Exp { a } | StalenessFn::Poly { a } =
+            self.staleness.func
+        {
+            if a < 0.0 {
+                return e("staleness parameter a must be >= 0".into());
+            }
+        }
+        if self.mode == ExecMode::Threads && self.worker_threads == 0 {
+            return e("worker_threads must be > 0 in threads mode".into());
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file, starting from defaults.
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|err| ConfigError(format!("read {path:?}: {err}")))?;
+        let doc = toml::parse(&text).map_err(|err| ConfigError(err.to_string()))?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Overlay fields present in a JSON/TOML object tree.
+    pub fn apply_json(&mut self, v: &Json) -> Result<(), ConfigError> {
+        let err = |m: String| ConfigError(m);
+        if let Some(s) = v.get("name").as_str() {
+            self.name = s.to_string();
+        }
+        if let Some(x) = v.get("seed").as_i64() {
+            self.seed = x as u64;
+        }
+        if let Some(x) = v.get("repeats").as_usize() {
+            self.repeats = x;
+        }
+        if let Some(s) = v.get("model").as_str() {
+            self.model = s.to_string();
+        }
+        if let Some(s) = v.get("algo").as_str() {
+            self.algo = match s {
+                "fedasync" => Algo::FedAsync,
+                "sgd" => Algo::Sgd,
+                "fedavg" => Algo::FedAvg {
+                    k: v.get("fedavg_k").as_usize().unwrap_or(10),
+                },
+                other => return Err(err(format!("unknown algo {other:?}"))),
+            };
+        }
+        if let Some(x) = v.get("epochs").as_usize() {
+            self.epochs = x;
+        }
+        if let Some(x) = v.get("gamma").as_f64() {
+            self.gamma = x as f32;
+        }
+        if let Some(x) = v.get("rho").as_f64() {
+            self.rho = x as f32;
+        }
+        if let Some(x) = v.get("alpha").as_f64() {
+            self.alpha = x;
+        }
+        if let Some(x) = v.get("alpha_decay").as_f64() {
+            self.alpha_decay = x;
+        }
+        if let Some(x) = v.get("alpha_decay_at").as_usize() {
+            self.alpha_decay_at = x;
+        }
+        if let Some(s) = v.get("local_update").as_str() {
+            self.local_update = match s {
+                "sgd" | "option1" => LocalUpdate::Sgd,
+                "prox" | "option2" => LocalUpdate::Prox,
+                other => return Err(err(format!("unknown local_update {other:?}"))),
+            };
+        }
+        if let Some(x) = v.get("local_iters").as_usize() {
+            self.local_iters = Some(x);
+        }
+        if let Some(x) = v.get("eval_every").as_usize() {
+            self.eval_every = x;
+        }
+        if let Some(s) = v.get("mode").as_str() {
+            self.mode = match s {
+                "virtual" => ExecMode::Virtual,
+                "threads" => ExecMode::Threads,
+                other => return Err(err(format!("unknown mode {other:?}"))),
+            };
+        }
+        if let Some(x) = v.get("worker_threads").as_usize() {
+            self.worker_threads = x;
+        }
+        if let Some(x) = v.get("max_inflight").as_usize() {
+            self.max_inflight = x;
+        }
+
+        let st = v.get("staleness");
+        if st.as_obj().is_some() {
+            if let Some(x) = st.get("max").as_i64() {
+                self.staleness.max = x as u64;
+            }
+            if let Some(x) = st.get("drop_above").as_i64() {
+                self.staleness.drop_above = Some(x as u64);
+            }
+            if let Some(kind) = st.get("kind").as_str() {
+                let a = st.get("a").as_f64();
+                let b = st.get("b").as_f64();
+                self.staleness.func = parse_staleness_fn(kind, a, b)?;
+            }
+        }
+
+        let fed = v.get("federation");
+        if fed.as_obj().is_some() {
+            if let Some(x) = fed.get("devices").as_usize() {
+                self.federation.devices = x;
+            }
+            if let Some(x) = fed.get("samples_per_device").as_usize() {
+                self.federation.samples_per_device = x;
+            }
+            if let Some(x) = fed.get("test_samples").as_usize() {
+                self.federation.test_samples = x;
+            }
+            if let Some(x) = fed.get("label_noise").as_f64() {
+                self.federation.label_noise = x;
+            }
+            if let Some(x) = fed.get("class_sep").as_f64() {
+                self.federation.class_sep = x;
+            }
+            if let Some(s) = fed.get("dataset").as_str() {
+                self.federation.dataset = match s {
+                    "features" => Dataset::Features,
+                    "images" => Dataset::Images,
+                    other => return Err(err(format!("unknown dataset {other:?}"))),
+                };
+            }
+            if let Some(s) = fed.get("partition").as_str() {
+                self.federation.partition = match s {
+                    "iid" => Partition::Iid,
+                    "shards" => Partition::Shards {
+                        shards_per_device: fed.get("shards_per_device").as_usize().unwrap_or(2),
+                    },
+                    "dirichlet" => Partition::Dirichlet {
+                        beta: fed.get("dirichlet_beta").as_f64().unwrap_or(0.5),
+                    },
+                    other => return Err(err(format!("unknown partition {other:?}"))),
+                };
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize for provenance headers in result files.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("name", Json::Str(self.name.clone()));
+        o.insert("seed", Json::Num(self.seed as f64));
+        o.insert("repeats", Json::Num(self.repeats as f64));
+        o.insert("model", Json::Str(self.model.clone()));
+        o.insert("algo", Json::Str(self.algo.name().into()));
+        if let Algo::FedAvg { k } = self.algo {
+            o.insert("fedavg_k", Json::Num(k as f64));
+        }
+        o.insert("epochs", Json::Num(self.epochs as f64));
+        o.insert("gamma", Json::Num(self.gamma as f64));
+        o.insert("rho", Json::Num(self.rho as f64));
+        o.insert("alpha", Json::Num(self.alpha));
+        o.insert("alpha_decay", Json::Num(self.alpha_decay));
+        o.insert("alpha_decay_at", Json::Num(self.alpha_decay_at as f64));
+        o.insert(
+            "local_update",
+            Json::Str(
+                match self.local_update {
+                    LocalUpdate::Sgd => "sgd",
+                    LocalUpdate::Prox => "prox",
+                }
+                .into(),
+            ),
+        );
+        o.insert("staleness_max", Json::Num(self.staleness.max as f64));
+        o.insert("staleness_fn", Json::Str(self.staleness.func.label()));
+        o.insert("devices", Json::Num(self.federation.devices as f64));
+        o.insert(
+            "samples_per_device",
+            Json::Num(self.federation.samples_per_device as f64),
+        );
+        o.insert(
+            "mode",
+            Json::Str(
+                match self.mode {
+                    ExecMode::Virtual => "virtual",
+                    ExecMode::Threads => "threads",
+                }
+                .into(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    /// Short human label for plots/CSV series.
+    pub fn series_label(&self) -> String {
+        match (&self.algo, self.staleness.func) {
+            (Algo::FedAsync, StalenessFn::Constant) => "FedAsync".into(),
+            (Algo::FedAsync, StalenessFn::Poly { .. }) => "FedAsync+Poly".into(),
+            (Algo::FedAsync, StalenessFn::Hinge { .. }) => "FedAsync+Hinge".into(),
+            (Algo::FedAsync, f) => format!("FedAsync+{}", f.label()),
+            (Algo::FedAvg { .. }, _) => "FedAvg".into(),
+            (Algo::Sgd, _) => "SGD".into(),
+        }
+    }
+}
+
+/// Parse a staleness function by name + parameters.
+pub fn parse_staleness_fn(
+    kind: &str,
+    a: Option<f64>,
+    b: Option<f64>,
+) -> Result<StalenessFn, ConfigError> {
+    // Paper defaults: Poly a=0.5; Hinge a=10, b=4 (figures 2-7).
+    Ok(match kind {
+        "const" | "constant" => StalenessFn::Constant,
+        "linear" => StalenessFn::Linear { a: a.unwrap_or(1.0) },
+        "poly" | "polynomial" => StalenessFn::Poly { a: a.unwrap_or(0.5) },
+        "exp" | "exponential" => StalenessFn::Exp { a: a.unwrap_or(0.5) },
+        "hinge" => StalenessFn::Hinge {
+            a: a.unwrap_or(10.0),
+            b: b.unwrap_or(4.0),
+        },
+        other => return Err(ConfigError(format!("unknown staleness fn {other:?}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn staleness_fns_match_paper_formulas() {
+        let f = StalenessFn::Linear { a: 2.0 };
+        assert!((f.eval(3) - 1.0 / 7.0).abs() < 1e-12);
+        let f = StalenessFn::Poly { a: 0.5 };
+        assert!((f.eval(3) - (4.0f64).powf(-0.5)).abs() < 1e-12);
+        let f = StalenessFn::Exp { a: 0.5 };
+        assert!((f.eval(2) - (-1.0f64).exp()).abs() < 1e-12);
+        let f = StalenessFn::Hinge { a: 10.0, b: 4.0 };
+        assert_eq!(f.eval(0), 1.0);
+        assert_eq!(f.eval(4), 1.0);
+        assert!((f.eval(6) - 1.0 / 21.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staleness_fns_bounded() {
+        for f in [
+            StalenessFn::Constant,
+            StalenessFn::Linear { a: 1.0 },
+            StalenessFn::Poly { a: 0.5 },
+            StalenessFn::Exp { a: 0.7 },
+            StalenessFn::Hinge { a: 10.0, b: 4.0 },
+        ] {
+            for s in 0..100 {
+                let v = f.eval(s);
+                assert!(v > 0.0 && v <= 1.0, "{f:?} s={s} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn hinge_with_b4_equals_const_within_max4() {
+        // Paper note: "when the maximum staleness is 4, FedAsync and
+        // FedAsync+Hinge with b=4 are the same".
+        let hinge = StalenessFn::Hinge { a: 10.0, b: 4.0 };
+        for s in 0..=4 {
+            assert_eq!(hinge.eval(s), StalenessFn::Constant.eval(s));
+        }
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let doc = crate::util::toml::parse(
+            r#"
+            name = "fig3"
+            algo = "fedavg"
+            fedavg_k = 10
+            epochs = 2000
+            alpha = 0.9
+
+            [staleness]
+            max = 16
+            kind = "hinge"
+            a = 10.0
+            b = 4.0
+
+            [federation]
+            devices = 100
+            partition = "dirichlet"
+            dirichlet_beta = 0.3
+            "#,
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.name, "fig3");
+        assert_eq!(cfg.algo, Algo::FedAvg { k: 10 });
+        assert_eq!(cfg.epochs, 2000);
+        assert_eq!(cfg.staleness.max, 16);
+        assert_eq!(cfg.staleness.func, StalenessFn::Hinge { a: 10.0, b: 4.0 });
+        assert_eq!(
+            cfg.federation.partition,
+            Partition::Dirichlet { beta: 0.3 }
+        );
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.alpha = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.algo = Algo::FedAvg { k: 1000 };
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.staleness.drop_above = Some(99);
+        c.staleness.max = 4;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.gamma = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_enum_values_rejected() {
+        let doc = crate::util::toml::parse("algo = \"zen\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse("[staleness]\nkind = \"magic\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+    }
+
+    #[test]
+    fn series_labels() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.series_label(), "FedAsync");
+        c.staleness.func = StalenessFn::Poly { a: 0.5 };
+        assert_eq!(c.series_label(), "FedAsync+Poly");
+        c.algo = Algo::Sgd;
+        assert_eq!(c.series_label(), "SGD");
+    }
+
+    #[test]
+    fn json_provenance_roundtrip_fields() {
+        let cfg = ExperimentConfig::default();
+        let j = cfg.to_json();
+        assert_eq!(j.get("algo").as_str(), Some("fedasync"));
+        assert_eq!(j.get("devices").as_usize(), Some(100));
+        // Must parse back as JSON.
+        let text = j.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,210 @@
+//! Named experiment presets mirroring the paper's evaluation §6.
+//!
+//! Two scales per figure:
+//! * `fast` (default) — `mlp_synth` on the feature dataset, T=600,
+//!   repeats=3: runs the whole figure grid in minutes on one CPU core.
+//! * `paper` — `cnn_small` on the image dataset, T=2000, repeats as
+//!   budgeted: the paper's protocol shape (invoke with `--preset paper`).
+//!
+//! Figure parameters straight from the captions: α decays ×0.5 at the
+//! 0.4·T epoch (800/2000 in the paper); FedAsync+Poly uses a=0.5;
+//! FedAsync+Hinge uses a=10, b=4 (figs 2–7) and a=4, b=4 (figs 9–10);
+//! FedAvg selects k=10 of n=100 devices.
+
+use super::{Algo, ExperimentConfig, LocalUpdate, StalenessFn};
+
+/// Scale knob for a preset family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Fast,
+    Paper,
+}
+
+impl std::str::FromStr for Scale {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fast" => Ok(Scale::Fast),
+            "paper" => Ok(Scale::Paper),
+            other => Err(format!("unknown scale {other:?} (fast|paper)")),
+        }
+    }
+}
+
+/// Base config shared by all figure presets at the given scale.
+pub fn base(scale: Scale) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    match scale {
+        Scale::Fast => {
+            cfg.model = "mlp_synth".into();
+            cfg.epochs = 600;
+            cfg.repeats = 3;
+            cfg.eval_every = 20;
+        }
+        Scale::Paper => {
+            cfg.model = "cnn_small".into();
+            cfg.federation.dataset = super::Dataset::Images;
+            // lr grid-searched for the CNN (the paper grid-searches its
+            // baselines too): γ=0.1 diverges, γ∈[0.003, 0.03] all train
+            // cleanly; 0.01 is the middle of the stable range.
+            cfg.gamma = 0.01;
+            // The synthetic image task is easier than CIFAR for convs;
+            // tighten class separation so curves have a visible middle.
+            cfg.federation.class_sep = 1.0;
+            cfg.epochs = 2000;
+            cfg.repeats = 3; // paper uses 10; 3 fits the CPU budget
+            cfg.eval_every = 50;
+        }
+    }
+    // α decays by 0.5 at the 800th of 2000 epochs in the paper; keep the
+    // same fraction at every scale.
+    cfg.alpha_decay = 0.5;
+    cfg.alpha_decay_at = cfg.epochs * 2 / 5;
+    cfg
+}
+
+/// The algorithm variants plotted in figs 2–7 (staleness-parameterized).
+pub fn figure_variants(scale: Scale, max_staleness: u64) -> Vec<ExperimentConfig> {
+    let mut out = Vec::new();
+    let mk = |name: &str, f: StalenessFn| {
+        let mut c = base(scale);
+        c.name = name.into();
+        c.algo = Algo::FedAsync;
+        c.staleness.max = max_staleness;
+        c.staleness.func = f;
+        c
+    };
+    out.push(mk("fedasync", StalenessFn::Constant));
+    out.push(mk("fedasync_poly", StalenessFn::Poly { a: 0.5 }));
+    out.push(mk("fedasync_hinge", StalenessFn::Hinge { a: 10.0, b: 4.0 }));
+    let mut avg = base(scale);
+    avg.name = "fedavg".into();
+    avg.algo = Algo::FedAvg { k: 10 };
+    avg.local_update = LocalUpdate::Sgd;
+    out.push(avg);
+    let mut sgd = base(scale);
+    sgd.name = "sgd".into();
+    sgd.algo = Algo::Sgd;
+    sgd.local_update = LocalUpdate::Sgd;
+    out.push(sgd);
+    out
+}
+
+/// Named single-run presets for `repro train --preset <name>`.
+pub fn named(name: &str, scale: Scale) -> Option<ExperimentConfig> {
+    let mut cfg = match name {
+        "quickstart" => {
+            let mut c = base(Scale::Fast);
+            c.name = "quickstart".into();
+            c.epochs = 100;
+            c.repeats = 1;
+            c.eval_every = 10;
+            c
+        }
+        "fedasync" => {
+            let mut c = base(scale);
+            c.name = "fedasync".into();
+            c
+        }
+        "fedasync_poly" => {
+            let mut c = base(scale);
+            c.name = "fedasync_poly".into();
+            c.staleness.func = StalenessFn::Poly { a: 0.5 };
+            c
+        }
+        "fedasync_hinge" => {
+            let mut c = base(scale);
+            c.name = "fedasync_hinge".into();
+            c.staleness.func = StalenessFn::Hinge { a: 10.0, b: 4.0 };
+            c
+        }
+        "fedavg" => {
+            let mut c = base(scale);
+            c.name = "fedavg".into();
+            c.algo = Algo::FedAvg { k: 10 };
+            c.local_update = LocalUpdate::Sgd;
+            c
+        }
+        "sgd" => {
+            let mut c = base(scale);
+            c.name = "sgd".into();
+            c.algo = Algo::Sgd;
+            c.local_update = LocalUpdate::Sgd;
+            c
+        }
+        // End-to-end CNN driver (EXPERIMENTS.md §E2E).
+        "e2e_cnn" => {
+            let mut c = base(Scale::Paper);
+            c.name = "e2e_cnn".into();
+            c.epochs = 300;
+            c.repeats = 1;
+            c.eval_every = 10;
+            c
+        }
+        _ => return None,
+    };
+    if cfg.name != "quickstart" && cfg.name != "e2e_cnn" {
+        // named() callers may still override; keep scale-consistent decay.
+        cfg.alpha_decay_at = cfg.epochs * 2 / 5;
+    }
+    Some(cfg)
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &[
+        "quickstart",
+        "fedasync",
+        "fedasync_poly",
+        "fedasync_hinge",
+        "fedavg",
+        "sgd",
+        "e2e_cnn",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_named_presets_validate() {
+        for name in preset_names() {
+            for scale in [Scale::Fast, Scale::Paper] {
+                let cfg = named(name, scale).unwrap();
+                cfg.validate().unwrap_or_else(|e| panic!("{name}@{scale:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(named("nope", Scale::Fast).is_none());
+    }
+
+    #[test]
+    fn figure_variants_cover_all_algorithms() {
+        let vs = figure_variants(Scale::Fast, 16);
+        let labels: Vec<String> = vs.iter().map(|c| c.series_label()).collect();
+        assert!(labels.contains(&"FedAsync".to_string()));
+        assert!(labels.contains(&"FedAsync+Poly".to_string()));
+        assert!(labels.contains(&"FedAsync+Hinge".to_string()));
+        assert!(labels.contains(&"FedAvg".to_string()));
+        assert!(labels.contains(&"SGD".to_string()));
+        for v in &vs {
+            v.validate().unwrap();
+            if v.algo == Algo::FedAsync {
+                assert_eq!(v.staleness.max, 16);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_scale_matches_caption_constants() {
+        let c = base(Scale::Paper);
+        assert_eq!(c.epochs, 2000);
+        assert_eq!(c.alpha_decay_at, 800);
+        assert_eq!(c.alpha_decay, 0.5);
+        assert_eq!(c.federation.devices, 100);
+        assert_eq!(c.federation.samples_per_device, 500);
+    }
+}

@@ -1,0 +1,176 @@
+//! FedAvg baseline (paper Algorithm 2 — McMahan et al.'s synchronous
+//! federated averaging), including the straggler behaviour the paper's
+//! introduction criticizes: each epoch waits for all `k` selected devices;
+//! with a timeout configured, stragglers are dropped, and if too few
+//! survive the *whole epoch* is dropped ("the server may have to drop the
+//! entire epoch including all the received updates").
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::virtual_mode::EvalRecorder;
+use crate::coordinator::Trainer;
+use crate::federated::data::FederatedData;
+use crate::federated::device::SimDevice;
+use crate::federated::metrics::MetricsLog;
+use crate::federated::network::LatencyModel;
+use crate::runtime::RuntimeError;
+use crate::util::rng::Rng;
+
+/// Straggler policy for the synchronous epoch barrier.
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerPolicy {
+    /// Drop devices whose task exceeds this many virtual seconds
+    /// (`None` = wait forever, the pure Algorithm 2).
+    pub timeout: Option<f64>,
+    /// Minimum surviving updates for the epoch to commit.
+    pub min_survivors: usize,
+}
+
+impl Default for StragglerPolicy {
+    fn default() -> Self {
+        StragglerPolicy { timeout: None, min_survivors: 1 }
+    }
+}
+
+/// Run FedAvg for `cfg.epochs` epochs with `k` devices per epoch.
+pub fn run_fedavg<T: Trainer>(
+    trainer: &T,
+    cfg: &ExperimentConfig,
+    data: &FederatedData,
+    fleet: &mut [SimDevice],
+    seed: u64,
+    k: usize,
+    policy: StragglerPolicy,
+) -> Result<MetricsLog, RuntimeError> {
+    assert!(k >= 1 && k <= fleet.len());
+    let mut rng = Rng::seed_from(seed ^ 0xFEDA_0A26);
+    let latency = LatencyModel::default();
+    let mut params = trainer.init_params(seed as usize)?;
+    let h = trainer.local_iters() as u64;
+    let p = trainer.param_count();
+
+    let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
+    rec.maybe_record(trainer, 0, &params, 0.0)?;
+    let mut sim_time = 0.0f64;
+
+    for t in 1..=cfg.epochs {
+        let selected = rng.choose_k(fleet.len(), k);
+        let mut sum = vec![0.0f32; p];
+        let mut survivors = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut slowest = 0.0f64;
+        for &d in &selected {
+            let task_time = fleet[d].compute_time(trainer.local_iters(), 50)
+                + latency.sample(&mut rng)
+                + latency.sample(&mut rng);
+            // Downlink always happens (the device receives the model), so
+            // it counts as communication even if the result is dropped.
+            rec.counters.comms += 1;
+            if let Some(timeout) = policy.timeout {
+                if task_time > timeout {
+                    // Straggler: server never receives the upload.
+                    slowest = slowest.max(timeout);
+                    continue;
+                }
+            }
+            let (x_new, loss) = trainer.local_train(
+                &params,
+                None, // Algorithm 2 runs plain SGD locally
+                &mut fleet[d],
+                &data.train,
+                cfg.gamma,
+                0.0,
+            )?;
+            rec.counters.comms += 1;
+            for (s, x) in sum.iter_mut().zip(&x_new) {
+                *s += x;
+            }
+            survivors += 1;
+            loss_sum += loss as f64;
+            slowest = slowest.max(task_time);
+        }
+        // The synchronous barrier: the epoch costs as long as its slowest
+        // *kept* device (or the timeout, when one fired).
+        sim_time += slowest;
+
+        if survivors >= policy.min_survivors && survivors > 0 {
+            let inv = 1.0 / survivors as f32;
+            for (dst, s) in params.iter_mut().zip(&sum) {
+                *dst = s * inv;
+            }
+            rec.counters.gradients += h * survivors as u64;
+            rec.counters
+                .record_update(1.0 / survivors as f64, 1, loss_sum / survivors as f64);
+        }
+        // else: whole epoch dropped — global model unchanged.
+        rec.maybe_record(trainer, t, &params, sim_time)?;
+    }
+    Ok(rec.log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::quadratic::{dummy_fleet, QuadraticProblem};
+    use crate::config::{Algo, LocalUpdate};
+    use crate::federated::data::{Dataset, FederatedData};
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.algo = Algo::FedAvg { k: 4 };
+        cfg.local_update = LocalUpdate::Sgd;
+        cfg.epochs = 40;
+        cfg.eval_every = 10;
+        cfg.gamma = 0.05;
+        cfg
+    }
+
+    fn fed() -> FederatedData {
+        let d = Dataset {
+            features: vec![0.0; 4],
+            labels: vec![0],
+            input_size: 4,
+            num_classes: 10,
+        };
+        FederatedData { train: d.clone(), test: d }
+    }
+
+    #[test]
+    fn fedavg_converges_on_quadratic() {
+        let p = QuadraticProblem::new(10, 6, 0.5, 2.0, 2.0, 0.0, 5, 1);
+        let data = fed();
+        let mut fleet = dummy_fleet(10, 2);
+        let log = run_fedavg(&p, &quick_cfg(), &data, &mut fleet, 3, 4,
+            StragglerPolicy::default()).unwrap();
+        let first = log.rows[0].test_loss;
+        let last = log.rows.last().unwrap().test_loss;
+        assert!(last < first * 0.05, "gap {first} -> {last}");
+    }
+
+    #[test]
+    fn straggler_timeout_drops_updates() {
+        // A timeout of 0 seconds drops every device: the model never moves
+        // and no gradients are counted, but downlink comms still happen.
+        let p = QuadraticProblem::new(10, 6, 0.5, 2.0, 2.0, 0.0, 5, 1);
+        let data = fed();
+        let mut fleet = dummy_fleet(10, 2);
+        let policy = StragglerPolicy { timeout: Some(0.0), min_survivors: 1 };
+        let log = run_fedavg(&p, &quick_cfg(), &data, &mut fleet, 3, 4, policy).unwrap();
+        let last = log.rows.last().unwrap();
+        assert_eq!(last.gradients, 0, "dropped updates must not count gradients");
+        assert_eq!(last.comms, 40 * 4, "downlinks still count");
+        // Model unchanged => gap identical to the init row.
+        assert!((last.test_loss - log.rows[0].test_loss).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generous_timeout_keeps_everyone() {
+        let p = QuadraticProblem::new(10, 6, 0.5, 2.0, 2.0, 0.0, 5, 1);
+        let data = fed();
+        let mut fleet = dummy_fleet(10, 2);
+        let policy = StragglerPolicy { timeout: Some(1e9), min_survivors: 4 };
+        let log = run_fedavg(&p, &quick_cfg(), &data, &mut fleet, 3, 4, policy).unwrap();
+        let last = log.rows.last().unwrap();
+        assert_eq!(last.gradients, 40 * 4 * 5);
+        assert_eq!(last.comms, 40 * 8);
+    }
+}

@@ -1,0 +1,95 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`virtual_mode`] — the paper's evaluation protocol (Algorithm 1 run
+//!   sequentially with sampled or emergent staleness on virtual time).
+//! * [`server`] — the Figure-1 architecture on real threads: scheduler ∥
+//!   updater ∥ worker pool over channels, global model behind a RwLock.
+//! * [`fedavg`] / [`sgd`] — the paper's baselines (Algorithms 2 and 3).
+//! * [`staleness`] — α_t control: `α·s(t−τ)`, decay schedule, drop policy.
+//! * [`model_store`] — versioned global-model history (stale reads).
+//! * [`updater`] — the mixing update with native and PJRT/Pallas engines.
+//!
+//! Every coordinator is generic over [`Trainer`] so the identical control
+//! path runs against the real PJRT-backed model ([`ModelRuntime`]) or the
+//! closed-form quadratic problems in `analysis` (used to validate the
+//! paper's Theorems 1–2 against the true optimality gap).
+
+pub mod fedavg;
+pub mod model_store;
+pub mod server;
+pub mod sgd;
+pub mod staleness;
+pub mod updater;
+pub mod virtual_mode;
+
+use crate::federated::data::Dataset;
+use crate::federated::device::SimDevice;
+use crate::runtime::{EvalMetrics, ModelRuntime, ParamVec, RuntimeError};
+
+/// Abstraction over "run H local SGD iterations on a device's data".
+///
+/// `anchor = None` ⇒ Algorithm 1 Option I (plain SGD);
+/// `Some(x_t)` ⇒ Option II (prox-SGD toward the received global model).
+pub trait Trainer {
+    fn param_count(&self) -> usize;
+
+    /// Initial global model for a repeat index.
+    fn init_params(&self, seed_idx: usize) -> Result<ParamVec, RuntimeError>;
+
+    /// H local iterations starting from `params`; returns the locally
+    /// trained model and mean training loss.
+    fn local_train(
+        &self,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        device: &mut SimDevice,
+        data: &Dataset,
+        gamma: f32,
+        rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError>;
+
+    /// Held-out evaluation.
+    fn evaluate(&self, params: &[f32], test: &Dataset) -> Result<EvalMetrics, RuntimeError>;
+
+    /// Local iterations per `local_train` call (H).
+    fn local_iters(&self) -> usize;
+
+    /// Server-side mixing; default = native rust. [`ModelRuntime`]
+    /// overrides to optionally run the Pallas kernel artifact.
+    fn mix(&self, x: &mut ParamVec, x_new: &[f32], alpha: f32) -> Result<(), RuntimeError> {
+        updater::mix_inplace(x, x_new, alpha);
+        Ok(())
+    }
+}
+
+impl Trainer for ModelRuntime {
+    fn param_count(&self) -> usize {
+        self.param_count()
+    }
+
+    fn init_params(&self, seed_idx: usize) -> Result<ParamVec, RuntimeError> {
+        ModelRuntime::init_params(self, seed_idx)
+    }
+
+    fn local_train(
+        &self,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        device: &mut SimDevice,
+        data: &Dataset,
+        gamma: f32,
+        rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError> {
+        let m = &self.manifest;
+        let batch = device.next_epoch_batch(data, m.local_iters, m.batch_size);
+        self.train_epoch(params, anchor, &batch, gamma, rho)
+    }
+
+    fn evaluate(&self, params: &[f32], test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
+        self.eval(params, &test.features, &test.labels)
+    }
+
+    fn local_iters(&self) -> usize {
+        self.manifest.local_iters
+    }
+}

@@ -1,0 +1,129 @@
+//! Versioned global-model store.
+//!
+//! The FedAsync server needs two things the plain parameter server does
+//! not: (1) the current model with its epoch stamp `t` (workers receive
+//! `(x_t, t)`), and (2) in simulation, access to *past* versions
+//! `x_{t−τ}` so the sampled-staleness protocol can hand a worker the model
+//! it *would have* received τ epochs ago.  A bounded ring of the last
+//! `capacity` versions covers both.
+
+use std::collections::VecDeque;
+
+use crate::runtime::ParamVec;
+
+/// Ring buffer of `(version, params)` with O(1) stale lookup.
+pub struct ModelStore {
+    /// Front = oldest retained version; back = current.
+    ring: VecDeque<ParamVec>,
+    /// Version (epoch stamp) of the back entry.
+    current_version: u64,
+    capacity: usize,
+}
+
+impl ModelStore {
+    /// `capacity` must cover the maximum staleness + 1.
+    pub fn new(initial: ParamVec, capacity: usize) -> ModelStore {
+        assert!(capacity >= 1);
+        let mut ring = VecDeque::with_capacity(capacity);
+        ring.push_back(initial);
+        ModelStore { ring, current_version: 0, capacity }
+    }
+
+    pub fn current_version(&self) -> u64 {
+        self.current_version
+    }
+
+    pub fn current(&self) -> &ParamVec {
+        self.ring.back().expect("non-empty ring")
+    }
+
+    /// Model at `version`, if still retained.
+    pub fn get(&self, version: u64) -> Option<&ParamVec> {
+        if version > self.current_version {
+            return None;
+        }
+        let age = (self.current_version - version) as usize;
+        if age >= self.ring.len() {
+            return None;
+        }
+        Some(&self.ring[self.ring.len() - 1 - age])
+    }
+
+    /// Oldest retained version.
+    pub fn oldest_version(&self) -> u64 {
+        self.current_version + 1 - self.ring.len() as u64
+    }
+
+    /// Install a new current model, advancing the version by one.
+    pub fn push(&mut self, params: ParamVec) -> u64 {
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(params);
+        self.current_version += 1;
+        self.current_version
+    }
+
+    /// Replace the current model in place (same version) — used by the
+    /// in-place native mixer to avoid an extra clone.
+    pub fn current_mut(&mut self) -> &mut ParamVec {
+        self.ring.back_mut().expect("non-empty ring")
+    }
+
+    pub fn retained(&self) -> usize {
+        self.ring.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(cap: usize) -> ModelStore {
+        ModelStore::new(vec![0.0], cap)
+    }
+
+    #[test]
+    fn versioning_and_stale_reads() {
+        let mut s = store(4);
+        assert_eq!(s.current_version(), 0);
+        for v in 1..=10u64 {
+            let got = s.push(vec![v as f32]);
+            assert_eq!(got, v);
+        }
+        assert_eq!(s.current_version(), 10);
+        assert_eq!(s.current()[0], 10.0);
+        assert_eq!(s.get(10).unwrap()[0], 10.0);
+        assert_eq!(s.get(8).unwrap()[0], 8.0);
+        assert_eq!(s.get(7).unwrap()[0], 7.0);
+        // Out of retention window.
+        assert!(s.get(6).is_none());
+        // Future version.
+        assert!(s.get(11).is_none());
+        assert_eq!(s.oldest_version(), 7);
+    }
+
+    #[test]
+    fn capacity_one_keeps_only_current() {
+        let mut s = store(1);
+        s.push(vec![1.0]);
+        s.push(vec![2.0]);
+        assert_eq!(s.retained(), 1);
+        assert_eq!(s.get(2).unwrap()[0], 2.0);
+        assert!(s.get(1).is_none());
+    }
+
+    #[test]
+    fn current_mut_edits_in_place() {
+        let mut s = store(2);
+        s.current_mut()[0] = 42.0;
+        assert_eq!(s.current()[0], 42.0);
+        assert_eq!(s.current_version(), 0);
+    }
+
+    #[test]
+    fn get_version_zero_initially() {
+        let s = store(3);
+        assert_eq!(s.get(0).unwrap()[0], 0.0);
+    }
+}

@@ -1,0 +1,372 @@
+//! The Figure-1 FedAsync server on real OS threads.
+//!
+//! ```text
+//!            ┌────────────┐ tasks (bounded)  ┌─────────────┐
+//!            │ scheduler  │ ───────────────▶ │ worker pool │──┐
+//!            └────────────┘                  └─────────────┘  │ updates
+//!                  ▲   read x_t                    │ compute  ▼ (bounded)
+//!            ┌─────┴──────────┐             ┌─────────────┐ ┌─────────┐
+//!            │ global model   │◀── write ── │ PJRT compute│ │ updater │
+//!            │ (RwLock, vers) │             │ service     │ └─────────┘
+//!            └────────────────┘             └─────────────┘
+//! ```
+//!
+//! * **Scheduler** triggers training tasks on randomly chosen devices,
+//!   snapshotting `(x_t, t)` under a read lock; the bounded task channel
+//!   is the back-pressure the paper's "randomize check-in times" provides.
+//! * **Workers** sleep the (scaled) simulated network/compute latency,
+//!   call into the PJRT **compute service** (a dedicated thread owning the
+//!   non-`Send` [`ModelRuntime`]), then push `(x_new, τ)`.
+//! * **Updater** applies the staleness-weighted mix under a write lock —
+//!   the only writer — and runs the eval grid.  Server-side mixing is the
+//!   native engine (`updater::mix_inplace`); `bench_updater` measures this
+//!   path's throughput against lock contention.
+//!
+//! On this 1-core machine the PJRT service serializes model math, so
+//! threads mode demonstrates architecture + measures coordination costs
+//! rather than wallclock speedups (DESIGN.md §Substitutions).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::staleness::{AlphaController, AlphaDecision};
+use crate::coordinator::updater::mix_inplace;
+use crate::federated::data::FederatedData;
+use crate::federated::device::{AvailabilityModel, SimDevice};
+use crate::federated::metrics::{MetricsLog, MetricsRow, RunningCounters};
+use crate::federated::network::LatencyModel;
+use crate::federated::partition;
+use crate::runtime::{EvalMetrics, ModelRuntime, ParamVec, RuntimeError};
+use crate::util::rng::Rng;
+
+/// Versioned global model shared between scheduler and updater.
+struct Global {
+    version: u64,
+    params: ParamVec,
+}
+
+/// Jobs handled by the PJRT compute-service thread.
+enum ComputeJob {
+    Train {
+        device: usize,
+        params: ParamVec,
+        prox: bool,
+        gamma: f32,
+        rho: f32,
+        reply: Sender<Result<(ParamVec, f32), String>>,
+    },
+    Eval {
+        params: ParamVec,
+        reply: Sender<Result<EvalMetrics, String>>,
+    },
+}
+
+/// A scheduled training task (scheduler → worker).
+struct Task {
+    device: usize,
+    tau: u64,
+    params: ParamVec,
+}
+
+/// A completed local update (worker → updater).
+struct Update {
+    tau: u64,
+    x_new: ParamVec,
+    loss: f32,
+}
+
+/// Wallclock scaling for simulated latencies (1 virtual s = this many real s).
+const TIME_SCALE: f64 = 0.002;
+
+/// Run the threaded FedAsync server; blocks until `cfg.epochs` updates.
+pub fn run_threaded(
+    model_dir: PathBuf,
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> Result<MetricsLog, RuntimeError> {
+    let data = Arc::new(crate::federated::data::generate(&cfg.federation, seed));
+    let part = partition::partition(
+        &data.train,
+        cfg.federation.devices,
+        cfg.federation.partition,
+        seed,
+    );
+
+    // ---------------------------------------------------- compute service
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+    let svc_data = Arc::clone(&data);
+    let svc_assignment = part.assignment.clone();
+    let svc_seed = seed;
+    let svc_dir = model_dir.clone();
+    let svc = std::thread::Builder::new()
+        .name("pjrt-compute".into())
+        .spawn(move || compute_service(svc_dir, svc_data, svc_assignment, svc_seed, job_rx, ready_tx))
+        .expect("spawn compute service");
+    let h = ready_rx
+        .recv()
+        .map_err(|_| RuntimeError::Load("compute service died during load".into()))?
+        .map_err(RuntimeError::Load)?;
+
+    // Initial params: read the init bin directly via the manifest.
+    let init = {
+        let man = crate::runtime::Manifest::load(&model_dir)?;
+        let path = &man.init_params[seed as usize % man.init_params.len()];
+        let bytes = std::fs::read(path)?;
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect::<Vec<f32>>()
+    };
+
+    let global = Arc::new(RwLock::new(Global { version: 0, params: init }));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // ------------------------------------------------------------ workers
+    let (task_tx, task_rx) = sync_channel::<Task>(cfg.max_inflight.max(1));
+    let task_rx = Arc::new(std::sync::Mutex::new(task_rx));
+    let (update_tx, update_rx) = sync_channel::<Update>(cfg.max_inflight.max(1));
+
+    let prox = cfg.local_update == crate::config::LocalUpdate::Prox;
+    let mut worker_handles = Vec::new();
+    for w in 0..cfg.worker_threads {
+        let task_rx = Arc::clone(&task_rx);
+        let update_tx = update_tx.clone();
+        let job_tx = job_tx.clone();
+        let gamma = cfg.gamma;
+        let rho = cfg.rho;
+        let wseed = seed ^ (0xAB00 + w as u64);
+        let handle = std::thread::Builder::new()
+            .name(format!("worker-{w}"))
+            .spawn(move || {
+                let mut rng = Rng::seed_from(wseed);
+                let latency = LatencyModel::default();
+                loop {
+                    let task = {
+                        let guard = task_rx.lock().expect("task channel lock");
+                        match guard.recv() {
+                            Ok(t) => t,
+                            Err(_) => return, // scheduler gone: drain out
+                        }
+                    };
+                    // Downlink latency.
+                    sleep_scaled(latency.sample(&mut rng));
+                    let (reply_tx, reply_rx) = mpsc::channel();
+                    if job_tx
+                        .send(ComputeJob::Train {
+                            device: task.device,
+                            params: task.params,
+                            prox,
+                            gamma,
+                            rho,
+                            reply: reply_tx,
+                        })
+                        .is_err()
+                    {
+                        return;
+                    }
+                    let Ok(Ok((x_new, loss))) = reply_rx.recv() else {
+                        return;
+                    };
+                    // Uplink latency.
+                    sleep_scaled(latency.sample(&mut rng));
+                    if update_tx.send(Update { tau: task.tau, x_new, loss }).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn worker");
+        worker_handles.push(handle);
+    }
+    drop(update_tx); // updater sees EOF when all workers exit
+
+    // ---------------------------------------------------------- scheduler
+    let sched_global = Arc::clone(&global);
+    let sched_stop = Arc::clone(&stop);
+    let n_devices = cfg.federation.devices;
+    let sched_seed = seed ^ 0x5CED;
+    let scheduler = std::thread::Builder::new()
+        .name("scheduler".into())
+        .spawn(move || {
+            let mut rng = Rng::seed_from(sched_seed);
+            while !sched_stop.load(Ordering::Relaxed) {
+                let device = rng.index(n_devices);
+                let (tau, params) = {
+                    let g = sched_global.read().expect("global read");
+                    (g.version, g.params.clone())
+                };
+                // Randomized check-in: jitter before each trigger.
+                sleep_scaled(rng.uniform(0.0, 0.02));
+                // send blocks when max_inflight tasks are outstanding —
+                // this is the scheduler's congestion control.
+                if task_tx.send(Task { device, tau, params }).is_err() {
+                    return;
+                }
+            }
+            // Dropping task_tx closes the pool.
+        })
+        .expect("spawn scheduler");
+
+    // ---------------------------------------------- updater (this thread)
+    let alpha_ctl =
+        AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness);
+    let mut log = MetricsLog::new(cfg.series_label());
+    let mut counters = RunningCounters::default();
+    let started = Instant::now();
+
+    let eval = |job_tx: &mpsc::Sender<ComputeJob>, params: ParamVec| -> Result<EvalMetrics, RuntimeError> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        job_tx
+            .send(ComputeJob::Eval { params, reply: reply_tx })
+            .map_err(|_| RuntimeError::Load("compute service closed".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| RuntimeError::Load("compute service died".into()))?
+            .map_err(RuntimeError::Load)
+    };
+
+    // Row at t=0.
+    {
+        let params = global.read().unwrap().params.clone();
+        let m = eval(&job_tx, params)?;
+        log.push(MetricsRow {
+            epoch: 0,
+            gradients: 0,
+            comms: 0,
+            sim_time: 0.0,
+            train_loss: m.loss,
+            test_loss: m.loss,
+            test_acc: m.accuracy,
+            alpha_eff: 0.0,
+            staleness: 0.0,
+        });
+    }
+
+    let mut next_eval = cfg.eval_every;
+    while let Ok(update) = update_rx.recv() {
+        let (version, params_for_eval) = {
+            let mut g = global.write().expect("global write");
+            let t_next = g.version + 1;
+            let staleness = t_next.saturating_sub(update.tau);
+            match alpha_ctl.decide(t_next as usize, staleness) {
+                AlphaDecision::Drop => {
+                    counters.comms += 2;
+                    counters.record_update(0.0, staleness, update.loss as f64);
+                    (g.version, None)
+                }
+                AlphaDecision::Mix(alpha) => {
+                    mix_inplace(&mut g.params, &update.x_new, alpha as f32);
+                    g.version = t_next;
+                    counters.comms += 2;
+                    counters.gradients += h as u64;
+                    counters.record_update(alpha, staleness, update.loss as f64);
+                    let snap = (t_next as usize >= next_eval || t_next as usize >= cfg.epochs)
+                        .then(|| g.params.clone());
+                    (g.version, snap)
+                }
+            }
+        };
+        if let Some(params) = params_for_eval {
+            let m = eval(&job_tx, params)?;
+            let (alpha_eff, staleness, train_loss) = counters.snapshot();
+            log.push(MetricsRow {
+                epoch: version as usize,
+                gradients: counters.gradients,
+                comms: counters.comms,
+                sim_time: started.elapsed().as_secs_f64(),
+                train_loss: if train_loss.is_nan() { m.loss } else { train_loss },
+                test_loss: m.loss,
+                test_acc: m.accuracy,
+                alpha_eff,
+                staleness,
+            });
+            next_eval = version as usize + cfg.eval_every;
+        }
+        if version as usize >= cfg.epochs {
+            break;
+        }
+    }
+
+    // ----------------------------------------------------------- shutdown
+    stop.store(true, Ordering::Relaxed);
+    // Keep draining updates until every worker has exited (the channel
+    // disconnects): this unblocks workers stuck on the bounded update
+    // channel, which in turn unblocks a scheduler stuck on a full task
+    // channel, letting it observe `stop` and close the pool.
+    loop {
+        use std::sync::mpsc::RecvTimeoutError;
+        match update_rx.recv_timeout(std::time::Duration::from_millis(100)) {
+            Ok(_) => {}
+            Err(RecvTimeoutError::Timeout) => {} // workers may be mid-compute
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    scheduler.join().expect("scheduler join");
+    for hdl in worker_handles {
+        hdl.join().expect("worker join");
+    }
+    drop(job_tx); // compute service exits on channel close
+    svc.join().expect("compute service join");
+    Ok(log)
+}
+
+/// Thread body owning the non-`Send` [`ModelRuntime`].
+fn compute_service(
+    model_dir: PathBuf,
+    data: Arc<FederatedData>,
+    assignment: Vec<Vec<usize>>,
+    seed: u64,
+    jobs: Receiver<ComputeJob>,
+    ready: Sender<Result<usize, String>>,
+) {
+    let rt = match ModelRuntime::load(&model_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut rng = Rng::seed_from(seed ^ 0xC0DE);
+    let mut fleet: Vec<SimDevice> = assignment
+        .into_iter()
+        .enumerate()
+        .map(|(id, shard)| {
+            SimDevice::new(id, shard, 1.0, AvailabilityModel::default(), rng.split())
+        })
+        .collect();
+    let _ = ready.send(Ok(rt.manifest.local_iters));
+
+    while let Ok(job) = jobs.recv() {
+        match job {
+            ComputeJob::Train { device, params, prox, gamma, rho, reply } => {
+                let m = &rt.manifest;
+                let batch = fleet[device].next_epoch_batch(&data.train, m.local_iters, m.batch_size);
+                let anchor = prox.then(|| params.clone());
+                let result = rt
+                    .train_epoch(&params, anchor.as_deref(), &batch, gamma, rho)
+                    .map_err(|e| e.to_string());
+                let _ = reply.send(result);
+            }
+            ComputeJob::Eval { params, reply } => {
+                let result = rt
+                    .eval(&params, &data.test.features, &data.test.labels)
+                    .map_err(|e| e.to_string());
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn sleep_scaled(virtual_seconds: f64) {
+    let real = virtual_seconds * TIME_SCALE;
+    if real > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(real));
+    }
+}
+
+/// Expose the bounded-queue types for benches.
+pub type UpdateSender = SyncSender<(u64, ParamVec, f32)>;

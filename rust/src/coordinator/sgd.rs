@@ -1,0 +1,93 @@
+//! Single-thread SGD baseline (paper Algorithm 3).
+//!
+//! One worker owns the *entire* (centralized, IID) training corpus and
+//! performs plain SGD — the upper bound both federated algorithms chase.
+//! To keep the paper's gradient accounting comparable, one "epoch" here
+//! performs the same `H` minibatch steps a FedAsync task does, so an SGD
+//! epoch contributes `H` gradients (the paper's per-gradient plots rely on
+//! this alignment; its per-epoch plots simply omit SGD).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::virtual_mode::EvalRecorder;
+use crate::coordinator::Trainer;
+use crate::federated::data::FederatedData;
+use crate::federated::device::{AvailabilityModel, SimDevice};
+use crate::federated::metrics::MetricsLog;
+use crate::runtime::RuntimeError;
+use crate::util::rng::Rng;
+
+/// Sentinel device id marking the centralized (all-data) SGD worker.
+pub const CENTRALIZED_DEVICE: usize = usize::MAX;
+
+/// Run centralized SGD for `cfg.epochs` "epochs" of `H` steps each.
+pub fn run_sgd<T: Trainer>(
+    trainer: &T,
+    cfg: &ExperimentConfig,
+    data: &FederatedData,
+    seed: u64,
+) -> Result<MetricsLog, RuntimeError> {
+    let mut rng = Rng::seed_from(seed ^ 0x5609_0003);
+    // A single virtual "device" holding every training sample, always
+    // eligible (availability is irrelevant for the centralized baseline).
+    // Its id is the CENTRALIZED_DEVICE sentinel so closed-form trainers
+    // (analysis::quadratic) know to use the *global* objective.
+    let all: Vec<usize> = (0..data.train.len()).collect();
+    let mut device = SimDevice::new(
+        CENTRALIZED_DEVICE,
+        all,
+        1.0,
+        AvailabilityModel { mean_up: 1e18, mean_down: 1e-9 },
+        rng.split(),
+    );
+    let mut params = trainer.init_params(seed as usize)?;
+    let h = trainer.local_iters() as u64;
+
+    let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
+    rec.maybe_record(trainer, 0, &params, 0.0)?;
+
+    for t in 1..=cfg.epochs {
+        let (next, loss) = trainer.local_train(
+            &params,
+            None,
+            &mut device,
+            &data.train,
+            cfg.gamma,
+            0.0,
+        )?;
+        params = next;
+        rec.counters.gradients += h;
+        // No communication: the model never leaves the single worker.
+        rec.counters.record_update(1.0, 0, loss as f64);
+        rec.maybe_record(trainer, t, &params, device.compute_time(trainer.local_iters(), 50) * t as f64)?;
+    }
+    Ok(rec.log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::quadratic::QuadraticProblem;
+    use crate::config::{Algo, ExperimentConfig, LocalUpdate};
+    use crate::federated::data::Dataset;
+
+    #[test]
+    fn sgd_reaches_global_optimum_of_quadratic() {
+        // Centralized SGD sees the global objective (the CENTRALIZED_DEVICE
+        // sentinel), so with no noise it must drive the exact gap to ~0 —
+        // unlike any single device's local optimum.
+        let p = QuadraticProblem::new(10, 6, 0.5, 2.0, 2.0, 0.0, 5, 1);
+        let d = Dataset { features: vec![0.0; 4], labels: vec![0], input_size: 4, num_classes: 10 };
+        let data = FederatedData { train: d.clone(), test: d };
+        let mut cfg = ExperimentConfig::default();
+        cfg.algo = Algo::Sgd;
+        cfg.local_update = LocalUpdate::Sgd;
+        cfg.epochs = 60;
+        cfg.eval_every = 20;
+        cfg.gamma = 0.1;
+        let log = run_sgd(&p, &cfg, &data, 5).unwrap();
+        let last = log.rows.last().unwrap();
+        assert!(last.test_loss < 1e-4, "gap {}", last.test_loss);
+        assert_eq!(last.comms, 0);
+        assert_eq!(last.gradients, 60 * 5);
+    }
+}

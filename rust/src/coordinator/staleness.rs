@@ -1,0 +1,156 @@
+//! α_t control: the staleness-adaptive mixing weight (paper §4).
+//!
+//! `α_t = α_base(t) · s(t−τ)` where `α_base` follows the decay schedule
+//! from the figure captions (×0.5 at a fixed epoch) and `s` is one of the
+//! paper's staleness functions ([`crate::config::StalenessFn`]).  The
+//! controller also implements the §6.4 drop policy ("when the staleness is
+//! too large, we can simply take α = 0").
+
+use crate::config::{StalenessConfig, StalenessFn};
+
+/// Decides the effective mixing weight for each received update.
+#[derive(Debug, Clone)]
+pub struct AlphaController {
+    base: f64,
+    decay: f64,
+    decay_at: usize,
+    func: StalenessFn,
+    drop_above: Option<u64>,
+}
+
+/// What the updater should do with an arriving update.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlphaDecision {
+    /// Mix with this α_t ∈ (0, 1].
+    Mix(f64),
+    /// Drop the update (staleness above the cutoff).
+    Drop,
+}
+
+impl AlphaController {
+    pub fn new(
+        alpha: f64,
+        decay: f64,
+        decay_at: usize,
+        staleness: &StalenessConfig,
+    ) -> AlphaController {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha={alpha}");
+        AlphaController {
+            base: alpha,
+            decay,
+            decay_at,
+            func: staleness.func,
+            drop_above: staleness.drop_above,
+        }
+    }
+
+    /// Base α at epoch `t` (decay schedule only, no staleness adaptation).
+    pub fn base_at(&self, t: usize) -> f64 {
+        if t >= self.decay_at && self.decay_at > 0 {
+            self.base * self.decay
+        } else {
+            self.base
+        }
+    }
+
+    /// Effective α_t for an update arriving at epoch `t` with the given
+    /// staleness, or `Drop`.
+    pub fn decide(&self, t: usize, staleness: u64) -> AlphaDecision {
+        if let Some(cut) = self.drop_above {
+            if staleness > cut {
+                return AlphaDecision::Drop;
+            }
+        }
+        let alpha = self.base_at(t) * self.func.eval(staleness);
+        AlphaDecision::Mix(alpha.clamp(0.0, 1.0))
+    }
+
+    pub fn func(&self) -> StalenessFn {
+        self.func
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StalenessConfig;
+
+    fn ctl(func: StalenessFn, drop_above: Option<u64>) -> AlphaController {
+        AlphaController::new(
+            0.6,
+            0.5,
+            800,
+            &StalenessConfig { max: 16, func, drop_above },
+        )
+    }
+
+    #[test]
+    fn decay_schedule_matches_captions() {
+        let c = ctl(StalenessFn::Constant, None);
+        assert_eq!(c.base_at(0), 0.6);
+        assert_eq!(c.base_at(799), 0.6);
+        assert_eq!(c.base_at(800), 0.3);
+        assert_eq!(c.base_at(1999), 0.3);
+    }
+
+    #[test]
+    fn adaptive_alpha_shrinks_with_staleness() {
+        let c = ctl(StalenessFn::Poly { a: 0.5 }, None);
+        let a0 = match c.decide(10, 0) {
+            AlphaDecision::Mix(a) => a,
+            _ => panic!(),
+        };
+        let a8 = match c.decide(10, 8) {
+            AlphaDecision::Mix(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(a0, 0.6);
+        assert!((a8 - 0.6 / 3.0).abs() < 1e-12); // (8+1)^-0.5 = 1/3
+    }
+
+    #[test]
+    fn drop_policy() {
+        let c = ctl(StalenessFn::Constant, Some(8));
+        assert_eq!(c.decide(0, 8), AlphaDecision::Mix(0.6));
+        assert_eq!(c.decide(0, 9), AlphaDecision::Drop);
+    }
+
+    #[test]
+    fn alpha_always_in_unit_interval() {
+        for func in [
+            StalenessFn::Constant,
+            StalenessFn::Linear { a: 2.0 },
+            StalenessFn::Poly { a: 0.5 },
+            StalenessFn::Exp { a: 1.0 },
+            StalenessFn::Hinge { a: 10.0, b: 4.0 },
+        ] {
+            let c = AlphaController::new(
+                1.0,
+                0.5,
+                10,
+                &StalenessConfig { max: 64, func, drop_above: None },
+            );
+            for t in [0usize, 5, 10, 100] {
+                for s in 0..64u64 {
+                    match c.decide(t, s) {
+                        AlphaDecision::Mix(a) => {
+                            assert!(a > 0.0 && a <= 1.0, "{func:?} t={t} s={s} a={a}")
+                        }
+                        AlphaDecision::Drop => panic!("unexpected drop"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn rejects_alpha_out_of_range() {
+        let _ = AlphaController::new(
+            1.5,
+            0.5,
+            0,
+            &StalenessConfig { max: 4, func: StalenessFn::Constant, drop_above: None },
+        );
+    }
+}

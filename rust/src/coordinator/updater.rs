@@ -1,0 +1,238 @@
+//! The server's mixing update — FedAsync's single line of math:
+//!
+//! ```text
+//! x_t = (1 − α_t)·x_{t−1} + α_t·x_new        α_t = α·s(t−τ)
+//! ```
+//!
+//! Two engines:
+//! * [`MixEngine::Native`] — allocation-free fused loop over the flat
+//!   parameter vector (the production hot path for a CPU server).
+//! * [`MixEngine::Pjrt`] — the Pallas `mix` kernel artifact, demonstrating
+//!   the L1 path end-to-end (and the TPU-server story).  `bench_mixing`
+//!   compares the two.
+
+use crate::coordinator::model_store::ModelStore;
+use crate::coordinator::staleness::{AlphaController, AlphaDecision};
+use crate::coordinator::Trainer;
+use crate::runtime::RuntimeError;
+
+/// Which implementation performs the blend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixEngine {
+    Native,
+    Pjrt,
+}
+
+/// In-place native mix: `x ← (1−α)·x + α·y`.
+///
+/// Written as `x += α·(y − x)` — one multiply-add per element, which LLVM
+/// auto-vectorizes; no temporary allocation.
+#[inline]
+pub fn mix_inplace(x: &mut [f32], y: &[f32], alpha: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += alpha * (b - *a);
+    }
+}
+
+/// Out-of-place native mix: writes `(1−α)·x + α·y` into a fresh vector.
+///
+/// One read pass over `x`/`y` and one write — versus `clone` + `mix_inplace`
+/// which touches the destination twice (memcpy then read-modify-write).
+/// Measured ~1.4× faster at 10⁶ params (EXPERIMENTS.md §Perf); this is the
+/// updater's per-epoch allocation, reused as the new history entry.
+#[inline]
+pub fn mix_into(x: &[f32], y: &[f32], alpha: f32) -> Vec<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| a + alpha * (b - a))
+        .collect()
+}
+
+/// Outcome of offering one worker update to the updater.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpdateOutcome {
+    /// New epoch `t` if applied, unchanged version if dropped.
+    pub version: u64,
+    pub applied: bool,
+    /// α_t actually used (0 when dropped).
+    pub alpha_eff: f64,
+    pub staleness: u64,
+}
+
+/// Applies staleness-weighted updates to a [`ModelStore`].
+pub struct Updater {
+    pub alpha: AlphaController,
+    pub engine: MixEngine,
+}
+
+impl Updater {
+    pub fn new(alpha: AlphaController, engine: MixEngine) -> Updater {
+        Updater { alpha, engine }
+    }
+
+    /// Offer `(x_new, τ)` to the server at the next epoch (paper
+    /// Algorithm 1, updater thread body).
+    pub fn apply<T: Trainer>(
+        &self,
+        trainer: &T,
+        store: &mut ModelStore,
+        x_new: &[f32],
+        tau: u64,
+    ) -> Result<UpdateOutcome, RuntimeError> {
+        // The arriving update becomes epoch t = current + 1; it was trained
+        // from x_τ, so its staleness is t − τ (paper convention: the
+        // freshest possible update — trained on x_{t−1} — has staleness 1).
+        let t_next = store.current_version() + 1;
+        debug_assert!(tau < t_next, "update from the future: tau={tau} t={t_next}");
+        let staleness = t_next.saturating_sub(tau);
+        match self.alpha.decide(t_next as usize, staleness) {
+            AlphaDecision::Drop => Ok(UpdateOutcome {
+                version: store.current_version(),
+                applied: false,
+                alpha_eff: 0.0,
+                staleness,
+            }),
+            AlphaDecision::Mix(alpha) => {
+                let x = match self.engine {
+                    // Single fused pass: read current + x_new, write the
+                    // new history entry directly (no clone-then-rewrite).
+                    MixEngine::Native => mix_into(store.current(), x_new, alpha as f32),
+                    MixEngine::Pjrt => {
+                        let mut x = store.current().clone();
+                        trainer.mix(&mut x, x_new, alpha as f32)?;
+                        x
+                    }
+                };
+                let version = store.push(x);
+                Ok(UpdateOutcome { version, applied: true, alpha_eff: alpha, staleness })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{StalenessConfig, StalenessFn};
+
+    /// Minimal Trainer for updater tests (native mixing only).
+    struct NullTrainer;
+    impl Trainer for NullTrainer {
+        fn param_count(&self) -> usize {
+            4
+        }
+        fn init_params(&self, _: usize) -> Result<Vec<f32>, RuntimeError> {
+            Ok(vec![0.0; 4])
+        }
+        fn local_train(
+            &self,
+            _: &[f32],
+            _: Option<&[f32]>,
+            _: &mut crate::federated::device::SimDevice,
+            _: &crate::federated::data::Dataset,
+            _: f32,
+            _: f32,
+        ) -> Result<(Vec<f32>, f32), RuntimeError> {
+            unreachable!()
+        }
+        fn evaluate(
+            &self,
+            _: &[f32],
+            _: &crate::federated::data::Dataset,
+        ) -> Result<crate::runtime::EvalMetrics, RuntimeError> {
+            unreachable!()
+        }
+        fn local_iters(&self) -> usize {
+            1
+        }
+    }
+
+    fn updater(func: StalenessFn, drop_above: Option<u64>) -> Updater {
+        Updater::new(
+            AlphaController::new(
+                0.5,
+                1.0,
+                usize::MAX,
+                &StalenessConfig { max: 16, func, drop_above },
+            ),
+            MixEngine::Native,
+        )
+    }
+
+    #[test]
+    fn mix_inplace_matches_formula() {
+        let mut x = vec![1.0f32, 2.0, -3.0];
+        let y = vec![5.0f32, 0.0, 3.0];
+        mix_inplace(&mut x, &y, 0.25);
+        assert_eq!(x, vec![2.0, 1.5, -1.5]);
+    }
+
+    #[test]
+    fn mix_alpha_zero_and_one() {
+        let mut x = vec![1.0f32, 2.0];
+        mix_inplace(&mut x, &[9.0, 9.0], 0.0);
+        assert_eq!(x, vec![1.0, 2.0]);
+        mix_inplace(&mut x, &[9.0, 9.0], 1.0);
+        assert_eq!(x, vec![9.0, 9.0]);
+    }
+
+    #[test]
+    fn fresh_update_advances_version() {
+        let u = updater(StalenessFn::Constant, None);
+        let mut store = ModelStore::new(vec![0.0; 4], 8);
+        // Update computed from version 0, arriving as epoch 1: staleness 1
+        // (the paper's freshest case).
+        let out = u
+            .apply(&NullTrainer, &mut store, &[1.0, 1.0, 1.0, 1.0], 0)
+            .unwrap();
+        assert!(out.applied);
+        assert_eq!(out.version, 1);
+        assert_eq!(out.staleness, 1);
+        assert_eq!(out.alpha_eff, 0.5);
+        assert_eq!(store.current(), &vec![0.5; 4]);
+    }
+
+    #[test]
+    fn stale_update_gets_smaller_alpha() {
+        let u = updater(StalenessFn::Poly { a: 0.5 }, None);
+        let mut store = ModelStore::new(vec![0.0; 4], 32);
+        for _ in 0..9 {
+            store.push(vec![0.0; 4]);
+        }
+        // Arriving at epoch 10, computed from version 2 ⇒ staleness 8.
+        let out = u
+            .apply(&NullTrainer, &mut store, &[1.0; 4], 2)
+            .unwrap();
+        assert!(out.applied);
+        assert_eq!(out.staleness, 8);
+        let want = 0.5 * (9.0f64).powf(-0.5);
+        assert!((out.alpha_eff - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drop_leaves_model_untouched() {
+        let u = updater(StalenessFn::Constant, Some(3));
+        let mut store = ModelStore::new(vec![0.0; 4], 32);
+        for _ in 0..9 {
+            store.push(vec![0.0; 4]);
+        }
+        let before = store.current_version();
+        let out = u.apply(&NullTrainer, &mut store, &[1.0; 4], 0).unwrap();
+        assert!(!out.applied);
+        assert_eq!(out.alpha_eff, 0.0);
+        assert_eq!(store.current_version(), before);
+        assert_eq!(store.current(), &vec![0.0; 4]);
+    }
+
+    #[test]
+    fn mixed_model_stays_on_segment() {
+        let u = updater(StalenessFn::Constant, None);
+        let mut store = ModelStore::new(vec![-1.0; 4], 8);
+        u.apply(&NullTrainer, &mut store, &[3.0; 4], 0).unwrap();
+        for &v in store.current() {
+            assert!((-1.0..=3.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Per-figure reproduction drivers (paper §6, Figures 2–10).
+//!
+//! Each driver regenerates the data series behind one paper figure and
+//! writes CSVs under `results/<fig>/<series>.csv` (columns cover all three
+//! of the paper's x-axes, so Figures 2/4/6 share the staleness-4 runs and
+//! Figures 3/5/7 share the staleness-16 runs — exactly as in the paper,
+//! which plots the same runs against different x-axes).
+//!
+//! Captions encoded here (from the paper):
+//! * α decays ×0.5 at epoch 0.4·T (800 of 2000).
+//! * FedAsync+Poly: a = 0.5.  FedAsync+Hinge: a = 10, b = 4 (figs 2–7);
+//!   a = 4, b = 4 (figs 9–10).
+//! * FedAvg: k = 10 of n = 100 devices.  Minibatch 50.
+//! * Figures 8–10 report metrics at the end of training.
+
+use std::path::Path;
+
+use crate::config::presets::{base, figure_variants, Scale};
+use crate::config::{Algo, ExperimentConfig, StalenessFn};
+use crate::coordinator::Trainer;
+use crate::experiment::runner;
+use crate::federated::metrics::MetricsLog;
+use crate::runtime::RuntimeError;
+use crate::util::json::{Json, JsonObj};
+
+/// All figure ids in the paper's evaluation.
+pub const FIGURE_IDS: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+];
+
+/// Overrides applied to every preset (CLI knobs for quick runs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FigureOverrides {
+    pub epochs: Option<usize>,
+    pub repeats: Option<usize>,
+    pub devices: Option<usize>,
+}
+
+impl FigureOverrides {
+    fn apply(&self, cfg: &mut ExperimentConfig) {
+        if let Some(e) = self.epochs {
+            cfg.epochs = e;
+            cfg.alpha_decay_at = e * 2 / 5;
+        }
+        if let Some(r) = self.repeats {
+            cfg.repeats = r;
+        }
+        if let Some(d) = self.devices {
+            cfg.federation.devices = d;
+            if let Algo::FedAvg { k } = cfg.algo {
+                cfg.algo = Algo::FedAvg { k: k.min(d) };
+            }
+        }
+    }
+}
+
+fn slug(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
+/// Run one figure; returns the series logs written.
+pub fn run_figure<T: Trainer>(
+    trainer: &T,
+    id: &str,
+    scale: Scale,
+    out_root: &Path,
+    ov: FigureOverrides,
+) -> Result<Vec<MetricsLog>, RuntimeError> {
+    match id {
+        // Convergence curves: the same runs serve three x-axes.
+        "fig2" | "fig4" | "fig6" => curves(trainer, id, scale, 4, out_root, ov),
+        "fig3" | "fig5" | "fig7" => curves(trainer, id, scale, 16, out_root, ov),
+        "fig8" => staleness_sweep(trainer, scale, out_root, ov),
+        "fig9" => alpha_sweep(trainer, "fig9", scale, 4, out_root, ov),
+        "fig10" => alpha_sweep(trainer, "fig10", scale, 16, out_root, ov),
+        other => Err(RuntimeError::Load(format!(
+            "unknown figure {other:?}; available: {FIGURE_IDS:?}"
+        ))),
+    }
+}
+
+/// Figures 2–7: loss/accuracy curves for all five algorithm series.
+fn curves<T: Trainer>(
+    trainer: &T,
+    id: &str,
+    scale: Scale,
+    max_staleness: u64,
+    out_root: &Path,
+    ov: FigureOverrides,
+) -> Result<Vec<MetricsLog>, RuntimeError> {
+    let dir = out_root.join(id);
+    let mut out = Vec::new();
+    for mut cfg in figure_variants(scale, max_staleness) {
+        ov.apply(&mut cfg);
+        crate::log_info!(
+            "figure",
+            "{id}: running {} (T={}, repeats={})",
+            cfg.series_label(),
+            cfg.epochs,
+            cfg.repeats
+        );
+        let log = runner::run(trainer, &cfg)?;
+        log.write_csv(&dir, &slug(&log.label))?;
+        out.push(log);
+    }
+    write_figure_meta(&dir, id, &out)?;
+    Ok(out)
+}
+
+/// Figure 8: final metrics vs max staleness, per FedAsync variant.
+fn staleness_sweep<T: Trainer>(
+    trainer: &T,
+    scale: Scale,
+    out_root: &Path,
+    ov: FigureOverrides,
+) -> Result<Vec<MetricsLog>, RuntimeError> {
+    let dir = out_root.join("fig8");
+    let staleness_grid: &[u64] = &[2, 4, 8, 16, 32];
+    let variants: &[(&str, StalenessFn)] = &[
+        ("FedAsync", StalenessFn::Constant),
+        ("FedAsync+Poly", StalenessFn::Poly { a: 0.5 }),
+        ("FedAsync+Hinge", StalenessFn::Hinge { a: 10.0, b: 4.0 }),
+    ];
+    let mut summary_rows = Vec::new();
+    let mut out = Vec::new();
+    for &(label, func) in variants {
+        for &smax in staleness_grid {
+            let mut cfg = base(scale);
+            ov.apply(&mut cfg);
+            cfg.name = format!("{}_s{smax}", slug(label));
+            cfg.staleness.max = smax;
+            cfg.staleness.func = func;
+            crate::log_info!("figure", "fig8: {label} staleness={smax}");
+            let log = runner::run(trainer, &cfg)?;
+            let (acc, loss) = log.final_metrics().expect("non-empty run");
+            summary_rows.push(format!("{label},{smax},{acc:.6},{loss:.6}"));
+            log.write_csv(&dir, &cfg.name)?;
+            out.push(log);
+        }
+    }
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(
+        dir.join("summary.csv"),
+        format!("series,max_staleness,final_test_acc,final_train_loss\n{}\n", summary_rows.join("\n")),
+    )?;
+    write_figure_meta(&dir, "fig8", &out)?;
+    Ok(out)
+}
+
+/// Figures 9–10: final metrics vs α (caption: Hinge uses a=4, b=4 here).
+fn alpha_sweep<T: Trainer>(
+    trainer: &T,
+    id: &str,
+    scale: Scale,
+    max_staleness: u64,
+    out_root: &Path,
+    ov: FigureOverrides,
+) -> Result<Vec<MetricsLog>, RuntimeError> {
+    let dir = out_root.join(id);
+    let alpha_grid: &[f64] = &[0.2, 0.4, 0.6, 0.8, 0.9];
+    let variants: &[(&str, StalenessFn)] = &[
+        ("FedAsync", StalenessFn::Constant),
+        ("FedAsync+Poly", StalenessFn::Poly { a: 0.5 }),
+        ("FedAsync+Hinge", StalenessFn::Hinge { a: 4.0, b: 4.0 }),
+    ];
+    let mut summary_rows = Vec::new();
+    let mut out = Vec::new();
+    for &(label, func) in variants {
+        for &alpha in alpha_grid {
+            let mut cfg = base(scale);
+            ov.apply(&mut cfg);
+            cfg.name = format!("{}_a{}", slug(label), (alpha * 100.0) as u32);
+            cfg.alpha = alpha;
+            cfg.staleness.max = max_staleness;
+            cfg.staleness.func = func;
+            crate::log_info!("figure", "{id}: {label} alpha={alpha}");
+            let log = runner::run(trainer, &cfg)?;
+            let (acc, loss) = log.final_metrics().expect("non-empty run");
+            summary_rows.push(format!("{label},{alpha},{acc:.6},{loss:.6}"));
+            log.write_csv(&dir, &cfg.name)?;
+            out.push(log);
+        }
+    }
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(
+        dir.join("summary.csv"),
+        format!("series,alpha,final_test_acc,final_train_loss\n{}\n", summary_rows.join("\n")),
+    )?;
+    write_figure_meta(&dir, id, &out)?;
+    Ok(out)
+}
+
+fn write_figure_meta(dir: &Path, id: &str, logs: &[MetricsLog]) -> Result<(), RuntimeError> {
+    std::fs::create_dir_all(dir)?;
+    let mut obj = JsonObj::new();
+    obj.insert("figure", Json::Str(id.to_string()));
+    obj.insert(
+        "series",
+        Json::Arr(logs.iter().map(|l| Json::Str(l.label.clone())).collect()),
+    );
+    obj.insert(
+        "paper_axes",
+        Json::Str(
+            match id {
+                "fig2" | "fig3" => "metrics vs gradients",
+                "fig4" | "fig5" => "metrics vs epoch",
+                "fig6" | "fig7" => "metrics vs comms",
+                "fig8" => "final metrics vs max staleness",
+                _ => "final metrics vs alpha",
+            }
+            .into(),
+        ),
+    );
+    std::fs::write(dir.join("figure.json"), Json::Obj(obj).to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::quadratic::QuadraticProblem;
+
+    fn tiny_overrides() -> FigureOverrides {
+        FigureOverrides { epochs: Some(30), repeats: Some(1), devices: Some(8) }
+    }
+
+    fn quad() -> QuadraticProblem {
+        QuadraticProblem::new(8, 6, 0.5, 2.0, 2.0, 0.1, 5, 1)
+    }
+
+    #[test]
+    fn fig2_writes_all_five_series() {
+        let dir = std::env::temp_dir().join("fedasync_figtest_fig2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let logs = run_figure(&quad(), "fig2", Scale::Fast, &dir, tiny_overrides()).unwrap();
+        assert_eq!(logs.len(), 5);
+        for name in ["fedasync", "fedasync_poly", "fedasync_hinge", "fedavg", "sgd"] {
+            assert!(dir.join("fig2").join(format!("{name}.csv")).exists(), "{name}");
+        }
+        assert!(dir.join("fig2/figure.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig8_summary_has_grid_rows() {
+        let dir = std::env::temp_dir().join("fedasync_figtest_fig8");
+        let _ = std::fs::remove_dir_all(&dir);
+        let logs = run_figure(&quad(), "fig8", Scale::Fast, &dir, tiny_overrides()).unwrap();
+        assert_eq!(logs.len(), 15); // 3 variants × 5 staleness values
+        let summary = std::fs::read_to_string(dir.join("fig8/summary.csv")).unwrap();
+        assert_eq!(summary.lines().count(), 16);
+        assert!(summary.starts_with("series,max_staleness"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig9_alpha_sweep_rows() {
+        let dir = std::env::temp_dir().join("fedasync_figtest_fig9");
+        let _ = std::fs::remove_dir_all(&dir);
+        let logs = run_figure(&quad(), "fig9", Scale::Fast, &dir, tiny_overrides()).unwrap();
+        assert_eq!(logs.len(), 15); // 3 variants × 5 alphas
+        let summary = std::fs::read_to_string(dir.join("fig9/summary.csv")).unwrap();
+        assert!(summary.contains("FedAsync+Hinge,0.9"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_figure_errors() {
+        let dir = std::env::temp_dir().join("fedasync_figtest_bad");
+        assert!(run_figure(&quad(), "fig99", Scale::Fast, &dir, tiny_overrides()).is_err());
+    }
+}

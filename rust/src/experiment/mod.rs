@@ -1,0 +1,3 @@
+//! Experiment harness: runners, sweeps, and per-figure drivers.
+pub mod figures;
+pub mod runner;

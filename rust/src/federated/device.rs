@@ -1,0 +1,243 @@
+//! Simulated edge-device fleet (substitution for 100 physical devices).
+//!
+//! Each [`SimDevice`] owns a data shard and models the paper's device
+//! properties (§1): heterogeneous compute speed, intermittent availability
+//! (idle/charging/unmetered-network eligibility), and a local-epoch batch
+//! sampler that performs the paper's "full pass over the local dataset"
+//! semantics (shuffled minibatches, wrapping when the shard is smaller
+//! than `H·B`).
+
+use crate::federated::data::Dataset;
+use crate::runtime::EpochBatch;
+use crate::util::rng::Rng;
+
+/// Availability model: alternating eligible/ineligible periods in virtual
+/// time, both exponentially distributed.
+#[derive(Debug, Clone, Copy)]
+pub struct AvailabilityModel {
+    /// Mean eligible-period length (virtual seconds).
+    pub mean_up: f64,
+    /// Mean ineligible-period length.
+    pub mean_down: f64,
+}
+
+impl Default for AvailabilityModel {
+    fn default() -> Self {
+        // Devices are usually eligible (idle+charging at night), with
+        // occasional dropouts.
+        AvailabilityModel { mean_up: 300.0, mean_down: 60.0 }
+    }
+}
+
+/// One simulated device + its worker process state.
+pub struct SimDevice {
+    pub id: usize,
+    /// Indices into the shared training [`Dataset`].
+    pub shard: Vec<usize>,
+    /// Relative compute speed (1.0 = nominal; < 1 = slower device).
+    pub speed: f64,
+    availability: AvailabilityModel,
+    /// Virtual time at which the current availability period ends, and
+    /// whether the device is currently eligible.
+    avail_until: f64,
+    eligible: bool,
+    /// Cursor into the shuffled shard for epoch sampling.
+    cursor: usize,
+    order: Vec<usize>,
+    rng: Rng,
+}
+
+impl SimDevice {
+    pub fn new(
+        id: usize,
+        shard: Vec<usize>,
+        speed: f64,
+        availability: AvailabilityModel,
+        mut rng: Rng,
+    ) -> SimDevice {
+        assert!(!shard.is_empty(), "device {id} got an empty shard");
+        let mut order = shard.clone();
+        rng.shuffle(&mut order);
+        SimDevice {
+            id,
+            shard,
+            speed,
+            availability,
+            avail_until: 0.0,
+            eligible: true,
+            cursor: 0,
+            order,
+            rng,
+        }
+    }
+
+    /// Build a fleet from a partition: speeds are log-normal (heavy tail of
+    /// slow devices — the paper's stragglers), availability default.
+    pub fn fleet(
+        assignment: Vec<Vec<usize>>,
+        speed_sigma: f64,
+        availability: AvailabilityModel,
+        root_rng: &mut Rng,
+    ) -> Vec<SimDevice> {
+        assignment
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| {
+                let mut rng = root_rng.split();
+                // Median-1 log-normal speed; sigma controls heterogeneity.
+                let speed = rng.lognormal(0.0, speed_sigma).clamp(0.05, 20.0);
+                SimDevice::new(id, shard, speed, availability, rng)
+            })
+            .collect()
+    }
+
+    /// Sample one local "epoch" of `h` minibatches of size `b`.
+    ///
+    /// Implements a shuffled pass over the shard: samples are drawn without
+    /// replacement until the shard is exhausted, then reshuffled (so shards
+    /// smaller than `h·b` wrap, and shards larger are covered across tasks).
+    pub fn next_epoch_batch(&mut self, data: &Dataset, h: usize, b: usize) -> EpochBatch {
+        let isz = data.input_size;
+        let n = h * b;
+        let mut images = Vec::with_capacity(n * isz);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            images.extend_from_slice(data.sample(idx));
+            labels.push(data.labels[idx]);
+        }
+        EpochBatch { images, labels }
+    }
+
+    /// Virtual compute time for `h` local iterations of batch size `b`.
+    /// Nominal device: 1 ms per sample.
+    pub fn compute_time(&self, h: usize, b: usize) -> f64 {
+        (h * b) as f64 * 0.001 / self.speed
+    }
+
+    /// Is the device eligible at virtual time `now`? Advances the
+    /// availability process as needed.
+    pub fn is_eligible(&mut self, now: f64) -> bool {
+        while now >= self.avail_until {
+            self.eligible = !self.eligible;
+            let mean = if self.eligible {
+                self.availability.mean_up
+            } else {
+                self.availability.mean_down
+            };
+            self.avail_until += self.rng.exponential(1.0 / mean.max(1e-9));
+        }
+        self.eligible
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Dataset as DK, FederationConfig, Partition};
+    use crate::federated::{data, partition};
+
+    fn dataset() -> Dataset {
+        data::generate(
+            &FederationConfig {
+                devices: 4,
+                samples_per_device: 30,
+                test_samples: 10,
+                partition: Partition::Iid,
+                dataset: DK::Features,
+                label_noise: 0.0,
+                class_sep: 1.0,
+            },
+            3,
+        )
+        .train
+    }
+
+    fn device(shard: Vec<usize>) -> SimDevice {
+        SimDevice::new(0, shard, 1.0, AvailabilityModel::default(), Rng::seed_from(5))
+    }
+
+    #[test]
+    fn epoch_batch_has_right_shape() {
+        let d = dataset();
+        let mut dev = device((0..30).collect());
+        let eb = dev.next_epoch_batch(&d, 5, 10);
+        assert_eq!(eb.labels.len(), 50);
+        assert_eq!(eb.images.len(), 50 * d.input_size);
+    }
+
+    #[test]
+    fn epoch_sampling_covers_shard_without_replacement() {
+        let d = dataset();
+        let mut dev = device((0..30).collect());
+        // 3 batches of 10 = exactly one pass; labels multiset must equal
+        // the shard's.
+        let eb = dev.next_epoch_batch(&d, 3, 10);
+        let mut got = eb.labels.clone();
+        let mut want: Vec<i32> = (0..30).map(|i| d.labels[i]).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn small_shard_wraps() {
+        let d = dataset();
+        let mut dev = device(vec![0, 1, 2]);
+        let eb = dev.next_epoch_batch(&d, 2, 5); // needs 10 > 3 samples
+        assert_eq!(eb.labels.len(), 10);
+        // Only labels from the 3-sample shard can appear.
+        let allowed: Vec<i32> = vec![d.labels[0], d.labels[1], d.labels[2]];
+        assert!(eb.labels.iter().all(|l| allowed.contains(l)));
+    }
+
+    #[test]
+    fn compute_time_scales_with_speed() {
+        let slow = SimDevice::new(0, vec![0], 0.5, AvailabilityModel::default(), Rng::seed_from(1));
+        let fast = SimDevice::new(1, vec![0], 2.0, AvailabilityModel::default(), Rng::seed_from(2));
+        assert!(slow.compute_time(10, 50) > fast.compute_time(10, 50) * 3.9);
+    }
+
+    #[test]
+    fn availability_toggles_over_time() {
+        let mut dev = device((0..10).collect());
+        let mut seen_eligible = false;
+        let mut seen_ineligible = false;
+        let mut t = 0.0;
+        for _ in 0..2000 {
+            t += 10.0;
+            if dev.is_eligible(t) {
+                seen_eligible = true;
+            } else {
+                seen_ineligible = true;
+            }
+        }
+        assert!(seen_eligible && seen_ineligible);
+    }
+
+    #[test]
+    fn fleet_has_heterogeneous_speeds() {
+        let d = dataset();
+        let p = partition::partition(&d, 4, Partition::Iid, 1);
+        let mut rng = Rng::seed_from(6);
+        let fleet = SimDevice::fleet(p.assignment, 0.5, AvailabilityModel::default(), &mut rng);
+        assert_eq!(fleet.len(), 4);
+        let speeds: Vec<f64> = fleet.iter().map(|d| d.speed).collect();
+        assert!(speeds.iter().any(|&s| s != speeds[0]), "{speeds:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty shard")]
+    fn empty_shard_panics() {
+        device(vec![]);
+    }
+}

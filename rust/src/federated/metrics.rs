@@ -1,0 +1,295 @@
+//! Metrics recording: the paper's three x-axes and two y-axes.
+//!
+//! Every figure in §6 plots {training loss, top-1 test accuracy} against
+//! one of {global epochs, # gradients applied to the global model,
+//! # communications at the server}.  [`MetricsRow`] carries all of them so
+//! one run feeds every figure; [`MetricsLog`] aggregates rows, averages
+//! across repeats, and writes CSV (plus a JSON provenance header file).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One evaluation point during a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsRow {
+    /// Global epoch `t` (server updates so far).
+    pub epoch: usize,
+    /// Gradients applied to the global model so far (paper: FedAsync adds
+    /// H per epoch, FedAvg k·H per epoch).
+    pub gradients: u64,
+    /// Models sent+received at the server so far.
+    pub comms: u64,
+    /// Virtual seconds elapsed (virtual mode) or wallclock (threads mode).
+    pub sim_time: f64,
+    /// Mean training loss reported by recent local tasks.
+    pub train_loss: f64,
+    /// Held-out metrics.
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Mean effective α_t since the previous row (0 for baselines).
+    pub alpha_eff: f64,
+    /// Mean staleness since the previous row.
+    pub staleness: f64,
+}
+
+/// A labelled series of metric rows (one run, or a mean over repeats).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsLog {
+    /// Series label for figures ("FedAsync+Poly", "FedAvg", ...).
+    pub label: String,
+    pub rows: Vec<MetricsRow>,
+    /// Run provenance (config JSON), attached to file output.
+    pub provenance: Option<Json>,
+}
+
+pub const CSV_HEADER: &str =
+    "epoch,gradients,comms,sim_time,train_loss,test_loss,test_acc,alpha_eff,staleness";
+
+impl MetricsLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        MetricsLog { label: label.into(), rows: Vec::new(), provenance: None }
+    }
+
+    pub fn push(&mut self, row: MetricsRow) {
+        self.rows.push(row);
+    }
+
+    pub fn last(&self) -> Option<&MetricsRow> {
+        self.rows.last()
+    }
+
+    /// Final-accuracy summary (figures 8–10 plot metrics "at the end of
+    /// training").
+    pub fn final_metrics(&self) -> Option<(f64, f64)> {
+        self.last().map(|r| (r.test_acc, r.train_loss))
+    }
+
+    /// Pointwise mean of several runs of the same configuration.
+    /// Rows are aligned by index; runs must have equal length (the runner
+    /// guarantees this: evaluation happens on a fixed epoch grid).
+    pub fn mean_of(label: impl Into<String>, runs: &[MetricsLog]) -> MetricsLog {
+        let label = label.into();
+        assert!(!runs.is_empty(), "mean_of: no runs");
+        let len = runs[0].rows.len();
+        assert!(
+            runs.iter().all(|r| r.rows.len() == len),
+            "mean_of: ragged runs ({:?})",
+            runs.iter().map(|r| r.rows.len()).collect::<Vec<_>>()
+        );
+        let n = runs.len() as f64;
+        let rows = (0..len)
+            .map(|i| {
+                let get = |f: fn(&MetricsRow) -> f64| {
+                    runs.iter().map(|r| f(&r.rows[i])).sum::<f64>() / n
+                };
+                MetricsRow {
+                    epoch: runs[0].rows[i].epoch,
+                    gradients: (runs.iter().map(|r| r.rows[i].gradients).sum::<u64>() as f64 / n)
+                        .round() as u64,
+                    comms: (runs.iter().map(|r| r.rows[i].comms).sum::<u64>() as f64 / n).round()
+                        as u64,
+                    sim_time: get(|r| r.sim_time),
+                    train_loss: get(|r| r.train_loss),
+                    test_loss: get(|r| r.test_loss),
+                    test_acc: get(|r| r.test_acc),
+                    alpha_eff: get(|r| r.alpha_eff),
+                    staleness: get(|r| r.staleness),
+                }
+            })
+            .collect();
+        MetricsLog { label, rows, provenance: runs[0].provenance.clone() }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(CSV_HEADER);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{:.4},{:.6},{:.6},{:.6},{:.5},{:.3}\n",
+                r.epoch,
+                r.gradients,
+                r.comms,
+                r.sim_time,
+                r.train_loss,
+                r.test_loss,
+                r.test_acc,
+                r.alpha_eff,
+                r.staleness
+            ));
+        }
+        out
+    }
+
+    /// Write `<dir>/<stem>.csv` (+ `<stem>.meta.json` when provenance set).
+    pub fn write_csv(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        if let Some(p) = &self.provenance {
+            std::fs::write(
+                dir.join(format!("{stem}.meta.json")),
+                p.to_string_pretty(),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Parse back from CSV (used by tests and the figure merger).
+    pub fn from_csv(label: &str, text: &str) -> Result<MetricsLog, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty csv")?;
+        if header != CSV_HEADER {
+            return Err(format!("unexpected header {header:?}"));
+        }
+        let mut rows = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 9 {
+                return Err(format!("line {}: {} fields", i + 2, f.len()));
+            }
+            let p = |s: &str| s.parse::<f64>().map_err(|e| format!("line {}: {e}", i + 2));
+            rows.push(MetricsRow {
+                epoch: p(f[0])? as usize,
+                gradients: p(f[1])? as u64,
+                comms: p(f[2])? as u64,
+                sim_time: p(f[3])?,
+                train_loss: p(f[4])?,
+                test_loss: p(f[5])?,
+                test_acc: p(f[6])?,
+                alpha_eff: p(f[7])?,
+                staleness: p(f[8])?,
+            });
+        }
+        Ok(MetricsLog { label: label.to_string(), rows, provenance: None })
+    }
+}
+
+/// Counters maintained by the coordinators and sampled into rows.
+#[derive(Debug, Clone, Default)]
+pub struct RunningCounters {
+    pub gradients: u64,
+    pub comms: u64,
+    /// Sum/count of α_t since last snapshot.
+    alpha_sum: f64,
+    alpha_n: u64,
+    stale_sum: f64,
+    stale_n: u64,
+    loss_sum: f64,
+    loss_n: u64,
+}
+
+impl RunningCounters {
+    pub fn record_update(&mut self, alpha_eff: f64, staleness: u64, train_loss: f64) {
+        self.alpha_sum += alpha_eff;
+        self.alpha_n += 1;
+        self.stale_sum += staleness as f64;
+        self.stale_n += 1;
+        if train_loss.is_finite() {
+            self.loss_sum += train_loss;
+            self.loss_n += 1;
+        }
+    }
+
+    /// Snapshot window averages and reset the window accumulators.
+    pub fn snapshot(&mut self) -> (f64, f64, f64) {
+        let alpha = if self.alpha_n > 0 { self.alpha_sum / self.alpha_n as f64 } else { 0.0 };
+        let stale = if self.stale_n > 0 { self.stale_sum / self.stale_n as f64 } else { 0.0 };
+        let loss = if self.loss_n > 0 { self.loss_sum / self.loss_n as f64 } else { f64::NAN };
+        self.alpha_sum = 0.0;
+        self.alpha_n = 0;
+        self.stale_sum = 0.0;
+        self.stale_n = 0;
+        self.loss_sum = 0.0;
+        self.loss_n = 0;
+        (alpha, stale, loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(epoch: usize, acc: f64) -> MetricsRow {
+        MetricsRow {
+            epoch,
+            gradients: (epoch * 10) as u64,
+            comms: (epoch * 2) as u64,
+            sim_time: epoch as f64,
+            train_loss: 2.0 - acc,
+            test_loss: 2.1 - acc,
+            test_acc: acc,
+            alpha_eff: 0.5,
+            staleness: 2.0,
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut log = MetricsLog::new("FedAsync");
+        log.push(row(0, 0.1));
+        log.push(row(20, 0.55));
+        let text = log.to_csv();
+        let back = MetricsLog::from_csv("FedAsync", &text).unwrap();
+        assert_eq!(back.rows, log.rows);
+    }
+
+    #[test]
+    fn csv_rejects_bad_header() {
+        assert!(MetricsLog::from_csv("x", "nope\n1,2").is_err());
+    }
+
+    #[test]
+    fn mean_of_averages_pointwise() {
+        let mut a = MetricsLog::new("r0");
+        let mut b = MetricsLog::new("r1");
+        a.push(row(0, 0.2));
+        b.push(row(0, 0.4));
+        let m = MetricsLog::mean_of("mean", &[a, b]);
+        assert_eq!(m.rows.len(), 1);
+        assert!((m.rows[0].test_acc - 0.3).abs() < 1e-12);
+        assert_eq!(m.rows[0].epoch, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn mean_of_rejects_ragged() {
+        let mut a = MetricsLog::new("r0");
+        a.push(row(0, 0.2));
+        let b = MetricsLog::new("r1");
+        let _ = MetricsLog::mean_of("mean", &[a, b]);
+    }
+
+    #[test]
+    fn counters_window_semantics() {
+        let mut c = RunningCounters::default();
+        c.record_update(0.5, 2, 1.0);
+        c.record_update(0.25, 4, 2.0);
+        let (alpha, stale, loss) = c.snapshot();
+        assert!((alpha - 0.375).abs() < 1e-12);
+        assert!((stale - 3.0).abs() < 1e-12);
+        assert!((loss - 1.5).abs() < 1e-12);
+        // Window resets.
+        let (alpha2, stale2, loss2) = c.snapshot();
+        assert_eq!(alpha2, 0.0);
+        assert_eq!(stale2, 0.0);
+        assert!(loss2.is_nan());
+    }
+
+    #[test]
+    fn write_csv_creates_files() {
+        let dir = std::env::temp_dir().join("fedasync_test_metrics");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut log = MetricsLog::new("x");
+        log.push(row(0, 0.1));
+        log.provenance = Some(Json::parse(r#"{"algo":"fedasync"}"#).unwrap());
+        log.write_csv(&dir, "series").unwrap();
+        assert!(dir.join("series.csv").exists());
+        assert!(dir.join("series.meta.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

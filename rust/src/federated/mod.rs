@@ -1,0 +1,8 @@
+//! Federated-learning substrate: synthetic data, non-IID partitioning,
+//! the simulated device fleet, virtual-time networking, and metrics.
+
+pub mod data;
+pub mod device;
+pub mod metrics;
+pub mod network;
+pub mod partition;

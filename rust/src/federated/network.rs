@@ -1,0 +1,174 @@
+//! Virtual-time network & event substrate.
+//!
+//! The threads-mode server measures real wallclock, but the figure
+//! simulations run on **virtual time**: an event queue over `f64` seconds
+//! with a log-normal latency model (heavy-tailed, like real mobile
+//! uplinks).  Virtual time is what makes the staleness distribution
+//! *emerge* from device/network heterogeneity in `virtual-time` mode —
+//! complementing the paper's direct uniform-staleness sampling protocol,
+//! which is also implemented (`coordinator::virtual_mode`).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::rng::Rng;
+
+/// Log-normal link latency (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyModel {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        // exp(mu) = 50 ms median, heavy tail into seconds.
+        LatencyModel { mu: (-3.0f64), sigma: 0.8 }
+    }
+}
+
+impl LatencyModel {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.mu, self.sigma)
+    }
+}
+
+/// A scheduled simulation event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event<T> {
+    pub at: f64,
+    /// Tie-break sequence number (FIFO among equal timestamps).
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T: PartialEq> Eq for Event<T> {}
+
+impl<T: PartialEq> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by (time, seq) via reversed comparison.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T: PartialEq> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Discrete-event queue with a monotone virtual clock.
+pub struct EventQueue<T: PartialEq> {
+    heap: BinaryHeap<Event<T>>,
+    now: f64,
+    seq: u64,
+}
+
+impl<T: PartialEq> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: PartialEq> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute virtual time `at` (clamped to now).
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { at, seq, payload });
+    }
+
+    /// Schedule after a relative delay.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay.max(0.0), payload);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        let ev = self.heap.pop()?;
+        self.now = ev.at;
+        Some(ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn equal_times_are_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule_at(1.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_is_monotone_even_with_stale_schedules() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, "x");
+        q.pop();
+        q.schedule_at(1.0, "past"); // clamped to now=5
+        let e = q.pop().unwrap();
+        assert!(e.at >= 5.0);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(2.0, "first");
+        q.pop();
+        q.schedule_in(0.5, "second");
+        assert_eq!(q.pop().unwrap().at, 2.5);
+    }
+
+    #[test]
+    fn latency_model_is_positive_and_heavy_tailed() {
+        let m = LatencyModel::default();
+        let mut rng = Rng::seed_from(1);
+        let draws: Vec<f64> = (0..10_000).map(|_| m.sample(&mut rng)).collect();
+        assert!(draws.iter().all(|&d| d > 0.0));
+        let mut sorted = draws.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[5000];
+        let p99 = sorted[9900];
+        assert!((0.02..0.12).contains(&median), "median={median}");
+        assert!(p99 > 3.0 * median, "p99={p99} median={median}");
+    }
+}

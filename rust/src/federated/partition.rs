@@ -1,0 +1,303 @@
+//! Non-IID data partitioners (paper §1: "Non-IID training data").
+//!
+//! Three strategies, all deterministic given a seed:
+//! * [`Partition::Iid`] — shuffle and deal round-robin (control).
+//! * [`Partition::Shards`] — the pathological non-IID split of
+//!   McMahan et al. (the FedAvg paper, which this paper's evaluation
+//!   follows): sort by label, cut into `devices × shards_per_device`
+//!   contiguous shards, deal each device `shards_per_device` random
+//!   shards, so each device sees only a couple of classes.
+//! * [`Partition::Dirichlet`] — per-class Dirichlet(β) allocation over
+//!   devices; β → 0 approaches one-class-per-device, β → ∞ approaches IID.
+//!
+//! Also provides skew diagnostics used by tests and `repro partition-stats`.
+
+use crate::config::Partition;
+use crate::federated::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Per-device sample-index assignment.
+#[derive(Debug, Clone)]
+pub struct DevicePartition {
+    /// `assignment[d]` = indices into the dataset owned by device `d`.
+    pub assignment: Vec<Vec<usize>>,
+}
+
+/// Partition `data` over `devices` according to `strategy`.
+pub fn partition(
+    data: &Dataset,
+    devices: usize,
+    strategy: Partition,
+    seed: u64,
+) -> DevicePartition {
+    assert!(devices > 0);
+    let mut rng = Rng::seed_from(seed ^ 0x9A27_71ED);
+    let n = data.len();
+    let assignment = match strategy {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            deal_round_robin(&idx, devices)
+        }
+        Partition::Shards { shards_per_device } => {
+            let spd = shards_per_device.max(1);
+            // Sort indices by label (stable on index for determinism).
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by_key(|&i| (data.labels[i], i));
+            let num_shards = devices * spd;
+            // Deal whole shards; shard boundaries are as even as possible.
+            let mut shard_ids: Vec<usize> = (0..num_shards).collect();
+            rng.shuffle(&mut shard_ids);
+            let mut assignment = vec![Vec::new(); devices];
+            for (pos, &shard) in shard_ids.iter().enumerate() {
+                let device = pos / spd;
+                let lo = shard * n / num_shards;
+                let hi = (shard + 1) * n / num_shards;
+                assignment[device].extend_from_slice(&idx[lo..hi]);
+            }
+            assignment
+        }
+        Partition::Dirichlet { beta } => {
+            let mut assignment = vec![Vec::new(); devices];
+            // For each class, split its samples over devices by a
+            // Dirichlet(β) draw.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.num_classes];
+            for i in 0..n {
+                by_class[data.labels[i] as usize].push(i);
+            }
+            for class_idx in by_class {
+                if class_idx.is_empty() {
+                    continue;
+                }
+                let w = rng.dirichlet(beta, devices);
+                // Convert weights to integer counts (largest remainder).
+                let counts = apportion(&w, class_idx.len());
+                let mut cursor = 0;
+                for (d, &c) in counts.iter().enumerate() {
+                    assignment[d].extend_from_slice(&class_idx[cursor..cursor + c]);
+                    cursor += c;
+                }
+            }
+            // A device can end up empty under extreme β; give it one sample
+            // stolen from the largest device so every worker can train.
+            rebalance_empty(&mut assignment, &mut rng);
+            assignment
+        }
+    };
+    DevicePartition { assignment }
+}
+
+fn deal_round_robin(idx: &[usize], devices: usize) -> Vec<Vec<usize>> {
+    let mut assignment = vec![Vec::with_capacity(idx.len() / devices + 1); devices];
+    for (pos, &i) in idx.iter().enumerate() {
+        assignment[pos % devices].push(i);
+    }
+    assignment
+}
+
+/// Largest-remainder apportionment of `total` items by weights `w`.
+fn apportion(w: &[f64], total: usize) -> Vec<usize> {
+    let sum: f64 = w.iter().sum::<f64>().max(1e-12);
+    let quotas: Vec<f64> = w.iter().map(|x| x / sum * total as f64).collect();
+    let mut counts: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let mut assigned: usize = counts.iter().sum();
+    // Distribute the remainder by largest fractional part.
+    let mut order: Vec<usize> = (0..w.len()).collect();
+    order.sort_by(|&a, &b| {
+        (quotas[b] - quotas[b].floor())
+            .partial_cmp(&(quotas[a] - quotas[a].floor()))
+            .unwrap()
+    });
+    let mut k = 0;
+    while assigned < total {
+        counts[order[k % order.len()]] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    counts
+}
+
+fn rebalance_empty(assignment: &mut [Vec<usize>], _rng: &mut Rng) {
+    loop {
+        let empty = match assignment.iter().position(|a| a.is_empty()) {
+            Some(e) => e,
+            None => return,
+        };
+        let largest = (0..assignment.len())
+            .max_by_key(|&d| assignment[d].len())
+            .unwrap();
+        if assignment[largest].len() <= 1 {
+            return; // nothing to steal
+        }
+        let moved = assignment[largest].pop().unwrap();
+        assignment[empty].push(moved);
+    }
+}
+
+impl DevicePartition {
+    /// Every index appears exactly once across devices.
+    pub fn is_exact_cover(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        let mut count = 0;
+        for dev in &self.assignment {
+            for &i in dev {
+                if i >= n || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+                count += 1;
+            }
+        }
+        count == n
+    }
+
+    /// Mean number of distinct labels per device (non-IIDness diagnostic;
+    /// 10 ⇒ IID-ish, ≤2 ⇒ pathological shards).
+    pub fn mean_labels_per_device(&self, data: &Dataset) -> f64 {
+        let mut total = 0usize;
+        for dev in &self.assignment {
+            let mut seen = vec![false; data.num_classes];
+            for &i in dev {
+                seen[data.labels[i] as usize] = true;
+            }
+            total += seen.iter().filter(|&&s| s).count();
+        }
+        total as f64 / self.assignment.len() as f64
+    }
+
+    /// Earth-mover-ish skew: mean total-variation distance between each
+    /// device's label distribution and the global distribution. 0 = IID.
+    pub fn label_skew(&self, data: &Dataset) -> f64 {
+        let global = normalized_counts(&data.class_counts());
+        let mut total = 0.0;
+        for dev in &self.assignment {
+            let mut counts = vec![0usize; data.num_classes];
+            for &i in dev {
+                counts[data.labels[i] as usize] += 1;
+            }
+            let local = normalized_counts(&counts);
+            let tv: f64 = global
+                .iter()
+                .zip(&local)
+                .map(|(g, l)| (g - l).abs())
+                .sum::<f64>()
+                / 2.0;
+            total += tv;
+        }
+        total / self.assignment.len() as f64
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.assignment.iter().map(Vec::len).collect()
+    }
+}
+
+fn normalized_counts(counts: &[usize]) -> Vec<f64> {
+    let total: usize = counts.iter().sum();
+    let t = (total as f64).max(1.0);
+    counts.iter().map(|&c| c as f64 / t).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Dataset as DK, FederationConfig};
+    use crate::federated::data;
+
+    fn dataset() -> Dataset {
+        let cfg = FederationConfig {
+            devices: 20,
+            samples_per_device: 50,
+            test_samples: 10,
+            partition: Partition::Iid,
+            dataset: DK::Features,
+            label_noise: 0.0,
+            class_sep: 1.0,
+        };
+        data::generate(&cfg, 11).train
+    }
+
+    #[test]
+    fn iid_exact_cover_and_even_sizes() {
+        let d = dataset();
+        let p = partition(&d, 20, Partition::Iid, 1);
+        assert!(p.is_exact_cover(d.len()));
+        for s in p.sizes() {
+            assert_eq!(s, 50);
+        }
+        assert!(p.label_skew(&d) < 0.25, "skew={}", p.label_skew(&d));
+    }
+
+    #[test]
+    fn shards_exact_cover_and_few_labels() {
+        let d = dataset();
+        let p = partition(&d, 20, Partition::Shards { shards_per_device: 2 }, 1);
+        assert!(p.is_exact_cover(d.len()));
+        let mean_labels = p.mean_labels_per_device(&d);
+        assert!(mean_labels <= 4.0, "mean labels {mean_labels}");
+        assert!(p.label_skew(&d) > 0.5, "skew={}", p.label_skew(&d));
+    }
+
+    #[test]
+    fn shards_more_shards_is_less_skewed() {
+        let d = dataset();
+        let skew2 = partition(&d, 20, Partition::Shards { shards_per_device: 2 }, 1).label_skew(&d);
+        let skew10 =
+            partition(&d, 20, Partition::Shards { shards_per_device: 10 }, 1).label_skew(&d);
+        assert!(skew10 < skew2, "skew10={skew10} skew2={skew2}");
+    }
+
+    #[test]
+    fn dirichlet_exact_cover_and_beta_controls_skew() {
+        let d = dataset();
+        let tight = partition(&d, 20, Partition::Dirichlet { beta: 100.0 }, 2);
+        let spiky = partition(&d, 20, Partition::Dirichlet { beta: 0.1 }, 2);
+        assert!(tight.is_exact_cover(d.len()));
+        assert!(spiky.is_exact_cover(d.len()));
+        assert!(
+            spiky.label_skew(&d) > tight.label_skew(&d) + 0.1,
+            "spiky={} tight={}",
+            spiky.label_skew(&d),
+            tight.label_skew(&d)
+        );
+    }
+
+    #[test]
+    fn dirichlet_no_empty_devices() {
+        let d = dataset();
+        let p = partition(&d, 20, Partition::Dirichlet { beta: 0.05 }, 3);
+        assert!(p.sizes().iter().all(|&s| s > 0), "{:?}", p.sizes());
+    }
+
+    #[test]
+    fn partitions_are_deterministic() {
+        let d = dataset();
+        for strat in [
+            Partition::Iid,
+            Partition::Shards { shards_per_device: 2 },
+            Partition::Dirichlet { beta: 0.5 },
+        ] {
+            let a = partition(&d, 20, strat, 9);
+            let b = partition(&d, 20, strat, 9);
+            assert_eq!(a.assignment, b.assignment);
+            let c = partition(&d, 20, strat, 10);
+            assert_ne!(a.assignment, c.assignment);
+        }
+    }
+
+    #[test]
+    fn apportion_sums_to_total() {
+        let w = [0.25, 0.25, 0.5];
+        let c = apportion(&w, 101);
+        assert_eq!(c.iter().sum::<usize>(), 101);
+        assert!(c[2] >= c[0]);
+    }
+
+    #[test]
+    fn single_device_gets_everything() {
+        let d = dataset();
+        let p = partition(&d, 1, Partition::Shards { shards_per_device: 2 }, 1);
+        assert!(p.is_exact_cover(d.len()));
+        assert_eq!(p.sizes(), vec![d.len()]);
+    }
+}

@@ -1,0 +1,16 @@
+//! # FedAsync — Asynchronous Federated Optimization
+//!
+//! Reproduction of Xie, Koyejo & Gupta, *Asynchronous Federated
+//! Optimization* (2019), as a three-layer rust + JAX + Pallas system:
+//! the rust coordinator here (Layer 3) executes AOT-compiled JAX/Pallas
+//! artifacts (Layers 2/1) through PJRT — python never runs at training
+//! time.  See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod experiment;
+pub mod federated;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,511 @@
+//! `repro` — the FedAsync launcher.
+//!
+//! ```text
+//! repro train           run one experiment (preset/TOML + CLI overrides)
+//! repro figure          regenerate paper figures 2–10 (CSV series)
+//! repro validate-theory empirical check of Theorems 1–2
+//! repro partition-stats non-IID partition diagnostics
+//! repro summary         artifact/manifest info
+//! repro probe           runtime latency probe (per-entry timings)
+//! ```
+//!
+//! Everything is driven by the AOT artifacts under `artifacts/` — run
+//! `make artifacts` first (python is never invoked from here).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fedasync::config::presets::{named, preset_names, Scale};
+use fedasync::config::{parse_staleness_fn, Algo, ExecMode, ExperimentConfig, LocalUpdate};
+use fedasync::coordinator::Trainer;
+use fedasync::experiment::figures::{run_figure, FigureOverrides, FIGURE_IDS};
+use fedasync::experiment::runner;
+use fedasync::federated::{data, partition};
+use fedasync::log_info;
+use fedasync::runtime::{model_dir, ModelRuntime};
+use fedasync::util::cli::{Args, CliError, CommandSpec};
+use fedasync::util::logging;
+
+fn main() -> ExitCode {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{}", top_usage());
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "figure" => cmd_figure(rest),
+        "validate-theory" => cmd_validate_theory(rest),
+        "partition-stats" => cmd_partition_stats(rest),
+        "summary" => cmd_summary(rest),
+        "probe" => cmd_probe(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{}", top_usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("{msg}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_usage() -> String {
+    format!(
+        "repro — FedAsync (Xie, Koyejo, Gupta 2019) reproduction\n\n\
+         commands:\n\
+         \x20 train            run one experiment\n\
+         \x20 figure           regenerate paper figures ({})\n\
+         \x20 validate-theory  empirical Theorem 1/2 check\n\
+         \x20 partition-stats  non-IID partition diagnostics\n\
+         \x20 summary          artifact info\n\
+         \x20 probe            runtime latency probe\n\n\
+         run `repro <command> --help` for options",
+        FIGURE_IDS.join("|")
+    )
+}
+
+fn cli_err(e: CliError) -> String {
+    e.0
+}
+
+// ------------------------------------------------------------------ train
+
+fn train_spec() -> CommandSpec {
+    CommandSpec::new("train", "run one experiment and write a metrics CSV")
+        .opt("preset", Some("fedasync"), "named preset (see --list-presets)")
+        .opt("scale", Some("fast"), "fast | paper")
+        .opt("config", None, "TOML config file (overrides preset)")
+        .opt("model", None, "artifact model dir (e.g. mlp_synth)")
+        .opt("algo", None, "fedasync | fedavg | sgd")
+        .opt("epochs", None, "global epochs T")
+        .opt("repeats", None, "averaged repeats")
+        .opt("alpha", None, "mixing weight α")
+        .opt("gamma", None, "learning rate γ")
+        .opt("rho", None, "proximal weight ρ")
+        .opt("staleness-max", None, "max simulated staleness")
+        .opt("staleness-fn", None, "const|linear|poly|exp|hinge")
+        .opt("staleness-a", None, "staleness fn parameter a")
+        .opt("staleness-b", None, "staleness fn parameter b")
+        .opt("local-update", None, "sgd (option I) | prox (option II)")
+        .opt("mode", None, "virtual | threads")
+        .opt("seed", None, "root RNG seed")
+        .opt("out", Some("results/train"), "output directory")
+        .flag("list-presets", "print preset names and exit")
+        .flag("quiet", "suppress progress logs")
+}
+
+fn build_config(a: &Args) -> Result<ExperimentConfig, String> {
+    let scale: Scale = a.parse_as("scale").map_err(cli_err)?;
+    let preset = a.str("preset").map_err(cli_err)?;
+    let mut cfg = named(&preset, scale)
+        .ok_or_else(|| format!("unknown preset {preset:?}; available: {:?}", preset_names()))?;
+    if let Some(path) = a.get("config") {
+        cfg = ExperimentConfig::from_toml_file(&PathBuf::from(path))
+            .map_err(|e| e.to_string())?;
+    }
+    if let Some(m) = a.get("model") {
+        cfg.model = m;
+    }
+    if a.supplied("algo") {
+        cfg.algo = match a.str("algo").map_err(cli_err)?.as_str() {
+            "fedasync" => Algo::FedAsync,
+            "fedavg" => Algo::FedAvg { k: 10.min(cfg.federation.devices) },
+            "sgd" => Algo::Sgd,
+            other => return Err(format!("unknown algo {other:?}")),
+        };
+    }
+    if a.supplied("epochs") {
+        cfg.epochs = a.usize("epochs").map_err(cli_err)?;
+        cfg.alpha_decay_at = cfg.epochs * 2 / 5;
+    }
+    if a.supplied("repeats") {
+        cfg.repeats = a.usize("repeats").map_err(cli_err)?;
+    }
+    if a.supplied("alpha") {
+        cfg.alpha = a.f64("alpha").map_err(cli_err)?;
+    }
+    if a.supplied("gamma") {
+        cfg.gamma = a.f32("gamma").map_err(cli_err)?;
+    }
+    if a.supplied("rho") {
+        cfg.rho = a.f32("rho").map_err(cli_err)?;
+    }
+    if a.supplied("staleness-max") {
+        cfg.staleness.max = a.u64("staleness-max").map_err(cli_err)?;
+    }
+    if a.supplied("staleness-fn") {
+        let kind = a.str("staleness-fn").map_err(cli_err)?;
+        let pa = a
+            .supplied("staleness-a")
+            .then(|| a.f64("staleness-a"))
+            .transpose()
+            .map_err(cli_err)?;
+        let pb = a
+            .supplied("staleness-b")
+            .then(|| a.f64("staleness-b"))
+            .transpose()
+            .map_err(cli_err)?;
+        cfg.staleness.func = parse_staleness_fn(&kind, pa, pb).map_err(|e| e.to_string())?;
+    }
+    if a.supplied("local-update") {
+        cfg.local_update = match a.str("local-update").map_err(cli_err)?.as_str() {
+            "sgd" => LocalUpdate::Sgd,
+            "prox" => LocalUpdate::Prox,
+            other => return Err(format!("unknown local-update {other:?}")),
+        };
+    }
+    if a.supplied("mode") {
+        cfg.mode = match a.str("mode").map_err(cli_err)?.as_str() {
+            "virtual" => ExecMode::Virtual,
+            "threads" => ExecMode::Threads,
+            other => return Err(format!("unknown mode {other:?}")),
+        };
+    }
+    if a.supplied("seed") {
+        cfg.seed = a.u64("seed").map_err(cli_err)?;
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(train_spec(), argv).map_err(cli_err)?;
+    if a.flag("list-presets") {
+        println!("{}", preset_names().join("\n"));
+        return Ok(());
+    }
+    if a.flag("quiet") {
+        logging::set_level(logging::Level::Warn);
+    }
+    let cfg = build_config(&a)?;
+    let out: PathBuf = a.str("out").map_err(cli_err)?.into();
+
+    log_info!("train", "loading artifacts for model {:?}", cfg.model);
+    let rt = ModelRuntime::load(&model_dir(&cfg.model)).map_err(|e| e.to_string())?;
+    log_info!(
+        "train",
+        "{} | {} params | T={} repeats={} alpha={} gamma={} staleness<={} ({})",
+        cfg.series_label(),
+        rt.param_count(),
+        cfg.epochs,
+        cfg.repeats,
+        cfg.alpha,
+        cfg.gamma,
+        cfg.staleness.max,
+        cfg.staleness.func.label()
+    );
+    let log = runner::run(&rt, &cfg).map_err(|e| e.to_string())?;
+    let stem = format!("{}_{}", cfg.name, cfg.model);
+    log.write_csv(&out, &stem).map_err(|e| e.to_string())?;
+    print_series_tail(&log);
+    println!("wrote {}", out.join(format!("{stem}.csv")).display());
+    Ok(())
+}
+
+fn print_series_tail(log: &fedasync::federated::metrics::MetricsLog) {
+    println!("epoch  gradients  comms   train_loss  test_loss  test_acc");
+    let n = log.rows.len();
+    for r in log.rows.iter().skip(n.saturating_sub(8)) {
+        println!(
+            "{:>5}  {:>9}  {:>6}  {:>10.4}  {:>9.4}  {:>8.4}",
+            r.epoch, r.gradients, r.comms, r.train_loss, r.test_loss, r.test_acc
+        );
+    }
+}
+
+// ----------------------------------------------------------------- figure
+
+fn figure_spec() -> CommandSpec {
+    CommandSpec::new("figure", "regenerate a paper figure's data series")
+        .opt("id", Some("all"), "fig2..fig10 or all")
+        .opt("scale", Some("fast"), "fast | paper")
+        .opt("out", Some("results"), "output root")
+        .opt("epochs", None, "override epochs per run")
+        .opt("repeats", None, "override repeats per config")
+        .opt("devices", None, "override device count")
+        .opt("model", None, "override model artifacts")
+}
+
+fn cmd_figure(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(figure_spec(), argv).map_err(cli_err)?;
+    let scale: Scale = a.parse_as("scale").map_err(cli_err)?;
+    let out: PathBuf = a.str("out").map_err(cli_err)?.into();
+    let id = a.str("id").map_err(cli_err)?;
+    let ov = FigureOverrides {
+        epochs: match a.supplied("epochs") {
+            true => Some(a.usize("epochs").map_err(cli_err)?),
+            false => None,
+        },
+        repeats: match a.supplied("repeats") {
+            true => Some(a.usize("repeats").map_err(cli_err)?),
+            false => None,
+        },
+        devices: match a.supplied("devices") {
+            true => Some(a.usize("devices").map_err(cli_err)?),
+            false => None,
+        },
+    };
+    let model = match (a.get("model"), scale) {
+        (Some(m), _) => m,
+        (None, Scale::Fast) => "mlp_synth".into(),
+        (None, Scale::Paper) => "cnn_small".into(),
+    };
+    log_info!("figure", "loading artifacts for model {model:?}");
+    let rt = ModelRuntime::load(&model_dir(&model)).map_err(|e| e.to_string())?;
+
+    // Figures 2/4/6 and 3/5/7 share runs; don't recompute for "all".
+    let ids: Vec<&str> = if id == "all" {
+        vec!["fig2", "fig3", "fig8", "fig9", "fig10"]
+    } else {
+        vec![id.as_str()]
+    };
+    for fig in ids {
+        let t0 = std::time::Instant::now();
+        let logs = run_figure(&rt, fig, scale, &out, ov).map_err(|e| e.to_string())?;
+        log_info!(
+            "figure",
+            "{fig}: {} series in {:.1}s -> {}",
+            logs.len(),
+            t0.elapsed().as_secs_f64(),
+            out.join(fig).display()
+        );
+        if fig == "fig2" {
+            mirror_shared(&out, "fig2", &["fig4", "fig6"])?;
+        }
+        if fig == "fig3" {
+            mirror_shared(&out, "fig3", &["fig5", "fig7"])?;
+        }
+    }
+    Ok(())
+}
+
+/// Figures that re-plot the same runs on a different x-axis get a pointer
+/// file instead of a recompute.
+fn mirror_shared(root: &PathBuf, src: &str, dsts: &[&str]) -> Result<(), String> {
+    for d in dsts {
+        let dir = root.join(d);
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let axis = match *d {
+            "fig4" | "fig5" => "epoch",
+            _ => "comms",
+        };
+        std::fs::write(
+            dir.join("README.txt"),
+            format!(
+                "{d} plots the same runs as {src} against x = {axis}.\n\
+                 Use ../{src}/*.csv (columns epoch, gradients, comms are all present).\n"
+            ),
+        )
+        .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------- validate-theory
+
+fn theory_spec() -> CommandSpec {
+    CommandSpec::new("validate-theory", "empirical check of Theorems 1 and 2")
+        .opt("epochs", Some("300"), "epochs per validation run")
+        .opt("alpha", Some("0.6"), "mixing weight")
+        .opt("staleness-max", Some("4"), "max sampled staleness")
+        .opt("noise", Some("0.0"), "gradient noise std")
+        .opt("seed", Some("7"), "rng seed")
+}
+
+fn cmd_validate_theory(argv: &[String]) -> Result<(), String> {
+    use fedasync::analysis::theory::{
+        alpha_tradeoff_sweep, validate_strongly_convex, validate_weakly_convex, TheoryParams,
+    };
+    let a = Args::parse(theory_spec(), argv).map_err(cli_err)?;
+    let p = TheoryParams {
+        alpha: a.f64("alpha").map_err(cli_err)?,
+        epochs: a.usize("epochs").map_err(cli_err)?,
+        max_staleness: a.u64("staleness-max").map_err(cli_err)?,
+        noise_std: a.f64("noise").map_err(cli_err)?,
+        seed: a.u64("seed").map_err(cli_err)?,
+        ..TheoryParams::default()
+    };
+
+    println!("== Theorem 1 (strongly convex, Option I) ==");
+    let r1 = validate_strongly_convex(p).map_err(|e| e.to_string())?;
+    println!(
+        "beta(theory) = {:.6}\nmeasured contraction/epoch = {:.6}\n\
+         gap: {:.4e} -> {:.4e} over {} epochs\nbound holds: {}",
+        r1.beta,
+        r1.measured_rate,
+        r1.gap_initial,
+        r1.gap_final,
+        p.epochs,
+        r1.holds(0.02)
+    );
+
+    println!("\n== Theorem 2 (weakly convex, Option II, rho > mu) ==");
+    let r2 = validate_weakly_convex(p, 0.1, 1.0).map_err(|e| e.to_string())?;
+    println!(
+        "beta(theory) = {:.6}\nmeasured contraction/epoch = {:.6}\n\
+         gap: {:.4e} -> {:.4e}\nbound holds: {}",
+        r2.beta,
+        r2.measured_rate,
+        r2.gap_initial,
+        r2.gap_final,
+        r2.holds(0.05)
+    );
+
+    println!("\n== Remark 3: alpha vs variance floor (noise_std = 0.5) ==");
+    println!("{:<8} {:<10} {:<12}", "alpha", "beta", "final_gap");
+    for (alpha, beta, gap) in alpha_tradeoff_sweep(&[0.1, 0.3, 0.6, 0.9], 0.5, p.epochs, p.seed)
+        .map_err(|e| e.to_string())?
+    {
+        println!("{alpha:<8} {beta:<10.5} {gap:<12.5}");
+    }
+    if !(r1.holds(0.02) && r2.holds(0.05)) {
+        return Err("theorem validation FAILED".into());
+    }
+    println!("\nAll theorem checks passed.");
+    Ok(())
+}
+
+// -------------------------------------------------------- partition-stats
+
+fn partition_spec() -> CommandSpec {
+    CommandSpec::new("partition-stats", "non-IID partition diagnostics")
+        .opt("devices", Some("100"), "device count")
+        .opt("samples", Some("500"), "samples per device")
+        .opt("seed", Some("1"), "rng seed")
+}
+
+fn cmd_partition_stats(argv: &[String]) -> Result<(), String> {
+    use fedasync::config::{Dataset as DK, FederationConfig, Partition};
+    let a = Args::parse(partition_spec(), argv).map_err(cli_err)?;
+    let devices = a.usize("devices").map_err(cli_err)?;
+    let fed = FederationConfig {
+        devices,
+        samples_per_device: a.usize("samples").map_err(cli_err)?,
+        test_samples: 16,
+        partition: Partition::Iid,
+        dataset: DK::Features,
+        label_noise: 0.0,
+        class_sep: 1.0,
+    };
+    let seed = a.u64("seed").map_err(cli_err)?;
+    let d = data::generate(&fed, seed);
+    println!(
+        "{:<28} {:>12} {:>14} {:>14}",
+        "partition", "label_skew", "labels/device", "min..max size"
+    );
+    for (name, strat) in [
+        ("iid", Partition::Iid),
+        ("shards(2)", Partition::Shards { shards_per_device: 2 }),
+        ("shards(5)", Partition::Shards { shards_per_device: 5 }),
+        ("dirichlet(0.1)", Partition::Dirichlet { beta: 0.1 }),
+        ("dirichlet(0.5)", Partition::Dirichlet { beta: 0.5 }),
+        ("dirichlet(10)", Partition::Dirichlet { beta: 10.0 }),
+    ] {
+        let p = partition::partition(&d.train, devices, strat, seed);
+        let sizes = p.sizes();
+        println!(
+            "{:<28} {:>12.4} {:>14.2} {:>7}..{}",
+            name,
+            p.label_skew(&d.train),
+            p.mean_labels_per_device(&d.train),
+            sizes.iter().min().unwrap(),
+            sizes.iter().max().unwrap()
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- summary
+
+fn summary_spec() -> CommandSpec {
+    CommandSpec::new("summary", "artifact/manifest info")
+        .opt("model", Some("mlp_synth"), "artifact model dir")
+}
+
+fn cmd_summary(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(summary_spec(), argv).map_err(cli_err)?;
+    let model = a.str("model").map_err(cli_err)?;
+    let man =
+        fedasync::runtime::Manifest::load(&model_dir(&model)).map_err(|e| e.to_string())?;
+    println!("model:        {} ({})", man.model, man.kind);
+    println!("params:       {}", man.param_count);
+    println!("input:        {:?} -> {} classes", man.input_shape, man.num_classes);
+    println!(
+        "local pass:   H={} minibatches x B={} (eval batch {})",
+        man.local_iters, man.batch_size, man.eval_batch
+    );
+    println!("init seeds:   {}", man.init_params.len());
+    println!("entries:");
+    for (name, e) in &man.entries {
+        let ins: Vec<String> = e.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        println!("  {name:<18} {}", ins.join(" "));
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ probe
+
+fn probe_spec() -> CommandSpec {
+    CommandSpec::new("probe", "time each runtime entry point")
+        .opt("model", Some("mlp_synth"), "artifact model dir")
+        .opt("iters", Some("20"), "timing iterations")
+}
+
+fn cmd_probe(argv: &[String]) -> Result<(), String> {
+    let a = Args::parse(probe_spec(), argv).map_err(cli_err)?;
+    let model = a.str("model").map_err(cli_err)?;
+    let iters = a.usize("iters").map_err(cli_err)?.max(1);
+    let rt = ModelRuntime::load(&model_dir(&model)).map_err(|e| e.to_string())?;
+    let m = &rt.manifest;
+    let mut rng = fedasync::util::rng::Rng::seed_from(1);
+    let params = Trainer::init_params(&rt, 0).map_err(|e| e.to_string())?;
+    let isz: usize = m.input_shape.iter().product();
+    let epoch_batch = fedasync::runtime::EpochBatch {
+        images: (0..m.local_iters * m.batch_size * isz)
+            .map(|_| rng.gaussian() as f32)
+            .collect(),
+        labels: (0..m.local_iters * m.batch_size).map(|_| rng.index(10) as i32).collect(),
+    };
+    let eval_imgs: Vec<f32> = (0..m.eval_batch * isz).map(|_| rng.gaussian() as f32).collect();
+    let eval_lbls: Vec<i32> = (0..m.eval_batch).map(|_| rng.index(10) as i32).collect();
+
+    let time_it = |name: &str, f: &mut dyn FnMut()| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("{name:<22} {:>10.3} ms/call", per * 1e3);
+    };
+
+    println!("model {} ({} params), {iters} iterations each:", m.model, m.param_count);
+    let mut p1 = params.clone();
+    time_it("mix (pjrt+pallas)", &mut || {
+        p1 = rt.mix(&p1, &params, 0.5).unwrap();
+    });
+    let mut p2 = params.clone();
+    time_it("mix (native rust)", &mut || {
+        fedasync::coordinator::updater::mix_inplace(&mut p2, &params, 0.5);
+    });
+    time_it("train_epoch_sgd", &mut || {
+        let _ = rt.train_epoch(&params, None, &epoch_batch, 0.1, 0.0).unwrap();
+    });
+    time_it("train_epoch_prox", &mut || {
+        let _ = rt.train_epoch(&params, Some(&params), &epoch_batch, 0.1, 0.01).unwrap();
+    });
+    let step_imgs = &epoch_batch.images[..m.batch_size * isz];
+    let step_lbls = &epoch_batch.labels[..m.batch_size];
+    time_it("train_step_sgd", &mut || {
+        let _ = rt.train_step(&params, None, step_imgs, step_lbls, 0.1, 0.0).unwrap();
+    });
+    time_it("eval_batch", &mut || {
+        let _ = rt.eval(&params, &eval_imgs, &eval_lbls).unwrap();
+    });
+    Ok(())
+}

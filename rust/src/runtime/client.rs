@@ -1,0 +1,50 @@
+//! PJRT client + HLO-text compilation helpers.
+//!
+//! The load path (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile`.  HLO **text** is the interchange format — the crate's
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit ids), and
+//! the text parser reassigns ids cleanly.
+
+use std::path::Path;
+
+use crate::runtime::RuntimeError;
+
+/// Create the host CPU PJRT client.
+pub fn cpu_client() -> Result<xla::PjRtClient, RuntimeError> {
+    Ok(xla::PjRtClient::cpu()?)
+}
+
+/// Load an HLO text file and compile it for `client`.
+pub fn compile_hlo_file(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| RuntimeError::Shape(format!("non-utf8 artifact path {path:?}")))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .map_err(|e| RuntimeError::Load(format!("parse {path:?}: {e}")))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| RuntimeError::Load(format!("compile {path:?}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = cpu_client().unwrap();
+        assert!(c.device_count() >= 1);
+        assert_eq!(c.platform_name(), "cpu");
+    }
+
+    #[test]
+    fn compile_missing_file_errors() {
+        let c = cpu_client().unwrap();
+        assert!(compile_hlo_file(&c, Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,367 @@
+//! Artifact manifest loader.
+//!
+//! `python/compile/aot.py` emits one `manifest.json` per model variant
+//! describing every AOT-lowered entry point (file name, input/output
+//! signatures) plus the model's static dimensions.  This module parses and
+//! *validates* it — shape mismatches between the python and rust sides
+//! should fail at load time with a named entry, never as a cryptic PJRT
+//! error mid-training.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor crossing the FFI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self, ManifestError> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(ManifestError(format!("unsupported dtype {other:?}"))),
+        }
+    }
+}
+
+/// One tensor signature (dtype + static shape).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    pub name: String,
+    /// HLO text file, relative to the model's artifact directory.
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parsed + validated manifest for one model variant.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub kind: String,
+    pub param_count: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    /// H: minibatches fused into one `train_epoch_*` call.
+    pub local_iters: usize,
+    pub eval_batch: usize,
+    pub init_params: Vec<PathBuf>,
+    pub entries: BTreeMap<String, EntrySig>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("manifest error: {0}")]
+pub struct ManifestError(pub String);
+
+/// Entry points every model artifact must provide.
+pub const REQUIRED_ENTRIES: &[&str] = &[
+    "train_step_sgd",
+    "train_step_prox",
+    "train_epoch_sgd",
+    "train_epoch_prox",
+    "eval_batch",
+    "mix",
+];
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| ManifestError(format!("read {path:?}: {e}")))?;
+        let v = Json::parse(&text).map_err(|e| ManifestError(e.to_string()))?;
+        Self::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &Path, v: &Json) -> Result<Manifest, ManifestError> {
+        let need_usize = |key: &str| {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| ManifestError(format!("missing/invalid {key:?}")))
+        };
+        let format = need_usize("format_version")?;
+        if format != 1 {
+            return Err(ManifestError(format!("unsupported format_version {format}")));
+        }
+        let model = v
+            .get("model")
+            .as_str()
+            .ok_or_else(|| ManifestError("missing model".into()))?
+            .to_string();
+        let kind = v.get("kind").as_str().unwrap_or("unknown").to_string();
+        let param_count = need_usize("param_count")?;
+        let num_classes = need_usize("num_classes")?;
+        let batch_size = need_usize("batch_size")?;
+        let local_iters = need_usize("local_iters")?;
+        let eval_batch = need_usize("eval_batch")?;
+        let input_shape: Vec<usize> = v
+            .get("input_shape")
+            .as_arr()
+            .ok_or_else(|| ManifestError("missing input_shape".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| ManifestError("bad input_shape".into())))
+            .collect::<Result<_, _>>()?;
+
+        let init_params: Vec<PathBuf> = v
+            .get("init_params")
+            .as_arr()
+            .ok_or_else(|| ManifestError("missing init_params".into()))?
+            .iter()
+            .map(|p| {
+                p.as_str()
+                    .map(|s| dir.join(s))
+                    .ok_or_else(|| ManifestError("bad init_params entry".into()))
+            })
+            .collect::<Result<_, _>>()?;
+        if init_params.is_empty() {
+            return Err(ManifestError("no init_params seeds".into()));
+        }
+
+        let entries_obj = v
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| ManifestError("missing entries".into()))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in entries_obj.iter() {
+            let file = e
+                .get("file")
+                .as_str()
+                .ok_or_else(|| ManifestError(format!("entry {name}: missing file")))?;
+            let parse_sigs = |key: &str| -> Result<Vec<TensorSig>, ManifestError> {
+                e.get(key)
+                    .as_arr()
+                    .ok_or_else(|| ManifestError(format!("entry {name}: missing {key}")))?
+                    .iter()
+                    .map(|sig| {
+                        let dtype = DType::parse(
+                            sig.get("dtype")
+                                .as_str()
+                                .ok_or_else(|| ManifestError(format!("entry {name}: bad dtype")))?,
+                        )?;
+                        let shape = sig
+                            .get("shape")
+                            .as_arr()
+                            .ok_or_else(|| ManifestError(format!("entry {name}: bad shape")))?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize()
+                                    .ok_or_else(|| ManifestError(format!("entry {name}: bad dim")))
+                            })
+                            .collect::<Result<Vec<_>, _>>()?;
+                        Ok(TensorSig { dtype, shape })
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySig {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_sigs("inputs")?,
+                    outputs: parse_sigs("outputs")?,
+                },
+            );
+        }
+
+        let man = Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            kind,
+            param_count,
+            input_shape,
+            num_classes,
+            batch_size,
+            local_iters,
+            eval_batch,
+            init_params,
+            entries,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Structural validation: required entries exist and their signatures
+    /// are consistent with the model dimensions.
+    pub fn validate(&self) -> Result<(), ManifestError> {
+        for &name in REQUIRED_ENTRIES {
+            if !self.entries.contains_key(name) {
+                return Err(ManifestError(format!("missing required entry {name:?}")));
+            }
+        }
+        let p = self.param_count;
+        let err = |m: String| Err(ManifestError(m));
+
+        let check = |entry: &str, idx: usize, want: &[usize]| -> Result<(), ManifestError> {
+            let sig = &self.entries[entry].inputs;
+            if sig.get(idx).map(|t| t.shape.as_slice()) != Some(want) {
+                return Err(ManifestError(format!(
+                    "{entry}: input {idx} shape {:?} != expected {:?}",
+                    sig.get(idx).map(|t| t.shape.clone()),
+                    want
+                )));
+            }
+            Ok(())
+        };
+
+        let batch_img: Vec<usize> =
+            std::iter::once(self.batch_size).chain(self.input_shape.iter().copied()).collect();
+        let epoch_img: Vec<usize> = [self.local_iters, self.batch_size]
+            .into_iter()
+            .chain(self.input_shape.iter().copied())
+            .collect();
+        let eval_img: Vec<usize> =
+            std::iter::once(self.eval_batch).chain(self.input_shape.iter().copied()).collect();
+
+        check("train_step_sgd", 0, &[p])?;
+        check("train_step_sgd", 1, &batch_img)?;
+        check("train_step_prox", 0, &[p])?;
+        check("train_step_prox", 1, &[p])?;
+        check("train_step_prox", 2, &batch_img)?;
+        check("train_epoch_sgd", 0, &[p])?;
+        check("train_epoch_sgd", 1, &epoch_img)?;
+        check("train_epoch_prox", 1, &[p])?;
+        check("train_epoch_prox", 2, &epoch_img)?;
+        check("eval_batch", 1, &eval_img)?;
+        check("mix", 0, &[p])?;
+        check("mix", 1, &[p])?;
+
+        for (name, e) in &self.entries {
+            if e.outputs.is_empty() {
+                return err(format!("{name}: no outputs"));
+            }
+        }
+        // Param-vector outputs must round-trip.
+        for entry in ["train_step_sgd", "train_step_prox", "train_epoch_sgd", "train_epoch_prox", "mix"] {
+            let out = &self.entries[entry].outputs[0];
+            if out.shape != [p] {
+                return err(format!("{entry}: output 0 must be f32[{p}], got {:?}", out.shape));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySig, ManifestError> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| ManifestError(format!("no entry {name:?} in manifest")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_manifest_json(p: usize) -> String {
+        // Mirrors aot.py's output structure for a tiny fake model.
+        let entry = |inputs: &str, outputs: &str, file: &str| {
+            format!(r#"{{"file": "{file}", "inputs": [{inputs}], "outputs": [{outputs}]}}"#)
+        };
+        let pv = format!(r#"{{"dtype": "f32", "shape": [{p}]}}"#);
+        let sc = r#"{"dtype": "f32", "shape": []}"#.to_string();
+        let img = r#"{"dtype": "f32", "shape": [2, 4]}"#.to_string();
+        let lbl = r#"{"dtype": "i32", "shape": [2]}"#.to_string();
+        let imgs = r#"{"dtype": "f32", "shape": [3, 2, 4]}"#.to_string();
+        let lbls = r#"{"dtype": "i32", "shape": [3, 2]}"#.to_string();
+        let eimg = r#"{"dtype": "f32", "shape": [5, 4]}"#.to_string();
+        let elbl = r#"{"dtype": "i32", "shape": [5]}"#.to_string();
+        format!(
+            r#"{{
+            "format_version": 1, "model": "tiny", "kind": "mlp",
+            "input_shape": [4], "num_classes": 10, "param_count": {p},
+            "batch_size": 2, "local_iters": 3, "eval_batch": 5,
+            "init_params": ["init_params_s0.bin"],
+            "entries": {{
+              "train_step_sgd": {e1},
+              "train_step_prox": {e2},
+              "train_epoch_sgd": {e3},
+              "train_epoch_prox": {e4},
+              "eval_batch": {e5},
+              "mix": {e6}
+            }} }}"#,
+            e1 = entry(&format!("{pv},{img},{lbl},{sc}"), &format!("{pv},{sc}"), "a.hlo.txt"),
+            e2 = entry(&format!("{pv},{pv},{img},{lbl},{sc},{sc}"), &format!("{pv},{sc}"), "b.hlo.txt"),
+            e3 = entry(&format!("{pv},{imgs},{lbls},{sc}"), &format!("{pv},{sc}"), "c.hlo.txt"),
+            e4 = entry(&format!("{pv},{pv},{imgs},{lbls},{sc},{sc}"), &format!("{pv},{sc}"), "d.hlo.txt"),
+            e5 = entry(&format!("{pv},{eimg},{elbl}"), &format!("{sc},{sc}"), "e.hlo.txt"),
+            e6 = entry(&format!("{pv},{pv},{sc}"), &pv, "f.hlo.txt"),
+        )
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let v = Json::parse(&minimal_manifest_json(50)).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &v).unwrap();
+        assert_eq!(m.param_count, 50);
+        assert_eq!(m.local_iters, 3);
+        assert_eq!(m.entries.len(), 6);
+        assert_eq!(m.entry("mix").unwrap().inputs.len(), 3);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        // param_count inconsistent with entry shapes must fail validation.
+        let text = minimal_manifest_json(50).replace(r#""param_count": 50"#, r#""param_count": 51"#);
+        let v = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &v).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_entry() {
+        let text = minimal_manifest_json(50).replace(r#""mix""#, r#""mox""#);
+        let v = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &v).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format_version() {
+        let text = minimal_manifest_json(50).replace(r#""format_version": 1"#, r#""format_version": 9"#);
+        let v = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &v).is_err());
+    }
+
+    #[test]
+    fn tensor_sig_element_count() {
+        let t = TensorSig { dtype: DType::F32, shape: vec![3, 2, 4] };
+        assert_eq!(t.element_count(), 24);
+        let s = TensorSig { dtype: DType::F32, shape: vec![] };
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/mlp_synth");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "mlp_synth");
+        assert!(m.param_count > 0);
+        for e in m.entries.values() {
+            assert!(e.file.exists(), "{:?}", e.file);
+        }
+        for p in &m.init_params {
+            assert!(p.exists());
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/<model>/`) and
+//! executes them from the coordinator's hot path.  Python never runs here.
+
+pub mod client;
+pub mod manifest;
+pub mod model_runtime;
+
+pub use manifest::{DType, EntrySig, Manifest, ManifestError, TensorSig};
+pub use model_runtime::{EpochBatch, EvalMetrics, ModelRuntime, ParamVec};
+
+/// Unified runtime error.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+    #[error(transparent)]
+    Manifest(#[from] ManifestError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("artifact load: {0}")]
+    Load(String),
+    #[error("shape: {0}")]
+    Shape(String),
+}
+
+/// Default artifacts root: `$FEDASYNC_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FEDASYNC_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Artifact directory for a model variant.
+pub fn model_dir(model: &str) -> std::path::PathBuf {
+    artifacts_root().join(model)
+}

@@ -1,0 +1,348 @@
+//! Typed runtime over the AOT artifacts: the only place rust touches PJRT.
+//!
+//! [`ModelRuntime`] owns the compiled executables for one model variant and
+//! exposes the paper's operations with plain-rust types:
+//!
+//! * [`ModelRuntime::train_epoch`] — worker-side H-step local pass
+//!   (Algorithm 1 Options I/II; the fused `lax.scan` artifact),
+//! * [`ModelRuntime::train_step`] — single minibatch step,
+//! * [`ModelRuntime::eval`] — test loss/accuracy over the held-out set,
+//! * [`ModelRuntime::mix`] — server mixing `(1-α)x + α·x_new` via the
+//!   Pallas kernel artifact (the native-rust alternative lives in
+//!   `coordinator::updater`; `bench_mixing` compares the two).
+//!
+//! Not `Send`: PJRT wrapper types hold raw pointers.  Threaded mode routes
+//! all compute through a dedicated service thread (see
+//! `coordinator::server`); the virtual-time simulator calls in directly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::runtime::client::{compile_hlo_file, cpu_client};
+use crate::runtime::manifest::{Manifest, REQUIRED_ENTRIES};
+use crate::runtime::RuntimeError;
+
+/// Flat `f32[P]` model parameters.
+pub type ParamVec = Vec<f32>;
+
+/// One local-training minibatch group: `H × B` samples, row-major.
+#[derive(Debug, Clone)]
+pub struct EpochBatch {
+    /// `f32[H · B · prod(input_shape)]`.
+    pub images: Vec<f32>,
+    /// `i32[H · B]`.
+    pub labels: Vec<i32>,
+}
+
+/// Result of an eval pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMetrics {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub samples: usize,
+}
+
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    #[allow(dead_code)] // owns the PJRT client the executables reference
+    client: xla::PjRtClient,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per entry (profiling counter).
+    pub calls: std::cell::RefCell<BTreeMap<String, u64>>,
+}
+
+impl ModelRuntime {
+    /// Load a model artifact directory, compiling every required entry.
+    pub fn load(dir: &Path) -> Result<ModelRuntime, RuntimeError> {
+        Self::load_entries(dir, REQUIRED_ENTRIES)
+    }
+
+    /// Load compiling only `entries` (e.g. benches that just need `mix`).
+    pub fn load_entries(dir: &Path, entries: &[&str]) -> Result<ModelRuntime, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let client = cpu_client()?;
+        let mut exes = BTreeMap::new();
+        for &name in entries {
+            let sig = manifest.entry(name)?;
+            let exe = compile_hlo_file(&client, &sig.file)?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            exes,
+            calls: std::cell::RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    /// Elements per single input sample.
+    pub fn input_size(&self) -> usize {
+        self.manifest.input_shape.iter().product()
+    }
+
+    /// Read one of the pre-generated init-param binaries (little-endian f32).
+    pub fn init_params(&self, seed_idx: usize) -> Result<ParamVec, RuntimeError> {
+        let path = self
+            .manifest
+            .init_params
+            .get(seed_idx % self.manifest.init_params.len())
+            .expect("non-empty init_params (validated)");
+        let bytes = std::fs::read(path)?;
+        if bytes.len() != 4 * self.manifest.param_count {
+            return Err(RuntimeError::Shape(format!(
+                "{path:?}: {} bytes, expected {}",
+                bytes.len(),
+                4 * self.manifest.param_count
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| RuntimeError::Load(format!("entry {name:?} not loaded")))
+    }
+
+    fn bump(&self, name: &str) {
+        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    fn check_params(&self, what: &str, p: &[f32]) -> Result<(), RuntimeError> {
+        if p.len() != self.manifest.param_count {
+            return Err(RuntimeError::Shape(format!(
+                "{what}: param vector has {} elements, expected {}",
+                p.len(),
+                self.manifest.param_count
+            )));
+        }
+        Ok(())
+    }
+
+    /// Execute an entry and unwrap the HLO tuple output into literals.
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
+        self.bump(name);
+        let exe = self.exe(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal, RuntimeError> {
+        let lit = xla::Literal::vec1(data);
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims_i64)?)
+    }
+
+    fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal, RuntimeError> {
+        let lit = xla::Literal::vec1(data);
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims_i64)?)
+    }
+
+    /// Worker-side fused local pass: H minibatch steps in one PJRT call.
+    ///
+    /// `anchor = None` selects Option I (plain SGD); `Some(x_t)` selects
+    /// Option II with proximal weight `rho`.  Returns the updated flat
+    /// parameters and the mean training loss over the H steps.
+    pub fn train_epoch(
+        &self,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        batch: &EpochBatch,
+        gamma: f32,
+        rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError> {
+        let m = &self.manifest;
+        self.check_params("train_epoch", params)?;
+        let h = m.local_iters;
+        let b = m.batch_size;
+        let img_elems = h * b * self.input_size();
+        if batch.images.len() != img_elems || batch.labels.len() != h * b {
+            return Err(RuntimeError::Shape(format!(
+                "train_epoch: batch has {}/{} elements, expected {img_elems}/{}",
+                batch.images.len(),
+                batch.labels.len(),
+                h * b
+            )));
+        }
+        let mut img_dims = vec![h, b];
+        img_dims.extend_from_slice(&m.input_shape);
+        let images = Self::lit_f32(&batch.images, &img_dims)?;
+        let labels = Self::lit_i32(&batch.labels, &[h, b])?;
+        let params_l = Self::lit_f32(params, &[m.param_count])?;
+
+        let outs = match anchor {
+            None => self.run(
+                "train_epoch_sgd",
+                &[params_l, images, labels, xla::Literal::scalar(gamma)],
+            )?,
+            Some(a) => {
+                self.check_params("train_epoch anchor", a)?;
+                let anchor_l = Self::lit_f32(a, &[m.param_count])?;
+                self.run(
+                    "train_epoch_prox",
+                    &[
+                        params_l,
+                        anchor_l,
+                        images,
+                        labels,
+                        xla::Literal::scalar(gamma),
+                        xla::Literal::scalar(rho),
+                    ],
+                )?
+            }
+        };
+        let new_params = outs[0].to_vec::<f32>()?;
+        let loss = outs[1].get_first_element::<f32>()?;
+        Ok((new_params, loss))
+    }
+
+    /// Single minibatch step (B samples). Used when the caller needs
+    /// per-step control (e.g. arbitrary H not equal to the artifact's).
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        images: &[f32],
+        labels: &[i32],
+        gamma: f32,
+        rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError> {
+        let m = &self.manifest;
+        self.check_params("train_step", params)?;
+        let b = m.batch_size;
+        if images.len() != b * self.input_size() || labels.len() != b {
+            return Err(RuntimeError::Shape(format!(
+                "train_step: batch {}/{} elements, expected {}/{}",
+                images.len(),
+                labels.len(),
+                b * self.input_size(),
+                b
+            )));
+        }
+        let mut img_dims = vec![b];
+        img_dims.extend_from_slice(&m.input_shape);
+        let images = Self::lit_f32(images, &img_dims)?;
+        let labels = Self::lit_i32(labels, &[b])?;
+        let params_l = Self::lit_f32(params, &[m.param_count])?;
+        let outs = match anchor {
+            None => self.run(
+                "train_step_sgd",
+                &[params_l, images, labels, xla::Literal::scalar(gamma)],
+            )?,
+            Some(a) => {
+                self.check_params("train_step anchor", a)?;
+                let anchor_l = Self::lit_f32(a, &[m.param_count])?;
+                self.run(
+                    "train_step_prox",
+                    &[
+                        params_l,
+                        anchor_l,
+                        images,
+                        labels,
+                        xla::Literal::scalar(gamma),
+                        xla::Literal::scalar(rho),
+                    ],
+                )?
+            }
+        };
+        Ok((outs[0].to_vec::<f32>()?, outs[1].get_first_element::<f32>()?))
+    }
+
+    /// Evaluate over a full test set, batching by the artifact's eval batch.
+    /// `images`/`labels` hold `n` samples; `n` is truncated to a multiple of
+    /// the eval batch (the remainder is dropped, which is standard practice).
+    pub fn eval(
+        &self,
+        params: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<EvalMetrics, RuntimeError> {
+        let m = &self.manifest;
+        self.check_params("eval", params)?;
+        let be = m.eval_batch;
+        let isz = self.input_size();
+        let n = labels.len();
+        if images.len() != n * isz {
+            return Err(RuntimeError::Shape(format!(
+                "eval: {} image elements for {n} labels (input_size={isz})",
+                images.len()
+            )));
+        }
+        let batches = n / be;
+        if batches == 0 {
+            return Err(RuntimeError::Shape(format!(
+                "eval: need at least {be} samples, got {n}"
+            )));
+        }
+        // Upload params once; `execute` takes `Borrow<Literal>`, so the
+        // per-batch call borrows the same literal instead of re-converting
+        // the full parameter vector every batch (§Perf: was one P-sized
+        // copy per eval batch).
+        let params_l = Self::lit_f32(params, &[m.param_count])?;
+        let mut img_dims = vec![be];
+        img_dims.extend_from_slice(&m.input_shape);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for i in 0..batches {
+            let img = Self::lit_f32(&images[i * be * isz..(i + 1) * be * isz], &img_dims)?;
+            let lbl = Self::lit_i32(&labels[i * be..(i + 1) * be], &[be])?;
+            self.bump("eval_batch");
+            let exe = self.exe("eval_batch")?;
+            let result = exe.execute::<&xla::Literal>(&[&params_l, &img, &lbl])?;
+            let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+            loss_sum += outs[0].get_first_element::<f32>()? as f64;
+            correct += outs[1].get_first_element::<f32>()? as f64;
+        }
+        let samples = batches * be;
+        Ok(EvalMetrics {
+            loss: loss_sum / samples as f64,
+            accuracy: correct / samples as f64,
+            samples,
+        })
+    }
+
+    /// Server mixing via the Pallas kernel artifact:
+    /// `x_t = (1-α)·x + α·x_new`.
+    pub fn mix(&self, x: &[f32], x_new: &[f32], alpha: f32) -> Result<ParamVec, RuntimeError> {
+        self.check_params("mix x", x)?;
+        self.check_params("mix x_new", x_new)?;
+        let p = self.manifest.param_count;
+        let outs = self.run(
+            "mix",
+            &[
+                Self::lit_f32(x, &[p])?,
+                Self::lit_f32(x_new, &[p])?,
+                xla::Literal::scalar(alpha),
+            ],
+        )?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Total PJRT executions so far, by entry (profiling).
+    pub fn call_counts(&self) -> BTreeMap<String, u64> {
+        self.calls.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests needing real artifacts live in
+    //! `rust/tests/integration_runtime.rs`; here we only test pure helpers.
+    use super::*;
+
+    #[test]
+    fn eval_metrics_is_plain_data() {
+        let m = EvalMetrics { loss: 1.0, accuracy: 0.5, samples: 100 };
+        let m2 = m;
+        assert_eq!(m, m2);
+    }
+}

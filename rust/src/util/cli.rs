@@ -1,0 +1,273 @@
+//! Command-line parsing substrate (no clap offline).
+//!
+//! Supports the launcher's grammar:
+//!
+//! ```text
+//! repro <subcommand> [--flag] [--key value] [--key=value] [positional ...]
+//! ```
+//!
+//! Declarative: each subcommand registers its options with help text and
+//! defaults; `--help` output is generated.  Typed accessors parse on demand
+//! and report which flag failed.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One registered option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative description of a subcommand's interface.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        CommandSpec { name, about, opts: Vec::new() }
+    }
+
+    /// Register `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: default.map(str::to_string),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_deref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {lhs:<24} {}{def}", o.help);
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Clone)]
+pub struct Args {
+    spec: CommandSpec,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// CLI error (unknown flag, missing/unparsable value, ...).
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand names) against `spec`.
+    pub fn parse(spec: CommandSpec, argv: &[String]) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if name == "help" {
+                    return Err(CliError(spec.usage()));
+                }
+                let opt = spec
+                    .find(&name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", spec.usage())))?;
+                if opt.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    flags.push(name);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    values.insert(name, value);
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { spec, values, flags, positional })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string value (explicit or default).
+    pub fn get(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.spec.find(name).and_then(|o| o.default.clone())
+    }
+
+    /// Whether the user supplied the option explicitly (not via default).
+    pub fn supplied(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    pub fn str(&self, name: &str) -> Result<String, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name)?;
+        raw.parse::<T>()
+            .map_err(|e| CliError(format!("--{name}={raw:?}: {e}")))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+
+    pub fn f32(&self, name: &str) -> Result<f32, CliError> {
+        self.parse_as(name)
+    }
+
+    /// Comma-separated list of T.
+    pub fn list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name)?;
+        raw.split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<T>()
+                    .map_err(|e| CliError(format!("--{name} item {s:?}: {e}")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("train", "run training")
+            .opt("epochs", Some("100"), "global epochs")
+            .opt("gamma", Some("0.1"), "learning rate")
+            .opt("algo", None, "algorithm")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse(spec(), &argv(&["--epochs", "5", "--verbose", "--algo=fedasync", "pos1"])).unwrap();
+        assert_eq!(a.usize("epochs").unwrap(), 5);
+        assert_eq!(a.str("algo").unwrap(), "fedasync");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(spec(), &argv(&[])).unwrap();
+        assert_eq!(a.usize("epochs").unwrap(), 100);
+        assert_eq!(a.f64("gamma").unwrap(), 0.1);
+        assert!(!a.flag("verbose"));
+        assert!(!a.supplied("epochs"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = Args::parse(spec(), &argv(&[])).unwrap();
+        assert!(a.str("algo").is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::parse(spec(), &argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn value_parse_error_names_flag() {
+        let a = Args::parse(spec(), &argv(&["--epochs", "abc"])).unwrap();
+        let e = a.usize("epochs").unwrap_err();
+        assert!(e.0.contains("epochs"), "{e}");
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(spec(), &argv(&["--epochs"])).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let s = CommandSpec::new("x", "").opt("stale", Some("2,4,8"), "");
+        let a = Args::parse(s, &argv(&[])).unwrap();
+        assert_eq!(a.list::<usize>("stale").unwrap(), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let e = Args::parse(spec(), &argv(&["--help"])).unwrap_err();
+        assert!(e.0.contains("--epochs"));
+        assert!(e.0.contains("run training"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Support substrates built in-tree (the offline environment has no
+//! crates.io access beyond the vendored set): PRNG, JSON, TOML-subset
+//! config parsing, CLI parsing, logging, statistics, and a property-based
+//! testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;

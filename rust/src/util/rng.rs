@@ -1,0 +1,385 @@
+//! Deterministic, seedable PRNG substrate.
+//!
+//! No `rand` crate offline, so this implements the standard small-state
+//! generators from the literature: [SplitMix64] for seeding/stream-splitting
+//! and [xoshiro256++] for the main stream, plus the distribution helpers the
+//! simulator needs (uniform ranges, Gaussian via Box–Muller, exponential,
+//! log-normal, shuffling, sampling without replacement).
+//!
+//! Every stochastic component of the system (data generation, partitioning,
+//! staleness draws, device timing, schedulers) takes an explicit `Rng` so
+//! entire experiments are reproducible from a single root seed; parallel
+//! components get decorrelated streams via [`Rng::split`].
+//!
+//! [SplitMix64]: https://prng.di.unimi.it/splitmix64.c
+//! [xoshiro256++]: https://prng.di.unimi.it/xoshiro256plusplus.c
+
+/// xoshiro256++ generator seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the last Box–Muller draw.
+    gauss_spare: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed. Any seed (including 0) is fine:
+    /// SplitMix64 expands it into a full non-zero xoshiro state.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive a decorrelated child stream (for per-device / per-thread RNGs).
+    ///
+    /// Uses the next output to seed a fresh SplitMix64 chain, which is the
+    /// recommended way to fork xoshiro streams without long-range correlation.
+    pub fn split(&mut self) -> Rng {
+        Rng::seed_from(self.next_u64() ^ 0xA076_1D64_78BD_642F)
+    }
+
+    /// Next raw 64-bit output (xoshiro256++).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 random bits.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's unbiased rejection method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "range_inclusive({lo}, {hi})");
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform `usize` index in `[0, n)`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// `true` with probability `p`.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (caches the paired draw).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid log(0) by nudging u1 away from zero.
+        let u1 = (self.f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = std::f64::consts::TAU * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with the given mean and standard deviation.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Log-normal: `exp(N(mu, sigma))` — the heavy-tailed latency model used
+    /// by the network simulator.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Sample from a symmetric Dirichlet(beta) over `k` categories
+    /// (via Gamma(beta,1) draws, Marsaglia–Tsang, with the boost trick for
+    /// shape < 1). Used by the non-IID partitioner.
+    pub fn dirichlet(&mut self, beta: f64, k: usize) -> Vec<f64> {
+        assert!(beta > 0.0 && k > 0);
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(beta)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // Numerically degenerate (tiny beta): fall back to one-hot.
+            let hot = self.index(k);
+            g.iter_mut().for_each(|v| *v = 0.0);
+            g[hot] = 1.0;
+            return g;
+        }
+        g.iter_mut().for_each(|v| *v /= sum);
+        g
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = (self.f64()).max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gaussian();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices sampled uniformly from `[0, n)` (the FedAvg
+    /// device-selection primitive). Partial Fisher–Yates, O(n).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose_k({n}, {k})");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_decorrelated() {
+        let mut root = Rng::seed_from(7);
+        let mut c1 = root.split();
+        let mut c2 = root.split();
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seed_from(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::seed_from(4);
+        let n = 10u64;
+        let mut counts = [0usize; 10];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expected = draws as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expected).abs() < 5.0 * expected.sqrt(), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_inclusive_hits_endpoints() {
+        let mut r = Rng::seed_from(5);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..1000 {
+            match r.range_inclusive(0, 4) {
+                0 => lo_seen = true,
+                4 => hi_seen = true,
+                x => assert!(x < 5),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::seed_from(6);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gaussian();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::seed_from(8);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::seed_from(9);
+        for beta in [0.1, 0.5, 1.0, 10.0] {
+            let w = r.dirichlet(beta, 10);
+            assert_eq!(w.len(), 10);
+            let s: f64 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "beta={beta} sum={s}");
+            assert!(w.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_controls_skew() {
+        // Small beta => spiky; large beta => near-uniform.
+        let mut r = Rng::seed_from(10);
+        let spiky: f64 = (0..200)
+            .map(|_| r.dirichlet(0.05, 10).iter().cloned().fold(0.0, f64::max))
+            .sum::<f64>()
+            / 200.0;
+        let flat: f64 = (0..200)
+            .map(|_| r.dirichlet(100.0, 10).iter().cloned().fold(0.0, f64::max))
+            .sum::<f64>()
+            / 200.0;
+        assert!(spiky > 0.6, "spiky max={spiky}");
+        assert!(flat < 0.2, "flat max={flat}");
+        assert!(spiky > 2.0 * flat, "spiky={spiky} flat={flat}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from(11);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct_and_in_range() {
+        let mut r = Rng::seed_from(12);
+        for _ in 0..100 {
+            let picked = r.choose_k(100, 10);
+            assert_eq!(picked.len(), 10);
+            let mut s = picked.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 10);
+            assert!(picked.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn choose_k_full_range_is_permutation() {
+        let mut r = Rng::seed_from(13);
+        let mut picked = r.choose_k(10, 10);
+        picked.sort_unstable();
+        assert_eq!(picked, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Rng::seed_from(14);
+        for _ in 0..1000 {
+            assert!(r.lognormal(0.0, 1.0) > 0.0);
+        }
+    }
+}

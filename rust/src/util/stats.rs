@@ -1,0 +1,292 @@
+//! Statistics substrate for metrics and the bench harness.
+//!
+//! Welford online moments, exact percentiles over recorded samples, and a
+//! bench-style summary formatter (no criterion offline — `rust/benches/*`
+//! use [`BenchTimer`] for warmup + repeated timed runs with outlier-robust
+//! reporting).
+
+use std::time::{Duration, Instant};
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel Welford / Chan's formula).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        let m2 = self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n;
+        self.mean += d * other.n as f64 / n;
+        self.m2 = m2;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact percentile over a sample vector (linear interpolation, like
+/// numpy's default). `q` in [0, 100].
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&q));
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = q / 100.0 * (samples.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        samples[lo]
+    } else {
+        let w = rank - lo as f64;
+        samples[lo] * (1.0 - w) + samples[hi] * w
+    }
+}
+
+/// Mean over a slice (NaN for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Measurement from [`BenchTimer::run`].
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        percentile(&mut s, 50.0)
+    }
+
+    pub fn p05_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        percentile(&mut s, 5.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        percentile(&mut s, 95.0)
+    }
+
+    /// criterion-style one-liner: `name  median [p05 .. p95]  (throughput)`.
+    pub fn report(&self, throughput_items: Option<f64>) -> String {
+        let fmt = |ns: f64| -> String {
+            if ns < 1e3 {
+                format!("{ns:.1} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.3} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        };
+        let med = self.median_ns();
+        let mut line = format!(
+            "{:<44} {:>12} [{} .. {}]",
+            self.name,
+            fmt(med),
+            fmt(self.p05_ns()),
+            fmt(self.p95_ns()),
+        );
+        if let Some(items) = throughput_items {
+            let per_sec = items / (med / 1e9);
+            line.push_str(&format!("  {per_sec:>12.1} items/s"));
+        }
+        line
+    }
+}
+
+/// Warmup + sampled timing loop (the offline stand-in for criterion).
+pub struct BenchTimer {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample: Duration,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        BenchTimer {
+            warmup: Duration::from_millis(300),
+            samples: 15,
+            min_sample: Duration::from_millis(50),
+        }
+    }
+}
+
+impl BenchTimer {
+    pub fn quick() -> Self {
+        BenchTimer {
+            warmup: Duration::from_millis(50),
+            samples: 7,
+            min_sample: Duration::from_millis(10),
+        }
+    }
+
+    /// Time `f`, auto-calibrating iterations per sample so each sample runs
+    /// at least `min_sample`.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibration.
+        let mut iters: u64 = 1;
+        let warm_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.min_sample {
+                break;
+            }
+            // Aim slightly past min_sample to converge fast.
+            let scale = (self.min_sample.as_secs_f64() / dt.as_secs_f64().max(1e-9)) * 1.3;
+            iters = ((iters as f64 * scale).ceil() as u64).max(iters + 1);
+            if warm_start.elapsed() > self.warmup + Duration::from_secs(5) {
+                break; // pathological: keep whatever we have
+            }
+        }
+        while warm_start.elapsed() < self.warmup {
+            f();
+        }
+        // Sampling.
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        BenchResult { name: name.to_string(), iters_per_sample: iters, samples_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        xs.iter().for_each(|&x| w.push(x));
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 4.0_f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.var() - naive_var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_single_pass() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut whole = Welford::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        xs[..37].iter().for_each(|&x| a.push(x));
+        xs[37..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.var() - whole.var()).abs() < 1e-10);
+        assert_eq!(a.count(), 100);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut xs = vec![4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 100.0), 4.0);
+        assert_eq!(percentile(&mut xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn empty_welford_is_nan() {
+        assert!(Welford::new().mean().is_nan());
+    }
+
+    #[test]
+    fn bench_timer_measures_something() {
+        let t = BenchTimer {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            min_sample: Duration::from_millis(2),
+        };
+        let mut acc = 0u64;
+        let r = t.run("spin", || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        std::hint::black_box(acc);
+        assert_eq!(r.samples_ns.len(), 3);
+        assert!(r.median_ns() > 0.0);
+        assert!(r.report(Some(1000.0)).contains("items/s"));
+    }
+}

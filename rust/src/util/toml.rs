@@ -1,0 +1,313 @@
+//! TOML-subset parser for experiment config files (no serde/toml offline).
+//!
+//! Supported grammar — everything the config system needs:
+//!
+//! ```toml
+//! # comments
+//! key = "string"        # basic strings with \n \t \" \\ escapes
+//! n = 42                # integers
+//! x = 1.5e-3            # floats
+//! flag = true           # booleans
+//! xs = [1, 2, 3]        # homogeneous arrays (nesting allowed)
+//!
+//! [section]             # tables
+//! [section.sub]         # dotted tables
+//! a.b = 1               # dotted keys
+//! ```
+//!
+//! Parses into the same [`Json`] value tree the rest of the codebase uses
+//! (a TOML document is an object), so config lookup shares one API.
+
+use super::json::{Json, JsonObj};
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {message}")]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+/// Parse a TOML-subset document into a JSON object tree.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root = JsonObj::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let stripped = strip_comment(raw).trim().to_string();
+        if stripped.is_empty() {
+            continue;
+        }
+        if let Some(rest) = stripped.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(line, "missing ']' in table header"))?
+                .trim();
+            if inner.is_empty() || inner.starts_with('[') {
+                return Err(err(line, "array-of-tables is not supported"));
+            }
+            current_path = split_dotted(inner, line)?;
+            // Materialize the table so empty sections still exist.
+            ensure_table(&mut root, &current_path, line)?;
+            continue;
+        }
+        let eq = find_eq(&stripped)
+            .ok_or_else(|| err(line, "expected 'key = value'"))?;
+        let (key_part, value_part) = stripped.split_at(eq);
+        let value_part = &value_part[1..];
+        let mut path = current_path.clone();
+        path.extend(split_dotted(key_part.trim(), line)?);
+        let value = parse_value(value_part.trim(), line)?;
+        insert_path(&mut root, &path, value, line)?;
+    }
+    Ok(Json::Obj(root))
+}
+
+fn err(line: usize, message: &str) -> TomlError {
+    TomlError { line, message: message.to_string() }
+}
+
+/// Find the `=` separating key from value (not inside a quoted key).
+fn find_eq(s: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_dotted(s: &str, line: usize) -> Result<Vec<String>, TomlError> {
+    let parts: Vec<String> = s
+        .split('.')
+        .map(|p| p.trim().trim_matches('"').to_string())
+        .collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(err(line, "empty key segment"));
+    }
+    Ok(parts)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut JsonObj,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut JsonObj, TomlError> {
+    let mut node = root;
+    for seg in path {
+        if node.get(seg).is_none() {
+            node.insert(seg.clone(), Json::Obj(JsonObj::new()));
+        }
+        node = match node.get_mut(seg) {
+            Some(Json::Obj(o)) => o,
+            _ => return Err(err(line, &format!("key {seg:?} is not a table"))),
+        };
+    }
+    Ok(node)
+}
+
+fn insert_path(
+    root: &mut JsonObj,
+    path: &[String],
+    value: Json,
+    line: usize,
+) -> Result<(), TomlError> {
+    let (last, parents) = path.split_last().expect("non-empty path");
+    let table = ensure_table(root, parents, line)?;
+    if table.get(last).is_some() {
+        return Err(err(line, &format!("duplicate key {last:?}")));
+    }
+    table.insert(last.clone(), value);
+    Ok(())
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Json, TomlError> {
+    if s.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        return unescape(inner, line).map(Json::Str);
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if s.starts_with('[') {
+        return parse_array(s, line);
+    }
+    // Numbers; allow underscores per TOML.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Json::Num(i as f64));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Json::Num(f));
+    }
+    Err(err(line, &format!("cannot parse value {s:?}")))
+}
+
+fn parse_array(s: &str, line: usize) -> Result<Json, TomlError> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|t| t.strip_suffix(']'))
+        .ok_or_else(|| err(line, "unterminated array"))?;
+    let mut items = Vec::new();
+    for part in split_top_level(inner) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        items.push(parse_value(part, line)?);
+    }
+    Ok(Json::Arr(items))
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+fn unescape(s: &str, line: usize) -> Result<String, TomlError> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            _ => return Err(err(line, "bad escape in string")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = r#"
+            # experiment config
+            name = "fig2"
+            epochs = 2_000
+            gamma = 0.1
+            adaptive = true
+
+            [staleness]
+            max = 4
+            kind = "hinge"
+            params = [10.0, 4.0]
+        "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").as_str(), Some("fig2"));
+        assert_eq!(v.get("epochs").as_i64(), Some(2000));
+        assert_eq!(v.get("gamma").as_f64(), Some(0.1));
+        assert_eq!(v.get("adaptive").as_bool(), Some(true));
+        assert_eq!(v.get("staleness").get("max").as_i64(), Some(4));
+        assert_eq!(v.get("staleness").get("params").at(1).as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn dotted_keys_and_tables() {
+        let v = parse("[a.b]\nc.d = 1\n[a.e]\nf = 2").unwrap();
+        assert_eq!(v.get("a").get("b").get("c").get("d").as_i64(), Some(1));
+        assert_eq!(v.get("a").get("e").get("f").as_i64(), Some(2));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let v = parse(r##"s = "a # not a comment" # real comment"##).unwrap();
+        assert_eq!(v.get("s").as_str(), Some("a # not a comment"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]").unwrap();
+        assert_eq!(v.get("m").at(1).at(0).as_i64(), Some(3));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "a\nb\"c\"""#).unwrap();
+        assert_eq!(v.get("s").as_str(), Some("a\nb\"c\""));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn type_conflict_rejected() {
+        assert!(parse("a = 1\n[a]\nb = 2").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_rejected() {
+        assert!(parse("a 1").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("s = \"unterminated").is_err());
+        assert!(parse("x = nope").is_err());
+    }
+
+    #[test]
+    fn empty_section_exists() {
+        let v = parse("[empty]\n").unwrap();
+        assert!(v.get("empty").as_obj().is_some());
+    }
+}

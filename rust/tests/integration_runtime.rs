@@ -1,0 +1,178 @@
+//! Integration: rust runtime ⇄ AOT artifacts (requires `make artifacts`).
+//!
+//! These tests exercise the full FFI plumbing: HLO text load, PJRT compile,
+//! literal conversion, tuple unwrap — against the real `mlp_synth` model.
+//! Numerics are cross-checked against native-rust recomputation where the
+//! math is simple (mix), and against behavioural properties (loss descent,
+//! step/epoch composition) where it is not.
+
+use fedasync::runtime::{model_dir, EpochBatch, ModelRuntime};
+use fedasync::util::rng::Rng;
+
+fn runtime() -> ModelRuntime {
+    let dir = model_dir("mlp_synth");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    ModelRuntime::load(&dir).expect("load mlp_synth artifacts")
+}
+
+fn random_batch(rt: &ModelRuntime, rng: &mut Rng) -> EpochBatch {
+    let m = &rt.manifest;
+    let n = m.local_iters * m.batch_size;
+    let images = (0..n * rt.input_size())
+        .map(|_| rng.gaussian() as f32)
+        .collect();
+    let labels = (0..n)
+        .map(|_| rng.index(m.num_classes) as i32)
+        .collect();
+    EpochBatch { images, labels }
+}
+
+#[test]
+fn loads_and_reports_dimensions() {
+    let rt = runtime();
+    assert_eq!(rt.manifest.model, "mlp_synth");
+    assert!(rt.param_count() > 1000);
+    assert_eq!(rt.input_size(), 32);
+    assert_eq!(rt.manifest.batch_size, 50);
+    assert_eq!(rt.manifest.local_iters, 10);
+}
+
+#[test]
+fn init_params_deterministic_and_distinct_per_seed() {
+    let rt = runtime();
+    let a = rt.init_params(0).unwrap();
+    let b = rt.init_params(0).unwrap();
+    let c = rt.init_params(1).unwrap();
+    assert_eq!(a.len(), rt.param_count());
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn mix_matches_native_formula() {
+    let rt = runtime();
+    let p = rt.param_count();
+    let mut rng = Rng::seed_from(1);
+    let x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    for alpha in [0.0f32, 0.3, 0.75, 1.0] {
+        let got = rt.mix(&x, &y, alpha).unwrap();
+        for i in (0..p).step_by(97) {
+            let want = (1.0 - alpha) * x[i] + alpha * y[i];
+            assert!(
+                (got[i] - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "alpha={alpha} i={i}: got {} want {want}",
+                got[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn train_epoch_descends_on_fixed_batch() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(2);
+    let batch = random_batch(&rt, &mut rng);
+    let mut params = rt.init_params(0).unwrap();
+    let (_, first_loss) = rt.train_epoch(&params, None, &batch, 0.1, 0.0).unwrap();
+    let mut last_loss = first_loss;
+    for _ in 0..5 {
+        let (p, loss) = rt.train_epoch(&params, None, &batch, 0.1, 0.0).unwrap();
+        params = p;
+        last_loss = loss;
+    }
+    assert!(
+        last_loss < first_loss * 0.8,
+        "no descent: first={first_loss} last={last_loss}"
+    );
+}
+
+#[test]
+fn epoch_equals_composed_steps() {
+    let rt = runtime();
+    let m = &rt.manifest;
+    let mut rng = Rng::seed_from(3);
+    let batch = random_batch(&rt, &mut rng);
+    let params0 = rt.init_params(1).unwrap();
+    let gamma = 0.05f32;
+
+    let (epoch_params, _) = rt.train_epoch(&params0, None, &batch, gamma, 0.0).unwrap();
+
+    let isz = rt.input_size();
+    let b = m.batch_size;
+    let mut seq = params0.clone();
+    for h in 0..m.local_iters {
+        let img = &batch.images[h * b * isz..(h + 1) * b * isz];
+        let lbl = &batch.labels[h * b..(h + 1) * b];
+        let (p, _) = rt.train_step(&seq, None, img, lbl, gamma, 0.0).unwrap();
+        seq = p;
+    }
+    let max_diff = epoch_params
+        .iter()
+        .zip(&seq)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "epoch vs steps max diff {max_diff}");
+}
+
+#[test]
+fn prox_keeps_params_nearer_anchor() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(4);
+    let batch = random_batch(&rt, &mut rng);
+    let anchor = rt.init_params(0).unwrap();
+    let gamma = 0.1f32;
+
+    let (sgd_p, _) = rt.train_epoch(&anchor, None, &batch, gamma, 0.0).unwrap();
+    let (prox_p, _) = rt
+        .train_epoch(&anchor, Some(&anchor), &batch, gamma, 5.0)
+        .unwrap();
+    let dist = |p: &[f32]| -> f64 {
+        p.iter()
+            .zip(&anchor)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    assert!(dist(&prox_p) < dist(&sgd_p));
+}
+
+#[test]
+fn eval_returns_chance_accuracy_at_init_on_random_labels() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(5);
+    let n = rt.manifest.eval_batch * 2;
+    let images: Vec<f32> = (0..n * rt.input_size()).map(|_| rng.gaussian() as f32).collect();
+    let labels: Vec<i32> = (0..n).map(|_| rng.index(10) as i32).collect();
+    let params = rt.init_params(0).unwrap();
+    let m = rt.eval(&params, &images, &labels).unwrap();
+    assert_eq!(m.samples, n);
+    assert!(m.loss > 1.0 && m.loss < 5.0, "loss={}", m.loss);
+    assert!(m.accuracy < 0.35, "acc={}", m.accuracy);
+}
+
+#[test]
+fn shape_errors_are_reported_not_panicked() {
+    let rt = runtime();
+    let params = rt.init_params(0).unwrap();
+    // Wrong param length.
+    assert!(rt.mix(&params[1..], &params, 0.5).is_err());
+    // Wrong batch size.
+    let bad = EpochBatch { images: vec![0.0; 7], labels: vec![0; 3] };
+    assert!(rt.train_epoch(&params, None, &bad, 0.1, 0.0).is_err());
+    // Eval with too few samples.
+    assert!(rt.eval(&params, &[0.0; 32], &[0]).is_err());
+}
+
+#[test]
+fn call_counters_track_executions() {
+    let rt = runtime();
+    let params = rt.init_params(0).unwrap();
+    let _ = rt.mix(&params, &params, 0.5).unwrap();
+    let _ = rt.mix(&params, &params, 0.5).unwrap();
+    assert_eq!(rt.call_counts().get("mix"), Some(&2));
+}

@@ -1,0 +1,163 @@
+//! Integration: full training runs through the PJRT-backed model.
+//!
+//! These are the end-to-end checks that all three layers compose: synthetic
+//! federated data (rust) → AOT-compiled JAX/Pallas local training (PJRT) →
+//! asynchronous coordination and mixing (rust).  Runs are kept short; the
+//! full-scale curves live in `repro figure` / EXPERIMENTS.md.
+
+use fedasync::config::presets::{named, Scale};
+use fedasync::config::{Algo, ExperimentConfig, LocalUpdate, StalenessFn};
+use fedasync::experiment::runner;
+use fedasync::runtime::{model_dir, ModelRuntime};
+
+fn runtime() -> ModelRuntime {
+    let dir = model_dir("mlp_synth");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    ModelRuntime::load(&dir).expect("load artifacts")
+}
+
+fn short_cfg(algo: Algo) -> ExperimentConfig {
+    let mut cfg = named("fedasync", Scale::Fast).unwrap();
+    cfg.algo = algo;
+    cfg.epochs = 120;
+    cfg.repeats = 1;
+    cfg.eval_every = 30;
+    cfg.federation.devices = 20;
+    cfg.federation.samples_per_device = 100;
+    cfg.federation.test_samples = 512;
+    if matches!(cfg.algo, Algo::FedAvg { .. } | Algo::Sgd) {
+        cfg.local_update = LocalUpdate::Sgd;
+    }
+    cfg
+}
+
+#[test]
+fn fedasync_learns_on_real_model() {
+    let rt = runtime();
+    let cfg = short_cfg(Algo::FedAsync);
+    let log = runner::run(&rt, &cfg).unwrap();
+    let first = &log.rows[0];
+    let last = log.rows.last().unwrap();
+    assert!(first.test_acc < 0.2, "init acc {}", first.test_acc);
+    assert!(last.test_acc > 0.35, "final acc {}", last.test_acc);
+    assert!(last.test_loss < first.test_loss);
+    assert_eq!(last.gradients, 120 * 10);
+    assert_eq!(last.comms, 240);
+}
+
+#[test]
+fn fedavg_learns_on_real_model() {
+    let rt = runtime();
+    let cfg = short_cfg(Algo::FedAvg { k: 5 });
+    let log = runner::run(&rt, &cfg).unwrap();
+    let last = log.rows.last().unwrap();
+    assert!(last.test_acc > 0.4, "final acc {}", last.test_acc);
+    assert_eq!(last.gradients, 120 * 5 * 10);
+    assert_eq!(last.comms, 120 * 10);
+}
+
+#[test]
+fn sgd_beats_fedavg_per_gradient() {
+    // The paper's headline ordering at small staleness (per gradient):
+    // SGD ≥ FedAsync ≥ FedAvg.
+    let rt = runtime();
+    let sgd = runner::run(&rt, &short_cfg(Algo::Sgd)).unwrap();
+    let fedasync = runner::run(&rt, &short_cfg(Algo::FedAsync)).unwrap();
+    let fedavg = runner::run(&rt, &short_cfg(Algo::FedAvg { k: 5 })).unwrap();
+    // Compare best accuracy reached within SGD's gradient budget (1200).
+    let budget = sgd.rows.last().unwrap().gradients;
+    let acc_at = |log: &fedasync::federated::metrics::MetricsLog| {
+        log.rows
+            .iter()
+            .filter(|r| r.gradients <= budget)
+            .map(|r| r.test_acc)
+            .fold(0.0f64, f64::max)
+    };
+    let (a_sgd, a_async, a_avg) = (acc_at(&sgd), acc_at(&fedasync), acc_at(&fedavg));
+    assert!(
+        a_sgd >= a_async - 0.05,
+        "SGD {a_sgd} should be >= FedAsync {a_async} per gradient"
+    );
+    assert!(
+        a_async > a_avg + 0.02,
+        "FedAsync {a_async} should beat FedAvg {a_avg} per gradient"
+    );
+}
+
+#[test]
+fn option2_prox_no_worse_than_option1_under_staleness() {
+    let rt = runtime();
+    let mut opt1 = short_cfg(Algo::FedAsync);
+    opt1.local_update = LocalUpdate::Sgd;
+    opt1.staleness.max = 16;
+    let mut opt2 = short_cfg(Algo::FedAsync);
+    opt2.local_update = LocalUpdate::Prox;
+    opt2.rho = 0.05;
+    opt2.staleness.max = 16;
+    let log1 = runner::run(&rt, &opt1).unwrap();
+    let log2 = runner::run(&rt, &opt2).unwrap();
+    let a1 = log1.rows.last().unwrap().test_acc;
+    let a2 = log2.rows.last().unwrap().test_acc;
+    // Regularization must not catastrophically hurt (and usually helps).
+    assert!(a2 > a1 - 0.08, "opt1={a1} opt2={a2}");
+}
+
+#[test]
+fn adaptive_alpha_helps_at_large_staleness() {
+    let rt = runtime();
+    let mut plain = short_cfg(Algo::FedAsync);
+    plain.staleness.max = 16;
+    plain.alpha = 0.9; // stress: large α is where adaptivity matters (fig 9/10)
+    let mut poly = plain.clone();
+    poly.staleness.func = StalenessFn::Poly { a: 0.5 };
+    let log_plain = runner::run(&rt, &plain).unwrap();
+    let log_poly = runner::run(&rt, &poly).unwrap();
+    let a_plain = log_plain.rows.last().unwrap().test_acc;
+    let a_poly = log_poly.rows.last().unwrap().test_acc;
+    assert!(
+        a_poly > a_plain - 0.05,
+        "poly adaptive {a_poly} vs plain {a_plain}"
+    );
+    // And its effective alpha really is smaller.
+    let mean_alpha = |log: &fedasync::federated::metrics::MetricsLog| {
+        let xs: Vec<f64> = log.rows.iter().skip(1).map(|r| r.alpha_eff).collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    assert!(mean_alpha(&log_poly) < mean_alpha(&log_plain));
+}
+
+#[test]
+fn threaded_server_trains_end_to_end() {
+    // The Figure-1 architecture: scheduler ∥ workers ∥ updater on real
+    // threads, PJRT behind a compute-service thread.
+    let mut cfg = short_cfg(Algo::FedAsync);
+    cfg.mode = fedasync::config::ExecMode::Threads;
+    cfg.epochs = 40;
+    cfg.eval_every = 20;
+    cfg.worker_threads = 3;
+    cfg.max_inflight = 4;
+    let log =
+        fedasync::coordinator::server::run_threaded(model_dir("mlp_synth"), &cfg, 1).unwrap();
+    let last = log.rows.last().unwrap();
+    assert!(last.epoch >= 40, "reached epoch {}", last.epoch);
+    assert!(last.test_loss.is_finite());
+    assert!(last.staleness >= 1.0, "threaded staleness {}", last.staleness);
+    // Loss should at least move from the init row.
+    assert!(last.test_loss < log.rows[0].test_loss);
+}
+
+#[test]
+fn emergent_vs_sampled_staleness_same_ballpark() {
+    // DESIGN.md claims the paper's sampled-staleness protocol is a faithful
+    // stand-in for emergent asynchrony; both must learn comparably.
+    let rt = runtime();
+    let cfg = short_cfg(Algo::FedAsync);
+    let sampled = runner::run(&rt, &cfg).unwrap();
+    let emergent = runner::run_once_emergent(&rt, &cfg, 0, 8).unwrap();
+    let a_s = sampled.rows.last().unwrap().test_acc;
+    let a_e = emergent.rows.last().unwrap().test_acc;
+    assert!((a_s - a_e).abs() < 0.2, "sampled={a_s} emergent={a_e}");
+}

@@ -1,0 +1,325 @@
+//! Property-based tests over coordinator/substrate invariants.
+//!
+//! Uses the in-tree harness (`util::prop`) — randomized, seeded, replayable
+//! cases; failures print the seed for `check_one`.  These guard the
+//! invariants DESIGN.md calls out: mixing stays on the segment, staleness
+//! adaptation is monotone and bounded, partitions are exact covers, the
+//! model-store ring honors its retention contract, the event queue is a
+//! total order, and update accounting never drifts.
+
+use fedasync::config::{Partition, StalenessConfig, StalenessFn};
+use fedasync::coordinator::model_store::ModelStore;
+use fedasync::coordinator::staleness::{AlphaController, AlphaDecision};
+use fedasync::coordinator::updater::mix_inplace;
+use fedasync::federated::network::EventQueue;
+use fedasync::federated::{data, partition};
+use fedasync::prop_ensure;
+use fedasync::util::prop::{check, Gen};
+
+fn random_staleness_fn(g: &mut Gen) -> StalenessFn {
+    match g.index(5) {
+        0 => StalenessFn::Constant,
+        1 => StalenessFn::Linear { a: g.f64_in(0.0, 20.0) },
+        2 => StalenessFn::Poly { a: g.f64_in(0.0, 4.0) },
+        3 => StalenessFn::Exp { a: g.f64_in(0.0, 4.0) },
+        _ => StalenessFn::Hinge { a: g.f64_in(0.1, 20.0), b: g.f64_in(0.0, 16.0) },
+    }
+}
+
+#[test]
+fn prop_staleness_functions_bounded_and_monotone() {
+    check("staleness-bounded-monotone", 200, |g| {
+        let f = random_staleness_fn(g);
+        let mut prev = f64::INFINITY;
+        for s in 0..200u64 {
+            let v = f.eval(s);
+            // v may underflow to exactly 0 for extreme staleness — the
+            // paper's "α = 0 ⇒ effectively dropped" case.
+            prop_ensure!((0.0..=1.0).contains(&v), "{f:?} s={s} v={v}");
+            prop_ensure!(v <= prev + 1e-12, "{f:?} not non-increasing at s={s}");
+            prev = v;
+        }
+        prop_ensure!((f.eval(0) - 1.0).abs() < 1e-12, "{f:?} s(0) != 1");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alpha_controller_in_unit_interval_and_drop_consistent() {
+    check("alpha-controller", 200, |g| {
+        let alpha = g.f64_in(0.01, 1.0);
+        let drop_above = g.bool().then(|| g.index(32) as u64);
+        let ctl = AlphaController::new(
+            alpha,
+            g.f64_in(0.1, 1.0),
+            g.index(1000),
+            &StalenessConfig { max: 32, func: random_staleness_fn(g), drop_above },
+        );
+        for s in 0..32u64 {
+            match ctl.decide(g.index(2000), s) {
+                AlphaDecision::Mix(a) => {
+                    prop_ensure!(a > 0.0 && a <= 1.0, "a={a}");
+                    if let Some(cut) = drop_above {
+                        prop_ensure!(s <= cut, "should have dropped s={s} cut={cut}");
+                    }
+                }
+                AlphaDecision::Drop => {
+                    let cut = drop_above.ok_or("drop without policy")?;
+                    prop_ensure!(s > cut, "dropped fresh update s={s} cut={cut}");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mix_stays_on_segment_and_interpolates() {
+    check("mix-segment", 300, |g| {
+        let n = g.size(1, 4096);
+        let x0 = g.vec_f32(n, 2.0);
+        let y = g.vec_f32(n, 2.0);
+        let alpha = g.f64_in(0.0, 1.0) as f32;
+        let mut x = x0.clone();
+        mix_inplace(&mut x, &y, alpha);
+        for i in 0..n {
+            let (lo, hi) = if x0[i] <= y[i] { (x0[i], y[i]) } else { (y[i], x0[i]) };
+            prop_ensure!(
+                x[i] >= lo - 1e-4 && x[i] <= hi + 1e-4,
+                "i={i} out of segment: {} not in [{lo}, {hi}]",
+                x[i]
+            );
+            let want = (1.0 - alpha) * x0[i] + alpha * y[i];
+            prop_ensure!((x[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", x[i]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mix_idempotent_when_equal() {
+    check("mix-idempotent", 100, |g| {
+        let n = g.size(1, 1024);
+        let x0 = g.vec_f32(n, 3.0);
+        let mut x = x0.clone();
+        let alpha = g.f64_in(0.0, 1.0) as f32;
+        mix_inplace(&mut x, &x0, alpha);
+        for i in 0..n {
+            prop_ensure!((x[i] - x0[i]).abs() < 1e-5, "i={i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_model_store_retention_contract() {
+    check("model-store", 150, |g| {
+        let cap = g.size(1, 40);
+        let pushes = g.size(0, 100);
+        let mut store = ModelStore::new(vec![0.0f32], cap);
+        for v in 1..=pushes as u64 {
+            store.push(vec![v as f32]);
+        }
+        let current = store.current_version();
+        prop_ensure!(current == pushes as u64, "version {current} != {pushes}");
+        // Everything within the window resolves to the right payload;
+        // everything outside is None.
+        for v in 0..=current {
+            let age = (current - v) as usize;
+            match store.get(v) {
+                Some(p) => {
+                    prop_ensure!(age < cap, "v={v} should be evicted (cap={cap})");
+                    prop_ensure!(p[0] == v as f32, "wrong payload at v={v}");
+                }
+                None => prop_ensure!(age >= cap, "v={v} should be retained (cap={cap})"),
+            }
+        }
+        prop_ensure!(store.get(current + 1).is_none(), "future version resolved");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_are_exact_covers() {
+    check("partition-cover", 40, |g| {
+        let devices = g.size(1, 30);
+        let spd = g.size(1, 4);
+        let cfg = fedasync::config::FederationConfig {
+            devices,
+            samples_per_device: g.size(2, 40),
+            test_samples: 8,
+            partition: Partition::Iid,
+            dataset: fedasync::config::Dataset::Features,
+            label_noise: 0.0,
+            class_sep: 1.0,
+        };
+        let d = data::generate(&cfg, g.rng.next_u64()).train;
+        for strat in [
+            Partition::Iid,
+            Partition::Shards { shards_per_device: spd },
+            Partition::Dirichlet { beta: g.f64_in(0.05, 10.0) },
+        ] {
+            let p = partition::partition(&d, devices, strat, g.rng.next_u64());
+            prop_ensure!(p.is_exact_cover(d.len()), "{strat:?} not an exact cover");
+            prop_ensure!(
+                p.assignment.len() == devices,
+                "{strat:?} wrong device count"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_total_order() {
+    check("event-queue", 100, |g| {
+        let n = g.size(0, 200);
+        let mut q = EventQueue::new();
+        for i in 0..n {
+            q.schedule_at(g.f64_in(0.0, 100.0), i);
+        }
+        let mut prev_t = f64::NEG_INFINITY;
+        let mut seen = vec![false; n];
+        while let Some(ev) = q.pop() {
+            prop_ensure!(ev.at >= prev_t, "time went backwards");
+            prev_t = ev.at;
+            prop_ensure!(!seen[ev.payload], "duplicate event {}", ev.payload);
+            seen[ev.payload] = true;
+        }
+        prop_ensure!(seen.iter().all(|&s| s), "lost events");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_choose_k_uniformish() {
+    // Every index should be chosen sometimes — no systematic exclusion.
+    check("choose-k-coverage", 20, |g| {
+        let n = g.size(2, 50);
+        let k = g.size(1, n);
+        let mut hit = vec![false; n];
+        for _ in 0..400 {
+            for idx in g.rng.choose_k(n, k) {
+                hit[idx] = true;
+            }
+        }
+        prop_ensure!(hit.iter().all(|&h| h), "n={n} k={k}: some index never chosen");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_device_epoch_batch_labels_from_shard() {
+    check("device-batch-labels", 30, |g| {
+        let cfg = fedasync::config::FederationConfig {
+            devices: 4,
+            samples_per_device: g.size(3, 30),
+            test_samples: 8,
+            partition: Partition::Iid,
+            dataset: fedasync::config::Dataset::Features,
+            label_noise: 0.0,
+            class_sep: 1.0,
+        };
+        let d = data::generate(&cfg, g.rng.next_u64()).train;
+        let shard: Vec<usize> = (0..g.size(1, d.len())).collect();
+        let mut dev = fedasync::federated::device::SimDevice::new(
+            0,
+            shard.clone(),
+            1.0,
+            fedasync::federated::device::AvailabilityModel::default(),
+            fedasync::util::rng::Rng::seed_from(g.rng.next_u64()),
+        );
+        let h = g.size(1, 5);
+        let b = g.size(1, 10);
+        let eb = dev.next_epoch_batch(&d, h, b);
+        prop_ensure!(eb.labels.len() == h * b, "wrong batch size");
+        prop_ensure!(eb.images.len() == h * b * d.input_size, "wrong image size");
+        let allowed: std::collections::BTreeSet<i32> =
+            shard.iter().map(|&i| d.labels[i]).collect();
+        for l in &eb.labels {
+            prop_ensure!(allowed.contains(l), "label {l} not in shard");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_csv_roundtrip() {
+    use fedasync::federated::metrics::{MetricsLog, MetricsRow};
+    check("metrics-roundtrip", 50, |g| {
+        let mut log = MetricsLog::new("series");
+        let rows = g.size(0, 30);
+        for i in 0..rows {
+            log.push(MetricsRow {
+                epoch: i * 10,
+                gradients: g.rng.below(1_000_000),
+                comms: g.rng.below(1_000_000),
+                sim_time: g.f64_in(0.0, 1e4),
+                train_loss: g.f64_in(0.0, 10.0),
+                test_loss: g.f64_in(0.0, 10.0),
+                test_acc: g.f64_in(0.0, 1.0),
+                alpha_eff: g.f64_in(0.0, 1.0),
+                staleness: g.f64_in(0.0, 32.0),
+            });
+        }
+        let back = MetricsLog::from_csv("series", &log.to_csv()).map_err(|e| e)?;
+        prop_ensure!(back.rows.len() == log.rows.len(), "row count changed");
+        for (a, b) in log.rows.iter().zip(&back.rows) {
+            prop_ensure!(a.epoch == b.epoch, "epoch changed");
+            prop_ensure!(a.gradients == b.gradients, "gradients changed");
+            prop_ensure!((a.test_acc - b.test_acc).abs() < 1e-5, "acc drifted");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    use fedasync::util::json::{Json, JsonObj};
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.index(4) } else { g.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.rng.below(1 << 40) as f64) - (1u64 << 39) as f64),
+            3 => Json::Str(
+                (0..g.size(0, 12))
+                    .map(|_| char::from(32 + g.index(90) as u8))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.size(0, 5)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => {
+                let mut o = JsonObj::new();
+                for i in 0..g.size(0, 5) {
+                    o.insert(format!("k{i}"), gen_json(g, depth - 1));
+                }
+                Json::Obj(o)
+            }
+        }
+    }
+    check("json-roundtrip", 150, |g| {
+        let v = gen_json(g, 3);
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            prop_ensure!(back == v, "roundtrip mismatch: {text}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shipped_config_files_parse_and_validate() {
+    // The TOML files under configs/ are part of the public interface.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let cfg = fedasync::config::ExperimentConfig::from_toml_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        cfg.validate().unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        seen += 1;
+    }
+    assert!(seen >= 2, "expected shipped configs, found {seen}");
+}
