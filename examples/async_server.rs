@@ -1,6 +1,7 @@
 //! The Figure-1 system, live: scheduler ∥ updater ∥ worker pool on real
 //! OS threads, with the PJRT model behind a dedicated compute-service
-//! thread and the global model behind a RwLock.
+//! thread and the global model published through the versioned snapshot
+//! cell (scheduler reads are O(1) `Arc` clones — see DESIGN.md).
 //!
 //! Staleness here is *emergent* — it comes from task overlap, not from a
 //! sampled distribution — so this demo also prints the observed staleness
@@ -39,9 +40,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let log = run_threaded(model_dir(&cfg.model), &cfg, 42)?;
     let wall = t0.elapsed().as_secs_f64();
 
+    // sim_time is reported in *virtual* seconds (wallclock / TIME_SCALE),
+    // so these rows line up with virtual-mode runs of the same config.
     println!(
         "\n{:<6} {:>8} {:>11} {:>9} {:>10} {:>10}",
-        "epoch", "wall_s", "train_loss", "test_acc", "mean α_t", "staleness"
+        "epoch", "sim_s", "train_loss", "test_acc", "mean α_t", "staleness"
     );
     for r in &log.rows {
         println!(

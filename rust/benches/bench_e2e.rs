@@ -12,15 +12,13 @@ use std::time::Instant;
 use fedasync::config::presets::{named, Scale};
 use fedasync::config::{Algo, LocalUpdate};
 use fedasync::experiment::runner;
-use fedasync::runtime::{model_dir, ModelRuntime};
+use fedasync::runtime::{model_dir, try_load_runtime};
 
 fn main() {
     let dir = model_dir("mlp_synth");
-    if !dir.join("manifest.json").exists() {
-        println!("(skip: artifacts not built — run `make artifacts`)");
-        return;
-    }
-    let rt = ModelRuntime::load(&dir).expect("load");
+    let Some(rt) = try_load_runtime("mlp_synth") else {
+        return; // skip reason already printed
+    };
     println!("== bench_e2e: coordinator throughput (mlp_synth) ==\n");
 
     let mk = |algo: Algo| {

@@ -8,7 +8,7 @@
 //! This is the per-global-epoch server cost, so items/s here bounds the
 //! updater's max throughput (paper §Scalability).
 
-use fedasync::coordinator::updater::mix_inplace;
+use fedasync::coordinator::updater::{mix_inplace, mix_inplace_sharded};
 use fedasync::runtime::{model_dir, ModelRuntime};
 use fedasync::util::rng::Rng;
 use fedasync::util::stats::BenchTimer;
@@ -30,6 +30,21 @@ fn main() {
         println!("{}", r.report(Some(p as f64)));
     }
 
+    // Sharded native mixing: chunked across scoped threads.  On a 1-core
+    // box this measures pure overhead; on real servers it tracks memory
+    // bandwidth across cores (bench_updater has the crossover study).
+    for &p in &[1_000_000usize, 4_600_000] {
+        let mut x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        for shards in [2usize, 4] {
+            let r = timer.run(&format!("native_mix_sharded/p={p}/shards={shards}"), || {
+                mix_inplace_sharded(&mut x, &y, 0.37, shards);
+                std::hint::black_box(&x);
+            });
+            println!("{}", r.report(Some(p as f64)));
+        }
+    }
+
     // PJRT/Pallas mixing on the real artifacts (includes host↔device).
     for model in ["mlp_synth", "cnn_small"] {
         let dir = model_dir(model);
@@ -37,7 +52,13 @@ fn main() {
             println!("(skip {model}: artifacts not built)");
             continue;
         }
-        let rt = ModelRuntime::load_entries(&dir, &["mix"]).expect("load");
+        let rt = match ModelRuntime::load_entries(&dir, &["mix"]) {
+            Ok(rt) => rt,
+            Err(e) => {
+                println!("(skip {model}: runtime unavailable: {e})");
+                continue;
+            }
+        };
         let p = rt.param_count();
         let x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
         let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
@@ -49,8 +70,7 @@ fn main() {
 
     // Sanity: the two engines agree numerically.
     let dir = model_dir("mlp_synth");
-    if dir.join("manifest.json").exists() {
-        let rt = ModelRuntime::load_entries(&dir, &["mix"]).expect("load");
+    if let Ok(rt) = ModelRuntime::load_entries(&dir, &["mix"]) {
         let p = rt.param_count();
         let x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
         let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();

@@ -7,7 +7,7 @@
 //! optimization pass.
 
 use fedasync::coordinator::Trainer;
-use fedasync::runtime::{model_dir, EpochBatch, ModelRuntime};
+use fedasync::runtime::{try_load_runtime, EpochBatch};
 use fedasync::util::rng::Rng;
 use fedasync::util::stats::BenchTimer;
 
@@ -16,12 +16,9 @@ fn main() {
     println!("== bench_runtime: PJRT entry-point latencies ==\n");
 
     for model in ["mlp_synth", "cnn_small"] {
-        let dir = model_dir(model);
-        if !dir.join("manifest.json").exists() {
-            println!("(skip {model}: artifacts not built)");
-            continue;
-        }
-        let rt = ModelRuntime::load(&dir).expect("load");
+        let Some(rt) = try_load_runtime(model) else {
+            continue; // skip reason already printed
+        };
         let m = &rt.manifest;
         let isz: usize = m.input_shape.iter().product();
         let mut rng = Rng::seed_from(7);

@@ -2,19 +2,27 @@
 //! second the server core can absorb (paper §Scalability: "the server can
 //! receive the updates from the workers at any time").
 //!
-//! Measures (a) the single-threaded updater pipeline (α decision + mix +
-//! version bump + history push) across model sizes and staleness
-//! strategies, and (b) RwLock contention with concurrent reader threads
-//! playing the scheduler role (model snapshots), which is the real
-//! threaded-server topology.
+//! Measures:
+//! (a) the single-threaded updater pipeline (α decision + mix + version
+//!     bump + history push) across model sizes and staleness strategies;
+//! (b) the **old vs new scheduler handoff** — the seed cloned the full
+//!     `ParamVec` under a `RwLock` read guard per task, the refactor
+//!     clones an `Arc` out of the `SnapshotCell` — per reader and with
+//!     the writer mixing concurrently;
+//! (c) the sharded `mix_inplace` across shard counts (only wins on
+//!     multi-core boxes with large models — measured, not assumed);
+//! (d) the update-buffer pool against fresh allocation.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
 use fedasync::config::{StalenessConfig, StalenessFn};
 use fedasync::coordinator::model_store::ModelStore;
+use fedasync::coordinator::snapshot::{BufferPool, SnapshotCell};
 use fedasync::coordinator::staleness::AlphaController;
-use fedasync::coordinator::updater::{mix_inplace, MixEngine, Updater};
+use fedasync::coordinator::updater::{
+    mix_inplace, mix_inplace_sharded, mix_into, MixEngine, Updater,
+};
 use fedasync::util::rng::Rng;
 use fedasync::util::stats::BenchTimer;
 
@@ -54,6 +62,7 @@ fn main() {
     let mut rng = Rng::seed_from(2);
     println!("== bench_updater: server update pipeline ==\n");
 
+    // (a) ------------------------------------------------ updater pipeline
     for &p in &[6_922usize, 165_530, 1_000_000] {
         for (label, func) in [
             ("const", StalenessFn::Constant),
@@ -83,10 +92,31 @@ fn main() {
         }
     }
 
-    // RwLock contention: 0/2/6 scheduler-like readers snapshotting while
-    // we apply updates under the write lock.
+    // (b) --------------------------------------- scheduler handoff, 1 reader
+    // What one scheduled task pays to obtain the model: the seed's
+    // clone-under-read-lock versus the snapshot cell's Arc clone.
+    println!();
+    for &p in &[165_530usize, 1_000_000] {
+        let lock = RwLock::new(vec![0.0f32; p]);
+        let r = timer.run(&format!("handoff_old_clone_under_rwlock/p={p}"), || {
+            let g = lock.read().unwrap();
+            std::hint::black_box(g.clone());
+        });
+        println!("{}", r.report(Some(1.0)));
+
+        let cell = SnapshotCell::new(0, Arc::new(vec![0.0f32; p]));
+        let r = timer.run(&format!("handoff_new_snapshot_arc/p={p}"), || {
+            std::hint::black_box(cell.load());
+        });
+        println!("{}", r.report(Some(1.0)));
+    }
+
+    // (b') ------------------------- writer throughput under reader pressure
+    // Old: mix in place under the write lock while readers snapshot-clone.
+    // New: mix outside any lock, publish an Arc; readers clone Arcs.
     println!();
     let p = 165_530usize;
+    let x_new: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
     for readers in [0usize, 2, 6] {
         let global = Arc::new(RwLock::new(vec![0.0f32; p]));
         let stop = Arc::new(AtomicBool::new(false));
@@ -97,16 +127,18 @@ fn main() {
             handles.push(std::thread::spawn(move || {
                 let mut acc = 0.0f32;
                 while !s.load(Ordering::Relaxed) {
+                    // The seed's per-task model handoff: full clone held
+                    // under the read guard.
                     let snap = g.read().unwrap();
-                    acc += snap[0]; // simulate a model snapshot read
-                    std::hint::black_box(&*snap);
+                    let copy = snap.clone();
                     drop(snap);
+                    acc += copy[0];
+                    std::hint::black_box(&copy);
                 }
                 std::hint::black_box(acc);
             }));
         }
-        let x_new: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
-        let r = timer.run(&format!("rwlock_mix_under_{readers}_readers/p={p}"), || {
+        let r = timer.run(&format!("old_rwlock_mix_under_{readers}_readers/p={p}"), || {
             let mut g = global.write().unwrap();
             mix_inplace(&mut g, &x_new, 0.3);
         });
@@ -116,4 +148,66 @@ fn main() {
         }
         println!("{}", r.report(Some(1.0)));
     }
+    for readers in [0usize, 2, 6] {
+        let cell = Arc::new(SnapshotCell::new(0, Arc::new(vec![0.0f32; p])));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..readers {
+            let c = Arc::clone(&cell);
+            let s = Arc::clone(&stop);
+            handles.push(std::thread::spawn(move || {
+                let mut acc = 0.0f32;
+                while !s.load(Ordering::Relaxed) {
+                    let snap = c.load(); // O(1): version + Arc clone
+                    acc += snap.params[0];
+                    std::hint::black_box(&snap);
+                }
+                std::hint::black_box(acc);
+            }));
+        }
+        let mut version = 0u64;
+        let r = timer.run(&format!("new_snapshot_mix_under_{readers}_readers/p={p}"), || {
+            // The real updater path: O(P) mix outside the cell, O(1) publish.
+            let cur = cell.load();
+            let next = mix_into(&cur.params, &x_new, 0.3);
+            version += 1;
+            cell.publish(version, Arc::new(next));
+        });
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            let _ = h.join();
+        }
+        println!("{}", r.report(Some(1.0)));
+    }
+
+    // (c) -------------------------------------------------- sharded mixing
+    println!();
+    let p = 4_600_000usize;
+    let mut x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    for shards in [1usize, 2, 4, 8] {
+        let r = timer.run(&format!("mix_inplace_sharded/p={p}/shards={shards}"), || {
+            mix_inplace_sharded(&mut x, &y, 0.37, shards);
+            std::hint::black_box(&x);
+        });
+        println!("{}", r.report(Some(p as f64)));
+    }
+
+    // (d) ----------------------------------------------------- buffer pool
+    println!();
+    let p = 165_530usize;
+    let pool = BufferPool::new(4);
+    pool.release(vec![0.0f32; p]);
+    let r = timer.run(&format!("update_buffer_pooled/p={p}"), || {
+        let buf = pool.acquire(p);
+        std::hint::black_box(&buf);
+        pool.release(buf);
+    });
+    println!("{}", r.report(Some(1.0)));
+    let r = timer.run(&format!("update_buffer_fresh_alloc/p={p}"), || {
+        let buf = vec![0.0f32; p];
+        std::hint::black_box(&buf);
+        drop(buf);
+    });
+    println!("{}", r.report(Some(1.0)));
 }

@@ -185,9 +185,16 @@ pub struct ExperimentConfig {
     pub max_inflight: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config error: {0}")]
+#[derive(Debug)]
 pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Default for ExperimentConfig {
     fn default() -> Self {

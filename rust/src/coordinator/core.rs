@@ -1,0 +1,218 @@
+//! The single shared updater core (paper Algorithm 1, server side).
+//!
+//! Every execution mode — sampled-staleness virtual time, emergent
+//! discrete-event virtual time, and the real-thread server — feeds worker
+//! updates through one [`UpdaterCore`]: α decision + mix via
+//! [`Updater::apply`], version history via [`ModelStore`], and grid-aligned
+//! metrics via [`EvalRecorder`].  The seed re-implemented this bookkeeping
+//! inline in `run_threaded`, which let the threaded server's staleness,
+//! drop accounting, and eval cadence drift from the simulator's; now the
+//! semantics exist in exactly one place and `rust/tests/server_core.rs`
+//! pins the equivalence.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::model_store::ModelStore;
+use crate::coordinator::recorder::EvalRecorder;
+use crate::coordinator::snapshot::BufferPool;
+use crate::coordinator::staleness::AlphaController;
+use crate::coordinator::updater::{MixEngine, UpdateOutcome, Updater};
+use crate::coordinator::Trainer;
+use crate::federated::data::Dataset;
+use crate::federated::metrics::MetricsLog;
+use crate::runtime::{ParamVec, RuntimeError};
+
+/// Updater + model history + recorder, wired per the experiment config.
+pub struct UpdaterCore<'a> {
+    pub updater: Updater,
+    pub store: ModelStore,
+    pub rec: EvalRecorder<'a>,
+}
+
+impl<'a> UpdaterCore<'a> {
+    /// `history` is the model-version retention window: 1 for servers whose
+    /// tasks carry their own anchor, `max_staleness + 1` for the sampled
+    /// protocol's historical reads.  `pool` (threaded server) makes the
+    /// updater recycle mix buffers and evicted versions instead of
+    /// allocating per update; the sequential simulators pass `None`.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        initial: ParamVec,
+        history: usize,
+        test: &'a Dataset,
+        pool: Option<Arc<BufferPool>>,
+    ) -> UpdaterCore<'a> {
+        let alpha =
+            AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness);
+        let updater = match pool {
+            Some(pool) => Updater::with_pool(alpha, MixEngine::Native, pool),
+            None => Updater::new(alpha, MixEngine::Native),
+        };
+        UpdaterCore {
+            updater,
+            store: ModelStore::new(initial, history.max(1)),
+            rec: EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, test),
+        }
+    }
+
+    /// Offer one worker update `(x_new, τ)` and do the server accounting:
+    /// 2 comms per task (model down + model up), H gradients when the
+    /// update is applied, and the α/staleness/loss window counters.
+    pub fn offer<T: Trainer>(
+        &mut self,
+        trainer: &T,
+        x_new: &[f32],
+        tau: u64,
+        loss: f32,
+    ) -> Result<UpdateOutcome, RuntimeError> {
+        let out = self.updater.apply(trainer, &mut self.store, x_new, tau)?;
+        self.rec.counters.comms += 2;
+        if out.applied {
+            self.rec.counters.gradients += trainer.local_iters() as u64;
+        }
+        self.rec.counters.record_update(out.alpha_eff, out.staleness, loss as f64);
+        Ok(out)
+    }
+
+    /// Record a metrics row for epoch `t` if it lies on the eval grid.
+    /// (`t` is passed explicitly because the sampled protocol counts
+    /// offered tasks while the servers count applied versions.)
+    pub fn record_at<T: Trainer>(
+        &mut self,
+        trainer: &T,
+        t: usize,
+        sim_time: f64,
+    ) -> Result<(), RuntimeError> {
+        let params = self.store.current();
+        self.rec.maybe_record(trainer, t, params, sim_time)
+    }
+
+    /// Finish the run and hand back the metric series.
+    pub fn finish(self) -> MetricsLog {
+        self.rec.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StalenessFn;
+    use crate::federated::device::SimDevice;
+    use crate::runtime::EvalMetrics;
+
+    /// Trainer stub: mixing is native, eval reports mean(params) as loss.
+    struct StubTrainer;
+
+    impl Trainer for StubTrainer {
+        fn param_count(&self) -> usize {
+            4
+        }
+        fn init_params(&self, _: usize) -> Result<ParamVec, RuntimeError> {
+            Ok(vec![0.0; 4])
+        }
+        fn local_train(
+            &self,
+            _: &[f32],
+            _: Option<&[f32]>,
+            _: &mut SimDevice,
+            _: &Dataset,
+            _: f32,
+            _: f32,
+        ) -> Result<(ParamVec, f32), RuntimeError> {
+            unreachable!("core tests feed updates directly")
+        }
+        fn evaluate(&self, params: &[f32], _: &Dataset) -> Result<EvalMetrics, RuntimeError> {
+            let mean = params.iter().map(|&x| x as f64).sum::<f64>() / params.len() as f64;
+            Ok(EvalMetrics { loss: mean, accuracy: 1.0 - mean, samples: params.len() })
+        }
+        fn local_iters(&self) -> usize {
+            5
+        }
+    }
+
+    fn test_dataset() -> Dataset {
+        Dataset { features: vec![0.0; 4], labels: vec![0], input_size: 4, num_classes: 10 }
+    }
+
+    fn cfg(epochs: usize, eval_every: usize, drop_above: Option<u64>) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.epochs = epochs;
+        cfg.eval_every = eval_every;
+        cfg.alpha = 0.5;
+        cfg.alpha_decay = 1.0;
+        cfg.alpha_decay_at = usize::MAX;
+        cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+        cfg.staleness.drop_above = drop_above;
+        cfg
+    }
+
+    /// The core must make byte-identical decisions to a hand-rolled
+    /// `Updater::apply` loop over the same update sequence.
+    #[test]
+    fn offer_matches_manual_updater_apply() {
+        let cfg = cfg(100, 10, Some(3));
+        let test = test_dataset();
+        let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 8, &test, None);
+
+        let manual_updater = Updater::new(
+            AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness),
+            MixEngine::Native,
+        );
+        let mut manual_store = ModelStore::new(vec![0.0; 4], 8);
+
+        // A mixed stream of fresh, stale, and droppable updates; taus are
+        // derived from the live version so staleness cycles through 1..=6
+        // (drop_above = 3 ⇒ roughly half are dropped).
+        for i in 0..40u64 {
+            let v = core.store.current_version();
+            let tau = v.saturating_sub(i % 6);
+            let x_new = vec![0.1 * (i as f32 + 1.0); 4];
+            let got = core.offer(&StubTrainer, &x_new, tau, 1.0).unwrap();
+            let want = manual_updater
+                .apply(&StubTrainer, &mut manual_store, &x_new, tau)
+                .unwrap();
+            assert_eq!(got, want, "core and manual updater disagreed");
+            assert_eq!(core.store.current_version(), manual_store.current_version());
+            assert_eq!(core.store.current(), manual_store.current());
+        }
+    }
+
+    #[test]
+    fn accounting_counts_drops_and_applies() {
+        let cfg = cfg(100, 10, Some(2));
+        let test = test_dataset();
+        let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 8, &test, None);
+        // Warm the version counter so stale taus are possible.
+        for _ in 0..4 {
+            let v = core.store.current_version();
+            core.offer(&StubTrainer, &[1.0; 4], v, 1.0).unwrap();
+        }
+        let applied_before = core.store.current_version();
+        // Staleness = current+1 - tau = 4 > drop_above=2 ⇒ dropped.
+        let out = core
+            .offer(&StubTrainer, &[9.0; 4], applied_before.saturating_sub(3), 1.0)
+            .unwrap();
+        assert!(!out.applied);
+        assert_eq!(core.store.current_version(), applied_before);
+        // 5 tasks × 2 comms; gradients only for the 4 applied × H=5.
+        assert_eq!(core.rec.counters.comms, 10);
+        assert_eq!(core.rec.counters.gradients, 20);
+    }
+
+    #[test]
+    fn rows_land_on_the_fixed_grid() {
+        let cfg = cfg(30, 10, None);
+        let test = test_dataset();
+        let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 2, &test, None);
+        core.record_at(&StubTrainer, 0, 0.0).unwrap();
+        for t in 1..=30u64 {
+            let v = core.store.current_version();
+            core.offer(&StubTrainer, &[1.0; 4], v, 1.0).unwrap();
+            core.record_at(&StubTrainer, t as usize, t as f64).unwrap();
+        }
+        let log = core.finish();
+        let epochs: Vec<usize> = log.rows.iter().map(|r| r.epoch).collect();
+        assert_eq!(epochs, vec![0, 10, 20, 30]);
+    }
+}

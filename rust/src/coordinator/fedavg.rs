@@ -6,7 +6,7 @@
 //! entire epoch including all the received updates").
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::virtual_mode::EvalRecorder;
+use crate::coordinator::recorder::EvalRecorder;
 use crate::coordinator::Trainer;
 use crate::federated::data::FederatedData;
 use crate::federated::device::SimDevice;

@@ -3,10 +3,16 @@
 //! * [`virtual_mode`] — the paper's evaluation protocol (Algorithm 1 run
 //!   sequentially with sampled or emergent staleness on virtual time).
 //! * [`server`] — the Figure-1 architecture on real threads: scheduler ∥
-//!   updater ∥ worker pool over channels, global model behind a RwLock.
+//!   updater ∥ worker pool over channels, global model published through a
+//!   snapshot cell whose critical sections are O(1) — readers clone an
+//!   `Arc`, never the parameter vector.
+//! * [`core`] — the one shared updater core (α decision + mix + history +
+//!   accounting) every execution mode routes through.
 //! * [`fedavg`] / [`sgd`] — the paper's baselines (Algorithms 2 and 3).
 //! * [`staleness`] — α_t control: `α·s(t−τ)`, decay schedule, drop policy.
 //! * [`model_store`] — versioned global-model history (stale reads).
+//! * [`snapshot`] — the versioned `Arc` snapshot cell + update-buffer pool.
+//! * [`recorder`] — grid-aligned metrics rows shared by all coordinators.
 //! * [`updater`] — the mixing update with native and PJRT/Pallas engines.
 //!
 //! Every coordinator is generic over [`Trainer`] so the identical control
@@ -14,10 +20,13 @@
 //! closed-form quadratic problems in `analysis` (used to validate the
 //! paper's Theorems 1–2 against the true optimality gap).
 
+pub mod core;
 pub mod fedavg;
 pub mod model_store;
+pub mod recorder;
 pub mod server;
 pub mod sgd;
+pub mod snapshot;
 pub mod staleness;
 pub mod updater;
 pub mod virtual_mode;

@@ -6,18 +6,27 @@
 //! `x_{t−τ}` so the sampled-staleness protocol can hand a worker the model
 //! it *would have* received τ epochs ago.  A bounded ring of the last
 //! `capacity` versions covers both.
+//!
+//! Entries are stored as `Arc<ParamVec>` so the threaded server can
+//! publish the current model into its snapshot cell without copying the
+//! parameter vector: [`ModelStore::current_arc`] is a reference-count
+//! bump, not an O(P) clone (see `coordinator::snapshot`).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::runtime::ParamVec;
 
 /// Ring buffer of `(version, params)` with O(1) stale lookup.
 pub struct ModelStore {
     /// Front = oldest retained version; back = current.
-    ring: VecDeque<ParamVec>,
+    ring: VecDeque<Arc<ParamVec>>,
     /// Version (epoch stamp) of the back entry.
     current_version: u64,
     capacity: usize,
+    /// The entry most recently pushed out of the ring, held for
+    /// [`ModelStore::take_evicted`] reclamation.
+    evicted: Option<Arc<ParamVec>>,
 }
 
 impl ModelStore {
@@ -25,8 +34,8 @@ impl ModelStore {
     pub fn new(initial: ParamVec, capacity: usize) -> ModelStore {
         assert!(capacity >= 1);
         let mut ring = VecDeque::with_capacity(capacity);
-        ring.push_back(initial);
-        ModelStore { ring, current_version: 0, capacity }
+        ring.push_back(Arc::new(initial));
+        ModelStore { ring, current_version: 0, capacity, evicted: None }
     }
 
     pub fn current_version(&self) -> u64 {
@@ -35,6 +44,12 @@ impl ModelStore {
 
     pub fn current(&self) -> &ParamVec {
         self.ring.back().expect("non-empty ring")
+    }
+
+    /// Shared handle to the current model — O(1), no parameter copy.
+    /// This is what the threaded server publishes to its scheduler.
+    pub fn current_arc(&self) -> Arc<ParamVec> {
+        Arc::clone(self.ring.back().expect("non-empty ring"))
     }
 
     /// Model at `version`, if still retained.
@@ -57,17 +72,29 @@ impl ModelStore {
     /// Install a new current model, advancing the version by one.
     pub fn push(&mut self, params: ParamVec) -> u64 {
         if self.ring.len() == self.capacity {
-            self.ring.pop_front();
+            self.evicted = self.ring.pop_front();
         }
-        self.ring.push_back(params);
+        self.ring.push_back(Arc::new(params));
         self.current_version += 1;
         self.current_version
     }
 
-    /// Replace the current model in place (same version) — used by the
-    /// in-place native mixer to avoid an extra clone.
-    pub fn current_mut(&mut self) -> &mut ParamVec {
-        self.ring.back_mut().expect("non-empty ring")
+    /// Best-effort reclaim of the version most recently evicted by
+    /// [`ModelStore::push`] — `Some` only when no snapshot still shares
+    /// it, so a recycled buffer can never tear a reader's model.  A
+    /// still-shared version stays parked for one retry (the threaded
+    /// server retries right after republishing); if it is still shared
+    /// when the next eviction overwrites the slot, it is simply freed by
+    /// its last holder rather than recycled — the pool's primary supply
+    /// is consumed worker update buffers, not evictions.
+    pub fn take_evicted(&mut self) -> Option<ParamVec> {
+        match Arc::try_unwrap(self.evicted.take()?) {
+            Ok(params) => Some(params),
+            Err(still_shared) => {
+                self.evicted = Some(still_shared);
+                None
+            }
+        }
     }
 
     pub fn retained(&self) -> usize {
@@ -114,11 +141,18 @@ mod tests {
     }
 
     #[test]
-    fn current_mut_edits_in_place() {
-        let mut s = store(2);
-        s.current_mut()[0] = 42.0;
-        assert_eq!(s.current()[0], 42.0);
-        assert_eq!(s.current_version(), 0);
+    fn take_evicted_reclaims_only_unshared_versions() {
+        let mut s = store(1);
+        s.push(vec![1.0]); // evicts v0, which nothing shares
+        assert_eq!(s.take_evicted(), Some(vec![0.0]));
+        assert_eq!(s.take_evicted(), None, "reclaim consumed the slot");
+        let snap = s.current_arc(); // a reader holds v1
+        s.push(vec![2.0]); // evicts v1 while it is shared
+        assert!(s.take_evicted().is_none(), "shared version must not be reclaimed");
+        assert_eq!(snap[0], 1.0);
+        // Once the last reader lets go, a retry reclaims it.
+        drop(snap);
+        assert_eq!(s.take_evicted(), Some(vec![1.0]));
     }
 
     #[test]
@@ -126,4 +160,19 @@ mod tests {
         let s = store(3);
         assert_eq!(s.get(0).unwrap()[0], 0.0);
     }
+
+    #[test]
+    fn current_arc_shares_without_copying() {
+        let mut s = store(2);
+        s.push(vec![7.0]);
+        let snap = s.current_arc();
+        // Same allocation: the Arc points at the ring's back entry.
+        assert!(std::ptr::eq(snap.as_ref(), s.current()));
+        // A held snapshot survives the version moving on (readers keep a
+        // consistent model while the updater advances).
+        s.push(vec![8.0]);
+        assert_eq!(snap[0], 7.0);
+        assert_eq!(s.current()[0], 8.0);
+    }
+
 }

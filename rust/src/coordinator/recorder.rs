@@ -1,0 +1,68 @@
+//! Shared metrics recording for every coordinator.
+//!
+//! [`EvalRecorder`] owns the run's [`MetricsLog`] and [`RunningCounters`]
+//! and enforces the fixed evaluation grid `0, k, 2k, …, T`
+//! (`k = eval_every`): rows land on exactly these epochs no matter which
+//! coordinator is driving — virtual mode, the threaded server, or the
+//! baselines — so series from different execution modes align row-for-row.
+//! (The seed's threaded server kept its own `next_eval` cursor, which
+//! drifted off this grid whenever an update arrived past a grid point;
+//! routing everything through here is what fixed that.)
+
+use crate::coordinator::Trainer;
+use crate::federated::data::Dataset;
+use crate::federated::metrics::{MetricsLog, MetricsRow, RunningCounters};
+use crate::runtime::RuntimeError;
+
+/// Row recorder with a fixed eval grid.
+pub struct EvalRecorder<'a> {
+    pub log: MetricsLog,
+    pub counters: RunningCounters,
+    eval_every: usize,
+    test: &'a Dataset,
+    epochs: usize,
+}
+
+impl<'a> EvalRecorder<'a> {
+    pub fn new(
+        label: String,
+        eval_every: usize,
+        epochs: usize,
+        test: &'a Dataset,
+    ) -> Self {
+        EvalRecorder {
+            log: MetricsLog::new(label),
+            counters: RunningCounters::default(),
+            eval_every,
+            test,
+            epochs,
+        }
+    }
+
+    /// Record a row if `t` is on the eval grid (0, eval_every, …, T).
+    pub fn maybe_record<T: Trainer>(
+        &mut self,
+        trainer: &T,
+        t: usize,
+        params: &[f32],
+        sim_time: f64,
+    ) -> Result<(), RuntimeError> {
+        if t % self.eval_every != 0 && t != self.epochs {
+            return Ok(());
+        }
+        let m = trainer.evaluate(params, self.test)?;
+        let (alpha_eff, staleness, train_loss) = self.counters.snapshot();
+        self.log.push(MetricsRow {
+            epoch: t,
+            gradients: self.counters.gradients,
+            comms: self.counters.comms,
+            sim_time,
+            train_loss: if train_loss.is_nan() { m.loss } else { train_loss },
+            test_loss: m.loss,
+            test_acc: m.accuracy,
+            alpha_eff,
+            staleness,
+        });
+        Ok(())
+    }
+}

@@ -4,72 +4,79 @@
 //!            ┌────────────┐ tasks (bounded)  ┌─────────────┐
 //!            │ scheduler  │ ───────────────▶ │ worker pool │──┐
 //!            └────────────┘                  └─────────────┘  │ updates
-//!                  ▲   read x_t                    │ compute  ▼ (bounded)
+//!                  ▲  Arc snapshot (O(1))          │ compute  ▼ (bounded)
 //!            ┌─────┴──────────┐             ┌─────────────┐ ┌─────────┐
-//!            │ global model   │◀── write ── │ PJRT compute│ │ updater │
-//!            │ (RwLock, vers) │             │ service     │ └─────────┘
-//!            └────────────────┘             └─────────────┘
+//!            │ snapshot cell  │◀─ publish ─ │ PJRT compute│ │ updater │
+//!            │ (version, Arc) │    (O(1))   │ service     │ │  core   │
+//!            └────────────────┘             └─────────────┘ └─────────┘
 //! ```
 //!
-//! * **Scheduler** triggers training tasks on randomly chosen devices,
-//!   snapshotting `(x_t, t)` under a read lock; the bounded task channel
+//! * **Scheduler** triggers training tasks on randomly chosen devices.
+//!   It reads `(x_t, t)` from the [`SnapshotCell`] — an `Arc` clone, not a
+//!   parameter copy, so snapshotting costs O(1) regardless of model size
+//!   and never contends with the updater's math.  The bounded task channel
 //!   is the back-pressure the paper's "randomize check-in times" provides.
 //! * **Workers** sleep the (scaled) simulated network/compute latency,
 //!   call into the PJRT **compute service** (a dedicated thread owning the
 //!   non-`Send` [`ModelRuntime`]), then push `(x_new, τ)`.
-//! * **Updater** applies the staleness-weighted mix under a write lock —
-//!   the only writer — and runs the eval grid.  Server-side mixing is the
-//!   native engine (`updater::mix_inplace`); `bench_updater` measures this
-//!   path's throughput against lock contention.
+//! * **Updater** routes every update through the shared [`UpdaterCore`]
+//!   (the same α/drop/accounting/eval-grid code virtual mode runs), mixes
+//!   into a fresh vector *outside* any lock, publishes the result as a new
+//!   snapshot, and recycles the consumed update buffer through a
+//!   [`BufferPool`].  `bench_updater` measures the old clone-under-RwLock
+//!   handoff against this path.
 //!
-//! On this 1-core machine the PJRT service serializes model math, so
-//! threads mode demonstrates architecture + measures coordination costs
-//! rather than wallclock speedups (DESIGN.md §Substitutions).
+//! The channel/thread topology is model-agnostic: [`run_server_core`]
+//! takes any [`ComputeJob`] consumer, so tests and benches drive the full
+//! scheduler/worker/updater machinery with a native mock service while
+//! [`run_threaded`] plugs in PJRT (see `rust/tests/server_core.rs`).
+//!
+//! On a 1-core machine the PJRT service serializes model math, so threads
+//! mode demonstrates architecture + measures coordination costs rather
+//! than wallclock speedups (DESIGN.md §Substitutions).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{mpsc, Arc, RwLock};
+use std::sync::mpsc::{self, sync_channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::staleness::{AlphaController, AlphaDecision};
-use crate::coordinator::updater::mix_inplace;
-use crate::federated::data::FederatedData;
+use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::snapshot::{BufferPool, SnapshotCell};
+use crate::coordinator::Trainer;
+use crate::federated::data::{Dataset, FederatedData};
 use crate::federated::device::{AvailabilityModel, SimDevice};
-use crate::federated::metrics::{MetricsLog, MetricsRow, RunningCounters};
+use crate::federated::metrics::MetricsLog;
 use crate::federated::network::LatencyModel;
-use crate::federated::partition;
 use crate::runtime::{EvalMetrics, ModelRuntime, ParamVec, RuntimeError};
 use crate::util::rng::Rng;
 
-/// Versioned global model shared between scheduler and updater.
-struct Global {
-    version: u64,
-    params: ParamVec,
-}
-
-/// Jobs handled by the PJRT compute-service thread.
-enum ComputeJob {
+/// Jobs handled by the compute-service thread (PJRT in production; tests
+/// and benches plug in a native mock — see [`run_server_core`]).
+pub enum ComputeJob {
     Train {
         device: usize,
-        params: ParamVec,
+        /// Shared snapshot of the global model the task departs from.
+        params: Arc<ParamVec>,
         prox: bool,
         gamma: f32,
         rho: f32,
         reply: Sender<Result<(ParamVec, f32), String>>,
     },
     Eval {
-        params: ParamVec,
+        /// Shared snapshot of the model under evaluation (no copy).
+        params: Arc<ParamVec>,
         reply: Sender<Result<EvalMetrics, String>>,
     },
 }
 
-/// A scheduled training task (scheduler → worker).
+/// A scheduled training task (scheduler → worker).  `params` is an `Arc`
+/// clone of the published snapshot — 8 bytes on the wire, not O(P).
 struct Task {
     device: usize,
     tau: u64,
-    params: ParamVec,
+    params: Arc<ParamVec>,
 }
 
 /// A completed local update (worker → updater).
@@ -79,8 +86,21 @@ struct Update {
     loss: f32,
 }
 
-/// Wallclock scaling for simulated latencies (1 virtual s = this many real s).
-const TIME_SCALE: f64 = 0.002;
+/// Wallclock scaling for simulated latencies (1 virtual s = this many
+/// real s).  `sim_time` rows report *virtual* seconds — wallclock divided
+/// by this constant, with evaluation wallclock (which is not part of the
+/// simulated system) excluded — so threaded rows line up with the
+/// virtual-time modes.  Caveat: real PJRT *compute* time is inherently
+/// unscaled (it stands in for device compute), so on real artifacts
+/// threaded `sim_time` still over-counts compute by 1/`TIME_SCALE`
+/// relative to the event-driven simulator.
+pub const TIME_SCALE: f64 = 0.002;
+
+/// Virtual seconds elapsed since `started`, net of `eval_wall` seconds
+/// spent inside evaluation (inverse of the sleep scaling).
+fn virtual_elapsed(started: &Instant, eval_wall: f64) -> f64 {
+    (started.elapsed().as_secs_f64() - eval_wall).max(0.0) / TIME_SCALE
+}
 
 /// Run the threaded FedAsync server; blocks until `cfg.epochs` updates.
 pub fn run_threaded(
@@ -89,7 +109,7 @@ pub fn run_threaded(
     seed: u64,
 ) -> Result<MetricsLog, RuntimeError> {
     let data = Arc::new(crate::federated::data::generate(&cfg.federation, seed));
-    let part = partition::partition(
+    let part = crate::federated::partition::partition(
         &data.train,
         cfg.federation.devices,
         cfg.federation.partition,
@@ -107,10 +127,18 @@ pub fn run_threaded(
         .name("pjrt-compute".into())
         .spawn(move || compute_service(svc_dir, svc_data, svc_assignment, svc_seed, job_rx, ready_tx))
         .expect("spawn compute service");
-    let h = ready_rx
+    let h = match ready_rx
         .recv()
-        .map_err(|_| RuntimeError::Load("compute service died during load".into()))?
-        .map_err(RuntimeError::Load)?;
+        .map_err(|_| RuntimeError::Load("compute service died during load".into()))
+        .and_then(|r| r.map_err(RuntimeError::Load))
+    {
+        Ok(h) => h,
+        Err(e) => {
+            drop(job_tx); // unblock the service loop (if it got that far)
+            let _ = svc.join();
+            return Err(e);
+        }
+    };
 
     // Initial params: read the init bin directly via the manifest.
     let init = {
@@ -123,12 +151,108 @@ pub fn run_threaded(
             .collect::<Vec<f32>>()
     };
 
-    let global = Arc::new(RwLock::new(Global { version: 0, params: init }));
+    let log = run_server_core(cfg, seed, &data.test, init, h, job_tx);
+    svc.join().expect("compute service join");
+    log
+}
+
+/// `Trainer` facade over the compute-service channel: the updater thread
+/// evaluates through it so [`UpdaterCore`]'s grid recording works
+/// unchanged.  Training goes through the worker pool, never through here.
+///
+/// Holds the snapshot cell so evaluation ships the already-published
+/// `Arc` instead of copying the parameter vector — the updater always
+/// publishes before recording, so the cell's model *is* the one under
+/// evaluation (debug-asserted).
+struct ServiceTrainer {
+    job_tx: mpsc::Sender<ComputeJob>,
+    cell: Arc<SnapshotCell>,
+    h: usize,
+}
+
+impl Trainer for ServiceTrainer {
+    fn param_count(&self) -> usize {
+        0 // unused: the threaded server never asks
+    }
+
+    fn init_params(&self, _seed_idx: usize) -> Result<ParamVec, RuntimeError> {
+        Err(RuntimeError::Load(
+            "threaded mode reads init params from the manifest".into(),
+        ))
+    }
+
+    fn local_train(
+        &self,
+        _params: &[f32],
+        _anchor: Option<&[f32]>,
+        _device: &mut SimDevice,
+        _data: &Dataset,
+        _gamma: f32,
+        _rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError> {
+        Err(RuntimeError::Load(
+            "threaded mode trains via the worker pool, not the updater".into(),
+        ))
+    }
+
+    fn evaluate(&self, params: &[f32], _test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
+        let snap = self.cell.load();
+        debug_assert!(
+            std::ptr::eq(snap.params.as_ptr(), params.as_ptr()),
+            "threaded eval must run on the published snapshot"
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.job_tx
+            .send(ComputeJob::Eval { params: snap.params, reply: reply_tx })
+            .map_err(|_| RuntimeError::Load("compute service closed".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| RuntimeError::Load("compute service died".into()))?
+            .map_err(RuntimeError::Load)
+    }
+
+    fn local_iters(&self) -> usize {
+        self.h
+    }
+}
+
+/// The full scheduler ∥ workers ∥ updater topology against an arbitrary
+/// [`ComputeJob`] consumer.
+///
+/// `job_tx` must be connected to a running service thread that answers
+/// `Train` and `Eval` jobs; `h` is the service's local iterations per task
+/// (for gradient accounting); `test` only flows back out in the metric
+/// rows (evaluation itself happens service-side).  Public so integration
+/// tests and benches can exercise shutdown/drain and the snapshot path
+/// with a native mock service — no PJRT required.
+pub fn run_server_core(
+    cfg: &ExperimentConfig,
+    seed: u64,
+    test: &Dataset,
+    init: ParamVec,
+    h: usize,
+    job_tx: mpsc::Sender<ComputeJob>,
+) -> Result<MetricsLog, RuntimeError> {
+    // ------------------------------------------------- shared updater core
+    let pool = Arc::new(BufferPool::new(cfg.max_inflight.max(1) + 2));
+    let mut core = UpdaterCore::new(cfg, init, 1, test, Some(Arc::clone(&pool)));
+    let cell = Arc::new(SnapshotCell::new(0, core.store.current_arc()));
     let stop = Arc::new(AtomicBool::new(false));
+    let svc_trainer =
+        ServiceTrainer { job_tx: job_tx.clone(), cell: Arc::clone(&cell), h };
+    let started = Instant::now();
+    // Wallclock spent evaluating — excluded from sim_time (evaluation is
+    // instrumentation, not part of the simulated system).
+    let mut eval_wall = 0.0f64;
+
+    // Row at t=0 (before any thread exists, so an eval error exits clean).
+    let t0 = Instant::now();
+    core.record_at(&svc_trainer, 0, 0.0)?;
+    eval_wall += t0.elapsed().as_secs_f64();
 
     // ------------------------------------------------------------ workers
     let (task_tx, task_rx) = sync_channel::<Task>(cfg.max_inflight.max(1));
-    let task_rx = Arc::new(std::sync::Mutex::new(task_rx));
+    let task_rx = Arc::new(Mutex::new(task_rx));
     let (update_tx, update_rx) = sync_channel::<Update>(cfg.max_inflight.max(1));
 
     let prox = cfg.local_update == crate::config::LocalUpdate::Prox;
@@ -185,7 +309,7 @@ pub fn run_threaded(
     drop(update_tx); // updater sees EOF when all workers exit
 
     // ---------------------------------------------------------- scheduler
-    let sched_global = Arc::clone(&global);
+    let sched_cell = Arc::clone(&cell);
     let sched_stop = Arc::clone(&stop);
     let n_devices = cfg.federation.devices;
     let sched_seed = seed ^ 0x5CED;
@@ -195,15 +319,17 @@ pub fn run_threaded(
             let mut rng = Rng::seed_from(sched_seed);
             while !sched_stop.load(Ordering::Relaxed) {
                 let device = rng.index(n_devices);
-                let (tau, params) = {
-                    let g = sched_global.read().expect("global read");
-                    (g.version, g.params.clone())
-                };
+                // O(1) snapshot: version + Arc clone, no parameter copy,
+                // no waiting on an in-progress mix.
+                let snap = sched_cell.load();
                 // Randomized check-in: jitter before each trigger.
                 sleep_scaled(rng.uniform(0.0, 0.02));
                 // send blocks when max_inflight tasks are outstanding —
                 // this is the scheduler's congestion control.
-                if task_tx.send(Task { device, tau, params }).is_err() {
+                if task_tx
+                    .send(Task { device, tau: snap.version, params: snap.params })
+                    .is_err()
+                {
                     return;
                 }
             }
@@ -212,81 +338,37 @@ pub fn run_threaded(
         .expect("spawn scheduler");
 
     // ---------------------------------------------- updater (this thread)
-    let alpha_ctl =
-        AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness);
-    let mut log = MetricsLog::new(cfg.series_label());
-    let mut counters = RunningCounters::default();
-    let started = Instant::now();
-
-    let eval = |job_tx: &mpsc::Sender<ComputeJob>, params: ParamVec| -> Result<EvalMetrics, RuntimeError> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        job_tx
-            .send(ComputeJob::Eval { params, reply: reply_tx })
-            .map_err(|_| RuntimeError::Load("compute service closed".into()))?;
-        reply_rx
-            .recv()
-            .map_err(|_| RuntimeError::Load("compute service died".into()))?
-            .map_err(RuntimeError::Load)
-    };
-
-    // Row at t=0.
-    {
-        let params = global.read().unwrap().params.clone();
-        let m = eval(&job_tx, params)?;
-        log.push(MetricsRow {
-            epoch: 0,
-            gradients: 0,
-            comms: 0,
-            sim_time: 0.0,
-            train_loss: m.loss,
-            test_loss: m.loss,
-            test_acc: m.accuracy,
-            alpha_eff: 0.0,
-            staleness: 0.0,
-        });
-    }
-
-    let mut next_eval = cfg.eval_every;
+    let mut run_err: Option<RuntimeError> = None;
     while let Ok(update) = update_rx.recv() {
-        let (version, params_for_eval) = {
-            let mut g = global.write().expect("global write");
-            let t_next = g.version + 1;
-            let staleness = t_next.saturating_sub(update.tau);
-            match alpha_ctl.decide(t_next as usize, staleness) {
-                AlphaDecision::Drop => {
-                    counters.comms += 2;
-                    counters.record_update(0.0, staleness, update.loss as f64);
-                    (g.version, None)
-                }
-                AlphaDecision::Mix(alpha) => {
-                    mix_inplace(&mut g.params, &update.x_new, alpha as f32);
-                    g.version = t_next;
-                    counters.comms += 2;
-                    counters.gradients += h as u64;
-                    counters.record_update(alpha, staleness, update.loss as f64);
-                    let snap = (t_next as usize >= next_eval || t_next as usize >= cfg.epochs)
-                        .then(|| g.params.clone());
-                    (g.version, snap)
-                }
+        // One shared core: α decision, mix, version bump, accounting —
+        // identical to virtual mode's semantics by construction.
+        let out = match core.offer(&svc_trainer, &update.x_new, update.tau, update.loss) {
+            Ok(out) => out,
+            Err(e) => {
+                run_err = Some(e);
+                break;
             }
         };
-        if let Some(params) = params_for_eval {
-            let m = eval(&job_tx, params)?;
-            let (alpha_eff, staleness, train_loss) = counters.snapshot();
-            log.push(MetricsRow {
-                epoch: version as usize,
-                gradients: counters.gradients,
-                comms: counters.comms,
-                sim_time: started.elapsed().as_secs_f64(),
-                train_loss: if train_loss.is_nan() { m.loss } else { train_loss },
-                test_loss: m.loss,
-                test_acc: m.accuracy,
-                alpha_eff,
-                staleness,
-            });
-            next_eval = version as usize + cfg.eval_every;
+        // The update buffer is consumed; hand it back for reuse.
+        pool.release(update.x_new);
+        if out.applied {
+            // Publish outside any O(P) critical section: the mix already
+            // produced the new vector, this is a pointer swap.
+            cell.publish(out.version, core.store.current_arc());
+            // The publish released the cell's hold on the previous
+            // version; reclaim its storage unless a worker still has it.
+            if let Some(buf) = core.store.take_evicted() {
+                pool.release(buf);
+            }
+            let sim_now = virtual_elapsed(&started, eval_wall);
+            let t0 = Instant::now();
+            if let Err(e) = core.record_at(&svc_trainer, out.version as usize, sim_now) {
+                run_err = Some(e);
+                break;
+            }
+            eval_wall += t0.elapsed().as_secs_f64();
         }
-        if version as usize >= cfg.epochs {
+        if out.version as usize >= cfg.epochs {
             break;
         }
     }
@@ -300,7 +382,7 @@ pub fn run_threaded(
     loop {
         use std::sync::mpsc::RecvTimeoutError;
         match update_rx.recv_timeout(std::time::Duration::from_millis(100)) {
-            Ok(_) => {}
+            Ok(update) => pool.release(update.x_new),
             Err(RecvTimeoutError::Timeout) => {} // workers may be mid-compute
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -309,9 +391,21 @@ pub fn run_threaded(
     for hdl in worker_handles {
         hdl.join().expect("worker join");
     }
-    drop(job_tx); // compute service exits on channel close
-    svc.join().expect("compute service join");
-    Ok(log)
+    drop(svc_trainer); // release our job_tx clones: service sees EOF
+    drop(job_tx);
+    if let Some(e) = run_err {
+        return Err(e);
+    }
+    if core.store.current_version() < cfg.epochs as u64 {
+        // The update channel disconnected before the target: every worker
+        // bailed out, which only happens when the compute service failed.
+        return Err(RuntimeError::Load(format!(
+            "workers exited after {} of {} epochs (compute service failure)",
+            core.store.current_version(),
+            cfg.epochs
+        )));
+    }
+    Ok(core.finish())
 }
 
 /// Thread body owning the non-`Send` [`ModelRuntime`].
@@ -345,9 +439,11 @@ fn compute_service(
             ComputeJob::Train { device, params, prox, gamma, rho, reply } => {
                 let m = &rt.manifest;
                 let batch = fleet[device].next_epoch_batch(&data.train, m.local_iters, m.batch_size);
-                let anchor = prox.then(|| params.clone());
+                // Option II's anchor is the received model itself — borrow
+                // the shared snapshot, don't copy it.
+                let anchor = if prox { Some(params.as_slice()) } else { None };
                 let result = rt
-                    .train_epoch(&params, anchor.as_deref(), &batch, gamma, rho)
+                    .train_epoch(&params, anchor, &batch, gamma, rho)
                     .map_err(|e| e.to_string());
                 let _ = reply.send(result);
             }
@@ -367,6 +463,3 @@ fn sleep_scaled(virtual_seconds: f64) {
         std::thread::sleep(std::time::Duration::from_secs_f64(real));
     }
 }
-
-/// Expose the bounded-queue types for benches.
-pub type UpdateSender = SyncSender<(u64, ParamVec, f32)>;

@@ -8,7 +8,7 @@
 //! this alignment; its per-epoch plots simply omit SGD).
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::virtual_mode::EvalRecorder;
+use crate::coordinator::recorder::EvalRecorder;
 use crate::coordinator::Trainer;
 use crate::federated::data::FederatedData;
 use crate::federated::device::{AvailabilityModel, SimDevice};

@@ -11,7 +11,10 @@
 //!   the L1 path end-to-end (and the TPU-server story).  `bench_mixing`
 //!   compares the two.
 
+use std::sync::Arc;
+
 use crate::coordinator::model_store::ModelStore;
+use crate::coordinator::snapshot::BufferPool;
 use crate::coordinator::staleness::{AlphaController, AlphaDecision};
 use crate::coordinator::Trainer;
 use crate::runtime::RuntimeError;
@@ -35,6 +38,31 @@ pub fn mix_inplace(x: &mut [f32], y: &[f32], alpha: f32) {
     }
 }
 
+/// Minimum vector length before [`mix_inplace_sharded`] spawns threads;
+/// below this the per-thread overhead dwarfs the memory-bound loop.
+pub const SHARD_MIN_LEN: usize = 1 << 15;
+
+/// Sharded in-place mix: splits `x`/`y` into `shards` contiguous chunks
+/// and blends them on scoped threads.
+///
+/// The mix is memory-bandwidth-bound, so this only wins on multi-core
+/// servers with models large enough to amortize thread spawn (CNN-sized
+/// vectors and up); small inputs and `shards <= 1` fall back to the fused
+/// single-thread loop.  `bench_updater` measures the crossover.
+pub fn mix_inplace_sharded(x: &mut [f32], y: &[f32], alpha: f32, shards: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    let shards = shards.max(1).min(x.len().max(1));
+    if shards <= 1 || x.len() < SHARD_MIN_LEN {
+        return mix_inplace(x, y, alpha);
+    }
+    let chunk = (x.len() + shards - 1) / shards;
+    std::thread::scope(|s| {
+        for (xc, yc) in x.chunks_mut(chunk).zip(y.chunks(chunk)) {
+            s.spawn(move || mix_inplace(xc, yc, alpha));
+        }
+    });
+}
+
 /// Out-of-place native mix: writes `(1−α)·x + α·y` into a fresh vector.
 ///
 /// One read pass over `x`/`y` and one write — versus `clone` + `mix_inplace`
@@ -48,6 +76,15 @@ pub fn mix_into(x: &[f32], y: &[f32], alpha: f32) -> Vec<f32> {
         .zip(y)
         .map(|(&a, &b)| a + alpha * (b - a))
         .collect()
+}
+
+/// [`mix_into`] writing into a caller-provided (recycled) buffer instead
+/// of allocating — the pooled updater's per-epoch path.
+#[inline]
+pub fn mix_into_buf(x: &[f32], y: &[f32], alpha: f32, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), y.len());
+    out.clear();
+    out.extend(x.iter().zip(y).map(|(&a, &b)| a + alpha * (b - a)));
 }
 
 /// Outcome of offering one worker update to the updater.
@@ -65,11 +102,20 @@ pub struct UpdateOutcome {
 pub struct Updater {
     pub alpha: AlphaController,
     pub engine: MixEngine,
+    /// When set, mix outputs are drawn from this pool and the storage of
+    /// evicted model versions is returned to it — the threaded server's
+    /// steady-state allocation loop (see `coordinator::snapshot`).
+    pool: Option<Arc<BufferPool>>,
 }
 
 impl Updater {
     pub fn new(alpha: AlphaController, engine: MixEngine) -> Updater {
-        Updater { alpha, engine }
+        Updater { alpha, engine, pool: None }
+    }
+
+    /// An updater that recycles parameter buffers through `pool`.
+    pub fn with_pool(alpha: AlphaController, engine: MixEngine, pool: Arc<BufferPool>) -> Updater {
+        Updater { alpha, engine, pool: Some(pool) }
     }
 
     /// Offer `(x_new, τ)` to the server at the next epoch (paper
@@ -97,8 +143,16 @@ impl Updater {
             AlphaDecision::Mix(alpha) => {
                 let x = match self.engine {
                     // Single fused pass: read current + x_new, write the
-                    // new history entry directly (no clone-then-rewrite).
-                    MixEngine::Native => mix_into(store.current(), x_new, alpha as f32),
+                    // new history entry directly (no clone-then-rewrite),
+                    // into a recycled buffer when a pool is attached.
+                    MixEngine::Native => match &self.pool {
+                        Some(pool) => {
+                            let mut out = pool.acquire_clear(x_new.len());
+                            mix_into_buf(store.current(), x_new, alpha as f32, &mut out);
+                            out
+                        }
+                        None => mix_into(store.current(), x_new, alpha as f32),
+                    },
                     MixEngine::Pjrt => {
                         let mut x = store.current().clone();
                         trainer.mix(&mut x, x_new, alpha as f32)?;
@@ -106,6 +160,13 @@ impl Updater {
                     }
                 };
                 let version = store.push(x);
+                // Close the loop: the version just evicted from the ring
+                // is dead storage unless a snapshot still holds it.
+                if let Some(pool) = &self.pool {
+                    if let Some(buf) = store.take_evicted() {
+                        pool.release(buf);
+                    }
+                }
                 Ok(UpdateOutcome { version, applied: true, alpha_eff: alpha, staleness })
             }
         }
@@ -170,6 +231,23 @@ mod tests {
     }
 
     #[test]
+    fn sharded_mix_matches_serial_at_every_shard_count() {
+        // Cover both the serial fallback (small n) and the threaded path
+        // (n >= SHARD_MIN_LEN), including a chunk-remainder case.
+        for n in [1024usize, SHARD_MIN_LEN + 7] {
+            let x0: Vec<f32> = (0..n).map(|i| (i % 17) as f32 - 8.0).collect();
+            let y: Vec<f32> = (0..n).map(|i| (i % 13) as f32).collect();
+            let mut serial = x0.clone();
+            mix_inplace(&mut serial, &y, 0.37);
+            for shards in [1usize, 2, 3, 8] {
+                let mut sharded = x0.clone();
+                mix_inplace_sharded(&mut sharded, &y, 0.37, shards);
+                assert_eq!(sharded, serial, "n={n} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
     fn mix_alpha_zero_and_one() {
         let mut x = vec![1.0f32, 2.0];
         mix_inplace(&mut x, &[9.0, 9.0], 0.0);
@@ -224,6 +302,33 @@ mod tests {
         assert_eq!(out.alpha_eff, 0.0);
         assert_eq!(store.current_version(), before);
         assert_eq!(store.current(), &vec![0.0; 4]);
+    }
+
+    #[test]
+    fn pooled_apply_matches_unpooled_and_recycles() {
+        let plain = updater(StalenessFn::Constant, None);
+        let pool = Arc::new(BufferPool::new(4));
+        let pooled = Updater::with_pool(
+            AlphaController::new(
+                0.5,
+                1.0,
+                usize::MAX,
+                &StalenessConfig { max: 16, func: StalenessFn::Constant, drop_above: None },
+            ),
+            MixEngine::Native,
+            Arc::clone(&pool),
+        );
+        let mut s1 = ModelStore::new(vec![0.0; 4], 1);
+        let mut s2 = ModelStore::new(vec![0.0; 4], 1);
+        for i in 0..5u64 {
+            let x = vec![i as f32 + 1.0; 4];
+            let a = plain.apply(&NullTrainer, &mut s1, &x, s1.current_version()).unwrap();
+            let b = pooled.apply(&NullTrainer, &mut s2, &x, s2.current_version()).unwrap();
+            assert_eq!(a, b);
+            assert_eq!(s1.current(), s2.current());
+        }
+        // Evicted (unshared) versions really came back to the pool.
+        assert!(pool.pooled() >= 1, "pool never recycled");
     }
 
     #[test]

@@ -13,16 +13,21 @@
 //!   (compute time ∕ device speed + up/down link latency) of virtual time,
 //!   and its staleness *emerges* from how many updates landed while it was
 //!   in flight.  This validates that the sampled protocol is a faithful
-//!   stand-in (EXPERIMENTS.md compares the two).
+//!   stand-in (DESIGN.md §Fidelity compares the two).
+//!
+//! Both paths — and the real-thread server in [`super::server`] — feed
+//! every worker update through the same [`UpdaterCore`], so staleness
+//! semantics, drop accounting, and the eval grid exist in exactly one
+//! place.
+//!
+//! [`ModelStore`]: super::model_store::ModelStore
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::model_store::ModelStore;
-use crate::coordinator::staleness::AlphaController;
-use crate::coordinator::updater::{MixEngine, Updater};
+use crate::coordinator::core::UpdaterCore;
 use crate::coordinator::Trainer;
 use crate::federated::data::FederatedData;
 use crate::federated::device::SimDevice;
-use crate::federated::metrics::{MetricsLog, MetricsRow, RunningCounters};
+use crate::federated::metrics::MetricsLog;
 use crate::federated::network::{EventQueue, LatencyModel};
 use crate::runtime::RuntimeError;
 use crate::util::rng::Rng;
@@ -32,59 +37,6 @@ use crate::util::rng::Rng;
 pub enum StalenessSource {
     Sampled { max: u64 },
     Emergent { inflight: usize },
-}
-
-/// Shared row-recording helper for every coordinator.
-pub(crate) struct EvalRecorder<'a> {
-    pub log: MetricsLog,
-    pub counters: RunningCounters,
-    eval_every: usize,
-    test: &'a crate::federated::data::Dataset,
-    epochs: usize,
-}
-
-impl<'a> EvalRecorder<'a> {
-    pub fn new(
-        label: String,
-        eval_every: usize,
-        epochs: usize,
-        test: &'a crate::federated::data::Dataset,
-    ) -> Self {
-        EvalRecorder {
-            log: MetricsLog::new(label),
-            counters: RunningCounters::default(),
-            eval_every,
-            test,
-            epochs,
-        }
-    }
-
-    /// Record a row if `t` is on the eval grid (0, eval_every, …, T).
-    pub fn maybe_record<T: Trainer>(
-        &mut self,
-        trainer: &T,
-        t: usize,
-        params: &[f32],
-        sim_time: f64,
-    ) -> Result<(), RuntimeError> {
-        if t % self.eval_every != 0 && t != self.epochs {
-            return Ok(());
-        }
-        let m = trainer.evaluate(params, self.test)?;
-        let (alpha_eff, staleness, train_loss) = self.counters.snapshot();
-        self.log.push(MetricsRow {
-            epoch: t,
-            gradients: self.counters.gradients,
-            comms: self.counters.comms,
-            sim_time,
-            train_loss: if train_loss.is_nan() { m.loss } else { train_loss },
-            test_loss: m.loss,
-            test_acc: m.accuracy,
-            alpha_eff,
-            staleness,
-        });
-        Ok(())
-    }
 }
 
 /// Run FedAsync for `cfg.epochs` global epochs; returns the metric series.
@@ -123,47 +75,45 @@ fn run_sampled<T: Trainer>(
     max_staleness: u64,
 ) -> Result<MetricsLog, RuntimeError> {
     let mut rng = Rng::seed_from(seed ^ 0xFEDA_511C);
-    let updater = Updater::new(
-        AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness),
-        MixEngine::Native,
-    );
     // Ring must retain every version a sampled staleness can reach.
-    let mut store = ModelStore::new(trainer.init_params(seed as usize)?, max_staleness as usize + 1);
+    let mut core = UpdaterCore::new(
+        cfg,
+        trainer.init_params(seed as usize)?,
+        max_staleness as usize + 1,
+        &data.test,
+        None,
+    );
     let (use_prox, rho) = prox_args(cfg);
-    let h = trainer.local_iters() as u64;
 
-    let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
-    rec.maybe_record(trainer, 0, store.current(), 0.0)?;
+    core.record_at(trainer, 0, 0.0)?;
 
     for t_next in 1..=cfg.epochs as u64 {
         // Sample the paper's staleness, clamped to the available history.
+        // (The second clamp matters under a drop policy: dropped updates
+        // leave the store's version behind the task counter, so a raw
+        // `t_next - s` could name a version that never existed.)
         let s = rng.range_inclusive(1, max_staleness).min(t_next);
-        let tau = t_next - s;
+        let tau = (t_next - s).min(core.store.current_version());
         // Borrow the historical model directly from the ring — the borrow
         // ends with local_train, before the updater mutates the store, so
-        // no per-epoch P-sized clone is needed (EXPERIMENTS.md §Perf).
-        let anchor = store
+        // no per-epoch P-sized clone is needed.
+        let anchor = core
+            .store
             .get(tau)
             .expect("ring retains max_staleness+1 versions");
         let device = &mut fleet[rng.index(fleet.len())];
         let (x_new, loss) = trainer.local_train(
             anchor,
-            if use_prox { Some(anchor) } else { None },
+            if use_prox { Some(anchor.as_slice()) } else { None },
             device,
             &data.train,
             cfg.gamma,
             rho,
         )?;
-        let out = updater.apply(trainer, &mut store, &x_new, tau)?;
-        // Server accounting: one model down, one model up per task.
-        rec.counters.comms += 2;
-        if out.applied {
-            rec.counters.gradients += h;
-        }
-        rec.counters.record_update(out.alpha_eff, out.staleness, loss as f64);
-        rec.maybe_record(trainer, t_next as usize, store.current(), t_next as f64)?;
+        core.offer(trainer, &x_new, tau, loss)?;
+        core.record_at(trainer, t_next as usize, t_next as f64)?;
     }
-    Ok(rec.log)
+    Ok(core.finish())
 }
 
 /// Event payload for the emergent-staleness simulation.
@@ -188,60 +138,17 @@ fn run_emergent<T: Trainer>(
     let inflight = inflight.max(1).min(fleet.len());
     let mut rng = Rng::seed_from(seed ^ 0xE4E6_0001);
     let latency = LatencyModel::default();
-    let updater = Updater::new(
-        AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness),
-        MixEngine::Native,
-    );
     // Emergent tasks carry their own anchor; no history reads needed.
-    let mut store = ModelStore::new(trainer.init_params(seed as usize)?, 1);
-    let (use_prox, rho) = prox_args(cfg);
-    let h = trainer.local_iters() as u64;
+    let mut core =
+        UpdaterCore::new(cfg, trainer.init_params(seed as usize)?, 1, &data.test, None);
 
-    let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
-    rec.maybe_record(trainer, 0, store.current(), 0.0)?;
+    core.record_at(trainer, 0, 0.0)?;
 
     let mut queue: EventQueue<Completion> = EventQueue::new();
     let mut busy = vec![false; fleet.len()];
 
-    // The scheduler triggers a task on a random idle, eligible device,
-    // randomizing check-in time to avoid congestion (paper §1).
-    let assign = |queue: &mut EventQueue<Completion>,
-                      fleet: &mut [SimDevice],
-                      busy: &mut [bool],
-                      store: &ModelStore,
-                      rng: &mut Rng|
-     -> Result<bool, RuntimeError> {
-        let now = queue.now();
-        let idle: Vec<usize> = (0..fleet.len())
-            .filter(|&d| !busy[d] && fleet[d].is_eligible(now))
-            .collect();
-        if idle.is_empty() {
-            return Ok(false);
-        }
-        let device = idle[rng.index(idle.len())];
-        busy[device] = true;
-        let tau = store.current_version();
-        let anchor = store.current().clone();
-        // Downlink + compute + uplink, plus randomized check-in jitter.
-        let dev = &mut fleet[device];
-        let delay = rng.uniform(0.0, 0.05)
-            + latency.sample(rng)
-            + dev.compute_time(trainer.local_iters(), 50)
-            + latency.sample(rng);
-        let (x_new, loss) = trainer.local_train(
-            &anchor,
-            if use_prox { Some(&anchor) } else { None },
-            dev,
-            &data.train,
-            cfg.gamma,
-            rho,
-        )?;
-        queue.schedule_in(delay, Completion { device, tau, x_new, loss });
-        Ok(true)
-    };
-
     for _ in 0..inflight {
-        let _ = assign(&mut queue, fleet, &mut busy, &store, &mut rng)?;
+        let _ = assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)?;
     }
 
     let mut epochs_done = 0usize;
@@ -251,7 +158,7 @@ fn run_emergent<T: Trainer>(
             // forward by retrying assignment after a beat.
             let mut made_progress = false;
             for _ in 0..fleet.len() {
-                if assign(&mut queue, fleet, &mut busy, &store, &mut rng)? {
+                if assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)? {
                     made_progress = true;
                     break;
                 }
@@ -260,7 +167,7 @@ fn run_emergent<T: Trainer>(
                 // Force-advance past the availability gap.
                 queue.schedule_in(1.0, Completion {
                     device: usize::MAX,
-                    tau: store.current_version(),
+                    tau: core.store.current_version(),
                     x_new: Vec::new(),
                     loss: f32::NAN,
                 });
@@ -270,23 +177,63 @@ fn run_emergent<T: Trainer>(
         let now = queue.now();
         if ev.payload.device == usize::MAX {
             // Wake-up tick: try to assign again.
-            let _ = assign(&mut queue, fleet, &mut busy, &store, &mut rng)?;
+            let _ = assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)?;
             continue;
         }
         let Completion { device, tau, x_new, loss } = ev.payload;
         busy[device] = false;
-        let out = updater.apply(trainer, &mut store, &x_new, tau)?;
-        epochs_done = store.current_version() as usize;
-        rec.counters.comms += 2;
+        let out = core.offer(trainer, &x_new, tau, loss)?;
+        epochs_done = core.store.current_version() as usize;
         if out.applied {
-            rec.counters.gradients += h;
-        }
-        rec.counters.record_update(out.alpha_eff, out.staleness, loss as f64);
-        if out.applied {
-            rec.maybe_record(trainer, epochs_done, store.current(), now)?;
+            core.record_at(trainer, epochs_done, now)?;
         }
         // Keep the pipeline full.
-        let _ = assign(&mut queue, fleet, &mut busy, &store, &mut rng)?;
+        let _ = assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)?;
     }
-    Ok(rec.log)
+    Ok(core.finish())
+}
+
+/// Emergent-mode scheduler step: trigger a task on a random idle,
+/// eligible device, randomizing check-in time to avoid congestion
+/// (paper §1).  Returns `Ok(false)` when no device is available.
+#[allow(clippy::too_many_arguments)]
+fn assign_task<T: Trainer>(
+    queue: &mut EventQueue<Completion>,
+    fleet: &mut [SimDevice],
+    busy: &mut [bool],
+    core: &UpdaterCore<'_>,
+    rng: &mut Rng,
+    trainer: &T,
+    cfg: &ExperimentConfig,
+    data: &FederatedData,
+    latency: &LatencyModel,
+) -> Result<bool, RuntimeError> {
+    let now = queue.now();
+    let idle: Vec<usize> = (0..fleet.len())
+        .filter(|&d| !busy[d] && fleet[d].is_eligible(now))
+        .collect();
+    if idle.is_empty() {
+        return Ok(false);
+    }
+    let device = idle[rng.index(idle.len())];
+    busy[device] = true;
+    let tau = core.store.current_version();
+    let anchor = core.store.current().clone();
+    let (use_prox, rho) = prox_args(cfg);
+    // Downlink + compute + uplink, plus randomized check-in jitter.
+    let dev = &mut fleet[device];
+    let delay = rng.uniform(0.0, 0.05)
+        + latency.sample(rng)
+        + dev.compute_time(trainer.local_iters(), 50)
+        + latency.sample(rng);
+    let (x_new, loss) = trainer.local_train(
+        &anchor,
+        if use_prox { Some(anchor.as_slice()) } else { None },
+        dev,
+        &data.train,
+        cfg.gamma,
+        rho,
+    )?;
+    queue.schedule_in(delay, Completion { device, tau, x_new, loss });
+    Ok(true)
 }

@@ -4,8 +4,9 @@
 //! Optimization* (2019), as a three-layer rust + JAX + Pallas system:
 //! the rust coordinator here (Layer 3) executes AOT-compiled JAX/Pallas
 //! artifacts (Layers 2/1) through PJRT — python never runs at training
-//! time.  See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! time.  See DESIGN.md for the architecture, the threaded server's
+//! snapshot-cell design, and the offline-environment substitutions
+//! (including the pure-std `xla` stub this build uses).
 
 pub mod analysis;
 pub mod config;

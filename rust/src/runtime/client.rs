@@ -8,6 +8,7 @@
 
 use std::path::Path;
 
+use crate::runtime::xla;
 use crate::runtime::RuntimeError;
 
 /// Create the host CPU PJRT client.

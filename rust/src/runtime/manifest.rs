@@ -69,9 +69,16 @@ pub struct Manifest {
     pub entries: BTreeMap<String, EntrySig>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("manifest error: {0}")]
+#[derive(Debug)]
 pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
 
 /// Entry points every model artifact must provide.
 pub const REQUIRED_ENTRIES: &[&str] = &[

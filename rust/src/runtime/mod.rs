@@ -1,26 +1,67 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/<model>/`) and
 //! executes them from the coordinator's hot path.  Python never runs here.
+//!
+//! `xla` is the in-tree pure-std stub for the PJRT bindings (the offline
+//! build has no `xla_extension`); swapping the real crate back in means
+//! replacing this one module declaration with an external dependency.
 
 pub mod client;
 pub mod manifest;
 pub mod model_runtime;
+pub mod xla;
 
 pub use manifest::{DType, EntrySig, Manifest, ManifestError, TensorSig};
 pub use model_runtime::{EpochBatch, EvalMetrics, ModelRuntime, ParamVec};
 
 /// Unified runtime error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
-    #[error(transparent)]
-    Manifest(#[from] ManifestError),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("artifact load: {0}")]
+    Xla(xla::Error),
+    Manifest(ManifestError),
+    Io(std::io::Error),
     Load(String),
-    #[error("shape: {0}")]
     Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla: {e}"),
+            RuntimeError::Manifest(e) => write!(f, "{e}"),
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+            RuntimeError::Load(msg) => write!(f, "artifact load: {msg}"),
+            RuntimeError::Shape(msg) => write!(f, "shape: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Xla(e) => Some(e),
+            RuntimeError::Manifest(e) => Some(e),
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+impl From<ManifestError> for RuntimeError {
+    fn from(e: ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
 }
 
 /// Default artifacts root: `$FEDASYNC_ARTIFACTS` or `<repo>/artifacts`.
@@ -34,4 +75,24 @@ pub fn artifacts_root() -> std::path::PathBuf {
 /// Artifact directory for a model variant.
 pub fn model_dir(model: &str) -> std::path::PathBuf {
     artifacts_root().join(model)
+}
+
+/// Shared skip policy for artifact-gated tests and benches: `Some` when
+/// the model's artifacts exist *and* load (real PJRT bindings), `None` —
+/// with an explanatory line on stderr — when they are absent or this is
+/// a pure-std stub build that cannot compile them (DESIGN.md
+/// §Substitutions).
+pub fn try_load_runtime(model: &str) -> Option<ModelRuntime> {
+    let dir = model_dir(model);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping {model}: artifacts missing — run `make artifacts` first");
+        return None;
+    }
+    match ModelRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping {model}: artifacts present but runtime unavailable: {e}");
+            None
+        }
+    }
 }

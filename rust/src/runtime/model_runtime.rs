@@ -20,6 +20,7 @@ use std::path::Path;
 
 use crate::runtime::client::{compile_hlo_file, cpu_client};
 use crate::runtime::manifest::{Manifest, REQUIRED_ENTRIES};
+use crate::runtime::xla;
 use crate::runtime::RuntimeError;
 
 /// Flat `f32[P]` model parameters.

