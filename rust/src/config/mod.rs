@@ -9,6 +9,12 @@
 //! Configs load from TOML files (`util::toml`), can be overridden from the
 //! CLI, validate themselves, and serialize back to JSON for embedding in
 //! result files (so every CSV row set is traceable to its exact config).
+//!
+//! A `[scenario]` table (or a `scenario = "<preset>"` string) attaches a
+//! heterogeneous client population — speed tiers, churn schedule,
+//! straggler bursts, delivery faults.  The keys (`tier_*`, `churn_*`,
+//! `straggler_*`, `drop_prob`, `duplicate_prob`) are documented in
+//! [`crate::scenario`]; presets live in [`crate::scenario::presets`].
 
 pub mod presets;
 
@@ -176,6 +182,10 @@ pub struct ExperimentConfig {
     pub local_iters: Option<usize>,
     pub staleness: StalenessConfig,
     pub federation: FederationConfig,
+    /// Optional heterogeneous client population (tiers/churn/bursts/faults)
+    /// applied identically by every execution mode; `None` = the uniform
+    /// baseline population.
+    pub scenario: Option<crate::scenario::ScenarioConfig>,
     pub mode: ExecMode,
     /// Evaluate test metrics every this many global epochs.
     pub eval_every: usize,
@@ -226,6 +236,7 @@ impl Default for ExperimentConfig {
                 label_noise: 0.05,
                 class_sep: 2.5,
             },
+            scenario: None,
             mode: ExecMode::Virtual,
             eval_every: 20,
             worker_threads: 4,
@@ -284,6 +295,18 @@ impl ExperimentConfig {
         }
         if self.mode == ExecMode::Threads && self.worker_threads == 0 {
             return e("worker_threads must be > 0 in threads mode".into());
+        }
+        if let Some(sc) = &self.scenario {
+            sc.validate()?;
+            if self.algo != Algo::FedAsync {
+                return e(format!(
+                    "scenario {:?} requires algo = fedasync: the {} baseline never \
+                     consults the client population, so running it would be a silent \
+                     no-op scenario with misleading provenance",
+                    sc.name,
+                    self.algo.name()
+                ));
+            }
         }
         Ok(())
     }
@@ -384,6 +407,22 @@ impl ExperimentConfig {
             }
         }
 
+        let sc = v.get("scenario");
+        if let Some(name) = sc.as_str() {
+            self.scenario = Some(crate::scenario::presets::named(name).ok_or_else(|| {
+                err(format!(
+                    "unknown scenario preset {name:?}; available: {:?}",
+                    crate::scenario::presets::preset_names()
+                ))
+            })?);
+        } else if sc.as_obj().is_some() {
+            self.scenario = Some(crate::scenario::ScenarioConfig::from_json(sc)?);
+        } else if !matches!(sc, Json::Null) {
+            return Err(err(
+                "scenario must be a preset name string or a [scenario] table".into(),
+            ));
+        }
+
         let fed = v.get("federation");
         if fed.as_obj().is_some() {
             if let Some(x) = fed.get("devices").as_usize() {
@@ -453,6 +492,9 @@ impl ExperimentConfig {
         );
         o.insert("staleness_max", Json::Num(self.staleness.max as f64));
         o.insert("staleness_fn", Json::Str(self.staleness.func.label()));
+        if let Some(sc) = &self.scenario {
+            o.insert("scenario", sc.to_json());
+        }
         o.insert("devices", Json::Num(self.federation.devices as f64));
         o.insert(
             "samples_per_device",
@@ -588,6 +630,53 @@ mod tests {
             cfg.federation.partition,
             Partition::Dirichlet { beta: 0.3 }
         );
+    }
+
+    #[test]
+    fn scenario_table_and_preset_overlay() {
+        let doc = crate::util::toml::parse(
+            r#"
+            [scenario]
+            name = "two_tier"
+            tier_fraction = [0.7, 0.3]
+            tier_speed = [1.0, 0.2]
+            drop_prob = 0.05
+            "#,
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        cfg.validate().unwrap();
+        let sc = cfg.scenario.as_ref().expect("scenario parsed");
+        assert_eq!(sc.name, "two_tier");
+        assert_eq!(sc.tiers.len(), 2);
+        assert_eq!(sc.faults.drop_prob, 0.05);
+        // Provenance JSON carries the scenario tree.
+        assert!(cfg.to_json().get("scenario").get("name").as_str().is_some());
+
+        // Preset-by-name form.
+        let doc = crate::util::toml::parse("scenario = \"tiered_fleet\"").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        assert_eq!(cfg.scenario.as_ref().unwrap().name, "tiered_fleet");
+
+        // Unknown preset rejected.
+        let doc = crate::util::toml::parse("scenario = \"zen\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+
+        // Wrong-typed scenario node rejected, not silently dropped.
+        let doc = crate::util::toml::parse("scenario = 5").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+
+        // A scenario only makes sense for FedAsync: the baselines never
+        // consult the population, so that combination must not validate.
+        let mut cfg = ExperimentConfig::default();
+        cfg.scenario = crate::scenario::presets::named("tiered_fleet");
+        cfg.validate().unwrap();
+        cfg.algo = Algo::FedAvg { k: 10 };
+        assert!(cfg.validate().is_err());
+        cfg.algo = Algo::Sgd;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -77,20 +77,23 @@ impl<'a> UpdaterCore<'a> {
 
     /// Record a metrics row for epoch `t` if it lies on the eval grid.
     /// (`t` is passed explicitly because the sampled protocol counts
-    /// offered tasks while the servers count applied versions.)
+    /// offered tasks while the servers count applied versions; `clients`
+    /// is the scenario's effective participating-device count.)
     pub fn record_at<T: Trainer>(
         &mut self,
         trainer: &T,
         t: usize,
         sim_time: f64,
+        clients: usize,
     ) -> Result<(), RuntimeError> {
         let params = self.store.current();
-        self.rec.maybe_record(trainer, t, params, sim_time)
+        self.rec.maybe_record(trainer, t, params, sim_time, clients)
     }
 
-    /// Finish the run and hand back the metric series.
+    /// Finish the run and hand back the metric series (with the cumulative
+    /// staleness histogram attached).
     pub fn finish(self) -> MetricsLog {
-        self.rec.log
+        self.rec.finish()
     }
 }
 
@@ -205,14 +208,18 @@ mod tests {
         let cfg = cfg(30, 10, None);
         let test = test_dataset();
         let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 2, &test, None);
-        core.record_at(&StubTrainer, 0, 0.0).unwrap();
+        core.record_at(&StubTrainer, 0, 0.0, 7).unwrap();
         for t in 1..=30u64 {
             let v = core.store.current_version();
             core.offer(&StubTrainer, &[1.0; 4], v, 1.0).unwrap();
-            core.record_at(&StubTrainer, t as usize, t as f64).unwrap();
+            core.record_at(&StubTrainer, t as usize, t as f64, 7).unwrap();
         }
         let log = core.finish();
         let epochs: Vec<usize> = log.rows.iter().map(|r| r.epoch).collect();
         assert_eq!(epochs, vec![0, 10, 20, 30]);
+        assert!(log.rows.iter().all(|r| r.clients == 7));
+        // Every offered update landed in the cumulative histogram.
+        assert_eq!(log.staleness_hist.total(), 30);
+        assert_eq!(log.staleness_hist.support(), vec![1]);
     }
 }

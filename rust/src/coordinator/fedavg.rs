@@ -49,7 +49,7 @@ pub fn run_fedavg<T: Trainer>(
     let p = trainer.param_count();
 
     let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
-    rec.maybe_record(trainer, 0, &params, 0.0)?;
+    rec.maybe_record(trainer, 0, &params, 0.0, k)?;
     let mut sim_time = 0.0f64;
 
     for t in 1..=cfg.epochs {
@@ -102,9 +102,9 @@ pub fn run_fedavg<T: Trainer>(
                 .record_update(1.0 / survivors as f64, 1, loss_sum / survivors as f64);
         }
         // else: whole epoch dropped — global model unchanged.
-        rec.maybe_record(trainer, t, &params, sim_time)?;
+        rec.maybe_record(trainer, t, &params, sim_time, k)?;
     }
-    Ok(rec.log)
+    Ok(rec.finish())
 }
 
 #[cfg(test)]

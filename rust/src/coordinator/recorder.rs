@@ -40,12 +40,15 @@ impl<'a> EvalRecorder<'a> {
     }
 
     /// Record a row if `t` is on the eval grid (0, eval_every, …, T).
+    /// `clients` is the effective participating-device count at this point
+    /// of the run (scenario churn; the full fleet otherwise).
     pub fn maybe_record<T: Trainer>(
         &mut self,
         trainer: &T,
         t: usize,
         params: &[f32],
         sim_time: f64,
+        clients: usize,
     ) -> Result<(), RuntimeError> {
         if t % self.eval_every != 0 && t != self.epochs {
             return Ok(());
@@ -62,7 +65,16 @@ impl<'a> EvalRecorder<'a> {
             test_acc: m.accuracy,
             alpha_eff,
             staleness,
+            clients,
         });
         Ok(())
+    }
+
+    /// Close the run: moves the cumulative staleness histogram into the
+    /// log and hands it back.
+    pub fn finish(self) -> MetricsLog {
+        let EvalRecorder { mut log, counters, .. } = self;
+        log.staleness_hist = counters.hist;
+        log
     }
 }

@@ -48,8 +48,8 @@ use crate::coordinator::Trainer;
 use crate::federated::data::{Dataset, FederatedData};
 use crate::federated::device::{AvailabilityModel, SimDevice};
 use crate::federated::metrics::MetricsLog;
-use crate::federated::network::LatencyModel;
 use crate::runtime::{EvalMetrics, ModelRuntime, ParamVec, RuntimeError};
+use crate::scenario::{behavior_for, pick_present, ClientBehavior, Delivery};
 use crate::util::rng::Rng;
 
 /// Jobs handled by the compute-service thread (PJRT in production; tests
@@ -81,6 +81,7 @@ struct Task {
 
 /// A completed local update (worker → updater).
 struct Update {
+    device: usize,
     tau: u64,
     x_new: ParamVec,
     loss: f32,
@@ -151,7 +152,8 @@ pub fn run_threaded(
             .collect::<Vec<f32>>()
     };
 
-    let log = run_server_core(cfg, seed, &data.test, init, h, job_tx);
+    let behavior = behavior_for(cfg, cfg.federation.devices, seed);
+    let log = run_server_core(cfg, seed, &data.test, init, h, job_tx, behavior);
     svc.join().expect("compute service join");
     log
 }
@@ -222,9 +224,14 @@ impl Trainer for ServiceTrainer {
 /// `job_tx` must be connected to a running service thread that answers
 /// `Train` and `Eval` jobs; `h` is the service's local iterations per task
 /// (for gradient accounting); `test` only flows back out in the metric
-/// rows (evaluation itself happens service-side).  Public so integration
-/// tests and benches can exercise shutdown/drain and the snapshot path
-/// with a native mock service — no PJRT required.
+/// rows (evaluation itself happens service-side).  `behavior` is the
+/// scenario's client population, consulted in three places: the scheduler
+/// skips absent devices (churn), workers scale their simulated link sleeps
+/// by the device's tier/burst slowdown, and the updater applies delivery
+/// faults before offering to the core — the same three touch points the
+/// virtual modes use.  Public so integration tests and benches can
+/// exercise shutdown/drain and the snapshot path with a native mock
+/// service — no PJRT required.
 pub fn run_server_core(
     cfg: &ExperimentConfig,
     seed: u64,
@@ -232,6 +239,7 @@ pub fn run_server_core(
     init: ParamVec,
     h: usize,
     job_tx: mpsc::Sender<ComputeJob>,
+    behavior: Arc<dyn ClientBehavior>,
 ) -> Result<MetricsLog, RuntimeError> {
     // ------------------------------------------------- shared updater core
     let pool = Arc::new(BufferPool::new(cfg.max_inflight.max(1) + 2));
@@ -241,13 +249,14 @@ pub fn run_server_core(
     let svc_trainer =
         ServiceTrainer { job_tx: job_tx.clone(), cell: Arc::clone(&cell), h };
     let started = Instant::now();
+    let epochs_f = cfg.epochs as f64;
     // Wallclock spent evaluating — excluded from sim_time (evaluation is
     // instrumentation, not part of the simulated system).
     let mut eval_wall = 0.0f64;
 
     // Row at t=0 (before any thread exists, so an eval error exits clean).
     let t0 = Instant::now();
-    core.record_at(&svc_trainer, 0, 0.0)?;
+    core.record_at(&svc_trainer, 0, 0.0, behavior.present_count(0.0))?;
     eval_wall += t0.elapsed().as_secs_f64();
 
     // ------------------------------------------------------------ workers
@@ -261,6 +270,7 @@ pub fn run_server_core(
         let task_rx = Arc::clone(&task_rx);
         let update_tx = update_tx.clone();
         let job_tx = job_tx.clone();
+        let wbehavior = Arc::clone(&behavior);
         let gamma = cfg.gamma;
         let rho = cfg.rho;
         let wseed = seed ^ (0xAB00 + w as u64);
@@ -268,7 +278,6 @@ pub fn run_server_core(
             .name(format!("worker-{w}"))
             .spawn(move || {
                 let mut rng = Rng::seed_from(wseed);
-                let latency = LatencyModel::default();
                 loop {
                     let task = {
                         let guard = task_rx.lock().expect("task channel lock");
@@ -277,8 +286,14 @@ pub fn run_server_core(
                             Err(_) => return, // scheduler gone: drain out
                         }
                     };
+                    // Tier link latency × tier/burst slowdown: the
+                    // scenario's per-task sleeps (compute itself is real
+                    // wallclock behind the service thread, so slow devices
+                    // are modelled entirely in the link sleeps here).
+                    let p = (task.tau as f64 / epochs_f).min(1.0);
+                    let slow = wbehavior.slowdown(task.device, p);
                     // Downlink latency.
-                    sleep_scaled(latency.sample(&mut rng));
+                    sleep_scaled(wbehavior.link_latency(task.device, &mut rng) * slow);
                     let (reply_tx, reply_rx) = mpsc::channel();
                     if job_tx
                         .send(ComputeJob::Train {
@@ -297,8 +312,11 @@ pub fn run_server_core(
                         return;
                     };
                     // Uplink latency.
-                    sleep_scaled(latency.sample(&mut rng));
-                    if update_tx.send(Update { tau: task.tau, x_new, loss }).is_err() {
+                    sleep_scaled(wbehavior.link_latency(task.device, &mut rng) * slow);
+                    if update_tx
+                        .send(Update { device: task.device, tau: task.tau, x_new, loss })
+                        .is_err()
+                    {
                         return;
                     }
                 }
@@ -311,6 +329,7 @@ pub fn run_server_core(
     // ---------------------------------------------------------- scheduler
     let sched_cell = Arc::clone(&cell);
     let sched_stop = Arc::clone(&stop);
+    let sched_behavior = Arc::clone(&behavior);
     let n_devices = cfg.federation.devices;
     let sched_seed = seed ^ 0x5CED;
     let scheduler = std::thread::Builder::new()
@@ -318,10 +337,12 @@ pub fn run_server_core(
         .spawn(move || {
             let mut rng = Rng::seed_from(sched_seed);
             while !sched_stop.load(Ordering::Relaxed) {
-                let device = rng.index(n_devices);
                 // O(1) snapshot: version + Arc clone, no parameter copy,
                 // no waiting on an in-progress mix.
                 let snap = sched_cell.load();
+                // Only trigger devices the scenario has present right now.
+                let p = (snap.version as f64 / epochs_f).min(1.0);
+                let device = pick_present(n_devices, sched_behavior.as_ref(), p, &mut rng);
                 // Randomized check-in: jitter before each trigger.
                 sleep_scaled(rng.uniform(0.0, 0.02));
                 // send blocks when max_inflight tasks are outstanding —
@@ -338,37 +359,57 @@ pub fn run_server_core(
         .expect("spawn scheduler");
 
     // ---------------------------------------------- updater (this thread)
+    let mut upd_rng = Rng::seed_from(seed ^ 0x0DD5_FA17);
     let mut run_err: Option<RuntimeError> = None;
-    while let Ok(update) = update_rx.recv() {
-        // One shared core: α decision, mix, version bump, accounting —
-        // identical to virtual mode's semantics by construction.
-        let out = match core.offer(&svc_trainer, &update.x_new, update.tau, update.loss) {
-            Ok(out) => out,
-            Err(e) => {
-                run_err = Some(e);
+    'updates: while let Ok(update) = update_rx.recv() {
+        // Delivery faults happen at the server's doorstep — identical to
+        // where the virtual modes apply them.
+        let p = (core.store.current_version() as f64 / epochs_f).min(1.0);
+        let copies = match behavior.delivery(update.device, p, &mut upd_rng) {
+            Delivery::Drop => 0,
+            Delivery::Deliver => 1,
+            Delivery::Duplicate => 2,
+        };
+        for _ in 0..copies {
+            // One shared core: α decision, mix, version bump, accounting —
+            // identical to virtual mode's semantics by construction.
+            let out = match core.offer(&svc_trainer, &update.x_new, update.tau, update.loss) {
+                Ok(out) => out,
+                Err(e) => {
+                    run_err = Some(e);
+                    break 'updates;
+                }
+            };
+            if out.applied {
+                // Publish outside any O(P) critical section: the mix
+                // already produced the new vector, this is a pointer swap.
+                cell.publish(out.version, core.store.current_arc());
+                // The publish released the cell's hold on the previous
+                // version; reclaim its storage unless a worker still has
+                // it.
+                if let Some(buf) = core.store.take_evicted() {
+                    pool.release(buf);
+                }
+                let sim_now = virtual_elapsed(&started, eval_wall);
+                let clients =
+                    behavior.present_count((out.version as f64 / epochs_f).min(1.0));
+                let t0 = Instant::now();
+                if let Err(e) =
+                    core.record_at(&svc_trainer, out.version as usize, sim_now, clients)
+                {
+                    run_err = Some(e);
+                    break 'updates;
+                }
+                eval_wall += t0.elapsed().as_secs_f64();
+            }
+            if core.store.current_version() as usize >= cfg.epochs {
+                // Target reached mid-delivery: don't apply a second copy.
                 break;
             }
-        };
+        }
         // The update buffer is consumed; hand it back for reuse.
         pool.release(update.x_new);
-        if out.applied {
-            // Publish outside any O(P) critical section: the mix already
-            // produced the new vector, this is a pointer swap.
-            cell.publish(out.version, core.store.current_arc());
-            // The publish released the cell's hold on the previous
-            // version; reclaim its storage unless a worker still has it.
-            if let Some(buf) = core.store.take_evicted() {
-                pool.release(buf);
-            }
-            let sim_now = virtual_elapsed(&started, eval_wall);
-            let t0 = Instant::now();
-            if let Err(e) = core.record_at(&svc_trainer, out.version as usize, sim_now) {
-                run_err = Some(e);
-                break;
-            }
-            eval_wall += t0.elapsed().as_secs_f64();
-        }
-        if out.version as usize >= cfg.epochs {
+        if core.store.current_version() as usize >= cfg.epochs {
             break;
         }
     }
@@ -406,6 +447,31 @@ pub fn run_server_core(
         )));
     }
     Ok(core.finish())
+}
+
+/// Answer [`ComputeJob`]s with an in-process [`Trainer`] over a trivial
+/// fleet — the native, PJRT-free stand-in that tests and examples plug
+/// into [`run_server_core`] (e.g. the closed-form quadratic problems in
+/// `analysis`).  Run it on its own thread and hand the matching sender to
+/// `run_server_core`.
+pub fn serve_native<T: Trainer>(trainer: T, devices: usize, jobs: Receiver<ComputeJob>) {
+    let data = crate::analysis::quadratic::dummy_dataset();
+    let mut fleet = crate::analysis::quadratic::dummy_fleet(devices, 7);
+    while let Ok(job) = jobs.recv() {
+        match job {
+            ComputeJob::Train { device, params, prox, gamma, rho, reply } => {
+                let anchor = if prox { Some(params.as_slice()) } else { None };
+                let result = trainer
+                    .local_train(&params, anchor, &mut fleet[device], &data, gamma, rho)
+                    .map_err(|e| e.to_string());
+                let _ = reply.send(result);
+            }
+            ComputeJob::Eval { params, reply } => {
+                let result = trainer.evaluate(&params, &data).map_err(|e| e.to_string());
+                let _ = reply.send(result);
+            }
+        }
+    }
 }
 
 /// Thread body owning the non-`Send` [`ModelRuntime`].

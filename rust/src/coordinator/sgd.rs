@@ -43,7 +43,7 @@ pub fn run_sgd<T: Trainer>(
     let h = trainer.local_iters() as u64;
 
     let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
-    rec.maybe_record(trainer, 0, &params, 0.0)?;
+    rec.maybe_record(trainer, 0, &params, 0.0, 1)?;
 
     for t in 1..=cfg.epochs {
         let (next, loss) = trainer.local_train(
@@ -58,9 +58,15 @@ pub fn run_sgd<T: Trainer>(
         rec.counters.gradients += h;
         // No communication: the model never leaves the single worker.
         rec.counters.record_update(1.0, 0, loss as f64);
-        rec.maybe_record(trainer, t, &params, device.compute_time(trainer.local_iters(), 50) * t as f64)?;
+        rec.maybe_record(
+            trainer,
+            t,
+            &params,
+            device.compute_time(trainer.local_iters(), 50) * t as f64,
+            1,
+        )?;
     }
-    Ok(rec.log)
+    Ok(rec.finish())
 }
 
 #[cfg(test)]

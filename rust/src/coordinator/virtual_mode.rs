@@ -18,7 +18,11 @@
 //! Both paths — and the real-thread server in [`super::server`] — feed
 //! every worker update through the same [`UpdaterCore`], so staleness
 //! semantics, drop accounting, and the eval grid exist in exactly one
-//! place.
+//! place; and both consult the same [`ClientBehavior`] (built from
+//! `cfg.scenario`), so a heterogeneous population means the same thing in
+//! every mode: behavior shapes the staleness draw here (sampled), the
+//! event latencies here (emergent), and the per-task sleeps in the
+//! threaded server.
 //!
 //! [`ModelStore`]: super::model_store::ModelStore
 
@@ -28,8 +32,9 @@ use crate::coordinator::Trainer;
 use crate::federated::data::FederatedData;
 use crate::federated::device::SimDevice;
 use crate::federated::metrics::MetricsLog;
-use crate::federated::network::{EventQueue, LatencyModel};
+use crate::federated::network::EventQueue;
 use crate::runtime::RuntimeError;
+use crate::scenario::{behavior_for, pick_present, ClientBehavior, Delivery};
 use crate::util::rng::Rng;
 
 /// How staleness is produced in virtual mode.
@@ -48,12 +53,13 @@ pub fn run_fedasync<T: Trainer>(
     seed: u64,
     source: StalenessSource,
 ) -> Result<MetricsLog, RuntimeError> {
+    let behavior = behavior_for(cfg, fleet.len(), seed);
     match source {
         StalenessSource::Sampled { max } => {
-            run_sampled(trainer, cfg, data, fleet, seed, max)
+            run_sampled(trainer, cfg, data, fleet, seed, max, behavior.as_ref())
         }
         StalenessSource::Emergent { inflight } => {
-            run_emergent(trainer, cfg, data, fleet, seed, inflight)
+            run_emergent(trainer, cfg, data, fleet, seed, inflight, behavior.as_ref())
         }
     }
 }
@@ -65,7 +71,9 @@ fn prox_args(cfg: &ExperimentConfig) -> (bool, f32) {
     }
 }
 
-/// The paper's sampled-staleness protocol.
+/// The paper's sampled-staleness protocol, population-shaped: the behavior
+/// picks who trains (churn), how stale they read (tiers/bursts bias the
+/// draw), and whether the update arrives (faults).
 fn run_sampled<T: Trainer>(
     trainer: &T,
     cfg: &ExperimentConfig,
@@ -73,27 +81,36 @@ fn run_sampled<T: Trainer>(
     fleet: &mut [SimDevice],
     seed: u64,
     max_staleness: u64,
+    behavior: &dyn ClientBehavior,
 ) -> Result<MetricsLog, RuntimeError> {
     let mut rng = Rng::seed_from(seed ^ 0xFEDA_511C);
     // Ring must retain every version a sampled staleness can reach.
     let mut core = UpdaterCore::new(
         cfg,
         trainer.init_params(seed as usize)?,
-        max_staleness as usize + 1,
+        max_staleness.max(1) as usize + 1,
         &data.test,
         None,
     );
     let (use_prox, rho) = prox_args(cfg);
+    let epochs = cfg.epochs as u64;
 
-    core.record_at(trainer, 0, 0.0)?;
+    core.record_at(trainer, 0, 0.0, behavior.present_count(0.0))?;
 
-    for t_next in 1..=cfg.epochs as u64 {
-        // Sample the paper's staleness, clamped to the available history.
-        // (The second clamp matters under a drop policy: dropped updates
-        // leave the store's version behind the task counter, so a raw
-        // `t_next - s` could name a version that never existed.)
-        let s = rng.range_inclusive(1, max_staleness).min(t_next);
-        let tau = (t_next - s).min(core.store.current_version());
+    for t_next in 1..=epochs {
+        let progress = t_next as f64 / epochs as f64;
+        let device = pick_present(fleet.len(), behavior, progress, &mut rng);
+        // Sample the population-shaped staleness, clamped to the available
+        // history.  (Both clamps matter once faults are in play: dropped
+        // deliveries leave the store's version *behind* the task counter,
+        // so a raw `t_next - s` could name a version that never existed;
+        // duplicate deliveries push it *ahead*, so `t_next - s` could have
+        // already been evicted from the ring.)
+        let s = behavior
+            .sample_staleness(device, progress, max_staleness, &mut rng)
+            .min(t_next);
+        let tau = (t_next - s)
+            .clamp(core.store.oldest_version(), core.store.current_version());
         // Borrow the historical model directly from the ring — the borrow
         // ends with local_train, before the updater mutates the store, so
         // no per-epoch P-sized clone is needed.
@@ -101,17 +118,34 @@ fn run_sampled<T: Trainer>(
             .store
             .get(tau)
             .expect("ring retains max_staleness+1 versions");
-        let device = &mut fleet[rng.index(fleet.len())];
+        let dev = &mut fleet[device];
         let (x_new, loss) = trainer.local_train(
             anchor,
             if use_prox { Some(anchor.as_slice()) } else { None },
-            device,
+            dev,
             &data.train,
             cfg.gamma,
             rho,
         )?;
-        core.offer(trainer, &x_new, tau, loss)?;
-        core.record_at(trainer, t_next as usize, t_next as f64)?;
+        match behavior.delivery(device, progress, &mut rng) {
+            // Lost in transit: the device trained, the server never hears.
+            Delivery::Drop => {}
+            Delivery::Deliver => {
+                core.offer(trainer, &x_new, tau, loss)?;
+            }
+            Delivery::Duplicate => {
+                core.offer(trainer, &x_new, tau, loss)?;
+                // The second copy arrives after the first was processed,
+                // so it is one version staler whenever the first applied.
+                core.offer(trainer, &x_new, tau, loss)?;
+            }
+        }
+        core.record_at(
+            trainer,
+            t_next as usize,
+            t_next as f64,
+            behavior.present_count(progress),
+        )?;
     }
     Ok(core.finish())
 }
@@ -126,7 +160,9 @@ struct Completion {
     loss: f32,
 }
 
-/// Discrete-event FedAsync: staleness emerges from task overlap.
+/// Discrete-event FedAsync: staleness emerges from task overlap.  The
+/// behavior gates device participation (churn), stretches task latencies
+/// (tiers/bursts), and decides update fate at delivery (faults).
 fn run_emergent<T: Trainer>(
     trainer: &T,
     cfg: &ExperimentConfig,
@@ -134,35 +170,55 @@ fn run_emergent<T: Trainer>(
     fleet: &mut [SimDevice],
     seed: u64,
     inflight: usize,
+    behavior: &dyn ClientBehavior,
 ) -> Result<MetricsLog, RuntimeError> {
     let inflight = inflight.max(1).min(fleet.len());
     let mut rng = Rng::seed_from(seed ^ 0xE4E6_0001);
-    let latency = LatencyModel::default();
     // Emergent tasks carry their own anchor; no history reads needed.
     let mut core =
         UpdaterCore::new(cfg, trainer.init_params(seed as usize)?, 1, &data.test, None);
+    let epochs = cfg.epochs;
+    let progress_of = |done: usize| (done as f64 / epochs as f64).min(1.0);
 
-    core.record_at(trainer, 0, 0.0)?;
+    core.record_at(trainer, 0, 0.0, behavior.present_count(0.0))?;
 
     let mut queue: EventQueue<Completion> = EventQueue::new();
     let mut busy = vec![false; fleet.len()];
 
     for _ in 0..inflight {
-        let _ = assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)?;
+        let _ = assign_task(
+            &mut queue,
+            fleet,
+            &mut busy,
+            &core,
+            &mut rng,
+            trainer,
+            cfg,
+            data,
+            behavior,
+            progress_of(0),
+        )?;
     }
 
     let mut epochs_done = 0usize;
-    while epochs_done < cfg.epochs {
+    while epochs_done < epochs {
+        let progress = progress_of(epochs_done);
         let Some(ev) = queue.pop() else {
             // All devices ineligible and nothing in flight: nudge time
-            // forward by retrying assignment after a beat.
-            let mut made_progress = false;
-            for _ in 0..fleet.len() {
-                if assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)? {
-                    made_progress = true;
-                    break;
-                }
-            }
+            // forward by retrying assignment after a beat.  (One attempt
+            // decides — assign_task scans the whole fleet itself.)
+            let made_progress = assign_task(
+                &mut queue,
+                fleet,
+                &mut busy,
+                &core,
+                &mut rng,
+                trainer,
+                cfg,
+                data,
+                behavior,
+                progress,
+            )?;
             if !made_progress {
                 // Force-advance past the availability gap.
                 queue.schedule_in(1.0, Completion {
@@ -177,25 +233,64 @@ fn run_emergent<T: Trainer>(
         let now = queue.now();
         if ev.payload.device == usize::MAX {
             // Wake-up tick: try to assign again.
-            let _ = assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)?;
+            let _ = assign_task(
+                &mut queue,
+                fleet,
+                &mut busy,
+                &core,
+                &mut rng,
+                trainer,
+                cfg,
+                data,
+                behavior,
+                progress,
+            )?;
             continue;
         }
         let Completion { device, tau, x_new, loss } = ev.payload;
         busy[device] = false;
-        let out = core.offer(trainer, &x_new, tau, loss)?;
-        epochs_done = core.store.current_version() as usize;
-        if out.applied {
-            core.record_at(trainer, epochs_done, now)?;
+        let copies = match behavior.delivery(device, progress, &mut rng) {
+            Delivery::Drop => 0,
+            Delivery::Deliver => 1,
+            Delivery::Duplicate => 2,
+        };
+        for _ in 0..copies {
+            let out = core.offer(trainer, &x_new, tau, loss)?;
+            epochs_done = core.store.current_version() as usize;
+            if out.applied {
+                core.record_at(
+                    trainer,
+                    epochs_done,
+                    now,
+                    behavior.present_count(progress_of(epochs_done)),
+                )?;
+            }
+            if epochs_done >= epochs {
+                // Target reached mid-delivery: skip the duplicate copy.
+                break;
+            }
         }
         // Keep the pipeline full.
-        let _ = assign_task(&mut queue, fleet, &mut busy, &core, &mut rng, trainer, cfg, data, &latency)?;
+        let _ = assign_task(
+            &mut queue,
+            fleet,
+            &mut busy,
+            &core,
+            &mut rng,
+            trainer,
+            cfg,
+            data,
+            behavior,
+            progress_of(epochs_done),
+        )?;
     }
     Ok(core.finish())
 }
 
 /// Emergent-mode scheduler step: trigger a task on a random idle,
-/// eligible device, randomizing check-in time to avoid congestion
-/// (paper §1).  Returns `Ok(false)` when no device is available.
+/// eligible, *present* device, randomizing check-in time to avoid
+/// congestion (paper §1).  Returns `Ok(false)` when no device is
+/// available.
 #[allow(clippy::too_many_arguments)]
 fn assign_task<T: Trainer>(
     queue: &mut EventQueue<Completion>,
@@ -206,11 +301,12 @@ fn assign_task<T: Trainer>(
     trainer: &T,
     cfg: &ExperimentConfig,
     data: &FederatedData,
-    latency: &LatencyModel,
+    behavior: &dyn ClientBehavior,
+    progress: f64,
 ) -> Result<bool, RuntimeError> {
     let now = queue.now();
     let idle: Vec<usize> = (0..fleet.len())
-        .filter(|&d| !busy[d] && fleet[d].is_eligible(now))
+        .filter(|&d| !busy[d] && behavior.is_present(d, progress) && fleet[d].is_eligible(now))
         .collect();
     if idle.is_empty() {
         return Ok(false);
@@ -220,12 +316,13 @@ fn assign_task<T: Trainer>(
     let tau = core.store.current_version();
     let anchor = core.store.current().clone();
     let (use_prox, rho) = prox_args(cfg);
-    // Downlink + compute + uplink, plus randomized check-in jitter.
+    // Downlink + compute (scenario-slowed) + uplink, plus randomized
+    // check-in jitter; link latencies come from the device's tier.
     let dev = &mut fleet[device];
     let delay = rng.uniform(0.0, 0.05)
-        + latency.sample(rng)
-        + dev.compute_time(trainer.local_iters(), 50)
-        + latency.sample(rng);
+        + behavior.link_latency(device, rng)
+        + dev.compute_time(trainer.local_iters(), 50) * behavior.slowdown(device, progress)
+        + behavior.link_latency(device, rng);
     let (x_new, loss) = trainer.local_train(
         &anchor,
         if use_prox { Some(anchor.as_slice()) } else { None },

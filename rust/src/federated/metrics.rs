@@ -5,6 +5,12 @@
 //! # communications at the server}.  [`MetricsRow`] carries all of them so
 //! one run feeds every figure; [`MetricsLog`] aggregates rows, averages
 //! across repeats, and writes CSV (plus a JSON provenance header file).
+//!
+//! The scenario layer adds two signals: a per-row effective-client count
+//! (`clients` column — how many devices the scenario's churn schedule has
+//! present) and a cumulative per-run staleness histogram
+//! ([`StalenessHist`], written as `<stem>.staleness.csv`), which is what
+//! the cross-mode conformance suite compares.
 
 use std::io::Write;
 use std::path::Path;
@@ -32,6 +38,9 @@ pub struct MetricsRow {
     pub alpha_eff: f64,
     /// Mean staleness since the previous row.
     pub staleness: f64,
+    /// Devices participating at this point of the run (scenario churn);
+    /// the full fleet when no scenario is active.
+    pub clients: usize,
 }
 
 /// A labelled series of metric rows (one run, or a mean over repeats).
@@ -42,14 +51,21 @@ pub struct MetricsLog {
     pub rows: Vec<MetricsRow>,
     /// Run provenance (config JSON), attached to file output.
     pub provenance: Option<Json>,
+    /// Cumulative staleness distribution over every offered update.
+    pub staleness_hist: StalenessHist,
 }
 
 pub const CSV_HEADER: &str =
-    "epoch,gradients,comms,sim_time,train_loss,test_loss,test_acc,alpha_eff,staleness";
+    "epoch,gradients,comms,sim_time,train_loss,test_loss,test_acc,alpha_eff,staleness,clients";
 
 impl MetricsLog {
     pub fn new(label: impl Into<String>) -> Self {
-        MetricsLog { label: label.into(), rows: Vec::new(), provenance: None }
+        MetricsLog {
+            label: label.into(),
+            rows: Vec::new(),
+            provenance: None,
+            staleness_hist: StalenessHist::default(),
+        }
     }
 
     pub fn push(&mut self, row: MetricsRow) {
@@ -96,10 +112,16 @@ impl MetricsLog {
                     test_acc: get(|r| r.test_acc),
                     alpha_eff: get(|r| r.alpha_eff),
                     staleness: get(|r| r.staleness),
+                    clients: (runs.iter().map(|r| r.rows[i].clients).sum::<usize>() as f64 / n)
+                        .round() as usize,
                 }
             })
             .collect();
-        MetricsLog { label, rows, provenance: runs[0].provenance.clone() }
+        let mut staleness_hist = StalenessHist::default();
+        for r in runs {
+            staleness_hist.merge(&r.staleness_hist);
+        }
+        MetricsLog { label, rows, provenance: runs[0].provenance.clone(), staleness_hist }
     }
 
     pub fn to_csv(&self) -> String {
@@ -107,7 +129,7 @@ impl MetricsLog {
         out.push('\n');
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{:.4},{:.6},{:.6},{:.6},{:.5},{:.3}\n",
+                "{},{},{},{:.4},{:.6},{:.6},{:.6},{:.5},{:.3},{}\n",
                 r.epoch,
                 r.gradients,
                 r.comms,
@@ -116,7 +138,8 @@ impl MetricsLog {
                 r.test_loss,
                 r.test_acc,
                 r.alpha_eff,
-                r.staleness
+                r.staleness,
+                r.clients
             ));
         }
         out
@@ -131,6 +154,12 @@ impl MetricsLog {
             std::fs::write(
                 dir.join(format!("{stem}.meta.json")),
                 p.to_string_pretty(),
+            )?;
+        }
+        if !self.staleness_hist.is_empty() {
+            std::fs::write(
+                dir.join(format!("{stem}.staleness.csv")),
+                self.staleness_hist.to_csv(),
             )?;
         }
         Ok(())
@@ -149,7 +178,7 @@ impl MetricsLog {
                 continue;
             }
             let f: Vec<&str> = line.split(',').collect();
-            if f.len() != 9 {
+            if f.len() != 10 {
                 return Err(format!("line {}: {} fields", i + 2, f.len()));
             }
             let p = |s: &str| s.parse::<f64>().map_err(|e| format!("line {}: {e}", i + 2));
@@ -163,9 +192,99 @@ impl MetricsLog {
                 test_acc: p(f[6])?,
                 alpha_eff: p(f[7])?,
                 staleness: p(f[8])?,
+                clients: p(f[9])? as usize,
             });
         }
-        Ok(MetricsLog { label: label.to_string(), rows, provenance: None })
+        Ok(MetricsLog {
+            label: label.to_string(),
+            rows,
+            provenance: None,
+            staleness_hist: StalenessHist::default(),
+        })
+    }
+}
+
+/// Staleness values at or above this land in one overflow bucket.
+pub const STALENESS_OVERFLOW: u64 = 64;
+
+/// Cumulative histogram of update staleness over a run.
+///
+/// One bucket per integer staleness in `[0, STALENESS_OVERFLOW]` (the last
+/// bucket clips the tail).  This is the per-scenario signal the cross-mode
+/// conformance suite compares: two execution modes running the same
+/// scenario must produce overlapping staleness supports.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StalenessHist {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl StalenessHist {
+    pub fn record(&mut self, staleness: u64) {
+        let b = staleness.min(STALENESS_OVERFLOW) as usize;
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn count(&self, staleness: u64) -> u64 {
+        self.counts
+            .get(staleness.min(STALENESS_OVERFLOW) as usize)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Staleness values with non-zero mass, ascending.
+    pub fn support(&self) -> Vec<u64> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(s, _)| s as u64)
+            .collect()
+    }
+
+    /// Mean staleness over everything recorded (overflow clipped).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| s as f64 * c as f64)
+            .sum();
+        sum / self.total as f64
+    }
+
+    pub fn merge(&mut self, other: &StalenessHist) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (dst, &src) in self.counts.iter_mut().zip(&other.counts) {
+            *dst += src;
+        }
+        self.total += other.total;
+    }
+
+    /// Two-column CSV (`staleness,count`), one row per bucket.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("staleness,count\n");
+        for (s, &c) in self.counts.iter().enumerate() {
+            out.push_str(&format!("{s},{c}\n"));
+        }
+        out
     }
 }
 
@@ -174,6 +293,8 @@ impl MetricsLog {
 pub struct RunningCounters {
     pub gradients: u64,
     pub comms: u64,
+    /// Cumulative staleness distribution (never reset by `snapshot`).
+    pub hist: StalenessHist,
     /// Sum/count of α_t since last snapshot.
     alpha_sum: f64,
     alpha_n: u64,
@@ -185,6 +306,7 @@ pub struct RunningCounters {
 
 impl RunningCounters {
     pub fn record_update(&mut self, alpha_eff: f64, staleness: u64, train_loss: f64) {
+        self.hist.record(staleness);
         self.alpha_sum += alpha_eff;
         self.alpha_n += 1;
         self.stale_sum += staleness as f64;
@@ -225,6 +347,7 @@ mod tests {
             test_acc: acc,
             alpha_eff: 0.5,
             staleness: 2.0,
+            clients: 10,
         }
     }
 
@@ -265,6 +388,65 @@ mod tests {
     }
 
     #[test]
+    fn staleness_hist_records_and_merges() {
+        let mut a = StalenessHist::default();
+        for s in [1, 1, 2, 4, STALENESS_OVERFLOW + 100] {
+            a.record(s);
+        }
+        assert_eq!(a.total(), 5);
+        assert_eq!(a.count(1), 2);
+        assert_eq!(a.count(STALENESS_OVERFLOW), 1, "tail clips into overflow");
+        assert_eq!(a.support(), vec![1, 2, 4, STALENESS_OVERFLOW]);
+        let mut b = StalenessHist::default();
+        b.record(2);
+        b.record(3);
+        a.merge(&b);
+        assert_eq!(a.total(), 7);
+        assert_eq!(a.count(2), 2);
+        assert_eq!(a.count(3), 1);
+        // CSV shape: header + one line per bucket.
+        let csv = a.to_csv();
+        assert!(csv.starts_with("staleness,count\n"));
+        assert_eq!(csv.lines().count(), 1 + STALENESS_OVERFLOW as usize + 1);
+    }
+
+    #[test]
+    fn hist_mean_and_empty() {
+        let mut h = StalenessHist::default();
+        assert!(h.is_empty());
+        assert_eq!(h.mean(), 0.0);
+        h.record(2);
+        h.record(4);
+        assert!((h.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_feed_the_cumulative_hist() {
+        let mut c = RunningCounters::default();
+        c.record_update(0.5, 2, 1.0);
+        c.record_update(0.25, 4, 2.0);
+        let _ = c.snapshot();
+        c.record_update(0.5, 2, 1.0);
+        // The hist survives snapshots (cumulative), unlike the window.
+        assert_eq!(c.hist.total(), 3);
+        assert_eq!(c.hist.count(2), 2);
+    }
+
+    #[test]
+    fn mean_of_merges_staleness_hists() {
+        let mut a = MetricsLog::new("r0");
+        let mut b = MetricsLog::new("r1");
+        a.push(row(0, 0.2));
+        b.push(row(0, 0.4));
+        a.staleness_hist.record(1);
+        b.staleness_hist.record(3);
+        let m = MetricsLog::mean_of("mean", &[a, b]);
+        assert_eq!(m.staleness_hist.total(), 2);
+        assert_eq!(m.staleness_hist.support(), vec![1, 3]);
+        assert_eq!(m.rows[0].clients, 10);
+    }
+
+    #[test]
     fn counters_window_semantics() {
         let mut c = RunningCounters::default();
         c.record_update(0.5, 2, 1.0);
@@ -287,9 +469,11 @@ mod tests {
         let mut log = MetricsLog::new("x");
         log.push(row(0, 0.1));
         log.provenance = Some(Json::parse(r#"{"algo":"fedasync"}"#).unwrap());
+        log.staleness_hist.record(2);
         log.write_csv(&dir, "series").unwrap();
         assert!(dir.join("series.csv").exists());
         assert!(dir.join("series.meta.json").exists());
+        assert!(dir.join("series.staleness.csv").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -46,11 +46,15 @@ impl<T: PartialEq> Eq for Event<T> {}
 
 impl<T: PartialEq> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap by (time, seq) via reversed comparison.
+        // Min-heap by (time, seq) via reversed comparison.  `total_cmp`
+        // (IEEE totalOrder) instead of `partial_cmp(..).unwrap_or(Equal)`:
+        // the latter silently treated NaN as equal to everything, which
+        // breaks the heap invariant transitively and can reorder or bury
+        // events.  Non-finite timestamps are additionally rejected at
+        // scheduling time, so NaN can never enter the queue.
         other
             .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.at)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -85,15 +89,20 @@ impl<T: PartialEq> EventQueue<T> {
     }
 
     /// Schedule `payload` at absolute virtual time `at` (clamped to now).
+    ///
+    /// Panics on non-finite `at`: a NaN or infinite timestamp would poison
+    /// the heap order, so it is a caller bug, not a schedulable event.
     pub fn schedule_at(&mut self, at: f64, payload: T) {
+        assert!(at.is_finite(), "non-finite event time {at}");
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Event { at, seq, payload });
     }
 
-    /// Schedule after a relative delay.
+    /// Schedule after a relative delay.  Panics on non-finite delay.
     pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        assert!(delay.is_finite(), "non-finite event delay {delay}");
         debug_assert!(delay >= 0.0, "negative delay {delay}");
         self.schedule_at(self.now + delay.max(0.0), payload);
     }
@@ -156,6 +165,27 @@ mod tests {
         q.pop();
         q.schedule_in(0.5, "second");
         assert_eq!(q.pop().unwrap().at, 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_timestamp_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, "poison");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_timestamp_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::INFINITY, "poison");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event delay")]
+    fn nan_delay_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::NAN, "poison");
     }
 
     #[test]

@@ -14,4 +14,5 @@ pub mod coordinator;
 pub mod experiment;
 pub mod federated;
 pub mod runtime;
+pub mod scenario;
 pub mod util;

@@ -95,8 +95,14 @@ fn train_spec() -> CommandSpec {
         .opt("local-update", None, "sgd (option I) | prox (option II)")
         .opt("mode", None, "virtual | threads")
         .opt("seed", None, "root RNG seed")
+        .opt(
+            "scenario",
+            None,
+            "client population: preset name or TOML file with [scenario] keys",
+        )
         .opt("out", Some("results/train"), "output directory")
         .flag("list-presets", "print preset names and exit")
+        .flag("list-scenarios", "print scenario preset names and exit")
         .flag("quiet", "suppress progress logs")
 }
 
@@ -170,14 +176,60 @@ fn build_config(a: &Args) -> Result<ExperimentConfig, String> {
     if a.supplied("seed") {
         cfg.seed = a.u64("seed").map_err(cli_err)?;
     }
+    if let Some(spec) = a.get("scenario") {
+        cfg.scenario = Some(resolve_scenario(&spec)?);
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
+}
+
+/// `--scenario` accepts a preset name or a TOML file carrying a
+/// `[scenario]` table, a `scenario = "<preset>"` string, or bare scenario
+/// keys at top level.  A file with *no* scenario content is an error, not
+/// a silent no-op population.
+fn resolve_scenario(spec: &str) -> Result<fedasync::scenario::ScenarioConfig, String> {
+    use fedasync::scenario::{presets, ScenarioConfig};
+    let by_name = |name: &str| {
+        presets::named(name).ok_or_else(|| {
+            format!(
+                "unknown scenario {name:?}; presets: {}",
+                presets::preset_names().join(", ")
+            )
+        })
+    };
+    if !spec.ends_with(".toml") {
+        return by_name(spec);
+    }
+    let text = std::fs::read_to_string(spec).map_err(|e| format!("read {spec:?}: {e}"))?;
+    let doc = fedasync::util::toml::parse(&text).map_err(|e| e.to_string())?;
+    let node = doc.get("scenario");
+    if let Some(name) = node.as_str() {
+        return by_name(name);
+    }
+    let node = if node.as_obj().is_some() { node } else { &doc };
+    let sc = ScenarioConfig::from_json(node).map_err(|e| e.to_string())?;
+    if sc.tiers.is_empty()
+        && sc.churn.is_empty()
+        && sc.bursts.is_empty()
+        && sc.faults.drop_prob <= 0.0
+        && sc.faults.duplicate_prob <= 0.0
+    {
+        return Err(format!(
+            "{spec:?} contains no scenario keys (tier_*/churn_*/straggler_*/drop_prob/\
+             duplicate_prob) — refusing to run a silent no-op scenario"
+        ));
+    }
+    Ok(sc)
 }
 
 fn cmd_train(argv: &[String]) -> Result<(), String> {
     let a = Args::parse(train_spec(), argv).map_err(cli_err)?;
     if a.flag("list-presets") {
         println!("{}", preset_names().join("\n"));
+        return Ok(());
+    }
+    if a.flag("list-scenarios") {
+        println!("{}", fedasync::scenario::presets::preset_names().join("\n"));
         return Ok(());
     }
     if a.flag("quiet") {
@@ -200,6 +252,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         cfg.staleness.max,
         cfg.staleness.func.label()
     );
+    if let Some(sc) = &cfg.scenario {
+        log_info!("train", "scenario: {}", sc.name);
+    }
     let log = runner::run(&rt, &cfg).map_err(|e| e.to_string())?;
     let stem = format!("{}_{}", cfg.name, cfg.model);
     log.write_csv(&out, &stem).map_err(|e| e.to_string())?;

@@ -1,0 +1,434 @@
+//! [`ClientBehavior`]: the one trait every execution mode consults.
+//!
+//! The three coordinators advance time in incompatible units (sampled
+//! epochs, emergent virtual seconds, threaded wallclock), so behavior is
+//! queried on **run progress** `p ∈ [0, 1]` and answers four questions:
+//!
+//! * *who is here* — [`ClientBehavior::is_present`] /
+//!   [`ClientBehavior::present_count`] (churn schedules),
+//! * *how slow are they* — [`ClientBehavior::slowdown`] (speed tier ×
+//!   straggler burst) and [`ClientBehavior::link_latency`] (per-tier
+//!   log-normal links),
+//! * *how stale do they read* — [`ClientBehavior::sample_staleness`]
+//!   (the paper's uniform draw, biased high for slow devices),
+//! * *does the update arrive* — [`ClientBehavior::delivery`]
+//!   (drop / duplicate faults).
+//!
+//! [`UniformBehavior`] reproduces the pre-scenario semantics exactly
+//! (uniform staleness, default latency model, everyone present, no
+//! faults); [`ScenarioBehavior`] compiles a [`ScenarioConfig`] into
+//! deterministic per-device assignments from a seed.
+
+use std::sync::Arc;
+
+use super::{ScenarioConfig, SpeedTier};
+use crate::config::ExperimentConfig;
+use crate::util::rng::Rng;
+
+/// Fate of a completed update at the moment it reaches the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// Normal case: offered to the updater once.
+    Deliver,
+    /// Lost in transit: the device trained, the server never hears.
+    Drop,
+    /// At-least-once transport: offered twice (second copy one version
+    /// staler whenever the first applied).
+    Duplicate,
+}
+
+/// How a client population behaves over one run.
+///
+/// All methods take `&self` plus the caller's `Rng`, so one behavior
+/// object is shared across the threaded server's scheduler, workers, and
+/// updater without locks.
+pub trait ClientBehavior: Send + Sync {
+    /// Short label for logs.
+    fn label(&self) -> String;
+
+    /// Is `device` part of the federation at run progress `p`?
+    fn is_present(&self, device: usize, progress: f64) -> bool;
+
+    /// Number of participating devices at progress `p` (the metric rows'
+    /// `clients` column). Always in `[1, n]`.
+    fn present_count(&self, progress: f64) -> usize;
+
+    /// Multiplicative compute slowdown for `device` at progress `p`
+    /// (speed tier × any active straggler burst; 1.0 = nominal).
+    fn slowdown(&self, device: usize, progress: f64) -> f64;
+
+    /// One network-hop latency draw for `device`, in virtual seconds.
+    fn link_latency(&self, device: usize, rng: &mut Rng) -> f64;
+
+    /// Staleness draw for the paper's sampled protocol, in `[1, max]`.
+    fn sample_staleness(&self, device: usize, progress: f64, max: u64, rng: &mut Rng) -> u64;
+
+    /// What happens to a completed update from `device` at delivery time.
+    fn delivery(&self, device: usize, progress: f64, rng: &mut Rng) -> Delivery;
+}
+
+/// Build the behavior an experiment config asks for: a compiled
+/// [`ScenarioBehavior`] when `cfg.scenario` is set, else the baseline
+/// [`UniformBehavior`].
+pub fn behavior_for(cfg: &ExperimentConfig, devices: usize, seed: u64) -> Arc<dyn ClientBehavior> {
+    match &cfg.scenario {
+        Some(sc) => Arc::new(ScenarioBehavior::new(sc, devices, seed)),
+        None => Arc::new(UniformBehavior::new(devices)),
+    }
+}
+
+/// Pick a device that is present at progress `p`: rejection-sample a few
+/// uniform draws (cheap, unbiased when most of the fleet is present), then
+/// fall back to a uniform pick over the present set.
+pub fn pick_present(
+    n: usize,
+    behavior: &dyn ClientBehavior,
+    progress: f64,
+    rng: &mut Rng,
+) -> usize {
+    for _ in 0..8 {
+        let d = rng.index(n);
+        if behavior.is_present(d, progress) {
+            return d;
+        }
+    }
+    let present: Vec<usize> = (0..n).filter(|&d| behavior.is_present(d, progress)).collect();
+    if present.is_empty() {
+        // Unreachable for validated configs (present fraction > 0), but
+        // never wedge a simulation over it.
+        return rng.index(n);
+    }
+    present[rng.index(present.len())]
+}
+
+/// The pre-scenario population: homogeneous, always present, faithful
+/// links, uniform staleness.
+#[derive(Debug, Clone)]
+pub struct UniformBehavior {
+    n: usize,
+    tier: SpeedTier,
+}
+
+impl UniformBehavior {
+    pub fn new(devices: usize) -> UniformBehavior {
+        UniformBehavior { n: devices.max(1), tier: SpeedTier::nominal() }
+    }
+}
+
+impl ClientBehavior for UniformBehavior {
+    fn label(&self) -> String {
+        "uniform".into()
+    }
+
+    fn is_present(&self, _device: usize, _progress: f64) -> bool {
+        true
+    }
+
+    fn present_count(&self, _progress: f64) -> usize {
+        self.n
+    }
+
+    fn slowdown(&self, _device: usize, _progress: f64) -> f64 {
+        1.0
+    }
+
+    fn link_latency(&self, _device: usize, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.tier.latency_mu, self.tier.latency_sigma)
+    }
+
+    fn sample_staleness(&self, _device: usize, _progress: f64, max: u64, rng: &mut Rng) -> u64 {
+        rng.range_inclusive(1, max.max(1))
+    }
+
+    fn delivery(&self, _device: usize, _progress: f64, _rng: &mut Rng) -> Delivery {
+        Delivery::Deliver
+    }
+}
+
+/// A [`ScenarioConfig`] compiled for a concrete fleet: per-device tier
+/// assignment, churn ranks, and burst membership are all drawn once from
+/// the seed, so every mode sees the identical population.
+pub struct ScenarioBehavior {
+    name: String,
+    n: usize,
+    tiers: Vec<SpeedTier>,
+    /// Tier index per device.
+    tier_of: Vec<usize>,
+    /// Devices with `churn_rank < present_count(p)` are present at `p`.
+    churn_rank: Vec<usize>,
+    churn: Vec<super::ChurnPhase>,
+    /// `(burst, member?)` per configured burst.
+    bursts: Vec<(super::StragglerBurst, Vec<bool>)>,
+    faults: super::FaultModel,
+}
+
+impl ScenarioBehavior {
+    pub fn new(sc: &ScenarioConfig, devices: usize, seed: u64) -> ScenarioBehavior {
+        assert!(devices > 0, "scenario behavior needs a non-empty fleet");
+        let n = devices;
+        let mut rng = Rng::seed_from(seed ^ 0x5CE4_4210);
+
+        // Normalize tiers (empty = single nominal tier) and deal devices
+        // into them in a seeded random order.
+        let tiers: Vec<SpeedTier> = if sc.tiers.is_empty() {
+            vec![SpeedTier::nominal()]
+        } else {
+            let total: f64 = sc.tiers.iter().map(|t| t.fraction).sum();
+            sc.tiers
+                .iter()
+                .map(|t| SpeedTier { fraction: t.fraction / total, ..t.clone() })
+                .collect()
+        };
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut tier_of = vec![0usize; n];
+        let mut acc = 0.0f64;
+        let mut start = 0usize;
+        for (ti, t) in tiers.iter().enumerate() {
+            acc += t.fraction;
+            let end = if ti + 1 == tiers.len() {
+                n
+            } else {
+                ((acc * n as f64).round() as usize).min(n)
+            };
+            for &d in &order[start..end.max(start)] {
+                tier_of[d] = ti;
+            }
+            start = end.max(start);
+        }
+
+        // Churn ranks: an independent shuffle decides who leaves first.
+        let mut churn_order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut churn_order);
+        let mut churn_rank = vec![0usize; n];
+        for (rank, &d) in churn_order.iter().enumerate() {
+            churn_rank[d] = rank;
+        }
+
+        // Burst membership: an independent draw per burst.
+        let bursts = sc
+            .bursts
+            .iter()
+            .map(|b| {
+                let k = ((b.fraction * n as f64).ceil() as usize).clamp(1, n);
+                let mut member = vec![false; n];
+                for d in rng.choose_k(n, k) {
+                    member[d] = true;
+                }
+                (*b, member)
+            })
+            .collect();
+
+        ScenarioBehavior {
+            name: sc.name.clone(),
+            n,
+            tiers,
+            tier_of,
+            churn_rank,
+            churn: sc.churn.clone(),
+            bursts,
+            faults: sc.faults,
+        }
+    }
+
+    /// Present fraction of the fleet at progress `p` (last phase at or
+    /// before `p` wins; 1.0 before the first phase).
+    fn present_level(&self, progress: f64) -> f64 {
+        let mut level = 1.0;
+        for c in &self.churn {
+            if c.at <= progress {
+                level = c.present;
+            } else {
+                break;
+            }
+        }
+        level
+    }
+
+    fn tier(&self, device: usize) -> &SpeedTier {
+        &self.tiers[self.tier_of[device.min(self.n - 1)]]
+    }
+}
+
+impl ClientBehavior for ScenarioBehavior {
+    fn label(&self) -> String {
+        self.name.clone()
+    }
+
+    fn is_present(&self, device: usize, progress: f64) -> bool {
+        self.churn_rank[device.min(self.n - 1)] < self.present_count(progress)
+    }
+
+    fn present_count(&self, progress: f64) -> usize {
+        ((self.present_level(progress) * self.n as f64).ceil() as usize).clamp(1, self.n)
+    }
+
+    fn slowdown(&self, device: usize, progress: f64) -> f64 {
+        let mut s = 1.0 / self.tier(device).speed;
+        for (b, member) in &self.bursts {
+            if member[device.min(self.n - 1)] && progress >= b.from && progress < b.until {
+                s *= b.slowdown;
+            }
+        }
+        s
+    }
+
+    fn link_latency(&self, device: usize, rng: &mut Rng) -> f64 {
+        let t = self.tier(device);
+        rng.lognormal(t.latency_mu, t.latency_sigma)
+    }
+
+    fn sample_staleness(&self, device: usize, progress: f64, max: u64, rng: &mut Rng) -> u64 {
+        // Uniform draw reshaped by the device's slowdown: for a nominal
+        // device (slowdown 1) `1 + floor(u·max)` is exactly the paper's
+        // uniform [1, max]; slower devices bias u^(1/slowdown) toward 1,
+        // i.e. toward reading older models — the sampled-protocol
+        // counterpart of their longer in-flight windows.
+        let max = max.max(1);
+        let sl = self.slowdown(device, progress).max(1e-6);
+        let u = rng.f64().powf(1.0 / sl);
+        (1 + (u * max as f64).floor() as u64).min(max)
+    }
+
+    fn delivery(&self, _device: usize, _progress: f64, rng: &mut Rng) -> Delivery {
+        let f = &self.faults;
+        if f.drop_prob <= 0.0 && f.duplicate_prob <= 0.0 {
+            return Delivery::Deliver;
+        }
+        let u = rng.f64();
+        if u < f.drop_prob {
+            Delivery::Drop
+        } else if u < f.drop_prob + f.duplicate_prob {
+            Delivery::Duplicate
+        } else {
+            Delivery::Deliver
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ChurnPhase, FaultModel, StragglerBurst};
+    use super::*;
+
+    fn scenario() -> ScenarioConfig {
+        ScenarioConfig {
+            name: "test".into(),
+            tiers: vec![
+                SpeedTier { fraction: 0.5, speed: 1.0, latency_mu: -3.0, latency_sigma: 0.8 },
+                SpeedTier { fraction: 0.5, speed: 0.25, latency_mu: -1.5, latency_sigma: 0.8 },
+            ],
+            churn: vec![
+                ChurnPhase { at: 0.25, present: 0.5 },
+                ChurnPhase { at: 0.75, present: 0.9 },
+            ],
+            bursts: vec![StragglerBurst { from: 0.4, until: 0.6, fraction: 0.25, slowdown: 8.0 }],
+            faults: FaultModel { drop_prob: 0.2, duplicate_prob: 0.1 },
+        }
+    }
+
+    #[test]
+    fn uniform_matches_paper_protocol() {
+        let b = UniformBehavior::new(10);
+        let mut rng = Rng::seed_from(1);
+        assert_eq!(b.present_count(0.5), 10);
+        assert!(b.is_present(3, 0.9));
+        assert_eq!(b.slowdown(0, 0.5), 1.0);
+        let mut seen = [false; 17];
+        for _ in 0..2000 {
+            let s = b.sample_staleness(0, 0.5, 16, &mut rng);
+            assert!((1..=16).contains(&s));
+            seen[s as usize] = true;
+        }
+        assert!(seen[1..=16].iter().all(|&x| x), "uniform draw misses values");
+        assert_eq!(b.delivery(0, 0.5, &mut rng), Delivery::Deliver);
+    }
+
+    #[test]
+    fn tier_assignment_covers_fleet_and_is_deterministic() {
+        let sc = scenario();
+        let a = ScenarioBehavior::new(&sc, 40, 7);
+        let b = ScenarioBehavior::new(&sc, 40, 7);
+        assert_eq!(a.tier_of, b.tier_of);
+        let slow = a.tier_of.iter().filter(|&&t| t == 1).count();
+        assert!((15..=25).contains(&slow), "slow tier size {slow}");
+        // Slow tier really is slower and has worse links (in expectation).
+        let fast_d = a.tier_of.iter().position(|&t| t == 0).unwrap();
+        let slow_d = a.tier_of.iter().position(|&t| t == 1).unwrap();
+        assert!(a.slowdown(slow_d, 0.0) > a.slowdown(fast_d, 0.0));
+    }
+
+    #[test]
+    fn churn_schedule_shrinks_and_recovers() {
+        let b = ScenarioBehavior::new(&scenario(), 40, 3);
+        assert_eq!(b.present_count(0.0), 40);
+        assert_eq!(b.present_count(0.3), 20);
+        assert_eq!(b.present_count(0.8), 36);
+        for p in [0.0, 0.3, 0.8] {
+            let present = (0..40).filter(|&d| b.is_present(d, p)).count();
+            assert_eq!(present, b.present_count(p), "p={p}");
+        }
+        // The present set is nested: whoever survives the deep cut is
+        // present at every higher level.
+        for d in 0..40 {
+            if b.is_present(d, 0.3) {
+                assert!(b.is_present(d, 0.8) && b.is_present(d, 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_burst_is_windowed() {
+        let b = ScenarioBehavior::new(&scenario(), 40, 3);
+        let member = (0..40)
+            .find(|&d| b.slowdown(d, 0.5) > b.slowdown(d, 0.1) * 4.0)
+            .expect("some burst member");
+        assert_eq!(b.slowdown(member, 0.1), b.slowdown(member, 0.7));
+        assert!((b.slowdown(member, 0.5) / b.slowdown(member, 0.1) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_devices_draw_staler_models() {
+        let b = ScenarioBehavior::new(&scenario(), 40, 3);
+        let fast_d = b.tier_of.iter().position(|&t| t == 0).unwrap();
+        let slow_d = b.tier_of.iter().position(|&t| t == 1).unwrap();
+        let mut rng = Rng::seed_from(11);
+        let mean = |d: usize, rng: &mut Rng| {
+            (0..4000).map(|_| b.sample_staleness(d, 0.1, 16, rng)).sum::<u64>() as f64 / 4000.0
+        };
+        let m_fast = mean(fast_d, &mut rng);
+        let m_slow = mean(slow_d, &mut rng);
+        assert!(
+            m_slow > m_fast + 2.0,
+            "slow mean {m_slow} should exceed fast mean {m_fast}"
+        );
+    }
+
+    #[test]
+    fn delivery_fault_rates_are_roughly_configured() {
+        let b = ScenarioBehavior::new(&scenario(), 40, 3);
+        let mut rng = Rng::seed_from(5);
+        let (mut drops, mut dups) = (0, 0);
+        let n = 10_000;
+        for _ in 0..n {
+            match b.delivery(0, 0.5, &mut rng) {
+                Delivery::Drop => drops += 1,
+                Delivery::Duplicate => dups += 1,
+                Delivery::Deliver => {}
+            }
+        }
+        let (dr, du) = (drops as f64 / n as f64, dups as f64 / n as f64);
+        assert!((dr - 0.2).abs() < 0.02, "drop rate {dr}");
+        assert!((du - 0.1).abs() < 0.02, "dup rate {du}");
+    }
+
+    #[test]
+    fn pick_present_respects_churn() {
+        let b = ScenarioBehavior::new(&scenario(), 40, 3);
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..200 {
+            let d = pick_present(40, &b, 0.3, &mut rng);
+            assert!(b.is_present(d, 0.3), "picked absent device {d}");
+        }
+    }
+}

@@ -1,0 +1,520 @@
+//! Scenario layer: heterogeneous client populations as declarative config.
+//!
+//! The paper evaluates one implicit population — every device shares one
+//! latency model.  Real federations are messier (Fraboni et al. 2022;
+//! Chen et al. 2019): device *speed tiers*, clients *churning* in and out,
+//! *straggler bursts* (a slice of the fleet suddenly k× slower), and
+//! *update faults* (deliveries lost or duplicated).  A [`ScenarioConfig`]
+//! composes those four axes declaratively; [`behavior::ScenarioBehavior`]
+//! compiles it into one [`ClientBehavior`] object that **all three
+//! execution modes** consume — the sampled-staleness protocol (shapes the
+//! staleness draw), the emergent discrete-event simulator (shapes event
+//! latencies), and the threaded server (shapes per-task sleeps) — so a
+//! scenario means the same thing everywhere by construction, mirroring how
+//! the shared `UpdaterCore` unified the update path.
+//!
+//! Scenario time is **run progress** `p ∈ [0, 1]` (fraction of the epoch
+//! budget completed), not virtual seconds: the three modes advance time in
+//! incompatible units, but all of them know how far through the run they
+//! are, so schedules keyed on progress stay mode-independent.
+//!
+//! ## TOML keys (`[scenario]` table of an experiment config)
+//!
+//! ```toml
+//! [scenario]
+//! name = "tiered"             # label for logs/provenance
+//! # Speed tiers: parallel arrays, one entry per tier.
+//! tier_fraction = [0.6, 0.3, 0.1]   # share of the fleet per tier
+//! tier_speed = [1.0, 0.4, 0.15]     # relative compute speed (1 = nominal)
+//! tier_latency_mu = [-3.0, -2.1, -1.1]   # optional log-normal link params;
+//! tier_latency_sigma = [0.8, 0.8, 1.0]   # default mu = -3 - ln(speed), sigma 0.8
+//! # Churn schedule: at progress `churn_at[i]` the present fraction of the
+//! # fleet becomes `churn_present[i]` (initially 1.0).
+//! churn_at = [0.25, 0.6]
+//! churn_present = [0.5, 0.9]
+//! # Straggler bursts: within [from, until) progress, `fraction` of devices
+//! # run `slowdown`× slower.
+//! straggler_from = [0.4]
+//! straggler_until = [0.7]
+//! straggler_fraction = [0.25]
+//! straggler_slowdown = [8.0]
+//! # Update faults at delivery time.
+//! drop_prob = 0.05
+//! duplicate_prob = 0.02
+//! ```
+//!
+//! A scenario can also be selected by preset name: `scenario = "tiered_fleet"`
+//! in TOML, or `--scenario tiered_fleet` on the CLI (see [`presets`]).
+//!
+//! Metric output grows two scenario-facing signals: a cumulative staleness
+//! histogram per run (`federated::metrics::StalenessHist`, written as
+//! `<stem>.staleness.csv`) and a per-row effective-client-count column
+//! (`clients` in the metrics CSV).
+
+pub mod behavior;
+pub mod presets;
+
+pub use behavior::{
+    behavior_for, pick_present, ClientBehavior, Delivery, ScenarioBehavior, UniformBehavior,
+};
+
+use crate::config::ConfigError;
+use crate::util::json::{Json, JsonObj};
+
+/// Default log-normal link-latency parameters (match
+/// `federated::network::LatencyModel::default`).
+pub const DEFAULT_LATENCY_MU: f64 = -3.0;
+pub const DEFAULT_LATENCY_SIGMA: f64 = 0.8;
+
+/// One device speed tier: a share of the fleet with its own compute speed
+/// and link-latency distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedTier {
+    /// Share of the fleet in this tier (normalized across tiers).
+    pub fraction: f64,
+    /// Relative compute speed (1.0 = nominal, < 1 = slower).
+    pub speed: f64,
+    /// Log-normal link latency `exp(N(mu, sigma))` for this tier.
+    pub latency_mu: f64,
+    pub latency_sigma: f64,
+}
+
+impl SpeedTier {
+    /// Nominal tier: speed 1, default latency model.
+    pub fn nominal() -> SpeedTier {
+        SpeedTier {
+            fraction: 1.0,
+            speed: 1.0,
+            latency_mu: DEFAULT_LATENCY_MU,
+            latency_sigma: DEFAULT_LATENCY_SIGMA,
+        }
+    }
+}
+
+/// One step of the churn schedule: from progress `at` onward, `present`
+/// fraction of the fleet participates (until the next phase).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnPhase {
+    pub at: f64,
+    pub present: f64,
+}
+
+/// A straggler burst: in `[from, until)` progress, `fraction` of the fleet
+/// runs `slowdown`× slower.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerBurst {
+    pub from: f64,
+    pub until: f64,
+    pub fraction: f64,
+    pub slowdown: f64,
+}
+
+/// Delivery-fault probabilities, applied when an update reaches the server.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultModel {
+    /// Update lost in transit (trained, never delivered).
+    pub drop_prob: f64,
+    /// Update delivered twice (retry storm / at-least-once transport).
+    pub duplicate_prob: f64,
+}
+
+/// Declarative description of a heterogeneous client population.
+///
+/// The default scenario is trivial: one nominal tier, no churn, no bursts,
+/// no faults — byte-for-byte the behavior the repo had before the scenario
+/// layer existed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    pub name: String,
+    /// Empty = single nominal tier.
+    pub tiers: Vec<SpeedTier>,
+    /// Empty = the whole fleet is always present.
+    pub churn: Vec<ChurnPhase>,
+    pub bursts: Vec<StragglerBurst>,
+    pub faults: FaultModel,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            name: "custom".into(),
+            tiers: Vec::new(),
+            churn: Vec::new(),
+            bursts: Vec::new(),
+            faults: FaultModel::default(),
+        }
+    }
+}
+
+/// Every key a `[scenario]` table may carry; anything else is a typo and
+/// is rejected rather than silently ignored.
+const SCENARIO_KEYS: &[&str] = &[
+    "name",
+    "tier_fraction",
+    "tier_speed",
+    "tier_latency_mu",
+    "tier_latency_sigma",
+    "churn_at",
+    "churn_present",
+    "straggler_from",
+    "straggler_until",
+    "straggler_fraction",
+    "straggler_slowdown",
+    "drop_prob",
+    "duplicate_prob",
+];
+
+impl ScenarioConfig {
+    /// Parse from a `[scenario]` JSON/TOML object tree.
+    ///
+    /// Strict by design: unknown keys and wrong-typed values are errors —
+    /// a typo'd scenario must never silently degrade to the uniform
+    /// baseline population while the provenance claims otherwise.
+    pub fn from_json(v: &Json) -> Result<ScenarioConfig, ConfigError> {
+        if let Some(obj) = v.as_obj() {
+            for k in obj.keys() {
+                if !SCENARIO_KEYS.contains(&k.as_str()) {
+                    return Err(ConfigError(format!(
+                        "scenario: unknown key {k:?} (known: {})",
+                        SCENARIO_KEYS.join(", ")
+                    )));
+                }
+            }
+        }
+        let mut sc = ScenarioConfig::default();
+        let name = v.get("name");
+        if !matches!(name, Json::Null) {
+            sc.name = name
+                .as_str()
+                .ok_or_else(|| ConfigError("scenario: name must be a string".into()))?
+                .to_string();
+        }
+
+        let frac = num_arr(v, "tier_fraction")?;
+        let speed = num_arr(v, "tier_speed")?;
+        let mu = num_arr(v, "tier_latency_mu")?;
+        let sigma = num_arr(v, "tier_latency_sigma")?;
+        if frac.is_some() || speed.is_some() {
+            let frac = frac.ok_or_else(|| miss("tier_fraction"))?;
+            let speed = speed.ok_or_else(|| miss("tier_speed"))?;
+            same_len("tier_speed", speed.len(), frac.len())?;
+            if let Some(m) = &mu {
+                same_len("tier_latency_mu", m.len(), frac.len())?;
+            }
+            if let Some(s) = &sigma {
+                same_len("tier_latency_sigma", s.len(), frac.len())?;
+            }
+            sc.tiers = frac
+                .iter()
+                .zip(&speed)
+                .enumerate()
+                .map(|(i, (&f, &sp))| SpeedTier {
+                    fraction: f,
+                    speed: sp,
+                    // Slower tiers default to proportionally worse links.
+                    latency_mu: match &mu {
+                        Some(m) => m[i],
+                        None => DEFAULT_LATENCY_MU - sp.max(f64::MIN_POSITIVE).ln(),
+                    },
+                    latency_sigma: match &sigma {
+                        Some(s) => s[i],
+                        None => DEFAULT_LATENCY_SIGMA,
+                    },
+                })
+                .collect();
+        } else if mu.is_some() || sigma.is_some() {
+            return Err(miss("tier_fraction/tier_speed"));
+        }
+
+        let at = num_arr(v, "churn_at")?;
+        let present = num_arr(v, "churn_present")?;
+        match (at, present) {
+            (Some(at), Some(present)) => {
+                same_len("churn_present", present.len(), at.len())?;
+                sc.churn = at
+                    .iter()
+                    .zip(&present)
+                    .map(|(&a, &p)| ChurnPhase { at: a, present: p })
+                    .collect();
+            }
+            (None, None) => {}
+            _ => return Err(miss("churn_at/churn_present (both or neither)")),
+        }
+
+        let from = num_arr(v, "straggler_from")?;
+        let until = num_arr(v, "straggler_until")?;
+        let bfrac = num_arr(v, "straggler_fraction")?;
+        let slow = num_arr(v, "straggler_slowdown")?;
+        if from.is_some() || until.is_some() || bfrac.is_some() || slow.is_some() {
+            let from = from.ok_or_else(|| miss("straggler_from"))?;
+            let until = until.ok_or_else(|| miss("straggler_until"))?;
+            let bfrac = bfrac.ok_or_else(|| miss("straggler_fraction"))?;
+            let slow = slow.ok_or_else(|| miss("straggler_slowdown"))?;
+            same_len("straggler_until", until.len(), from.len())?;
+            same_len("straggler_fraction", bfrac.len(), from.len())?;
+            same_len("straggler_slowdown", slow.len(), from.len())?;
+            sc.bursts = (0..from.len())
+                .map(|i| StragglerBurst {
+                    from: from[i],
+                    until: until[i],
+                    fraction: bfrac[i],
+                    slowdown: slow[i],
+                })
+                .collect();
+        }
+
+        sc.faults.drop_prob = num_or(v, "drop_prob", sc.faults.drop_prob)?;
+        sc.faults.duplicate_prob = num_or(v, "duplicate_prob", sc.faults.duplicate_prob)?;
+
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Validate invariants; called by the parser and by config validation.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let e = |m: String| Err(ConfigError(m));
+        for (i, t) in self.tiers.iter().enumerate() {
+            if !(t.fraction > 0.0 && t.fraction.is_finite()) {
+                return e(format!("scenario tier {i}: fraction must be > 0, got {}", t.fraction));
+            }
+            if !(t.speed > 0.0 && t.speed.is_finite()) {
+                return e(format!("scenario tier {i}: speed must be > 0, got {}", t.speed));
+            }
+            if !t.latency_mu.is_finite() || !(t.latency_sigma >= 0.0) {
+                return e(format!("scenario tier {i}: bad latency params"));
+            }
+        }
+        let mut prev_at = -1.0f64;
+        for (i, c) in self.churn.iter().enumerate() {
+            if !(0.0..=1.0).contains(&c.at) {
+                return e(format!("scenario churn {i}: at={} outside [0, 1]", c.at));
+            }
+            if c.at < prev_at {
+                return e(format!("scenario churn {i}: at={} not ascending", c.at));
+            }
+            prev_at = c.at;
+            if !(c.present > 0.0 && c.present <= 1.0) {
+                return e(format!(
+                    "scenario churn {i}: present={} outside (0, 1]",
+                    c.present
+                ));
+            }
+        }
+        for (i, b) in self.bursts.iter().enumerate() {
+            if !(0.0..=1.0).contains(&b.from) || !(0.0..=1.0).contains(&b.until) || b.from >= b.until
+            {
+                return e(format!(
+                    "scenario burst {i}: window [{}, {}) invalid",
+                    b.from, b.until
+                ));
+            }
+            if !(b.fraction > 0.0 && b.fraction <= 1.0) {
+                return e(format!(
+                    "scenario burst {i}: fraction={} outside (0, 1]",
+                    b.fraction
+                ));
+            }
+            if !(b.slowdown >= 1.0 && b.slowdown.is_finite()) {
+                return e(format!(
+                    "scenario burst {i}: slowdown={} must be >= 1",
+                    b.slowdown
+                ));
+            }
+        }
+        let f = &self.faults;
+        if !(0.0..1.0).contains(&f.drop_prob) || !(0.0..1.0).contains(&f.duplicate_prob) {
+            return e(format!(
+                "scenario faults: probabilities must be in [0, 1), got drop={} dup={}",
+                f.drop_prob, f.duplicate_prob
+            ));
+        }
+        if f.drop_prob + f.duplicate_prob > 0.9 {
+            return e(format!(
+                "scenario faults: drop+duplicate = {} leaves too few clean deliveries",
+                f.drop_prob + f.duplicate_prob
+            ));
+        }
+        Ok(())
+    }
+
+    /// Serialize for provenance headers (round-trips through `from_json`).
+    pub fn to_json(&self) -> Json {
+        let nums = |xs: Vec<f64>| Json::Arr(xs.into_iter().map(Json::Num).collect());
+        let mut o = JsonObj::new();
+        o.insert("name", Json::Str(self.name.clone()));
+        if !self.tiers.is_empty() {
+            o.insert("tier_fraction", nums(self.tiers.iter().map(|t| t.fraction).collect()));
+            o.insert("tier_speed", nums(self.tiers.iter().map(|t| t.speed).collect()));
+            o.insert("tier_latency_mu", nums(self.tiers.iter().map(|t| t.latency_mu).collect()));
+            o.insert(
+                "tier_latency_sigma",
+                nums(self.tiers.iter().map(|t| t.latency_sigma).collect()),
+            );
+        }
+        if !self.churn.is_empty() {
+            o.insert("churn_at", nums(self.churn.iter().map(|c| c.at).collect()));
+            o.insert("churn_present", nums(self.churn.iter().map(|c| c.present).collect()));
+        }
+        if !self.bursts.is_empty() {
+            o.insert("straggler_from", nums(self.bursts.iter().map(|b| b.from).collect()));
+            o.insert("straggler_until", nums(self.bursts.iter().map(|b| b.until).collect()));
+            o.insert(
+                "straggler_fraction",
+                nums(self.bursts.iter().map(|b| b.fraction).collect()),
+            );
+            o.insert(
+                "straggler_slowdown",
+                nums(self.bursts.iter().map(|b| b.slowdown).collect()),
+            );
+        }
+        if self.faults.drop_prob > 0.0 {
+            o.insert("drop_prob", Json::Num(self.faults.drop_prob));
+        }
+        if self.faults.duplicate_prob > 0.0 {
+            o.insert("duplicate_prob", Json::Num(self.faults.duplicate_prob));
+        }
+        Json::Obj(o)
+    }
+}
+
+fn miss(key: &str) -> ConfigError {
+    ConfigError(format!("scenario: missing {key}"))
+}
+
+fn same_len(key: &str, got: usize, want: usize) -> Result<(), ConfigError> {
+    if got != want {
+        return Err(ConfigError(format!(
+            "scenario: {key} has {got} entries, expected {want}"
+        )));
+    }
+    Ok(())
+}
+
+/// Read an optional numeric array field; a present-but-wrong-typed value
+/// is an error, not an absence.
+fn num_arr(v: &Json, key: &str) -> Result<Option<Vec<f64>>, ConfigError> {
+    let node = v.get(key);
+    if matches!(node, Json::Null) {
+        return Ok(None);
+    }
+    let Some(items) = node.as_arr() else {
+        return Err(ConfigError(format!(
+            "scenario: {key} must be an array of numbers"
+        )));
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        out.push(item.as_f64().ok_or_else(|| {
+            ConfigError(format!("scenario: {key}[{i}] must be a number"))
+        })?);
+    }
+    Ok(Some(out))
+}
+
+/// Read an optional numeric scalar field with the same strictness.
+fn num_or(v: &Json, key: &str, default: f64) -> Result<f64, ConfigError> {
+    let node = v.get(key);
+    if matches!(node, Json::Null) {
+        return Ok(default);
+    }
+    node.as_f64()
+        .ok_or_else(|| ConfigError(format!("scenario: {key} must be a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toml: &str) -> Result<ScenarioConfig, ConfigError> {
+        let doc = crate::util::toml::parse(toml).unwrap();
+        ScenarioConfig::from_json(doc.get("scenario"))
+    }
+
+    #[test]
+    fn full_scenario_parses() {
+        let sc = parse(
+            r#"
+            [scenario]
+            name = "everything"
+            tier_fraction = [0.6, 0.4]
+            tier_speed = [1.0, 0.25]
+            churn_at = [0.25, 0.6]
+            churn_present = [0.5, 0.9]
+            straggler_from = [0.4]
+            straggler_until = [0.7]
+            straggler_fraction = [0.25]
+            straggler_slowdown = [8.0]
+            drop_prob = 0.05
+            duplicate_prob = 0.02
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.name, "everything");
+        assert_eq!(sc.tiers.len(), 2);
+        // Default latency worsens for the slow tier.
+        assert!(sc.tiers[1].latency_mu > sc.tiers[0].latency_mu);
+        assert_eq!(sc.churn.len(), 2);
+        assert_eq!(sc.bursts.len(), 1);
+        assert_eq!(sc.faults.drop_prob, 0.05);
+    }
+
+    #[test]
+    fn empty_scenario_is_default() {
+        let sc = parse("[scenario]\nname = \"plain\"").unwrap();
+        assert!(sc.tiers.is_empty() && sc.churn.is_empty() && sc.bursts.is_empty());
+        assert_eq!(sc.faults, FaultModel::default());
+    }
+
+    #[test]
+    fn mismatched_arrays_rejected() {
+        assert!(parse("[scenario]\ntier_fraction = [0.5, 0.5]\ntier_speed = [1.0]").is_err());
+        assert!(parse("[scenario]\nchurn_at = [0.5]").is_err());
+        assert!(parse("[scenario]\nstraggler_from = [0.1]\nstraggler_until = [0.5]").is_err());
+    }
+
+    #[test]
+    fn typos_and_wrong_types_rejected_not_ignored() {
+        // A typo'd key must not silently degrade to the uniform baseline.
+        assert!(parse("[scenario]\ntier_fractions = [0.5, 0.5]").is_err());
+        // Present-but-scalar where an array is expected is an error.
+        assert!(parse("[scenario]\ntier_fraction = 0.6\ntier_speed = 1.0").is_err());
+        // Wrong-typed scalars and names error too.
+        assert!(parse("[scenario]\ndrop_prob = \"lots\"").is_err());
+        assert!(parse("[scenario]\nname = 7").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(parse("[scenario]\ntier_fraction = [0.0]\ntier_speed = [1.0]").is_err());
+        assert!(parse("[scenario]\ntier_fraction = [1.0]\ntier_speed = [-1.0]").is_err());
+        assert!(parse("[scenario]\nchurn_at = [0.5, 0.2]\nchurn_present = [0.5, 0.9]").is_err());
+        assert!(parse("[scenario]\nchurn_at = [0.5]\nchurn_present = [0.0]").is_err());
+        assert!(
+            parse(
+                "[scenario]\nstraggler_from = [0.5]\nstraggler_until = [0.4]\n\
+                 straggler_fraction = [0.5]\nstraggler_slowdown = [2.0]"
+            )
+            .is_err()
+        );
+        assert!(parse("[scenario]\ndrop_prob = 0.8\nduplicate_prob = 0.5").is_err());
+        assert!(parse("[scenario]\ndrop_prob = 1.0").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let sc = parse(
+            r#"
+            [scenario]
+            name = "rt"
+            tier_fraction = [0.7, 0.3]
+            tier_speed = [1.0, 0.5]
+            churn_at = [0.5]
+            churn_present = [0.6]
+            drop_prob = 0.1
+            "#,
+        )
+        .unwrap();
+        let back = ScenarioConfig::from_json(&sc.to_json()).unwrap();
+        assert_eq!(back, sc);
+    }
+}

@@ -1,0 +1,85 @@
+//! Named scenario presets: the library of client populations shipped with
+//! the repo (selectable as `scenario = "<name>"` in TOML or
+//! `--scenario <name>` on the CLI; `configs/scenario_*.toml` carry full
+//! experiment configs around three of them).
+
+use super::{ChurnPhase, FaultModel, ScenarioConfig, SpeedTier, StragglerBurst};
+
+/// Resolve a preset by name.
+pub fn named(name: &str) -> Option<ScenarioConfig> {
+    let mut sc = ScenarioConfig { name: name.to_string(), ..ScenarioConfig::default() };
+    match name {
+        // Three speed tiers (flagship / mid-range / budget devices), links
+        // degrading with compute speed, a whiff of transport loss.
+        "tiered_fleet" => {
+            sc.tiers = vec![
+                tier(0.5, 1.0),
+                tier(0.3, 0.4),
+                tier(0.2, 0.15),
+            ];
+            sc.faults = FaultModel { drop_prob: 0.02, duplicate_prob: 0.0 };
+        }
+        // Day/night participation: half the fleet vanishes a quarter of
+        // the way in, most of it returns for the final stretch.
+        "diurnal_churn" => {
+            sc.churn = vec![
+                ChurnPhase { at: 0.25, present: 0.5 },
+                ChurnPhase { at: 0.7, present: 0.9 },
+            ];
+            sc.faults = FaultModel { drop_prob: 0.02, duplicate_prob: 0.0 };
+        }
+        // A mid-run burst turns a quarter of a two-tier fleet 8× slower,
+        // with duplicate deliveries from retrying uplinks.
+        "straggler_storm" => {
+            sc.tiers = vec![tier(0.8, 1.0), tier(0.2, 0.5)];
+            sc.bursts = vec![StragglerBurst {
+                from: 0.3,
+                until: 0.7,
+                fraction: 0.25,
+                slowdown: 8.0,
+            }];
+            sc.faults = FaultModel { drop_prob: 0.0, duplicate_prob: 0.05 };
+        }
+        // Homogeneous fleet behind an unreliable transport.
+        "lossy_uplink" => {
+            sc.faults = FaultModel { drop_prob: 0.15, duplicate_prob: 0.05 };
+        }
+        _ => return None,
+    }
+    Some(sc)
+}
+
+/// Tier with the default latency scaling (`mu = -3 − ln(speed)`).
+fn tier(fraction: f64, speed: f64) -> SpeedTier {
+    SpeedTier {
+        fraction,
+        speed,
+        latency_mu: super::DEFAULT_LATENCY_MU - speed.ln(),
+        latency_sigma: super::DEFAULT_LATENCY_SIGMA,
+    }
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &["tiered_fleet", "diurnal_churn", "straggler_storm", "lossy_uplink"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate_and_roundtrip() {
+        for name in preset_names() {
+            let sc = named(name).unwrap_or_else(|| panic!("missing preset {name}"));
+            sc.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            let back = ScenarioConfig::from_json(&sc.to_json())
+                .unwrap_or_else(|e| panic!("{name} roundtrip: {e}"));
+            assert_eq!(back, sc, "{name} did not roundtrip");
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(named("nope").is_none());
+    }
+}

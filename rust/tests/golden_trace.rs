@@ -1,0 +1,187 @@
+//! Golden-trace regression: a fixed-seed `run_sampled` run on a tiny
+//! config pins its recorder rows against a checked-in JSON fixture, so
+//! updater/metrics refactors that change numerics are caught loudly
+//! instead of silently.
+//!
+//! The trainer is chosen so every pinned number is *exactly*
+//! representable: it always returns the all-ones vector, and with
+//! α = 0.5, staleness ≡ 1, no decay and no drops the global model after
+//! `t` epochs is `1 − 2^{−t}` per element — dyadic rationals that f32/f64
+//! arithmetic reproduces bit-exactly (for t ≤ 23).  Any change to the mix
+//! formula's semantics, the α pipeline, the eval grid, or the CSV-facing
+//! accounting (gradients/comms/clients/staleness windows) shifts these
+//! rows and fails the comparison.
+//!
+//! Regenerate the fixture (after an *intentional* numerics change) with:
+//!
+//! ```bash
+//! FEDASYNC_BLESS=1 cargo test --test golden_trace
+//! ```
+
+use std::path::PathBuf;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet};
+use fedasync::config::{ExperimentConfig, LocalUpdate, StalenessFn};
+use fedasync::coordinator::virtual_mode::{run_fedasync, StalenessSource};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::data::{Dataset, FederatedData};
+use fedasync::federated::device::SimDevice;
+use fedasync::federated::metrics::MetricsLog;
+use fedasync::runtime::{EvalMetrics, ParamVec, RuntimeError};
+use fedasync::util::json::Json;
+
+/// Always trains to the all-ones vector with loss 2.0; evaluation reports
+/// mean(params) as loss (so the golden trajectory is closed-form).
+struct ConstTrainer;
+
+impl Trainer for ConstTrainer {
+    fn param_count(&self) -> usize {
+        4
+    }
+    fn init_params(&self, _seed_idx: usize) -> Result<ParamVec, RuntimeError> {
+        Ok(vec![0.0; 4])
+    }
+    fn local_train(
+        &self,
+        _params: &[f32],
+        _anchor: Option<&[f32]>,
+        _device: &mut SimDevice,
+        _data: &Dataset,
+        _gamma: f32,
+        _rho: f32,
+    ) -> Result<(ParamVec, f32), RuntimeError> {
+        Ok((vec![1.0; 4], 2.0))
+    }
+    fn evaluate(&self, params: &[f32], _test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
+        let mean = params.iter().map(|&x| x as f64).sum::<f64>() / params.len() as f64;
+        Ok(EvalMetrics { loss: mean, accuracy: 1.0 - mean, samples: params.len() })
+    }
+    fn local_iters(&self) -> usize {
+        5
+    }
+}
+
+fn golden_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "golden".into();
+    cfg.seed = 9;
+    cfg.epochs = 12;
+    cfg.eval_every = 4;
+    cfg.alpha = 0.5;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.max = 1;
+    cfg.staleness.func = StalenessFn::Constant;
+    cfg.staleness.drop_above = None;
+    cfg.federation.devices = 10;
+    cfg
+}
+
+fn run_golden() -> MetricsLog {
+    let cfg = golden_cfg();
+    let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+    let mut fleet = dummy_fleet(10, 2);
+    run_fedasync(
+        &ConstTrainer,
+        &cfg,
+        &data,
+        &mut fleet,
+        cfg.seed,
+        StalenessSource::Sampled { max: cfg.staleness.max },
+    )
+    .expect("golden run")
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/golden_sampled.json")
+}
+
+/// Serialize rows with shortest-roundtrip float formatting (bless mode).
+fn rows_to_json(log: &MetricsLog) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"label\": \"{}\",\n", log.label));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in log.rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"epoch\": {}, \"gradients\": {}, \"comms\": {}, \"sim_time\": {:?}, \
+             \"train_loss\": {:?}, \"test_loss\": {:?}, \"test_acc\": {:?}, \
+             \"alpha_eff\": {:?}, \"staleness\": {:?}, \"clients\": {}}}{}\n",
+            r.epoch,
+            r.gradients,
+            r.comms,
+            r.sim_time,
+            r.train_loss,
+            r.test_loss,
+            r.test_acc,
+            r.alpha_eff,
+            r.staleness,
+            r.clients,
+            if i + 1 == log.rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[test]
+fn golden_trace_matches_fixture() {
+    let log = run_golden();
+    let path = fixture_path();
+    if std::env::var("FEDASYNC_BLESS").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, rows_to_json(&log)).unwrap();
+        eprintln!("blessed golden fixture at {path:?}");
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!("missing golden fixture {path:?} ({e}); run FEDASYNC_BLESS=1 to regenerate")
+    });
+    let want = Json::parse(&text).expect("fixture parses");
+    assert_eq!(want.get("label").as_str(), Some(log.label.as_str()), "label drifted");
+    let want_rows = want.get("rows").as_arr().expect("rows array");
+    assert_eq!(
+        want_rows.len(),
+        log.rows.len(),
+        "row count drifted: the eval grid changed"
+    );
+    for (i, (w, got)) in want_rows.iter().zip(&log.rows).enumerate() {
+        let int = |key: &str| w.get(key).as_i64().unwrap_or_else(|| panic!("row {i}: {key}"));
+        let num = |key: &str| w.get(key).as_f64().unwrap_or_else(|| panic!("row {i}: {key}"));
+        assert_eq!(got.epoch as i64, int("epoch"), "row {i}: epoch");
+        assert_eq!(got.gradients as i64, int("gradients"), "row {i}: gradients");
+        assert_eq!(got.comms as i64, int("comms"), "row {i}: comms");
+        assert_eq!(got.clients as i64, int("clients"), "row {i}: clients");
+        for (key, have) in [
+            ("sim_time", got.sim_time),
+            ("train_loss", got.train_loss),
+            ("test_loss", got.test_loss),
+            ("test_acc", got.test_acc),
+            ("alpha_eff", got.alpha_eff),
+            ("staleness", got.staleness),
+        ] {
+            let wantv = num(key);
+            assert!(
+                (have - wantv).abs() <= 1e-12,
+                "row {i}: {key} drifted: fixture {wantv} vs run {have}"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_trace_is_deterministic() {
+    let a = run_golden();
+    let b = run_golden();
+    assert_eq!(a.rows, b.rows, "same seed must reproduce identical rows");
+}
+
+#[test]
+fn golden_hist_pins_staleness_accounting() {
+    // Every one of the 12 offered updates has staleness exactly 1.
+    let log = run_golden();
+    assert_eq!(log.staleness_hist.total(), 12);
+    assert_eq!(log.staleness_hist.support(), vec![1]);
+    assert!((log.staleness_hist.mean() - 1.0).abs() < 1e-12);
+}

@@ -5,10 +5,19 @@
 //! asynchronous coordination and mixing (rust).  Runs are kept short; the
 //! full-scale curves live in `repro figure` / EXPERIMENTS.md.
 
+use std::sync::mpsc;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
 use fedasync::config::presets::{named, Scale};
 use fedasync::config::{Algo, ExperimentConfig, LocalUpdate, StalenessFn};
+use fedasync::coordinator::server::{run_server_core, serve_native, ComputeJob};
+use fedasync::coordinator::virtual_mode::{run_fedasync, StalenessSource};
+use fedasync::coordinator::Trainer;
 use fedasync::experiment::runner;
+use fedasync::federated::data::FederatedData;
+use fedasync::federated::metrics::MetricsLog;
 use fedasync::runtime::{model_dir, try_load_runtime, ModelRuntime};
+use fedasync::scenario;
 
 /// `None` ⇒ skip (shared policy in `fedasync::runtime::try_load_runtime`).
 fn runtime() -> Option<ModelRuntime> {
@@ -147,6 +156,213 @@ fn threaded_server_trains_end_to_end() {
     assert!(last.staleness >= 1.0, "threaded staleness {}", last.staleness);
     // Loss should at least move from the init row.
     assert!(last.test_loss < log.rows[0].test_loss);
+}
+
+// ---------------------------------------------------------------------
+// Cross-mode scenario conformance (artifact-free: closed-form quadratic).
+//
+// For every shipped `configs/scenario_*.toml` preset, the sampled,
+// emergent, and threaded executions consume the same `ClientBehavior`,
+// so they must tell one story: every mode learns, final losses sit in a
+// shared band, and the staleness histograms have overlapping supports.
+// ---------------------------------------------------------------------
+
+const CONF_DEVICES: usize = 16;
+const CONF_EPOCHS: usize = 120;
+const CONF_SEED: u64 = 1;
+
+fn conformance_quad() -> QuadraticProblem {
+    // Mild gradient noise gives every mode the same variance floor, which
+    // keeps the cross-mode loss band meaningful.
+    QuadraticProblem::new(CONF_DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+/// Shrink a shipped scenario config to conformance-test size without
+/// touching its scenario block or staleness policy.
+fn conformance_cfg(path: &std::path::Path) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::from_toml_file(path)
+        .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    assert!(cfg.scenario.is_some(), "{path:?} must carry a [scenario] table");
+    cfg.epochs = CONF_EPOCHS;
+    cfg.eval_every = CONF_EPOCHS / 4;
+    cfg.repeats = 1;
+    cfg.seed = CONF_SEED;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    // Normalize the α schedule across presets: the conformance band is
+    // about the *population* (tiers/churn/bursts/faults), and Poly keeps
+    // every staleness level learning, while e.g. Hinge would conflate the
+    // band with how hard each mode's staleness distribution hits b.
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = CONF_DEVICES;
+    cfg.worker_threads = 3;
+    cfg.max_inflight = 4;
+    cfg.validate().unwrap_or_else(|e| panic!("{path:?} shrunk: {e}"));
+    cfg
+}
+
+fn run_conformance_mode(cfg: &ExperimentConfig, mode: &str) -> MetricsLog {
+    let p = conformance_quad();
+    match mode {
+        "sampled" | "emergent" => {
+            let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+            let mut fleet = dummy_fleet(CONF_DEVICES, 5);
+            let source = if mode == "sampled" {
+                StalenessSource::Sampled { max: cfg.staleness.max }
+            } else {
+                // Match the threaded server's in-flight budget so the two
+                // emergent-staleness executions see comparable overlap.
+                StalenessSource::Emergent { inflight: cfg.max_inflight }
+            };
+            run_fedasync(&p, cfg, &data, &mut fleet, CONF_SEED, source)
+                .unwrap_or_else(|e| panic!("{mode} run: {e}"))
+        }
+        "threaded" => {
+            let init = p.init_params(CONF_SEED as usize).expect("init");
+            let h = p.local_iters();
+            let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+            let svc = std::thread::spawn(move || {
+                serve_native(conformance_quad(), CONF_DEVICES, job_rx)
+            });
+            let behavior = scenario::behavior_for(cfg, CONF_DEVICES, CONF_SEED);
+            let test = dummy_dataset();
+            let log = run_server_core(cfg, CONF_SEED, &test, init, h, job_tx, behavior)
+                .unwrap_or_else(|e| panic!("threaded run: {e}"));
+            svc.join().expect("service join");
+            log
+        }
+        other => panic!("unknown mode {other}"),
+    }
+}
+
+#[test]
+fn scenario_presets_conform_across_modes() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut preset_paths: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .expect("configs/ exists")
+        .filter_map(|e| {
+            let path = e.unwrap().path();
+            let name = path.file_name()?.to_str()?.to_string();
+            (name.starts_with("scenario_") && name.ends_with(".toml")).then_some(path)
+        })
+        .collect();
+    preset_paths.sort();
+    assert!(
+        preset_paths.len() >= 3,
+        "expected >= 3 shipped scenario presets, found {preset_paths:?}"
+    );
+
+    for path in &preset_paths {
+        let cfg = conformance_cfg(path);
+        let logs: Vec<(&str, MetricsLog)> = ["sampled", "emergent", "threaded"]
+            .into_iter()
+            .map(|m| (m, run_conformance_mode(&cfg, m)))
+            .collect();
+
+        // Every mode learns: the final loss clears a shared reduction bar.
+        let mut finals = Vec::new();
+        for (mode, log) in &logs {
+            let first = log.rows.first().expect("rows").test_loss;
+            let last = log.rows.last().expect("rows").test_loss;
+            assert!(
+                last.is_finite() && last < first * 0.5,
+                "{path:?} {mode}: no learning ({first} -> {last})"
+            );
+            assert!(
+                log.staleness_hist.total() > 0,
+                "{path:?} {mode}: empty staleness histogram"
+            );
+            // Effective clients stay within the fleet and are reported.
+            assert!(log
+                .rows
+                .iter()
+                .all(|r| r.clients >= 1 && r.clients <= CONF_DEVICES));
+            finals.push(last);
+        }
+
+        // Final losses sit in one band: the same scenario through three
+        // executions must not diverge by orders of magnitude.
+        let lo = finals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = finals.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            hi <= lo.max(1e-3) * 100.0,
+            "{path:?}: cross-mode final losses diverged: {finals:?}"
+        );
+
+        // Staleness supports overlap pairwise: the population's staleness
+        // signature survives the change of execution substrate.
+        for i in 0..logs.len() {
+            for j in i + 1..logs.len() {
+                let a: std::collections::BTreeSet<u64> =
+                    logs[i].1.staleness_hist.support().into_iter().collect();
+                let b: std::collections::BTreeSet<u64> =
+                    logs[j].1.staleness_hist.support().into_iter().collect();
+                assert!(
+                    a.intersection(&b).next().is_some(),
+                    "{path:?}: {} and {} staleness supports are disjoint: {a:?} vs {b:?}",
+                    logs[i].0,
+                    logs[j].0
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scenario_churn_shows_up_in_clients_column() {
+    // The churn preset's effective-client count must actually move.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let cfg = conformance_cfg(&dir.join("scenario_churn.toml"));
+    let log = run_conformance_mode(&cfg, "sampled");
+    let first = log.rows.first().unwrap().clients;
+    let mid = log.rows[log.rows.len() / 2].clients;
+    assert_eq!(first, CONF_DEVICES, "full fleet at t=0");
+    assert!(
+        mid < first,
+        "churn never shrank the effective fleet: {first} -> {mid}"
+    );
+}
+
+#[test]
+fn sampled_mode_survives_heavy_duplication() {
+    // Regression: duplicate deliveries push the store version *ahead* of
+    // the task counter, so the historical anchor read must clamp to the
+    // ring's retained window — pre-fix this panicked on `ModelStore::get`.
+    let mut cfg = ExperimentConfig::default();
+    cfg.epochs = 100;
+    cfg.eval_every = 50;
+    cfg.repeats = 1;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.5;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.max = 4;
+    cfg.federation.devices = 8;
+    cfg.scenario = Some(fedasync::scenario::ScenarioConfig {
+        name: "dup_heavy".into(),
+        faults: fedasync::scenario::FaultModel { drop_prob: 0.0, duplicate_prob: 0.4 },
+        ..Default::default()
+    });
+    cfg.validate().unwrap();
+    let p = QuadraticProblem::new(8, 4, 0.5, 2.0, 2.0, 0.0, 5, 1);
+    let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+    let mut fleet = dummy_fleet(8, 2);
+    let log = run_fedasync(
+        &p,
+        &cfg,
+        &data,
+        &mut fleet,
+        3,
+        StalenessSource::Sampled { max: cfg.staleness.max },
+    )
+    .expect("duplication-heavy sampled run");
+    assert!(log.rows.last().unwrap().test_loss.is_finite());
+    // Every offer (originals + duplicate copies) landed in the histogram.
+    assert!(log.staleness_hist.total() >= 100);
 }
 
 #[test]

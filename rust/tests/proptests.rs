@@ -74,6 +74,100 @@ fn prop_alpha_controller_in_unit_interval_and_drop_consistent() {
 }
 
 #[test]
+fn prop_alpha_controller_monotone_in_staleness() {
+    // s(τ) non-increasing in τ for the paper's adaptive families ⇒ the
+    // controller's Mix(α) must be non-increasing in staleness too.
+    check("alpha-monotone", 200, |g| {
+        let func = if g.bool() {
+            StalenessFn::Poly { a: g.f64_in(0.0, 4.0) }
+        } else {
+            StalenessFn::Hinge { a: g.f64_in(0.1, 20.0), b: g.f64_in(0.0, 16.0) }
+        };
+        let ctl = AlphaController::new(
+            g.f64_in(0.01, 1.0),
+            g.f64_in(0.1, 1.0),
+            g.index(1000),
+            &StalenessConfig { max: 64, func, drop_above: None },
+        );
+        let t = g.index(2000);
+        let mut prev = f64::INFINITY;
+        for s in 0..64u64 {
+            match ctl.decide(t, s) {
+                AlphaDecision::Mix(a) => {
+                    prop_ensure!(a > 0.0 && a <= 1.0, "{func:?} t={t} s={s} a={a}");
+                    prop_ensure!(
+                        a <= prev + 1e-12,
+                        "{func:?} t={t}: alpha rose from {prev} to {a} at s={s}"
+                    );
+                    prev = a;
+                }
+                AlphaDecision::Drop => return Err("drop without a drop policy".into()),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alpha_controller_drop_iff_above_cutoff() {
+    check("alpha-drop-iff", 200, |g| {
+        let cut = g.index(32) as u64;
+        let ctl = AlphaController::new(
+            g.f64_in(0.01, 1.0),
+            g.f64_in(0.1, 1.0),
+            g.index(1000),
+            &StalenessConfig { max: 64, func: random_staleness_fn(g), drop_above: Some(cut) },
+        );
+        let t = g.index(2000);
+        for s in 0..64u64 {
+            let dropped = matches!(ctl.decide(t, s), AlphaDecision::Drop);
+            prop_ensure!(
+                dropped == (s > cut),
+                "cut={cut} s={s}: dropped={dropped}, want {}",
+                s > cut
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alpha_decay_steps_exactly_at_decay_at() {
+    // The ×decay step applies exactly at `decay_at`: base α one epoch
+    // before, base·decay from then on — and `decide` at staleness 0
+    // (s(0) = 1 for every family) exposes the base directly.
+    check("alpha-decay-step", 200, |g| {
+        let base = g.f64_in(0.01, 1.0);
+        let decay = g.f64_in(0.1, 1.0);
+        let at = 1 + g.index(999);
+        let ctl = AlphaController::new(
+            base,
+            decay,
+            at,
+            &StalenessConfig { max: 16, func: random_staleness_fn(g), drop_above: None },
+        );
+        prop_ensure!((ctl.base_at(0) - base).abs() < 1e-12, "t=0 base");
+        prop_ensure!((ctl.base_at(at - 1) - base).abs() < 1e-12, "pre-decay base");
+        prop_ensure!(
+            (ctl.base_at(at) - base * decay).abs() < 1e-12,
+            "decay not applied at t={at}"
+        );
+        prop_ensure!(
+            (ctl.base_at(at + g.index(1000)) - base * decay).abs() < 1e-12,
+            "decay not sticky after t={at}"
+        );
+        match ctl.decide(at, 0) {
+            AlphaDecision::Mix(a) => {
+                let want = (base * decay).clamp(0.0, 1.0);
+                prop_ensure!((a - want).abs() < 1e-12, "decide({at}, 0) = {a}, want {want}");
+            }
+            AlphaDecision::Drop => return Err("drop without a drop policy".into()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_mix_stays_on_segment_and_interpolates() {
     check("mix-segment", 300, |g| {
         let n = g.size(1, 4096);
@@ -192,6 +286,104 @@ fn prop_event_queue_total_order() {
 }
 
 #[test]
+fn prop_event_queue_pops_in_time_then_seq_order() {
+    // Regression companion to the non-finite-timestamp fix: under random
+    // insertions (with coarse times forcing plenty of ties) the queue
+    // must pop in strict (time, seq) lexicographic order — the seq
+    // tie-break is what keeps same-instant events FIFO.
+    check("event-queue-time-seq", 100, |g| {
+        let n = g.size(0, 300);
+        let mut q = EventQueue::new();
+        for i in 0..n {
+            let at = g.index(8) as f64;
+            q.schedule_at(at, i);
+        }
+        let mut prev: Option<(f64, u64)> = None;
+        let mut popped = 0usize;
+        while let Some(ev) = q.pop() {
+            if let Some((pt, ps)) = prev {
+                prop_ensure!(
+                    ev.at > pt || (ev.at == pt && ev.seq > ps),
+                    "out of (time, seq) order: ({pt}, {ps}) then ({}, {})",
+                    ev.at,
+                    ev.seq
+                );
+            }
+            prev = Some((ev.at, ev.seq));
+            popped += 1;
+        }
+        prop_ensure!(popped == n, "lost events: {popped} of {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scenario_behavior_invariants() {
+    use fedasync::scenario::{
+        ChurnPhase, ClientBehavior, FaultModel, ScenarioBehavior, ScenarioConfig, SpeedTier,
+        StragglerBurst,
+    };
+    check("scenario-behavior", 60, |g| {
+        let n = g.size(2, 60);
+        let mut sc = ScenarioConfig { name: "prop".into(), ..ScenarioConfig::default() };
+        if g.bool() {
+            let k = g.size(1, 4);
+            sc.tiers = (0..k)
+                .map(|_| SpeedTier {
+                    fraction: g.f64_in(0.05, 1.0),
+                    speed: g.f64_in(0.05, 4.0),
+                    latency_mu: g.f64_in(-4.0, 0.0),
+                    latency_sigma: g.f64_in(0.0, 1.5),
+                })
+                .collect();
+        }
+        if g.bool() {
+            let mut at = 0.0;
+            sc.churn = (0..g.size(1, 4))
+                .map(|_| {
+                    at = g.f64_in(at, 1.0);
+                    ChurnPhase { at, present: g.f64_in(0.05, 1.0) }
+                })
+                .collect();
+        }
+        if g.bool() {
+            let from = g.f64_in(0.0, 0.9);
+            sc.bursts = vec![StragglerBurst {
+                from,
+                until: g.f64_in(from + 0.01, 1.0).min(1.0).max(from + 1e-6),
+                fraction: g.f64_in(0.05, 1.0),
+                slowdown: g.f64_in(1.0, 32.0),
+            }];
+        }
+        sc.faults = FaultModel {
+            drop_prob: g.f64_in(0.0, 0.4),
+            duplicate_prob: g.f64_in(0.0, 0.4),
+        };
+        sc.validate().map_err(|e| e.to_string())?;
+        let b = ScenarioBehavior::new(&sc, n, g.rng.next_u64());
+        let max = 1 + g.index(32) as u64;
+        for progress in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let pc = b.present_count(progress);
+            prop_ensure!(pc >= 1 && pc <= n, "present_count {pc} outside [1, {n}]");
+            let actual = (0..n).filter(|&d| b.is_present(d, progress)).count();
+            prop_ensure!(actual == pc, "present set {actual} != count {pc}");
+            for d in 0..n {
+                let s = b.slowdown(d, progress);
+                prop_ensure!(s.is_finite() && s > 0.0, "slowdown {s}");
+            }
+            for _ in 0..20 {
+                let d = g.index(n);
+                let s = b.sample_staleness(d, progress, max, &mut g.rng);
+                prop_ensure!((1..=max).contains(&s), "staleness {s} outside [1, {max}]");
+                let lat = b.link_latency(d, &mut g.rng);
+                prop_ensure!(lat > 0.0 && lat.is_finite(), "latency {lat}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_rng_choose_k_uniformish() {
     // Every index should be chosen sometimes — no systematic exclusion.
     check("choose-k-coverage", 20, |g| {
@@ -260,6 +452,7 @@ fn prop_metrics_csv_roundtrip() {
                 test_acc: g.f64_in(0.0, 1.0),
                 alpha_eff: g.f64_in(0.0, 1.0),
                 staleness: g.f64_in(0.0, 32.0),
+                clients: g.size(1, 500),
             });
         }
         let back = MetricsLog::from_csv("series", &log.to_csv()).map_err(|e| e)?;
@@ -304,6 +497,33 @@ fn prop_json_roundtrip_arbitrary_trees() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn shipped_scenario_configs_match_their_named_presets() {
+    // The scenario_*.toml files spell out their keys for documentation
+    // value, but each claims a preset's name — pin them byte-equal to
+    // `scenario::presets::named` so tuning a preset can't silently fork
+    // the shipped configs into a different population with the same name.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ exists") {
+        let path = entry.unwrap().path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if !name.starts_with("scenario_") || !name.ends_with(".toml") {
+            continue;
+        }
+        let cfg = fedasync::config::ExperimentConfig::from_toml_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let sc = cfg.scenario.unwrap_or_else(|| panic!("{path:?}: no [scenario] table"));
+        let preset = fedasync::scenario::presets::named(&sc.name)
+            .unwrap_or_else(|| panic!("{path:?}: scenario name {:?} is not a preset", sc.name));
+        assert_eq!(sc, preset, "{path:?} drifted from preset {:?}", preset.name);
+        checked += 1;
+    }
+    assert!(checked >= 3, "expected >= 3 scenario configs, pinned {checked}");
 }
 
 #[test]

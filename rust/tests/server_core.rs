@@ -20,6 +20,7 @@ use fedasync::coordinator::server::{run_server_core, ComputeJob};
 use fedasync::federated::data::Dataset;
 use fedasync::federated::metrics::MetricsLog;
 use fedasync::runtime::EvalMetrics;
+use fedasync::scenario;
 
 /// Local iterations the mock pretends to run (gradient accounting).
 const H: usize = 5;
@@ -79,7 +80,8 @@ fn run_with_watchdog(cfg: ExperimentConfig, seed: u64, timeout: Duration) -> Met
     let (done_tx, done_rx) = mpsc::channel();
     std::thread::spawn(move || {
         let test = dummy_test_set();
-        let result = run_server_core(&cfg, seed, &test, vec![0.0f32; 32], H, job_tx);
+        let behavior = scenario::behavior_for(&cfg, cfg.federation.devices, seed);
+        let result = run_server_core(&cfg, seed, &test, vec![0.0f32; 32], H, job_tx, behavior);
         let _ = done_tx.send(result);
     });
     let result = done_rx
@@ -124,6 +126,30 @@ fn rows_land_exactly_on_the_eval_grid() {
     // Server accounting: 2 comms per offered task, H gradients per apply.
     assert_eq!(last.gradients, 40 * H as u64);
     assert!(last.comms >= 80, "comms {}", last.comms);
+}
+
+#[test]
+fn scenario_faults_and_churn_still_reach_the_epoch_target() {
+    // A lossy, churning population must not wedge the threaded topology:
+    // dropped deliveries never advance the version (no gradients), the
+    // scheduler only triggers present devices, and the run still reaches
+    // its epoch target because the scheduler keeps feeding tasks.
+    let mut cfg = threads_cfg(24, 8, 3, 4);
+    let mut sc = scenario::presets::named("lossy_uplink").expect("preset");
+    sc.churn = vec![fedasync::scenario::ChurnPhase { at: 0.5, present: 0.5 }];
+    cfg.scenario = Some(sc);
+    cfg.validate().expect("scenario config valid");
+    let log = run_with_watchdog(cfg, 13, Duration::from_secs(120));
+    let last = log.rows.last().unwrap();
+    assert!(last.epoch >= 24, "stopped early at {}", last.epoch);
+    assert_eq!(last.gradients, 24 * H as u64, "only applied updates count gradients");
+    // Churn is visible in the clients column: full fleet at t=0, half
+    // after the midpoint phase.
+    assert_eq!(log.rows[0].clients, 8);
+    assert_eq!(last.clients, 4);
+    // The histogram saw every offered update.
+    assert!(log.staleness_hist.total() >= 24);
+    assert!(!log.staleness_hist.support().is_empty());
 }
 
 #[test]
