@@ -1,14 +1,15 @@
 //! Tour of the scenario library: every preset population, every
-//! execution mode, one table.
+//! time driver of the execution engine, one table.
 //!
-//! Runs each named scenario preset through all three execution modes —
-//! the paper's sampled-staleness protocol, the emergent discrete-event
-//! simulator, and the threaded server (against a native compute service)
-//! — on a closed-form quadratic problem, so it needs **no PJRT
-//! artifacts** and doubles as the CI smoke for the scenario wiring.
-//! Because every mode consumes the same `ClientBehavior`, the three rows
-//! per scenario should tell one story: comparable final losses and
-//! overlapping staleness supports.
+//! Runs each named scenario preset through all three drivers — the
+//! paper's sampled-staleness protocol (`SequentialDriver`), the emergent
+//! discrete-event simulator (`EventDriver`), and the threaded server
+//! (`ThreadedDriver` against a native compute service) — on a
+//! closed-form quadratic problem, so it needs **no PJRT artifacts** and
+//! doubles as the CI smoke for the scenario wiring.  Every driver runs
+//! under the same engine loop and consumes the same `ClientBehavior`, so
+//! the three rows per scenario should tell one story: comparable final
+//! losses and overlapping staleness supports.
 //!
 //! ```bash
 //! cargo run --release --example scenario_tour

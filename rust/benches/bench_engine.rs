@@ -1,0 +1,172 @@
+//! Engine perf snapshot, machine-readable: writes `BENCH_engine.json`
+//! with the scheduler handoff (old clone-under-RwLock vs snapshot-cell
+//! `Arc` clone), the native mix across model sizes, and epochs/sec for
+//! each of the engine's three time drivers (sequential sampled,
+//! discrete-event emergent, threaded against a native mock service) on
+//! the closed-form quadratic — no PJRT artifacts needed.
+//!
+//! CI runs this and uploads the JSON, so the perf trajectory of the
+//! execution engine is trackable PR over PR.
+//!
+//! ```bash
+//! cargo bench --bench bench_engine
+//! ```
+
+use std::sync::mpsc;
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::config::{ExperimentConfig, LocalUpdate, StalenessFn};
+use fedasync::coordinator::server::{run_server_core, serve_native, ComputeJob};
+use fedasync::coordinator::snapshot::SnapshotCell;
+use fedasync::coordinator::updater::mix_inplace;
+use fedasync::coordinator::virtual_mode::{run_fedasync, StalenessSource};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::data::FederatedData;
+use fedasync::scenario;
+use fedasync::util::rng::Rng;
+use fedasync::util::stats::BenchTimer;
+
+const DEVICES: usize = 16;
+const EPOCHS: usize = 240;
+const SEED: u64 = 1;
+
+fn quad() -> QuadraticProblem {
+    // n devices, 6 dims, mu=0.5, L=2, spread 2, mild gradient noise, H=5.
+    QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+fn bench_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "bench_engine".into();
+    cfg.epochs = EPOCHS;
+    cfg.repeats = 1;
+    cfg.eval_every = EPOCHS / 4;
+    cfg.seed = SEED;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.max = 16;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = DEVICES;
+    cfg.federation.samples_per_device = 4;
+    cfg.federation.test_samples = 8;
+    cfg.worker_threads = 3;
+    cfg.max_inflight = 4;
+    cfg
+}
+
+/// Median epochs/sec over 3 one-shot runs (driver runs are seconds-scale;
+/// a full sampling loop would take minutes for no extra signal).
+fn epochs_per_sec(label: &str, mut run: impl FnMut() -> usize) -> f64 {
+    let mut rates: Vec<f64> = (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            let epochs = run();
+            epochs as f64 / t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    rates.sort_by(|a, b| a.partial_cmp(b).expect("finite rates"));
+    let median = rates[1];
+    println!("{label:<28} {median:>10.1} epochs/s");
+    median
+}
+
+fn main() {
+    let timer = BenchTimer::quick();
+    println!("== bench_engine: perf snapshot -> BENCH_engine.json ==\n");
+    let mut rng = Rng::seed_from(2);
+    let mut fields: Vec<(String, f64)> = Vec::new();
+
+    // ------------------------------------------------- scheduler handoff
+    let p = 165_530usize;
+    let lock = RwLock::new(vec![0.0f32; p]);
+    let r = timer.run("handoff_old_clone_under_rwlock", || {
+        let g = lock.read().unwrap();
+        std::hint::black_box(g.clone());
+    });
+    println!("{}", r.report(Some(1.0)));
+    fields.push((format!("handoff_old_clone_under_rwlock_p{p}_ns"), r.median_ns()));
+
+    let cell = SnapshotCell::new(0, Arc::new(vec![0.0f32; p]));
+    let r = timer.run("handoff_new_snapshot_arc", || {
+        std::hint::black_box(cell.load());
+    });
+    println!("{}", r.report(Some(1.0)));
+    fields.push((format!("handoff_new_snapshot_arc_p{p}_ns"), r.median_ns()));
+
+    // ------------------------------------------------------------ mixing
+    for &p in &[165_530usize, 1_000_000] {
+        let mut x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let r = timer.run(&format!("native_mix/p={p}"), || {
+            mix_inplace(&mut x, &y, 0.37);
+            std::hint::black_box(&x);
+        });
+        println!("{}", r.report(Some(p as f64)));
+        fields.push((format!("mix_native_p{p}_ns"), r.median_ns()));
+    }
+
+    // -------------------------------------------- per-driver epochs/sec
+    println!();
+    let cfg = bench_cfg();
+    let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+
+    let rate = epochs_per_sec("driver_sequential", || {
+        let mut fleet = dummy_fleet(DEVICES, 5);
+        let log = run_fedasync(
+            &quad(),
+            &cfg,
+            &data,
+            &mut fleet,
+            SEED,
+            StalenessSource::Sampled { max: cfg.staleness.max },
+        )
+        .expect("sampled run");
+        log.rows.last().expect("rows").epoch
+    });
+    fields.push(("driver_sequential_epochs_per_s".into(), rate));
+
+    let rate = epochs_per_sec("driver_event", || {
+        let mut fleet = dummy_fleet(DEVICES, 5);
+        let log = run_fedasync(
+            &quad(),
+            &cfg,
+            &data,
+            &mut fleet,
+            SEED,
+            StalenessSource::Emergent { inflight: cfg.max_inflight },
+        )
+        .expect("emergent run");
+        log.rows.last().expect("rows").epoch
+    });
+    fields.push(("driver_event_epochs_per_s".into(), rate));
+
+    let rate = epochs_per_sec("driver_threaded", || {
+        let problem = quad();
+        let init = problem.init_params(SEED as usize).expect("init");
+        let h = problem.local_iters();
+        let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+        let svc = std::thread::spawn(move || serve_native(quad(), DEVICES, job_rx));
+        let behavior = scenario::behavior_for(&cfg, DEVICES, SEED);
+        let test = dummy_dataset();
+        let log = run_server_core(&cfg, SEED, &test, init, h, job_tx, behavior)
+            .expect("threaded run");
+        svc.join().expect("service join");
+        log.rows.last().expect("rows").epoch
+    });
+    fields.push(("driver_threaded_epochs_per_s".into(), rate));
+
+    // -------------------------------------------------------------- JSON
+    let mut json = String::from("{\n  \"schema\": \"bench_engine.v1\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let sep = if i + 1 == fields.len() { "" } else { "," };
+        json.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_engine.json", &json).expect("write BENCH_engine.json");
+    println!("\nwrote BENCH_engine.json");
+}

@@ -1,14 +1,15 @@
 //! The single shared updater core (paper Algorithm 1, server side).
 //!
-//! Every execution mode — sampled-staleness virtual time, emergent
-//! discrete-event virtual time, and the real-thread server — feeds worker
-//! updates through one [`UpdaterCore`]: α decision + mix via
+//! Every time driver of the execution engine — sequential sampled
+//! staleness, discrete-event virtual time, and the real-thread server —
+//! feeds worker updates through one [`UpdaterCore`]: α decision + mix via
 //! [`Updater::apply`], version history via [`ModelStore`], and grid-aligned
 //! metrics via [`EvalRecorder`].  The seed re-implemented this bookkeeping
-//! inline in `run_threaded`, which let the threaded server's staleness,
-//! drop accounting, and eval cadence drift from the simulator's; now the
-//! semantics exist in exactly one place and `rust/tests/server_core.rs`
-//! pins the equivalence.
+//! inline in the threaded server, which let its staleness, drop
+//! accounting, and eval cadence drift from the simulator's; now the
+//! semantics exist in exactly one place (and the run loop *around* them
+//! in exactly one more — [`super::engine`]), with
+//! `rust/tests/server_core.rs` pinning the equivalence.
 
 use std::sync::Arc;
 

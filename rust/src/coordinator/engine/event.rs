@@ -1,0 +1,183 @@
+//! Event time driver: discrete-event simulation, emergent staleness.
+//!
+//! A simulation of the Figure-1 system on virtual time: the driver keeps
+//! `inflight` tasks outstanding on the device fleet; each task snapshots
+//! the current model, takes (compute time ∕ device speed + up/down link
+//! latency) of virtual seconds on the [`EventQueue`], and its staleness
+//! *emerges* from how many updates landed while it was in flight.  This
+//! validates that the paper's sampled protocol is a faithful stand-in
+//! (DESIGN.md §Fidelity compares the two).
+//!
+//! The scenario's [`ClientBehavior`] gates device participation (churn)
+//! and stretches task latencies (tiers/bursts); delivery faults are the
+//! engine's shared stage.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::engine::{prox_args, Arrival, Clock, TimeDriver};
+use crate::coordinator::Trainer;
+use crate::federated::data::FederatedData;
+use crate::federated::device::SimDevice;
+use crate::federated::network::EventQueue;
+use crate::runtime::RuntimeError;
+use crate::scenario::ClientBehavior;
+use crate::util::rng::Rng;
+
+/// Event payload: a task completion (or, with `device == usize::MAX`, a
+/// wake-up tick that retries assignment after an availability gap).
+#[derive(PartialEq)]
+struct Completion {
+    device: usize,
+    /// Model version the task started from.
+    tau: u64,
+    x_new: Vec<f32>,
+    loss: f32,
+}
+
+/// Pipeline of in-flight tasks over an [`EventQueue`]; staleness emerges
+/// from task overlap.
+pub struct EventDriver<'a> {
+    fleet: &'a mut [SimDevice],
+    data: &'a FederatedData,
+    behavior: &'a dyn ClientBehavior,
+    rng: Rng,
+    queue: EventQueue<Completion>,
+    busy: Vec<bool>,
+    inflight: usize,
+    use_prox: bool,
+    rho: f32,
+    gamma: f32,
+}
+
+impl<'a> EventDriver<'a> {
+    pub fn new(
+        cfg: &ExperimentConfig,
+        data: &'a FederatedData,
+        fleet: &'a mut [SimDevice],
+        behavior: &'a dyn ClientBehavior,
+        seed: u64,
+        inflight: usize,
+    ) -> EventDriver<'a> {
+        let (use_prox, rho) = prox_args(cfg);
+        let inflight = inflight.max(1).min(fleet.len());
+        let busy = vec![false; fleet.len()];
+        EventDriver {
+            fleet,
+            data,
+            behavior,
+            rng: Rng::seed_from(seed ^ 0xE4E6_0001),
+            queue: EventQueue::new(),
+            busy,
+            inflight,
+            use_prox,
+            rho,
+            gamma: cfg.gamma,
+        }
+    }
+
+    /// Scheduler step: trigger a task on a random idle, eligible,
+    /// *present* device, randomizing check-in time to avoid congestion
+    /// (paper §1).  Returns `Ok(false)` when no device is available.
+    fn assign<T: Trainer>(
+        &mut self,
+        trainer: &T,
+        core: &UpdaterCore<'_>,
+        progress: f64,
+    ) -> Result<bool, RuntimeError> {
+        let now = self.queue.now();
+        let (fleet, busy, behavior) = (&mut *self.fleet, &self.busy, self.behavior);
+        let idle: Vec<usize> = (0..fleet.len())
+            .filter(|&d| !busy[d] && behavior.is_present(d, progress) && fleet[d].is_eligible(now))
+            .collect();
+        if idle.is_empty() {
+            return Ok(false);
+        }
+        let device = idle[self.rng.index(idle.len())];
+        self.busy[device] = true;
+        let tau = core.store.current_version();
+        let anchor = core.store.current().clone();
+        // Downlink + compute (scenario-slowed) + uplink, plus randomized
+        // check-in jitter; link latencies come from the device's tier.
+        let dev = &mut self.fleet[device];
+        let delay = self.rng.uniform(0.0, 0.05)
+            + self.behavior.link_latency(device, &mut self.rng)
+            + dev.compute_time(trainer.local_iters(), 50) * self.behavior.slowdown(device, progress)
+            + self.behavior.link_latency(device, &mut self.rng);
+        let (x_new, loss) = trainer.local_train(
+            &anchor,
+            if self.use_prox { Some(anchor.as_slice()) } else { None },
+            dev,
+            &self.data.train,
+            self.gamma,
+            self.rho,
+        )?;
+        self.queue.schedule_in(delay, Completion { device, tau, x_new, loss });
+        Ok(true)
+    }
+}
+
+impl<'a, T: Trainer> TimeDriver<T> for EventDriver<'a> {
+    fn clock(&self) -> Clock {
+        Clock::Versions
+    }
+
+    fn now(&mut self) -> f64 {
+        // Timestamp of the completion most recently popped.
+        self.queue.now()
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn start(&mut self, trainer: &T, core: &mut UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        for _ in 0..self.inflight {
+            let _ = self.assign(trainer, core, 0.0)?;
+        }
+        Ok(())
+    }
+
+    fn next_completion(
+        &mut self,
+        trainer: &T,
+        core: &mut UpdaterCore<'_>,
+        progress: f64,
+    ) -> Result<Option<Arrival>, RuntimeError> {
+        loop {
+            let Some(ev) = self.queue.pop() else {
+                // All devices ineligible and nothing in flight: retry
+                // assignment (one attempt decides — `assign` scans the
+                // whole fleet), else force-advance past the gap.
+                if !self.assign(trainer, core, progress)? {
+                    self.queue.schedule_in(1.0, Completion {
+                        device: usize::MAX,
+                        tau: core.store.current_version(),
+                        x_new: Vec::new(),
+                        loss: f32::NAN,
+                    });
+                }
+                continue;
+            };
+            if ev.payload.device == usize::MAX {
+                // Wake-up tick: try to assign again.
+                let _ = self.assign(trainer, core, progress)?;
+                continue;
+            }
+            let Completion { device, tau, x_new, loss } = ev.payload;
+            self.busy[device] = false;
+            return Ok(Some(Arrival { device, tau, x_new, loss }));
+        }
+    }
+
+    fn after_delivery(
+        &mut self,
+        trainer: &T,
+        core: &mut UpdaterCore<'_>,
+        _spent: Vec<f32>,
+        progress: f64,
+    ) -> Result<(), RuntimeError> {
+        // Keep the pipeline full.
+        let _ = self.assign(trainer, core, progress)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,281 @@
+//! The one execution engine: Algorithm 1's server loop, written once.
+//!
+//! The paper's loop is a single invariant sequence — a (possibly stale)
+//! update arrives, survives delivery, is mixed into the global model, and
+//! the result is published and measured.  What differs between the
+//! repo's three execution modes is only **how time advances** around that
+//! sequence: the sampled protocol fabricates one arrival per epoch, the
+//! discrete-event simulator pops them off a virtual-time queue, and the
+//! threaded server receives them from a real worker pool.  Before this
+//! module, each mode re-implemented the whole sequence; every new
+//! capability (scenario faults, eval-grid fixes) had to be hand-threaded
+//! through three loops and conformance-tested back into agreement.
+//!
+//! [`Engine::run`] owns the invariant sequence:
+//!
+//! 1. record the t = 0 metric row,
+//! 2. [`TimeDriver::start`] the substrate (spawn threads / pump tasks),
+//! 3. loop until the epoch target: take the next [`Arrival`] from the
+//!    driver, draw its delivery fate from the scenario's
+//!    [`ClientBehavior`], [`UpdaterCore::offer`] each surviving copy, and
+//!    record grid-aligned rows on the driver's [`Clock`],
+//! 4. [`TimeDriver::shutdown`] the substrate (drain + join) — run even
+//!    when the loop erred, so a failure never wedges worker threads.
+//!
+//! The drivers supply only the mode-specific physics:
+//!
+//! | driver                 | time substrate                   | [`Clock`]  |
+//! |------------------------|----------------------------------|------------|
+//! | [`SequentialDriver`]   | sampled staleness (paper §6)     | `Tasks`    |
+//! | [`EventDriver`]        | [`EventQueue`] virtual seconds   | `Versions` |
+//! | [`ThreadedDriver`]     | OS threads + channels, wallclock | `Versions` |
+//!
+//! Cross-mode conformance is therefore a property of construction: the
+//! delivery/offer/record path cannot drift between modes because it
+//! exists exactly once.  New modes (sharded multi-updater servers, new
+//! aggregation protocols) cost one driver, not three reimplementations.
+//!
+//! [`EventQueue`]: crate::federated::network::EventQueue
+
+pub mod event;
+pub mod sequential;
+pub mod threaded;
+
+pub use event::EventDriver;
+pub use sequential::SequentialDriver;
+pub use threaded::ThreadedDriver;
+
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::updater::UpdateOutcome;
+use crate::coordinator::Trainer;
+use crate::federated::metrics::MetricsLog;
+use crate::runtime::{ParamVec, RuntimeError};
+use crate::scenario::{ClientBehavior, Delivery};
+use crate::util::rng::Rng;
+
+/// A completed local-training result arriving at the server's doorstep.
+pub struct Arrival {
+    pub device: usize,
+    /// Global-model version the task trained from.
+    pub tau: u64,
+    pub x_new: ParamVec,
+    pub loss: f32,
+}
+
+/// How a driver's ticks map onto the run's epoch budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// One tick per *offered* task — the paper's sampled protocol: every
+    /// arrival advances t and lands a metric row, applied or dropped.
+    Tasks,
+    /// One tick per *applied* version — emergent/threaded servers: rows
+    /// land when the global model actually advances, and a delivery that
+    /// reaches the epoch target mid-copies stops there.
+    Versions,
+}
+
+/// Mode-specific physics around the invariant update sequence.
+///
+/// One driver instance runs one experiment; the engine calls the methods
+/// in a fixed order ([`TimeDriver::start`] once, then per arrival:
+/// `next_completion` → delivery draw via `rng` → `on_applied`/`now` per
+/// applied copy → `after_delivery`, and finally `shutdown` exactly once,
+/// error or not).
+pub trait TimeDriver<T: Trainer> {
+    /// How this driver's ticks count toward `cfg.epochs`.
+    fn clock(&self) -> Clock;
+
+    /// Simulation timestamp for the metric row about to record.
+    fn now(&mut self) -> f64;
+
+    /// Rng for the engine's delivery-fault draw.  Shared with the
+    /// driver's own draws so a sequential trace consumes one stream in
+    /// the exact order the paper's protocol does (golden-trace pinned).
+    fn rng(&mut self) -> &mut Rng;
+
+    /// Bring up the substrate (spawn threads, pump initial in-flight
+    /// tasks).  Called once, after the t = 0 row has recorded — so a
+    /// broken evaluator fails before any thread exists.
+    fn start(&mut self, trainer: &T, core: &mut UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        let _ = (trainer, core);
+        Ok(())
+    }
+
+    /// Produce the next completed local-training result, or `None` when
+    /// the substrate is exhausted (threaded: every worker exited).
+    fn next_completion(
+        &mut self,
+        trainer: &T,
+        core: &mut UpdaterCore<'_>,
+        progress: f64,
+    ) -> Result<Option<Arrival>, RuntimeError>;
+
+    /// An update was applied; runs before its metric row records
+    /// (threaded: publish the snapshot, recycle the evicted version).
+    fn on_applied(&mut self, core: &mut UpdaterCore<'_>, out: &UpdateOutcome) {
+        let _ = (core, out);
+    }
+
+    /// Wallclock seconds the engine just spent evaluating a metric row —
+    /// instrumentation, excluded from the threaded driver's `sim_time`.
+    fn note_eval_wall(&mut self, secs: f64) {
+        let _ = secs;
+    }
+
+    /// All copies of an arrival were delivered: reclaim the spent update
+    /// buffer and/or refill the pipeline.
+    fn after_delivery(
+        &mut self,
+        trainer: &T,
+        core: &mut UpdaterCore<'_>,
+        spent: ParamVec,
+        progress: f64,
+    ) -> Result<(), RuntimeError> {
+        let _ = (trainer, core, spent, progress);
+        Ok(())
+    }
+
+    /// Tear the substrate down (drain channels, join threads).  Runs
+    /// exactly once, even when the loop erred; its own error is reported
+    /// only if the loop succeeded.
+    fn shutdown(&mut self, core: &mut UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        let _ = core;
+        Ok(())
+    }
+}
+
+/// Algorithm 1 Option I/II switch: does local training anchor to the
+/// received global model, and with what ρ.
+pub(crate) fn prox_args(cfg: &ExperimentConfig) -> (bool, f32) {
+    match cfg.local_update {
+        crate::config::LocalUpdate::Sgd => (false, 0.0),
+        crate::config::LocalUpdate::Prox => (true, cfg.rho),
+    }
+}
+
+/// The single run loop every execution mode shares.
+pub struct Engine<'e, T: Trainer> {
+    trainer: &'e T,
+    cfg: &'e ExperimentConfig,
+    behavior: &'e dyn ClientBehavior,
+}
+
+impl<'e, T: Trainer> Engine<'e, T> {
+    pub fn new(
+        trainer: &'e T,
+        cfg: &'e ExperimentConfig,
+        behavior: &'e dyn ClientBehavior,
+    ) -> Engine<'e, T> {
+        Engine { trainer, cfg, behavior }
+    }
+
+    /// Run to the epoch target and hand back the metric series.
+    ///
+    /// `core` is the mode-configured updater core (history depth, buffer
+    /// pool); `driver` supplies the time substrate.  The driver is torn
+    /// down (`shutdown`) on success *and* on error.
+    pub fn run<D: TimeDriver<T>>(
+        &self,
+        mut core: UpdaterCore<'_>,
+        mut driver: D,
+    ) -> Result<MetricsLog, RuntimeError> {
+        let outcome = self.drive(&mut core, &mut driver);
+        let teardown = driver.shutdown(&mut core);
+        outcome?;
+        teardown?;
+        Ok(core.finish())
+    }
+
+    fn drive<D: TimeDriver<T>>(
+        &self,
+        core: &mut UpdaterCore<'_>,
+        driver: &mut D,
+    ) -> Result<(), RuntimeError> {
+        let epochs = self.cfg.epochs as u64;
+        self.record(core, driver, 0, 0.0, self.behavior.present_count(0.0))?;
+        driver.start(self.trainer, core)?;
+
+        // The sampled protocol's task counter; unused on `Versions` clocks.
+        let mut tasks_done: u64 = 0;
+        loop {
+            let ticks = match driver.clock() {
+                Clock::Tasks => tasks_done,
+                Clock::Versions => core.store.current_version(),
+            };
+            if ticks >= epochs {
+                break;
+            }
+            // Run progress p ∈ [0, 1] — the scenario's shared time axis.
+            // Task clocks look at the task being produced (t_next), version
+            // clocks at the model the arrival will land on.
+            let progress = match driver.clock() {
+                Clock::Tasks => (tasks_done + 1) as f64 / epochs as f64,
+                Clock::Versions => (ticks as f64 / epochs as f64).min(1.0),
+            };
+            let Some(arrival) = driver.next_completion(self.trainer, core, progress)? else {
+                break;
+            };
+            let Arrival { device, tau, x_new, loss } = arrival;
+
+            // Delivery faults happen at the server's doorstep — the same
+            // point in every mode.  A duplicate's second copy arrives
+            // after the first was processed, so it is one version staler
+            // whenever the first applied.
+            let copies = match self.behavior.delivery(device, progress, driver.rng()) {
+                Delivery::Drop => 0,
+                Delivery::Deliver => 1,
+                Delivery::Duplicate => 2,
+            };
+            for _ in 0..copies {
+                let out = core.offer(self.trainer, &x_new, tau, loss)?;
+                if driver.clock() == Clock::Versions {
+                    if out.applied {
+                        driver.on_applied(core, &out);
+                        let clients = self
+                            .behavior
+                            .present_count((out.version as f64 / epochs as f64).min(1.0));
+                        let now = driver.now();
+                        self.record(core, driver, out.version as usize, now, clients)?;
+                    }
+                    if core.store.current_version() >= epochs {
+                        // Target reached mid-delivery: skip the duplicate.
+                        break;
+                    }
+                }
+            }
+            if driver.clock() == Clock::Tasks {
+                // The sampled protocol rows on offered tasks, applied or
+                // not, with virtual time = the task counter.
+                tasks_done += 1;
+                let now = driver.now();
+                let clients = self.behavior.present_count(progress);
+                self.record(core, driver, tasks_done as usize, now, clients)?;
+            }
+            let refill_progress = match driver.clock() {
+                Clock::Tasks => progress,
+                Clock::Versions => (core.store.current_version() as f64 / epochs as f64).min(1.0),
+            };
+            driver.after_delivery(self.trainer, core, x_new, refill_progress)?;
+        }
+        Ok(())
+    }
+
+    /// Record a grid row, reporting the eval's wallclock to the driver
+    /// (instrumentation time is excluded from threaded `sim_time`).
+    fn record<D: TimeDriver<T>>(
+        &self,
+        core: &mut UpdaterCore<'_>,
+        driver: &mut D,
+        t: usize,
+        now: f64,
+        clients: usize,
+    ) -> Result<(), RuntimeError> {
+        let t0 = Instant::now();
+        core.record_at(self.trainer, t, now, clients)?;
+        driver.note_eval_wall(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+}

@@ -1,0 +1,122 @@
+//! Sequential time driver: the paper's sampled-staleness protocol.
+//!
+//! "We simulate the asynchrony by randomly sampling the staleness (t−τ)
+//! from a uniform distribution" — one task per epoch, fully deterministic
+//! given a seed.  The worker trains from the *retained historical* model
+//! `x_{t−s}` out of the [`ModelStore`] ring, so the driver needs a core
+//! whose history covers `max_staleness + 1` versions.
+//!
+//! The scenario's [`ClientBehavior`] shapes every step: it picks who
+//! trains (churn), biases how stale they read (tiers/bursts reshape the
+//! uniform draw), and — in the engine's shared delivery stage — whether
+//! the update arrives at all.  All draws come from one stream in protocol
+//! order, which is what keeps the golden sampled trace
+//! (`rust/tests/golden_trace.rs`) byte-identical across refactors.
+//!
+//! [`ModelStore`]: crate::coordinator::model_store::ModelStore
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::engine::{prox_args, Arrival, Clock, TimeDriver};
+use crate::coordinator::Trainer;
+use crate::federated::data::FederatedData;
+use crate::federated::device::SimDevice;
+use crate::runtime::RuntimeError;
+use crate::scenario::{pick_present, ClientBehavior};
+use crate::util::rng::Rng;
+
+/// One fabricated arrival per epoch, staleness drawn, anchor read from
+/// the model-history ring.
+pub struct SequentialDriver<'a> {
+    fleet: &'a mut [SimDevice],
+    data: &'a FederatedData,
+    behavior: &'a dyn ClientBehavior,
+    rng: Rng,
+    /// Counter of produced tasks; equals the engine's task clock.
+    t: u64,
+    max_staleness: u64,
+    use_prox: bool,
+    rho: f32,
+    gamma: f32,
+}
+
+impl<'a> SequentialDriver<'a> {
+    pub fn new(
+        cfg: &ExperimentConfig,
+        data: &'a FederatedData,
+        fleet: &'a mut [SimDevice],
+        behavior: &'a dyn ClientBehavior,
+        seed: u64,
+        max_staleness: u64,
+    ) -> SequentialDriver<'a> {
+        let (use_prox, rho) = prox_args(cfg);
+        SequentialDriver {
+            fleet,
+            data,
+            behavior,
+            rng: Rng::seed_from(seed ^ 0xFEDA_511C),
+            t: 0,
+            max_staleness,
+            use_prox,
+            rho,
+            gamma: cfg.gamma,
+        }
+    }
+}
+
+impl<'a, T: Trainer> TimeDriver<T> for SequentialDriver<'a> {
+    fn clock(&self) -> Clock {
+        Clock::Tasks
+    }
+
+    fn now(&mut self) -> f64 {
+        // Virtual time in this protocol *is* the task counter.
+        self.t as f64
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn next_completion(
+        &mut self,
+        trainer: &T,
+        core: &mut UpdaterCore<'_>,
+        progress: f64,
+    ) -> Result<Option<Arrival>, RuntimeError> {
+        self.t += 1;
+        let device = pick_present(self.fleet.len(), self.behavior, progress, &mut self.rng);
+        // Sample the population-shaped staleness, clamped to the available
+        // history.  (Both clamps matter once faults are in play: dropped
+        // deliveries leave the store's version *behind* the task counter,
+        // so a raw `t - s` could name a version that never existed;
+        // duplicate deliveries push it *ahead*, so `t - s` could have
+        // already been evicted from the ring.)
+        let s = self
+            .behavior
+            .sample_staleness(device, progress, self.max_staleness, &mut self.rng)
+            .min(self.t);
+        let tau = (self.t - s)
+            .clamp(core.store.oldest_version(), core.store.current_version());
+        // Borrow the historical model directly from the ring — the borrow
+        // ends with local_train, before the updater mutates the store, so
+        // no per-epoch P-sized clone is needed.
+        let anchor = core.store.get(tau).ok_or_else(|| {
+            RuntimeError::History(format!(
+                "version {tau} left the retention ring (current {}, oldest {})",
+                core.store.current_version(),
+                core.store.oldest_version()
+            ))
+        })?;
+        let dev = &mut self.fleet[device];
+        let (x_new, loss) = trainer.local_train(
+            anchor,
+            if self.use_prox { Some(anchor.as_slice()) } else { None },
+            dev,
+            &self.data.train,
+            self.gamma,
+            self.rho,
+        )?;
+        Ok(Some(Arrival { device, tau, x_new, loss }))
+    }
+}

@@ -1,0 +1,363 @@
+//! Threaded time driver: the Figure-1 topology on real OS threads.
+//!
+//! ```text
+//!            ┌────────────┐ tasks (bounded)  ┌─────────────┐
+//!            │ scheduler  │ ───────────────▶ │ worker pool │──┐
+//!            └────────────┘                  └─────────────┘  │ updates
+//!                  ▲  Arc snapshot (O(1))          │ compute  ▼ (bounded)
+//!            ┌─────┴──────────┐             ┌─────────────┐ ┌─────────┐
+//!            │ snapshot cell  │◀─ publish ─ │ compute     │ │ engine  │
+//!            │ (version, Arc) │    (O(1))   │ service     │ │ (this)  │
+//!            └────────────────┘             └─────────────┘ └─────────┘
+//! ```
+//!
+//! * **Scheduler** triggers training tasks on randomly chosen present
+//!   devices.  It reads `(x_t, t)` from the [`SnapshotCell`] — an `Arc`
+//!   clone, not a parameter copy — and the bounded task channel is the
+//!   back-pressure the paper's "randomize check-in times" provides.
+//! * **Workers** sleep the (scaled) simulated network latency, call into
+//!   the [`ComputeJob`] service (PJRT in production, a native mock in
+//!   tests), then push the completed [`Arrival`].
+//! * The **engine loop** plays the updater thread: [`TimeDriver`] hooks
+//!   publish each applied version back into the cell and recycle spent
+//!   buffers through the [`BufferPool`].
+//!
+//! Shutdown ([`TimeDriver::shutdown`]) drains the update channel until
+//! every worker has exited: draining unblocks workers stuck on the
+//! bounded update channel, which unblocks a scheduler stuck on a full
+//! task channel, letting it observe `stop` and close the pool.  Thread
+//! panics surface as [`RuntimeError::Thread`] instead of re-panicking
+//! (or deadlocking) the drain.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::engine::{prox_args, Arrival, Clock, TimeDriver};
+use crate::coordinator::server::ComputeJob;
+use crate::coordinator::snapshot::{BufferPool, SnapshotCell};
+use crate::coordinator::updater::UpdateOutcome;
+use crate::coordinator::Trainer;
+use crate::runtime::{ParamVec, RuntimeError};
+use crate::scenario::{pick_present, ClientBehavior};
+use crate::util::rng::Rng;
+
+/// Wallclock scaling for simulated latencies (1 virtual s = this many
+/// real s).  `sim_time` rows report *virtual* seconds — wallclock divided
+/// by this constant, with evaluation wallclock (which is not part of the
+/// simulated system) excluded — so threaded rows line up with the
+/// virtual-time modes.  Caveat: real PJRT *compute* time is inherently
+/// unscaled (it stands in for device compute), so on real artifacts
+/// threaded `sim_time` still over-counts compute by 1/`TIME_SCALE`
+/// relative to the event-driven simulator.
+pub const TIME_SCALE: f64 = 0.002;
+
+/// Virtual seconds elapsed since `started`, net of `eval_wall` seconds
+/// spent inside evaluation (inverse of the sleep scaling).
+fn virtual_elapsed(started: &Instant, eval_wall: f64) -> f64 {
+    (started.elapsed().as_secs_f64() - eval_wall).max(0.0) / TIME_SCALE
+}
+
+fn sleep_scaled(virtual_seconds: f64) {
+    let real = virtual_seconds * TIME_SCALE;
+    if real > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(real));
+    }
+}
+
+/// A scheduled training task (scheduler → worker).  `params` is an `Arc`
+/// clone of the published snapshot — 8 bytes on the wire, not O(P).
+struct Task {
+    device: usize,
+    tau: u64,
+    params: Arc<ParamVec>,
+}
+
+/// Scheduler ∥ worker-pool substrate behind a [`ComputeJob`] channel.
+pub struct ThreadedDriver {
+    behavior: Arc<dyn ClientBehavior>,
+    job_tx: Sender<ComputeJob>,
+    pool: Arc<BufferPool>,
+    cell: Arc<SnapshotCell>,
+    stop: Arc<AtomicBool>,
+    update_rx: Option<Receiver<Arrival>>,
+    scheduler: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    rng: Rng,
+    started: Instant,
+    eval_wall: f64,
+    seed: u64,
+    epochs: u64,
+    epochs_f: f64,
+    n_devices: usize,
+    worker_threads: usize,
+    max_inflight: usize,
+    prox: bool,
+    gamma: f32,
+    rho: f32,
+}
+
+impl ThreadedDriver {
+    /// Wire a driver over an already-running [`ComputeJob`] consumer.
+    /// No thread exists until [`TimeDriver::start`]; `cell` must hold the
+    /// core's initial model so the first scheduled tasks read version 0.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        seed: u64,
+        job_tx: Sender<ComputeJob>,
+        behavior: Arc<dyn ClientBehavior>,
+        pool: Arc<BufferPool>,
+        cell: Arc<SnapshotCell>,
+    ) -> ThreadedDriver {
+        let (prox, rho) = prox_args(cfg);
+        ThreadedDriver {
+            behavior,
+            job_tx,
+            pool,
+            cell,
+            stop: Arc::new(AtomicBool::new(false)),
+            update_rx: None,
+            scheduler: None,
+            workers: Vec::new(),
+            rng: Rng::seed_from(seed ^ 0x0DD5_FA17),
+            started: Instant::now(),
+            eval_wall: 0.0,
+            seed,
+            epochs: cfg.epochs as u64,
+            epochs_f: cfg.epochs as f64,
+            n_devices: cfg.federation.devices,
+            worker_threads: cfg.worker_threads,
+            max_inflight: cfg.max_inflight.max(1),
+            prox,
+            gamma: cfg.gamma,
+            rho,
+        }
+    }
+}
+
+impl<T: Trainer> TimeDriver<T> for ThreadedDriver {
+    fn clock(&self) -> Clock {
+        Clock::Versions
+    }
+
+    fn now(&mut self) -> f64 {
+        virtual_elapsed(&self.started, self.eval_wall)
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn note_eval_wall(&mut self, secs: f64) {
+        self.eval_wall += secs;
+    }
+
+    fn start(&mut self, _trainer: &T, _core: &mut UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        // send blocks when max_inflight tasks are outstanding — this is
+        // the scheduler's congestion control.
+        let (task_tx, task_rx) = sync_channel::<Task>(self.max_inflight);
+        let task_rx = Arc::new(Mutex::new(task_rx));
+        let (update_tx, update_rx) = sync_channel::<Arrival>(self.max_inflight);
+        self.update_rx = Some(update_rx);
+
+        for w in 0..self.worker_threads {
+            let task_rx = Arc::clone(&task_rx);
+            let update_tx = update_tx.clone();
+            let job_tx = self.job_tx.clone();
+            let behavior = Arc::clone(&self.behavior);
+            let (prox, gamma, rho) = (self.prox, self.gamma, self.rho);
+            let epochs_f = self.epochs_f;
+            let wseed = self.seed ^ (0xAB00 + w as u64);
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || {
+                    worker_loop(
+                        task_rx, update_tx, job_tx, behavior, prox, gamma, rho, epochs_f, wseed,
+                    )
+                })
+                .map_err(|e| RuntimeError::Thread(format!("spawn worker-{w}: {e}")))?;
+            self.workers.push(handle);
+        }
+        drop(update_tx); // engine sees EOF when all workers exit
+
+        let cell = Arc::clone(&self.cell);
+        let stop = Arc::clone(&self.stop);
+        let behavior = Arc::clone(&self.behavior);
+        let (n_devices, epochs_f) = (self.n_devices, self.epochs_f);
+        let sched_seed = self.seed ^ 0x5CED;
+        self.scheduler = Some(
+            std::thread::Builder::new()
+                .name("scheduler".into())
+                .spawn(move || {
+                    let mut rng = Rng::seed_from(sched_seed);
+                    while !stop.load(Ordering::Relaxed) {
+                        // O(1) snapshot: version + Arc clone, no parameter
+                        // copy, no waiting on an in-progress mix.
+                        let snap = cell.load();
+                        // Only trigger devices the scenario has present.
+                        let p = (snap.version as f64 / epochs_f).min(1.0);
+                        let device = pick_present(n_devices, behavior.as_ref(), p, &mut rng);
+                        // Randomized check-in: jitter before each trigger.
+                        sleep_scaled(rng.uniform(0.0, 0.02));
+                        if task_tx
+                            .send(Task { device, tau: snap.version, params: snap.params })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    // Dropping task_tx closes the pool.
+                })
+                .map_err(|e| RuntimeError::Thread(format!("spawn scheduler: {e}")))?,
+        );
+        Ok(())
+    }
+
+    fn next_completion(
+        &mut self,
+        _trainer: &T,
+        _core: &mut UpdaterCore<'_>,
+        _progress: f64,
+    ) -> Result<Option<Arrival>, RuntimeError> {
+        let rx = self.update_rx.as_ref().ok_or_else(|| {
+            RuntimeError::Channel("threaded driver used before start".into())
+        })?;
+        // Disconnect means every worker exited; `shutdown` decides whether
+        // that was the epoch target or a compute-service failure.
+        Ok(rx.recv().ok())
+    }
+
+    fn on_applied(&mut self, core: &mut UpdaterCore<'_>, out: &UpdateOutcome) {
+        // Publish outside any O(P) critical section: the mix already
+        // produced the new vector, this is a pointer swap.
+        self.cell.publish(out.version, core.store.current_arc());
+        // The publish released the cell's hold on the previous version;
+        // reclaim its storage unless a worker still has it.
+        if let Some(buf) = core.store.take_evicted() {
+            self.pool.release(buf);
+        }
+    }
+
+    fn after_delivery(
+        &mut self,
+        _trainer: &T,
+        _core: &mut UpdaterCore<'_>,
+        spent: ParamVec,
+        _progress: f64,
+    ) -> Result<(), RuntimeError> {
+        // The update buffer is consumed; hand it back for reuse.
+        self.pool.release(spent);
+        Ok(())
+    }
+
+    fn shutdown(&mut self, core: &mut UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        self.stop.store(true, Ordering::Relaxed);
+        // Keep draining updates until every worker has exited (the channel
+        // disconnects): this unblocks workers stuck on the bounded update
+        // channel, which in turn unblocks a scheduler stuck on a full task
+        // channel, letting it observe `stop` and close the pool.
+        if let Some(rx) = self.update_rx.take() {
+            loop {
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(update) => self.pool.release(update.x_new),
+                    Err(RecvTimeoutError::Timeout) => {} // workers mid-compute
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        let mut panicked: Option<&'static str> = None;
+        if let Some(h) = self.scheduler.take() {
+            if h.join().is_err() {
+                panicked = Some("scheduler");
+            }
+        }
+        for h in self.workers.drain(..) {
+            if h.join().is_err() && panicked.is_none() {
+                panicked = Some("worker");
+            }
+        }
+        if let Some(who) = panicked {
+            return Err(RuntimeError::Thread(format!("{who} thread panicked")));
+        }
+        if core.store.current_version() < self.epochs {
+            // The update channel disconnected before the target: every
+            // worker bailed out, which only happens when the compute
+            // service failed.
+            return Err(RuntimeError::Channel(format!(
+                "workers exited after {} of {} epochs (compute service failure)",
+                core.store.current_version(),
+                self.epochs
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Worker body: sleep the scenario's link latencies, train through the
+/// compute service, push the completed arrival.  Exits when any channel
+/// closes.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    task_rx: Arc<Mutex<Receiver<Task>>>,
+    update_tx: SyncSender<Arrival>,
+    job_tx: Sender<ComputeJob>,
+    behavior: Arc<dyn ClientBehavior>,
+    prox: bool,
+    gamma: f32,
+    rho: f32,
+    epochs_f: f64,
+    seed: u64,
+) {
+    let mut rng = Rng::seed_from(seed);
+    loop {
+        let task = {
+            // A sibling worker panicking mid-recv poisons the mutex; the
+            // receiver itself is still consistent, so recover it.
+            let guard = match task_rx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            match guard.recv() {
+                Ok(t) => t,
+                Err(_) => return, // scheduler gone: drain out
+            }
+        };
+        // Tier link latency × tier/burst slowdown: the scenario's
+        // per-task sleeps (compute itself is real wallclock behind the
+        // service thread, so slow devices are modelled entirely in the
+        // link sleeps here).
+        let p = (task.tau as f64 / epochs_f).min(1.0);
+        let slow = behavior.slowdown(task.device, p);
+        // Downlink latency.
+        sleep_scaled(behavior.link_latency(task.device, &mut rng) * slow);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if job_tx
+            .send(ComputeJob::Train {
+                device: task.device,
+                params: task.params,
+                prox,
+                gamma,
+                rho,
+                reply: reply_tx,
+            })
+            .is_err()
+        {
+            return;
+        }
+        let Ok(Ok((x_new, loss))) = reply_rx.recv() else {
+            return;
+        };
+        // Uplink latency.
+        sleep_scaled(behavior.link_latency(task.device, &mut rng) * slow);
+        if update_tx
+            .send(Arrival { device: task.device, tau: task.tau, x_new, loss })
+            .is_err()
+        {
+            return;
+        }
+    }
+}

@@ -1,11 +1,15 @@
 //! Layer-3 coordinator: the paper's system contribution.
 //!
-//! * [`virtual_mode`] — the paper's evaluation protocol (Algorithm 1 run
-//!   sequentially with sampled or emergent staleness on virtual time).
-//! * [`server`] — the Figure-1 architecture on real threads: scheduler ∥
-//!   updater ∥ worker pool over channels, global model published through a
-//!   snapshot cell whose critical sections are O(1) — readers clone an
-//!   `Arc`, never the parameter vector.
+//! * [`engine`] — the one execution engine: Algorithm 1's invariant
+//!   update sequence written once, parameterized by a `TimeDriver`
+//!   (sequential sampled staleness, discrete-event virtual time, or the
+//!   real-thread server).
+//! * [`virtual_mode`] — thin constructors for the two virtual-time
+//!   drivers (the paper's evaluation protocol).
+//! * [`server`] — thin constructor for the Figure-1 architecture on real
+//!   threads, plus the PJRT/native compute-service plumbing; the global
+//!   model is published through a snapshot cell whose critical sections
+//!   are O(1) — readers clone an `Arc`, never the parameter vector.
 //! * [`core`] — the one shared updater core (α decision + mix + history +
 //!   accounting) every execution mode routes through.
 //! * [`fedavg`] / [`sgd`] — the paper's baselines (Algorithms 2 and 3).
@@ -21,6 +25,7 @@
 //! paper's Theorems 1–2 against the true optimality gap).
 
 pub mod core;
+pub mod engine;
 pub mod fedavg;
 pub mod model_store;
 pub mod recorder;

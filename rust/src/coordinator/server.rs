@@ -1,56 +1,40 @@
-//! The Figure-1 FedAsync server on real OS threads.
+//! The Figure-1 FedAsync server on real OS threads: a thin constructor
+//! over the execution [`engine`](super::engine)'s [`ThreadedDriver`].
 //!
-//! ```text
-//!            ┌────────────┐ tasks (bounded)  ┌─────────────┐
-//!            │ scheduler  │ ───────────────▶ │ worker pool │──┐
-//!            └────────────┘                  └─────────────┘  │ updates
-//!                  ▲  Arc snapshot (O(1))          │ compute  ▼ (bounded)
-//!            ┌─────┴──────────┐             ┌─────────────┐ ┌─────────┐
-//!            │ snapshot cell  │◀─ publish ─ │ PJRT compute│ │ updater │
-//!            │ (version, Arc) │    (O(1))   │ service     │ │  core   │
-//!            └────────────────┘             └─────────────┘ └─────────┘
-//! ```
-//!
-//! * **Scheduler** triggers training tasks on randomly chosen devices.
-//!   It reads `(x_t, t)` from the [`SnapshotCell`] — an `Arc` clone, not a
-//!   parameter copy, so snapshotting costs O(1) regardless of model size
-//!   and never contends with the updater's math.  The bounded task channel
-//!   is the back-pressure the paper's "randomize check-in times" provides.
-//! * **Workers** sleep the (scaled) simulated network/compute latency,
-//!   call into the PJRT **compute service** (a dedicated thread owning the
-//!   non-`Send` [`ModelRuntime`]), then push `(x_new, τ)`.
-//! * **Updater** routes every update through the shared [`UpdaterCore`]
-//!   (the same α/drop/accounting/eval-grid code virtual mode runs), mixes
-//!   into a fresh vector *outside* any lock, publishes the result as a new
-//!   snapshot, and recycles the consumed update buffer through a
-//!   [`BufferPool`].  `bench_updater` measures the old clone-under-RwLock
-//!   handoff against this path.
+//! This module owns what is PJRT- and artifact-specific — the
+//! [`ComputeJob`] protocol, the compute-service thread bodies, and the
+//! `ServiceTrainer` facade the engine evaluates through — while the
+//! scheduler ∥ worker ∥ updater topology itself (channels, snapshot
+//! cell, buffer pool, shutdown drain) lives in
+//! [`engine::threaded`](super::engine::threaded), sharing the engine's
+//! invariant update sequence with both virtual-time modes.
 //!
 //! The channel/thread topology is model-agnostic: [`run_server_core`]
 //! takes any [`ComputeJob`] consumer, so tests and benches drive the full
-//! scheduler/worker/updater machinery with a native mock service while
-//! [`run_threaded`] plugs in PJRT (see `rust/tests/server_core.rs`).
+//! machinery with a native mock service (see `rust/tests/server_core.rs`)
+//! while [`run_threaded`] plugs in PJRT.
 //!
 //! On a 1-core machine the PJRT service serializes model math, so threads
 //! mode demonstrates architecture + measures coordination costs rather
 //! than wallclock speedups (DESIGN.md §Substitutions).
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, sync_channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::engine::{Engine, ThreadedDriver};
 use crate::coordinator::snapshot::{BufferPool, SnapshotCell};
 use crate::coordinator::Trainer;
 use crate::federated::data::{Dataset, FederatedData};
 use crate::federated::device::{AvailabilityModel, SimDevice};
 use crate::federated::metrics::MetricsLog;
 use crate::runtime::{EvalMetrics, ModelRuntime, ParamVec, RuntimeError};
-use crate::scenario::{behavior_for, pick_present, ClientBehavior, Delivery};
+use crate::scenario::{behavior_for, ClientBehavior};
 use crate::util::rng::Rng;
+
+pub use crate::coordinator::engine::threaded::TIME_SCALE;
 
 /// Jobs handled by the compute-service thread (PJRT in production; tests
 /// and benches plug in a native mock — see [`run_server_core`]).
@@ -69,38 +53,6 @@ pub enum ComputeJob {
         params: Arc<ParamVec>,
         reply: Sender<Result<EvalMetrics, String>>,
     },
-}
-
-/// A scheduled training task (scheduler → worker).  `params` is an `Arc`
-/// clone of the published snapshot — 8 bytes on the wire, not O(P).
-struct Task {
-    device: usize,
-    tau: u64,
-    params: Arc<ParamVec>,
-}
-
-/// A completed local update (worker → updater).
-struct Update {
-    device: usize,
-    tau: u64,
-    x_new: ParamVec,
-    loss: f32,
-}
-
-/// Wallclock scaling for simulated latencies (1 virtual s = this many
-/// real s).  `sim_time` rows report *virtual* seconds — wallclock divided
-/// by this constant, with evaluation wallclock (which is not part of the
-/// simulated system) excluded — so threaded rows line up with the
-/// virtual-time modes.  Caveat: real PJRT *compute* time is inherently
-/// unscaled (it stands in for device compute), so on real artifacts
-/// threaded `sim_time` still over-counts compute by 1/`TIME_SCALE`
-/// relative to the event-driven simulator.
-pub const TIME_SCALE: f64 = 0.002;
-
-/// Virtual seconds elapsed since `started`, net of `eval_wall` seconds
-/// spent inside evaluation (inverse of the sleep scaling).
-fn virtual_elapsed(started: &Instant, eval_wall: f64) -> f64 {
-    (started.elapsed().as_secs_f64() - eval_wall).max(0.0) / TIME_SCALE
 }
 
 /// Run the threaded FedAsync server; blocks until `cfg.epochs` updates.
@@ -127,10 +79,10 @@ pub fn run_threaded(
     let svc = std::thread::Builder::new()
         .name("pjrt-compute".into())
         .spawn(move || compute_service(svc_dir, svc_data, svc_assignment, svc_seed, job_rx, ready_tx))
-        .expect("spawn compute service");
+        .map_err(|e| RuntimeError::Thread(format!("spawn compute service: {e}")))?;
     let h = match ready_rx
         .recv()
-        .map_err(|_| RuntimeError::Load("compute service died during load".into()))
+        .map_err(|_| RuntimeError::Channel("compute service died during load".into()))
         .and_then(|r| r.map_err(RuntimeError::Load))
     {
         Ok(h) => h,
@@ -154,16 +106,18 @@ pub fn run_threaded(
 
     let behavior = behavior_for(cfg, cfg.federation.devices, seed);
     let log = run_server_core(cfg, seed, &data.test, init, h, job_tx, behavior);
-    svc.join().expect("compute service join");
-    log
+    let joined = svc.join();
+    let log = log?;
+    joined.map_err(|_| RuntimeError::Thread("compute service panicked".into()))?;
+    Ok(log)
 }
 
-/// `Trainer` facade over the compute-service channel: the updater thread
-/// evaluates through it so [`UpdaterCore`]'s grid recording works
-/// unchanged.  Training goes through the worker pool, never through here.
+/// `Trainer` facade over the compute-service channel: the engine's
+/// updater loop evaluates through it so [`UpdaterCore`]'s grid recording
+/// works unchanged.  Training goes through the worker pool, never here.
 ///
 /// Holds the snapshot cell so evaluation ships the already-published
-/// `Arc` instead of copying the parameter vector — the updater always
+/// `Arc` instead of copying the parameter vector — the engine always
 /// publishes before recording, so the cell's model *is* the one under
 /// evaluation (debug-asserted).
 struct ServiceTrainer {
@@ -206,10 +160,10 @@ impl Trainer for ServiceTrainer {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.job_tx
             .send(ComputeJob::Eval { params: snap.params, reply: reply_tx })
-            .map_err(|_| RuntimeError::Load("compute service closed".into()))?;
+            .map_err(|_| RuntimeError::Channel("compute service closed".into()))?;
         reply_rx
             .recv()
-            .map_err(|_| RuntimeError::Load("compute service died".into()))?
+            .map_err(|_| RuntimeError::Channel("compute service died".into()))?
             .map_err(RuntimeError::Load)
     }
 
@@ -219,19 +173,14 @@ impl Trainer for ServiceTrainer {
 }
 
 /// The full scheduler ∥ workers ∥ updater topology against an arbitrary
-/// [`ComputeJob`] consumer.
+/// [`ComputeJob`] consumer: build the pooled core + snapshot cell, wire a
+/// [`ThreadedDriver`] over `job_tx`, and hand both to the shared engine.
 ///
 /// `job_tx` must be connected to a running service thread that answers
-/// `Train` and `Eval` jobs; `h` is the service's local iterations per task
-/// (for gradient accounting); `test` only flows back out in the metric
-/// rows (evaluation itself happens service-side).  `behavior` is the
-/// scenario's client population, consulted in three places: the scheduler
-/// skips absent devices (churn), workers scale their simulated link sleeps
-/// by the device's tier/burst slowdown, and the updater applies delivery
-/// faults before offering to the core — the same three touch points the
-/// virtual modes use.  Public so integration tests and benches can
-/// exercise shutdown/drain and the snapshot path with a native mock
-/// service — no PJRT required.
+/// `Train` and `Eval` jobs; `h` is the service's local iterations per
+/// task (for gradient accounting).  Public so integration tests and
+/// benches can exercise shutdown/drain and the snapshot path with a
+/// native mock service — no PJRT required.
 pub fn run_server_core(
     cfg: &ExperimentConfig,
     seed: u64,
@@ -241,212 +190,12 @@ pub fn run_server_core(
     job_tx: mpsc::Sender<ComputeJob>,
     behavior: Arc<dyn ClientBehavior>,
 ) -> Result<MetricsLog, RuntimeError> {
-    // ------------------------------------------------- shared updater core
     let pool = Arc::new(BufferPool::new(cfg.max_inflight.max(1) + 2));
-    let mut core = UpdaterCore::new(cfg, init, 1, test, Some(Arc::clone(&pool)));
+    let core = UpdaterCore::new(cfg, init, 1, test, Some(Arc::clone(&pool)));
     let cell = Arc::new(SnapshotCell::new(0, core.store.current_arc()));
-    let stop = Arc::new(AtomicBool::new(false));
-    let svc_trainer =
-        ServiceTrainer { job_tx: job_tx.clone(), cell: Arc::clone(&cell), h };
-    let started = Instant::now();
-    let epochs_f = cfg.epochs as f64;
-    // Wallclock spent evaluating — excluded from sim_time (evaluation is
-    // instrumentation, not part of the simulated system).
-    let mut eval_wall = 0.0f64;
-
-    // Row at t=0 (before any thread exists, so an eval error exits clean).
-    let t0 = Instant::now();
-    core.record_at(&svc_trainer, 0, 0.0, behavior.present_count(0.0))?;
-    eval_wall += t0.elapsed().as_secs_f64();
-
-    // ------------------------------------------------------------ workers
-    let (task_tx, task_rx) = sync_channel::<Task>(cfg.max_inflight.max(1));
-    let task_rx = Arc::new(Mutex::new(task_rx));
-    let (update_tx, update_rx) = sync_channel::<Update>(cfg.max_inflight.max(1));
-
-    let prox = cfg.local_update == crate::config::LocalUpdate::Prox;
-    let mut worker_handles = Vec::new();
-    for w in 0..cfg.worker_threads {
-        let task_rx = Arc::clone(&task_rx);
-        let update_tx = update_tx.clone();
-        let job_tx = job_tx.clone();
-        let wbehavior = Arc::clone(&behavior);
-        let gamma = cfg.gamma;
-        let rho = cfg.rho;
-        let wseed = seed ^ (0xAB00 + w as u64);
-        let handle = std::thread::Builder::new()
-            .name(format!("worker-{w}"))
-            .spawn(move || {
-                let mut rng = Rng::seed_from(wseed);
-                loop {
-                    let task = {
-                        let guard = task_rx.lock().expect("task channel lock");
-                        match guard.recv() {
-                            Ok(t) => t,
-                            Err(_) => return, // scheduler gone: drain out
-                        }
-                    };
-                    // Tier link latency × tier/burst slowdown: the
-                    // scenario's per-task sleeps (compute itself is real
-                    // wallclock behind the service thread, so slow devices
-                    // are modelled entirely in the link sleeps here).
-                    let p = (task.tau as f64 / epochs_f).min(1.0);
-                    let slow = wbehavior.slowdown(task.device, p);
-                    // Downlink latency.
-                    sleep_scaled(wbehavior.link_latency(task.device, &mut rng) * slow);
-                    let (reply_tx, reply_rx) = mpsc::channel();
-                    if job_tx
-                        .send(ComputeJob::Train {
-                            device: task.device,
-                            params: task.params,
-                            prox,
-                            gamma,
-                            rho,
-                            reply: reply_tx,
-                        })
-                        .is_err()
-                    {
-                        return;
-                    }
-                    let Ok(Ok((x_new, loss))) = reply_rx.recv() else {
-                        return;
-                    };
-                    // Uplink latency.
-                    sleep_scaled(wbehavior.link_latency(task.device, &mut rng) * slow);
-                    if update_tx
-                        .send(Update { device: task.device, tau: task.tau, x_new, loss })
-                        .is_err()
-                    {
-                        return;
-                    }
-                }
-            })
-            .expect("spawn worker");
-        worker_handles.push(handle);
-    }
-    drop(update_tx); // updater sees EOF when all workers exit
-
-    // ---------------------------------------------------------- scheduler
-    let sched_cell = Arc::clone(&cell);
-    let sched_stop = Arc::clone(&stop);
-    let sched_behavior = Arc::clone(&behavior);
-    let n_devices = cfg.federation.devices;
-    let sched_seed = seed ^ 0x5CED;
-    let scheduler = std::thread::Builder::new()
-        .name("scheduler".into())
-        .spawn(move || {
-            let mut rng = Rng::seed_from(sched_seed);
-            while !sched_stop.load(Ordering::Relaxed) {
-                // O(1) snapshot: version + Arc clone, no parameter copy,
-                // no waiting on an in-progress mix.
-                let snap = sched_cell.load();
-                // Only trigger devices the scenario has present right now.
-                let p = (snap.version as f64 / epochs_f).min(1.0);
-                let device = pick_present(n_devices, sched_behavior.as_ref(), p, &mut rng);
-                // Randomized check-in: jitter before each trigger.
-                sleep_scaled(rng.uniform(0.0, 0.02));
-                // send blocks when max_inflight tasks are outstanding —
-                // this is the scheduler's congestion control.
-                if task_tx
-                    .send(Task { device, tau: snap.version, params: snap.params })
-                    .is_err()
-                {
-                    return;
-                }
-            }
-            // Dropping task_tx closes the pool.
-        })
-        .expect("spawn scheduler");
-
-    // ---------------------------------------------- updater (this thread)
-    let mut upd_rng = Rng::seed_from(seed ^ 0x0DD5_FA17);
-    let mut run_err: Option<RuntimeError> = None;
-    'updates: while let Ok(update) = update_rx.recv() {
-        // Delivery faults happen at the server's doorstep — identical to
-        // where the virtual modes apply them.
-        let p = (core.store.current_version() as f64 / epochs_f).min(1.0);
-        let copies = match behavior.delivery(update.device, p, &mut upd_rng) {
-            Delivery::Drop => 0,
-            Delivery::Deliver => 1,
-            Delivery::Duplicate => 2,
-        };
-        for _ in 0..copies {
-            // One shared core: α decision, mix, version bump, accounting —
-            // identical to virtual mode's semantics by construction.
-            let out = match core.offer(&svc_trainer, &update.x_new, update.tau, update.loss) {
-                Ok(out) => out,
-                Err(e) => {
-                    run_err = Some(e);
-                    break 'updates;
-                }
-            };
-            if out.applied {
-                // Publish outside any O(P) critical section: the mix
-                // already produced the new vector, this is a pointer swap.
-                cell.publish(out.version, core.store.current_arc());
-                // The publish released the cell's hold on the previous
-                // version; reclaim its storage unless a worker still has
-                // it.
-                if let Some(buf) = core.store.take_evicted() {
-                    pool.release(buf);
-                }
-                let sim_now = virtual_elapsed(&started, eval_wall);
-                let clients =
-                    behavior.present_count((out.version as f64 / epochs_f).min(1.0));
-                let t0 = Instant::now();
-                if let Err(e) =
-                    core.record_at(&svc_trainer, out.version as usize, sim_now, clients)
-                {
-                    run_err = Some(e);
-                    break 'updates;
-                }
-                eval_wall += t0.elapsed().as_secs_f64();
-            }
-            if core.store.current_version() as usize >= cfg.epochs {
-                // Target reached mid-delivery: don't apply a second copy.
-                break;
-            }
-        }
-        // The update buffer is consumed; hand it back for reuse.
-        pool.release(update.x_new);
-        if core.store.current_version() as usize >= cfg.epochs {
-            break;
-        }
-    }
-
-    // ----------------------------------------------------------- shutdown
-    stop.store(true, Ordering::Relaxed);
-    // Keep draining updates until every worker has exited (the channel
-    // disconnects): this unblocks workers stuck on the bounded update
-    // channel, which in turn unblocks a scheduler stuck on a full task
-    // channel, letting it observe `stop` and close the pool.
-    loop {
-        use std::sync::mpsc::RecvTimeoutError;
-        match update_rx.recv_timeout(std::time::Duration::from_millis(100)) {
-            Ok(update) => pool.release(update.x_new),
-            Err(RecvTimeoutError::Timeout) => {} // workers may be mid-compute
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    scheduler.join().expect("scheduler join");
-    for hdl in worker_handles {
-        hdl.join().expect("worker join");
-    }
-    drop(svc_trainer); // release our job_tx clones: service sees EOF
-    drop(job_tx);
-    if let Some(e) = run_err {
-        return Err(e);
-    }
-    if core.store.current_version() < cfg.epochs as u64 {
-        // The update channel disconnected before the target: every worker
-        // bailed out, which only happens when the compute service failed.
-        return Err(RuntimeError::Load(format!(
-            "workers exited after {} of {} epochs (compute service failure)",
-            core.store.current_version(),
-            cfg.epochs
-        )));
-    }
-    Ok(core.finish())
+    let svc_trainer = ServiceTrainer { job_tx: job_tx.clone(), cell: Arc::clone(&cell), h };
+    let driver = ThreadedDriver::new(cfg, seed, job_tx, Arc::clone(&behavior), pool, cell);
+    Engine::new(&svc_trainer, cfg, behavior.as_ref()).run(core, driver)
 }
 
 /// Answer [`ComputeJob`]s with an in-process [`Trainer`] over a trivial
@@ -520,12 +269,5 @@ fn compute_service(
                 let _ = reply.send(result);
             }
         }
-    }
-}
-
-fn sleep_scaled(virtual_seconds: f64) {
-    let real = virtual_seconds * TIME_SCALE;
-    if real > 0.0 {
-        std::thread::sleep(std::time::Duration::from_secs_f64(real));
     }
 }

@@ -48,14 +48,19 @@ impl SnapshotCell {
     }
 
     /// Current `(t, x_t)`; O(1) — clones the `Arc`, never the parameters.
+    ///
+    /// Poisoning is recovered rather than propagated: `publish` runs no
+    /// user code between its two field writes, so a thread that panicked
+    /// while holding the lock cannot have left a torn snapshot — and a
+    /// panicking reader must not cascade into every other thread.
     pub fn load(&self) -> ModelSnapshot {
-        self.slot.read().expect("snapshot cell poisoned").clone()
+        self.slot.read().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// Install a new model; O(1) — the caller built `params` outside the
     /// cell, so writers never hold the lock across O(P) work.
     pub fn publish(&self, version: u64, params: Arc<ParamVec>) {
-        let mut slot = self.slot.write().expect("snapshot cell poisoned");
+        let mut slot = self.slot.write().unwrap_or_else(|p| p.into_inner());
         slot.version = version;
         slot.params = params;
     }
@@ -79,7 +84,7 @@ impl BufferPool {
 
     /// A zeroed buffer of `len` elements, recycled when possible.
     pub fn acquire(&self, len: usize) -> ParamVec {
-        let recycled = self.free.lock().expect("buffer pool poisoned").pop();
+        let recycled = self.free.lock().unwrap_or_else(|p| p.into_inner()).pop();
         match recycled {
             Some(mut v) => {
                 v.clear();
@@ -93,7 +98,7 @@ impl BufferPool {
     /// An *empty* buffer with capacity for `len` elements — for writers
     /// that overwrite the whole buffer anyway (skips the zero-fill).
     pub fn acquire_clear(&self, len: usize) -> ParamVec {
-        let recycled = self.free.lock().expect("buffer pool poisoned").pop();
+        let recycled = self.free.lock().unwrap_or_else(|p| p.into_inner()).pop();
         match recycled {
             Some(mut v) => {
                 v.clear();
@@ -106,7 +111,7 @@ impl BufferPool {
 
     /// Return a buffer to the pool (dropped if the pool is full).
     pub fn release(&self, v: ParamVec) {
-        let mut free = self.free.lock().expect("buffer pool poisoned");
+        let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
         if free.len() < self.capacity {
             free.push(v);
         }
@@ -114,7 +119,7 @@ impl BufferPool {
 
     /// Buffers currently parked in the pool.
     pub fn pooled(&self) -> usize {
-        self.free.lock().expect("buffer pool poisoned").len()
+        self.free.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 }
 

@@ -47,20 +47,52 @@ pub const SHARD_MIN_LEN: usize = 1 << 15;
 ///
 /// The mix is memory-bandwidth-bound, so this only wins on multi-core
 /// servers with models large enough to amortize thread spawn (CNN-sized
-/// vectors and up); small inputs and `shards <= 1` fall back to the fused
-/// single-thread loop.  `bench_updater` measures the crossover.
+/// vectors and up).  The requested shard count is clamped to the
+/// machine's available parallelism *and* to `len / SHARD_MIN_LEN`, so
+/// oversharded calls never spawn threads a core can't run and every
+/// chunk clears the [`SHARD_MIN_LEN`] floor; the final chunk (the only
+/// one the ceiling division can leave sub-threshold) runs on the calling
+/// thread while the spawned shards work.  `bench_updater` measures the
+/// crossover.
 pub fn mix_inplace_sharded(x: &mut [f32], y: &[f32], alpha: f32, shards: usize) {
     debug_assert_eq!(x.len(), y.len());
-    let shards = shards.max(1).min(x.len().max(1));
-    if shards <= 1 || x.len() < SHARD_MIN_LEN {
+    // Length cap first, so the serial path (small vectors, shards <= 1)
+    // never pays the parallelism probe at all.
+    let shards = shards.max(1).min((x.len() / SHARD_MIN_LEN).max(1));
+    if shards <= 1 {
+        return mix_inplace(x, y, alpha);
+    }
+    let shards = shards.min(hw_threads());
+    if shards <= 1 {
         return mix_inplace(x, y, alpha);
     }
     let chunk = (x.len() + shards - 1) / shards;
+    let last = (x.len() - 1) / chunk;
     std::thread::scope(|s| {
-        for (xc, yc) in x.chunks_mut(chunk).zip(y.chunks(chunk)) {
-            s.spawn(move || mix_inplace(xc, yc, alpha));
+        for (i, (xc, yc)) in x.chunks_mut(chunk).zip(y.chunks(chunk)).enumerate() {
+            if i == last {
+                mix_inplace(xc, yc, alpha);
+            } else {
+                s.spawn(move || mix_inplace(xc, yc, alpha));
+            }
         }
     });
+}
+
+/// [`std::thread::available_parallelism`] is "not guaranteed to be cheap"
+/// (it probes affinity masks / cgroup quotas), so cache it once — the
+/// value is effectively static for a server process.
+fn hw_threads() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static HW: AtomicUsize = AtomicUsize::new(0);
+    match HW.load(Ordering::Relaxed) {
+        0 => {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            HW.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
 }
 
 /// Out-of-place native mix: writes `(1−α)·x + α·y` into a fresh vector.
@@ -232,9 +264,10 @@ mod tests {
 
     #[test]
     fn sharded_mix_matches_serial_at_every_shard_count() {
-        // Cover both the serial fallback (small n) and the threaded path
-        // (n >= SHARD_MIN_LEN), including a chunk-remainder case.
-        for n in [1024usize, SHARD_MIN_LEN + 7] {
+        // Cover the serial fallback (small n), a length the per-chunk
+        // floor forces serial (MIN..2·MIN), and the threaded path
+        // (n >= 2·SHARD_MIN_LEN on multi-core), with chunk remainders.
+        for n in [1024usize, SHARD_MIN_LEN + 7, 2 * SHARD_MIN_LEN + 7] {
             let x0: Vec<f32> = (0..n).map(|i| (i % 17) as f32 - 8.0).collect();
             let y: Vec<f32> = (0..n).map(|i| (i % 13) as f32).collect();
             let mut serial = x0.clone();

@@ -1,41 +1,37 @@
-//! FedAsync on virtual time (paper Algorithm 1 + §6 evaluation protocol).
+//! FedAsync on virtual time: thin constructors over the execution
+//! [`engine`](super::engine).
 //!
 //! Two ways staleness can arise:
 //!
-//! * [`StalenessSource::Sampled`] — the paper's own protocol: "we simulate
-//!   the asynchrony by randomly sampling the staleness (t−τ) from a
-//!   uniform distribution".  Sequential and fully deterministic given a
-//!   seed; the worker trains from the *retained historical* model
-//!   `x_{t−s}` out of the [`ModelStore`] ring.
+//! * [`StalenessSource::Sampled`] — the paper's own protocol ("we
+//!   simulate the asynchrony by randomly sampling the staleness (t−τ)
+//!   from a uniform distribution"), run by the engine's
+//!   [`SequentialDriver`] against a core whose [`ModelStore`] ring
+//!   retains every version a sampled staleness can reach.
 //! * [`StalenessSource::Emergent`] — a discrete-event simulation of the
-//!   Figure-1 system: the scheduler keeps `inflight` tasks outstanding on
-//!   the device fleet; each task snapshots the current model, takes
-//!   (compute time ∕ device speed + up/down link latency) of virtual time,
-//!   and its staleness *emerges* from how many updates landed while it was
-//!   in flight.  This validates that the sampled protocol is a faithful
-//!   stand-in (DESIGN.md §Fidelity compares the two).
+//!   Figure-1 system, run by the [`EventDriver`]: staleness *emerges*
+//!   from how many updates land while a task is in flight.  This
+//!   validates that the sampled protocol is a faithful stand-in
+//!   (DESIGN.md §Fidelity compares the two).
 //!
-//! Both paths — and the real-thread server in [`super::server`] — feed
-//! every worker update through the same [`UpdaterCore`], so staleness
-//! semantics, drop accounting, and the eval grid exist in exactly one
-//! place; and both consult the same [`ClientBehavior`] (built from
-//! `cfg.scenario`), so a heterogeneous population means the same thing in
-//! every mode: behavior shapes the staleness draw here (sampled), the
-//! event latencies here (emergent), and the per-task sleeps in the
-//! threaded server.
+//! Both drivers — and the real-thread server in [`super::server`] — run
+//! under the same [`Engine`] loop and the same [`UpdaterCore`], so
+//! staleness semantics, delivery faults, drop accounting, and the eval
+//! grid exist in exactly one place; and every mode consults the same
+//! `ClientBehavior` (built from `cfg.scenario`), so a heterogeneous
+//! population means the same thing everywhere by construction.
 //!
 //! [`ModelStore`]: super::model_store::ModelStore
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::engine::{Engine, EventDriver, SequentialDriver};
 use crate::coordinator::Trainer;
 use crate::federated::data::FederatedData;
 use crate::federated::device::SimDevice;
 use crate::federated::metrics::MetricsLog;
-use crate::federated::network::EventQueue;
 use crate::runtime::RuntimeError;
-use crate::scenario::{behavior_for, pick_present, ClientBehavior, Delivery};
-use crate::util::rng::Rng;
+use crate::scenario::behavior_for;
 
 /// How staleness is produced in virtual mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,281 +52,23 @@ pub fn run_fedasync<T: Trainer>(
     let behavior = behavior_for(cfg, fleet.len(), seed);
     match source {
         StalenessSource::Sampled { max } => {
-            run_sampled(trainer, cfg, data, fleet, seed, max, behavior.as_ref())
+            // Ring must retain every version a sampled staleness can reach.
+            let core = UpdaterCore::new(
+                cfg,
+                trainer.init_params(seed as usize)?,
+                max.max(1) as usize + 1,
+                &data.test,
+                None,
+            );
+            let driver = SequentialDriver::new(cfg, data, fleet, behavior.as_ref(), seed, max);
+            Engine::new(trainer, cfg, behavior.as_ref()).run(core, driver)
         }
         StalenessSource::Emergent { inflight } => {
-            run_emergent(trainer, cfg, data, fleet, seed, inflight, behavior.as_ref())
+            // Emergent tasks carry their own anchor; no history reads.
+            let core =
+                UpdaterCore::new(cfg, trainer.init_params(seed as usize)?, 1, &data.test, None);
+            let driver = EventDriver::new(cfg, data, fleet, behavior.as_ref(), seed, inflight);
+            Engine::new(trainer, cfg, behavior.as_ref()).run(core, driver)
         }
     }
-}
-
-fn prox_args(cfg: &ExperimentConfig) -> (bool, f32) {
-    match cfg.local_update {
-        crate::config::LocalUpdate::Sgd => (false, 0.0),
-        crate::config::LocalUpdate::Prox => (true, cfg.rho),
-    }
-}
-
-/// The paper's sampled-staleness protocol, population-shaped: the behavior
-/// picks who trains (churn), how stale they read (tiers/bursts bias the
-/// draw), and whether the update arrives (faults).
-fn run_sampled<T: Trainer>(
-    trainer: &T,
-    cfg: &ExperimentConfig,
-    data: &FederatedData,
-    fleet: &mut [SimDevice],
-    seed: u64,
-    max_staleness: u64,
-    behavior: &dyn ClientBehavior,
-) -> Result<MetricsLog, RuntimeError> {
-    let mut rng = Rng::seed_from(seed ^ 0xFEDA_511C);
-    // Ring must retain every version a sampled staleness can reach.
-    let mut core = UpdaterCore::new(
-        cfg,
-        trainer.init_params(seed as usize)?,
-        max_staleness.max(1) as usize + 1,
-        &data.test,
-        None,
-    );
-    let (use_prox, rho) = prox_args(cfg);
-    let epochs = cfg.epochs as u64;
-
-    core.record_at(trainer, 0, 0.0, behavior.present_count(0.0))?;
-
-    for t_next in 1..=epochs {
-        let progress = t_next as f64 / epochs as f64;
-        let device = pick_present(fleet.len(), behavior, progress, &mut rng);
-        // Sample the population-shaped staleness, clamped to the available
-        // history.  (Both clamps matter once faults are in play: dropped
-        // deliveries leave the store's version *behind* the task counter,
-        // so a raw `t_next - s` could name a version that never existed;
-        // duplicate deliveries push it *ahead*, so `t_next - s` could have
-        // already been evicted from the ring.)
-        let s = behavior
-            .sample_staleness(device, progress, max_staleness, &mut rng)
-            .min(t_next);
-        let tau = (t_next - s)
-            .clamp(core.store.oldest_version(), core.store.current_version());
-        // Borrow the historical model directly from the ring — the borrow
-        // ends with local_train, before the updater mutates the store, so
-        // no per-epoch P-sized clone is needed.
-        let anchor = core
-            .store
-            .get(tau)
-            .expect("ring retains max_staleness+1 versions");
-        let dev = &mut fleet[device];
-        let (x_new, loss) = trainer.local_train(
-            anchor,
-            if use_prox { Some(anchor.as_slice()) } else { None },
-            dev,
-            &data.train,
-            cfg.gamma,
-            rho,
-        )?;
-        match behavior.delivery(device, progress, &mut rng) {
-            // Lost in transit: the device trained, the server never hears.
-            Delivery::Drop => {}
-            Delivery::Deliver => {
-                core.offer(trainer, &x_new, tau, loss)?;
-            }
-            Delivery::Duplicate => {
-                core.offer(trainer, &x_new, tau, loss)?;
-                // The second copy arrives after the first was processed,
-                // so it is one version staler whenever the first applied.
-                core.offer(trainer, &x_new, tau, loss)?;
-            }
-        }
-        core.record_at(
-            trainer,
-            t_next as usize,
-            t_next as f64,
-            behavior.present_count(progress),
-        )?;
-    }
-    Ok(core.finish())
-}
-
-/// Event payload for the emergent-staleness simulation.
-#[derive(PartialEq)]
-struct Completion {
-    device: usize,
-    /// Model version the task started from.
-    tau: u64,
-    x_new: Vec<f32>,
-    loss: f32,
-}
-
-/// Discrete-event FedAsync: staleness emerges from task overlap.  The
-/// behavior gates device participation (churn), stretches task latencies
-/// (tiers/bursts), and decides update fate at delivery (faults).
-fn run_emergent<T: Trainer>(
-    trainer: &T,
-    cfg: &ExperimentConfig,
-    data: &FederatedData,
-    fleet: &mut [SimDevice],
-    seed: u64,
-    inflight: usize,
-    behavior: &dyn ClientBehavior,
-) -> Result<MetricsLog, RuntimeError> {
-    let inflight = inflight.max(1).min(fleet.len());
-    let mut rng = Rng::seed_from(seed ^ 0xE4E6_0001);
-    // Emergent tasks carry their own anchor; no history reads needed.
-    let mut core =
-        UpdaterCore::new(cfg, trainer.init_params(seed as usize)?, 1, &data.test, None);
-    let epochs = cfg.epochs;
-    let progress_of = |done: usize| (done as f64 / epochs as f64).min(1.0);
-
-    core.record_at(trainer, 0, 0.0, behavior.present_count(0.0))?;
-
-    let mut queue: EventQueue<Completion> = EventQueue::new();
-    let mut busy = vec![false; fleet.len()];
-
-    for _ in 0..inflight {
-        let _ = assign_task(
-            &mut queue,
-            fleet,
-            &mut busy,
-            &core,
-            &mut rng,
-            trainer,
-            cfg,
-            data,
-            behavior,
-            progress_of(0),
-        )?;
-    }
-
-    let mut epochs_done = 0usize;
-    while epochs_done < epochs {
-        let progress = progress_of(epochs_done);
-        let Some(ev) = queue.pop() else {
-            // All devices ineligible and nothing in flight: nudge time
-            // forward by retrying assignment after a beat.  (One attempt
-            // decides — assign_task scans the whole fleet itself.)
-            let made_progress = assign_task(
-                &mut queue,
-                fleet,
-                &mut busy,
-                &core,
-                &mut rng,
-                trainer,
-                cfg,
-                data,
-                behavior,
-                progress,
-            )?;
-            if !made_progress {
-                // Force-advance past the availability gap.
-                queue.schedule_in(1.0, Completion {
-                    device: usize::MAX,
-                    tau: core.store.current_version(),
-                    x_new: Vec::new(),
-                    loss: f32::NAN,
-                });
-            }
-            continue;
-        };
-        let now = queue.now();
-        if ev.payload.device == usize::MAX {
-            // Wake-up tick: try to assign again.
-            let _ = assign_task(
-                &mut queue,
-                fleet,
-                &mut busy,
-                &core,
-                &mut rng,
-                trainer,
-                cfg,
-                data,
-                behavior,
-                progress,
-            )?;
-            continue;
-        }
-        let Completion { device, tau, x_new, loss } = ev.payload;
-        busy[device] = false;
-        let copies = match behavior.delivery(device, progress, &mut rng) {
-            Delivery::Drop => 0,
-            Delivery::Deliver => 1,
-            Delivery::Duplicate => 2,
-        };
-        for _ in 0..copies {
-            let out = core.offer(trainer, &x_new, tau, loss)?;
-            epochs_done = core.store.current_version() as usize;
-            if out.applied {
-                core.record_at(
-                    trainer,
-                    epochs_done,
-                    now,
-                    behavior.present_count(progress_of(epochs_done)),
-                )?;
-            }
-            if epochs_done >= epochs {
-                // Target reached mid-delivery: skip the duplicate copy.
-                break;
-            }
-        }
-        // Keep the pipeline full.
-        let _ = assign_task(
-            &mut queue,
-            fleet,
-            &mut busy,
-            &core,
-            &mut rng,
-            trainer,
-            cfg,
-            data,
-            behavior,
-            progress_of(epochs_done),
-        )?;
-    }
-    Ok(core.finish())
-}
-
-/// Emergent-mode scheduler step: trigger a task on a random idle,
-/// eligible, *present* device, randomizing check-in time to avoid
-/// congestion (paper §1).  Returns `Ok(false)` when no device is
-/// available.
-#[allow(clippy::too_many_arguments)]
-fn assign_task<T: Trainer>(
-    queue: &mut EventQueue<Completion>,
-    fleet: &mut [SimDevice],
-    busy: &mut [bool],
-    core: &UpdaterCore<'_>,
-    rng: &mut Rng,
-    trainer: &T,
-    cfg: &ExperimentConfig,
-    data: &FederatedData,
-    behavior: &dyn ClientBehavior,
-    progress: f64,
-) -> Result<bool, RuntimeError> {
-    let now = queue.now();
-    let idle: Vec<usize> = (0..fleet.len())
-        .filter(|&d| !busy[d] && behavior.is_present(d, progress) && fleet[d].is_eligible(now))
-        .collect();
-    if idle.is_empty() {
-        return Ok(false);
-    }
-    let device = idle[rng.index(idle.len())];
-    busy[device] = true;
-    let tau = core.store.current_version();
-    let anchor = core.store.current().clone();
-    let (use_prox, rho) = prox_args(cfg);
-    // Downlink + compute (scenario-slowed) + uplink, plus randomized
-    // check-in jitter; link latencies come from the device's tier.
-    let dev = &mut fleet[device];
-    let delay = rng.uniform(0.0, 0.05)
-        + behavior.link_latency(device, rng)
-        + dev.compute_time(trainer.local_iters(), 50) * behavior.slowdown(device, progress)
-        + behavior.link_latency(device, rng);
-    let (x_new, loss) = trainer.local_train(
-        &anchor,
-        if use_prox { Some(anchor.as_slice()) } else { None },
-        dev,
-        &data.train,
-        cfg.gamma,
-        rho,
-    )?;
-    queue.schedule_in(delay, Completion { device, tau, x_new, loss });
-    Ok(true)
 }

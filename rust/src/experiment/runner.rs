@@ -1,5 +1,8 @@
 //! Experiment runner: one [`ExperimentConfig`] → one averaged
-//! [`MetricsLog`], dispatching to the right coordinator.
+//! [`MetricsLog`], dispatching to the right algorithm and — for FedAsync
+//! — the right time driver of the execution engine
+//! ([`crate::coordinator::engine`]): sequential sampled staleness,
+//! discrete-event emergent staleness, or the real-thread server.
 //!
 //! Each repeat re-generates data/partition/fleet from `seed + repeat` and
 //! re-reads a different init-params seed, mirroring the paper's "repeat
@@ -39,6 +42,7 @@ pub fn run_once<T: Trainer>(
     let fed: FederatedData = data::generate(&cfg.federation, seed);
     let mut fleet = build_fleet(cfg, &fed.train, seed);
     match (&cfg.algo, cfg.mode) {
+        // Engine with the sequential (sampled-staleness) driver.
         (Algo::FedAsync, ExecMode::Virtual) => virtual_mode::run_fedasync(
             trainer,
             cfg,
@@ -47,9 +51,9 @@ pub fn run_once<T: Trainer>(
             seed,
             StalenessSource::Sampled { max: cfg.staleness.max },
         ),
+        // Engine with the threaded driver; threads mode loads its own
+        // runtime in the compute-service thread, `trainer` is unused.
         (Algo::FedAsync, ExecMode::Threads) => {
-            // Threads mode loads its own runtime in the compute-service
-            // thread; `trainer` is unused there.
             server::run_threaded(crate::runtime::model_dir(&cfg.model), cfg, seed)
         }
         (Algo::FedAvg { k }, _) => fedavg::run_fedavg(
@@ -65,7 +69,8 @@ pub fn run_once<T: Trainer>(
     }
 }
 
-/// Emergent-staleness variant (used by the fidelity comparison).
+/// Emergent-staleness variant — the engine's event driver (used by the
+/// fidelity comparison).
 pub fn run_once_emergent<T: Trainer>(
     trainer: &T,
     cfg: &ExperimentConfig,

@@ -93,7 +93,7 @@ fn train_spec() -> CommandSpec {
         .opt("staleness-a", None, "staleness fn parameter a")
         .opt("staleness-b", None, "staleness fn parameter b")
         .opt("local-update", None, "sgd (option I) | prox (option II)")
-        .opt("mode", None, "virtual | threads")
+        .opt("mode", None, "virtual | threads (engine time driver)")
         .opt("seed", None, "root RNG seed")
         .opt(
             "scenario",

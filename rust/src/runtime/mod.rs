@@ -21,6 +21,16 @@ pub enum RuntimeError {
     Io(std::io::Error),
     Load(String),
     Shape(String),
+    /// A coordination channel closed while the run still needed it (a
+    /// worker pool or compute service went away mid-run).
+    Channel(String),
+    /// A coordinator thread (worker / scheduler / compute service)
+    /// panicked; surfaced as an error so the run unwinds cleanly instead
+    /// of cascading the panic through the shutdown drain.
+    Thread(String),
+    /// A model-history ring lookup named a version outside the retention
+    /// window.
+    History(String),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -31,6 +41,9 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::Io(e) => write!(f, "io: {e}"),
             RuntimeError::Load(msg) => write!(f, "artifact load: {msg}"),
             RuntimeError::Shape(msg) => write!(f, "shape: {msg}"),
+            RuntimeError::Channel(msg) => write!(f, "channel: {msg}"),
+            RuntimeError::Thread(msg) => write!(f, "thread: {msg}"),
+            RuntimeError::History(msg) => write!(f, "model history: {msg}"),
         }
     }
 }

@@ -10,7 +10,9 @@
 use fedasync::config::{Partition, StalenessConfig, StalenessFn};
 use fedasync::coordinator::model_store::ModelStore;
 use fedasync::coordinator::staleness::{AlphaController, AlphaDecision};
-use fedasync::coordinator::updater::mix_inplace;
+use fedasync::coordinator::updater::{
+    mix_inplace, mix_inplace_sharded, mix_into, mix_into_buf, SHARD_MIN_LEN,
+};
 use fedasync::federated::network::EventQueue;
 use fedasync::federated::{data, partition};
 use fedasync::prop_ensure;
@@ -185,6 +187,55 @@ fn prop_mix_stays_on_segment_and_interpolates() {
             );
             let want = (1.0 - alpha) * x0[i] + alpha * y[i];
             prop_ensure!((x[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", x[i]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mix_family_agrees_bitwise() {
+    // `mix_into`, `mix_into_buf`, `mix_inplace`, and `mix_inplace_sharded`
+    // are four spellings of the same single line of math; any divergence —
+    // a reordered reduction, an FMA sneaking into one path — would split
+    // the execution modes' trajectories.  They must agree *bitwise* for
+    // arbitrary lengths, alphas, and shard counts, with lengths straddling
+    // the `SHARD_MIN_LEN` boundary on both sides.
+    check("mix-family-bitwise", 60, |g| {
+        let n = match g.index(3) {
+            0 => g.size(1, 2048),
+            // Within a few elements of the sharding threshold.
+            1 => SHARD_MIN_LEN - 32 + g.size(0, 64),
+            // Big enough to genuinely shard on multi-core machines.
+            _ => 2 * SHARD_MIN_LEN + g.size(0, 1024),
+        };
+        let alpha = g.f64_in(0.0, 1.0) as f32;
+        let x = g.vec_f32(n, 2.0);
+        let y = g.vec_f32(n, 2.0);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        let reference = mix_into(&x, &y, alpha);
+
+        let mut inplace = x.clone();
+        mix_inplace(&mut inplace, &y, alpha);
+        prop_ensure!(
+            bits(&inplace) == bits(&reference),
+            "mix_inplace != mix_into at n={n} alpha={alpha}"
+        );
+
+        // A dirty recycled buffer must not leak into the result.
+        let mut buf = vec![9.0f32; g.size(0, 8)];
+        mix_into_buf(&x, &y, alpha, &mut buf);
+        prop_ensure!(
+            bits(&buf) == bits(&reference),
+            "mix_into_buf != mix_into at n={n} alpha={alpha}"
+        );
+
+        for shards in [1usize, 2, 3, 5, 8, 64] {
+            let mut sharded = x.clone();
+            mix_inplace_sharded(&mut sharded, &y, alpha, shards);
+            prop_ensure!(
+                bits(&sharded) == bits(&reference),
+                "mix_inplace_sharded(shards={shards}) != mix_into at n={n} alpha={alpha}"
+            );
         }
         Ok(())
     });
