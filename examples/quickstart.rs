@@ -10,6 +10,7 @@
 //! convergence table.
 
 use fedasync::config::presets::{named, Scale};
+use fedasync::config::AggregatorConfig;
 use fedasync::experiment::runner;
 use fedasync::runtime::{model_dir, ModelRuntime};
 
@@ -31,6 +32,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.federation.devices = 20;
     cfg.federation.samples_per_device = 100;
     cfg.federation.test_samples = 512;
+    // The server's aggregation rule is pluggable (DESIGN.md §Aggregation
+    // layer): FedAsync is the paper's apply-immediately rule and the
+    // default; swap in `Buffered { k }` or `DistanceAdaptive { .. }` —
+    // or pass `--aggregator buffered:8` to `repro train` — to run the
+    // same federation under a different server rule.
+    cfg.aggregator = AggregatorConfig::FedAsync;
     cfg.validate()?;
 
     // 3. Run the asynchronous federation.
@@ -46,11 +53,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     let last = log.rows.last().unwrap();
     println!(
-        "\nFedAsync reached {:.1}% test accuracy in {} epochs ({} gradients, {} comms).",
+        "\nFedAsync reached {:.1}% test accuracy in {} epochs \
+         ({} gradients, {} comms, {} server commits).",
         last.test_acc * 100.0,
         last.epoch,
         last.gradients,
-        last.comms
+        last.comms,
+        last.applied
     );
     Ok(())
 }

@@ -1,0 +1,181 @@
+//! Aggregation-strategy perf snapshot, machine-readable: writes
+//! `BENCH_aggregators.json` with (a) the per-offer decision cost of each
+//! strategy at server-model sizes (FedAsync's pass-through, buffered's
+//! incremental blend absorb, distance-adaptive's fused norm scan) and
+//! (b) epochs/sec for every aggregator through every engine time driver
+//! on the closed-form quadratic — no PJRT artifacts needed.
+//!
+//! CI's bench-snapshot job runs this next to `bench_engine` and uploads
+//! the JSON, so the cost of the aggregation layer is trackable PR over
+//! PR (the FedAsync rows double as the regression guard for "the
+//! strategy indirection is free on the hot path").
+//!
+//! ```bash
+//! cargo bench --bench bench_aggregators
+//! ```
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::config::{AggregatorConfig, ExperimentConfig, LocalUpdate, StalenessFn};
+use fedasync::coordinator::aggregator::{self, AggregateDecision, Aggregator};
+use fedasync::coordinator::server::{run_server_core, serve_native, ComputeJob};
+use fedasync::coordinator::virtual_mode::{run_fedasync, StalenessSource};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::data::FederatedData;
+use fedasync::scenario;
+use fedasync::util::rng::Rng;
+use fedasync::util::stats::BenchTimer;
+
+const DEVICES: usize = 16;
+const EPOCHS: usize = 160;
+const SEED: u64 = 1;
+
+fn quad() -> QuadraticProblem {
+    QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+fn bench_cfg(agg: AggregatorConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("bench_agg_{}", agg.name());
+    cfg.epochs = EPOCHS;
+    cfg.repeats = 1;
+    cfg.eval_every = EPOCHS / 4;
+    cfg.seed = SEED;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.max = 8;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.aggregator = agg;
+    cfg.federation.devices = DEVICES;
+    cfg.federation.samples_per_device = 4;
+    cfg.federation.test_samples = 8;
+    cfg.worker_threads = 3;
+    cfg.max_inflight = 4;
+    cfg
+}
+
+fn strategies() -> Vec<AggregatorConfig> {
+    vec![
+        AggregatorConfig::FedAsync,
+        AggregatorConfig::Buffered { k: 4 },
+        AggregatorConfig::DistanceAdaptive { clamp_lo: 0.1, clamp_hi: 2.0 },
+    ]
+}
+
+/// Median epochs/sec over 3 one-shot runs.
+fn epochs_per_sec(label: &str, mut run: impl FnMut() -> usize) -> f64 {
+    let mut rates: Vec<f64> = (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            let epochs = run();
+            epochs as f64 / t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    rates.sort_by(|a, b| a.partial_cmp(b).expect("finite rates"));
+    let median = rates[1];
+    println!("{label:<36} {median:>10.1} epochs/s");
+    median
+}
+
+fn main() {
+    let timer = BenchTimer::quick();
+    println!("== bench_aggregators: perf snapshot -> BENCH_aggregators.json ==\n");
+    let mut rng = Rng::seed_from(2);
+    let mut fields: Vec<(String, f64)> = Vec::new();
+
+    // ---------------------------------------- per-offer decision cost
+    // What one `Aggregator::offer` costs at server-model size, isolated
+    // from training and mixing.  Buffered pays its absorb here instead
+    // of a mix per update; distance pays one fused norm scan.
+    let p = 165_530usize;
+    let current: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    let x_new: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    for agg_cfg in strategies() {
+        let cfg = bench_cfg(agg_cfg);
+        let mut agg = aggregator::for_config(&cfg, None);
+        let mut t = 0u64;
+        let r = timer.run(&format!("offer/{}/p={p}", agg_cfg.name()), || {
+            t += 1;
+            let d = agg.offer(&x_new, &current, 1 + (t % 8), t);
+            // Complete the commit protocol only when the strategy asked
+            // for it, so the buffered rows time the real absorb/commit
+            // cycle (k−1 incremental blends, then one hand-over) rather
+            // than resetting the staging buffer every iteration.
+            if matches!(d, AggregateDecision::ApplyStaged { .. }) {
+                let staged = agg.take_staged().expect("staged blend");
+                std::hint::black_box(staged.len());
+            }
+            std::hint::black_box(d);
+        });
+        println!("{}", r.report(Some(1.0)));
+        fields.push((format!("offer_{}_p{p}_ns", agg_cfg.name()), r.median_ns()));
+    }
+
+    // ------------------------------- aggregator × driver epochs/sec
+    println!();
+    let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+    for agg_cfg in strategies() {
+        let cfg = bench_cfg(agg_cfg);
+        let name = agg_cfg.name();
+
+        let rate = epochs_per_sec(&format!("{name} × driver_sequential"), || {
+            let mut fleet = dummy_fleet(DEVICES, 5);
+            let log = run_fedasync(
+                &quad(),
+                &cfg,
+                &data,
+                &mut fleet,
+                SEED,
+                StalenessSource::Sampled { max: cfg.staleness.max },
+            )
+            .expect("sampled run");
+            log.rows.last().expect("rows").epoch
+        });
+        fields.push((format!("{name}_sequential_epochs_per_s"), rate));
+
+        let rate = epochs_per_sec(&format!("{name} × driver_event"), || {
+            let mut fleet = dummy_fleet(DEVICES, 5);
+            let log = run_fedasync(
+                &quad(),
+                &cfg,
+                &data,
+                &mut fleet,
+                SEED,
+                StalenessSource::Emergent { inflight: cfg.max_inflight },
+            )
+            .expect("emergent run");
+            log.rows.last().expect("rows").epoch
+        });
+        fields.push((format!("{name}_event_epochs_per_s"), rate));
+
+        let rate = epochs_per_sec(&format!("{name} × driver_threaded"), || {
+            let problem = quad();
+            let init = problem.init_params(SEED as usize).expect("init");
+            let h = problem.local_iters();
+            let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+            let svc = std::thread::spawn(move || serve_native(quad(), DEVICES, job_rx));
+            let behavior = scenario::behavior_for(&cfg, DEVICES, SEED);
+            let test = dummy_dataset();
+            let log = run_server_core(&cfg, SEED, &test, init, h, job_tx, behavior)
+                .expect("threaded run");
+            svc.join().expect("service join");
+            log.rows.last().expect("rows").epoch
+        });
+        fields.push((format!("{name}_threaded_epochs_per_s"), rate));
+    }
+
+    // ------------------------------------------------------------ JSON
+    let mut json = String::from("{\n  \"schema\": \"bench_aggregators.v1\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let sep = if i + 1 == fields.len() { "" } else { "," };
+        json.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_aggregators.json", &json).expect("write BENCH_aggregators.json");
+    println!("\nwrote BENCH_aggregators.json");
+}

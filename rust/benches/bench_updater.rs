@@ -69,13 +69,15 @@ fn main() {
             ("poly", StalenessFn::Poly { a: 0.5 }),
             ("hinge", StalenessFn::Hinge { a: 10.0, b: 4.0 }),
         ] {
-            let updater = Updater::new(
-                AlphaController::new(
-                    0.6,
-                    0.5,
-                    1000,
-                    &StalenessConfig { max: 16, func, drop_above: None },
-                ),
+            let mut updater = Updater::new(
+                Box::new(fedasync::coordinator::aggregator::FedAsync::new(
+                    AlphaController::new(
+                        0.6,
+                        0.5,
+                        1000,
+                        &StalenessConfig { max: 16, func, drop_above: None },
+                    ),
+                )),
                 MixEngine::Native,
             );
             let mut store = ModelStore::new(vec![0.0f32; p], 17);

@@ -15,6 +15,11 @@
 //! straggler bursts, delivery faults.  The keys (`tier_*`, `churn_*`,
 //! `straggler_*`, `drop_prob`, `duplicate_prob`) are documented in
 //! [`crate::scenario`]; presets live in [`crate::scenario::presets`].
+//!
+//! An `[aggregator]` table (or an `aggregator = "<spec>"` string)
+//! selects the server aggregation rule — [`AggregatorConfig`]:
+//! FedAsync (default), buffered K-update blends, or distance-adaptive
+//! α; implementations live in [`crate::coordinator::aggregator`].
 
 pub mod presets;
 
@@ -117,6 +122,141 @@ pub enum Dataset {
     Images,
 }
 
+/// Server aggregation strategy: what the coordinator does with each
+/// arriving update (see [`crate::coordinator::aggregator`] for the
+/// runtime implementations and DESIGN.md §Aggregation layer for the
+/// semantics).
+///
+/// Selected by an `[aggregator]` TOML table (`kind = "buffered"`,
+/// `k = 8`, …), an `aggregator = "<name>"` string, or the
+/// `--aggregator` CLI flag (`fedasync`, `buffered[:K]`,
+/// `distance[:LO..HI]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggregatorConfig {
+    /// Paper Algorithm 1: every surviving update is mixed immediately
+    /// with `α_t = α·s(t−τ)` — the repo's default and golden-traced path.
+    FedAsync,
+    /// Buffered K-update aggregation: accumulate `k` accepted updates
+    /// into a staging blend with staleness weights normalized to 1, then
+    /// apply the blend in one mix ("Achieving Linear Speedup in
+    /// Asynchronous Federated Learning with Heterogeneous Clients").
+    Buffered {
+        /// Updates per staging buffer before the blend commits.
+        k: usize,
+    },
+    /// Distance-adaptive mixing (AsyncFedED-style): α_t scaled by the
+    /// relative parameter distance `‖x_new − x_t‖ / ‖x_t‖`, with the
+    /// scale clamped to `[clamp_lo, clamp_hi]`.
+    DistanceAdaptive {
+        /// Lower clamp on the distance scale (must be > 0).
+        clamp_lo: f64,
+        /// Upper clamp on the distance scale (must be ≥ `clamp_lo`).
+        clamp_hi: f64,
+    },
+}
+
+/// Default buffer size for [`AggregatorConfig::Buffered`].
+pub const DEFAULT_BUFFER_K: usize = 8;
+/// Default distance-scale clamp for [`AggregatorConfig::DistanceAdaptive`].
+pub const DEFAULT_DISTANCE_CLAMP: (f64, f64) = (0.1, 2.0);
+
+impl Default for AggregatorConfig {
+    fn default() -> Self {
+        AggregatorConfig::FedAsync
+    }
+}
+
+impl AggregatorConfig {
+    /// Canonical strategy name (CLI/TOML `kind` value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregatorConfig::FedAsync => "fedasync",
+            AggregatorConfig::Buffered { .. } => "buffered",
+            AggregatorConfig::DistanceAdaptive { .. } => "distance",
+        }
+    }
+
+    /// Human label including parameters (logs/provenance).
+    pub fn label(&self) -> String {
+        match *self {
+            AggregatorConfig::FedAsync => "fedasync".into(),
+            AggregatorConfig::Buffered { k } => format!("buffered(k={k})"),
+            AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi } => {
+                format!("distance(clamp={clamp_lo}..{clamp_hi})")
+            }
+        }
+    }
+
+    /// Parse a compact CLI spec: `fedasync`, `buffered`, `buffered:16`,
+    /// `distance`, or `distance:0.05..1.5`.
+    pub fn parse_spec(spec: &str) -> Result<AggregatorConfig, ConfigError> {
+        let (kind, param) = match spec.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (spec, None),
+        };
+        match kind {
+            "fedasync" => match param {
+                None => Ok(AggregatorConfig::FedAsync),
+                Some(p) => Err(ConfigError(format!("fedasync takes no parameter, got {p:?}"))),
+            },
+            "buffered" => {
+                let k = match param {
+                    None => DEFAULT_BUFFER_K,
+                    Some(p) => p
+                        .parse()
+                        .map_err(|e| ConfigError(format!("buffered:{p}: {e}")))?,
+                };
+                Ok(AggregatorConfig::Buffered { k })
+            }
+            "distance" | "distance_adaptive" => {
+                let (clamp_lo, clamp_hi) = match param {
+                    None => DEFAULT_DISTANCE_CLAMP,
+                    Some(p) => {
+                        let (lo, hi) = p.split_once("..").ok_or_else(|| {
+                            ConfigError(format!("distance clamp {p:?} must be LO..HI"))
+                        })?;
+                        let parse = |s: &str| {
+                            s.parse::<f64>()
+                                .map_err(|e| ConfigError(format!("distance:{p}: {e}")))
+                        };
+                        (parse(lo)?, parse(hi)?)
+                    }
+                };
+                Ok(AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi })
+            }
+            other => Err(ConfigError(format!(
+                "unknown aggregator {other:?} (fedasync | buffered[:K] | distance[:LO..HI])"
+            ))),
+        }
+    }
+
+    /// Validate strategy parameters.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        match *self {
+            AggregatorConfig::FedAsync => Ok(()),
+            AggregatorConfig::Buffered { k } => {
+                if k == 0 {
+                    return Err(ConfigError("aggregator: buffered k must be >= 1".into()));
+                }
+                Ok(())
+            }
+            AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi } => {
+                if !(clamp_lo > 0.0 && clamp_lo.is_finite() && clamp_hi.is_finite()) {
+                    return Err(ConfigError(format!(
+                        "aggregator: distance clamp_lo must be finite and > 0, got {clamp_lo}"
+                    )));
+                }
+                if clamp_hi < clamp_lo {
+                    return Err(ConfigError(format!(
+                        "aggregator: distance clamp {clamp_lo}..{clamp_hi} is empty"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
 /// Asynchrony simulation mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -180,6 +320,8 @@ pub struct ExperimentConfig {
     pub local_update: LocalUpdate,
     /// Local iterations per task; `None` = the artifact's fused epoch H.
     pub local_iters: Option<usize>,
+    /// Server aggregation strategy (FedAsync / buffered / distance).
+    pub aggregator: AggregatorConfig,
     pub staleness: StalenessConfig,
     pub federation: FederationConfig,
     /// Optional heterogeneous client population (tiers/churn/bursts/faults)
@@ -222,6 +364,7 @@ impl Default for ExperimentConfig {
             alpha_decay_at: 240, // 0.4·T, mirroring the paper's 800/2000
             local_update: LocalUpdate::Prox,
             local_iters: None,
+            aggregator: AggregatorConfig::FedAsync,
             staleness: StalenessConfig {
                 max: 4,
                 func: StalenessFn::Constant,
@@ -277,6 +420,15 @@ impl ExperimentConfig {
         }
         if self.eval_every == 0 {
             return e("eval_every must be > 0".into());
+        }
+        self.aggregator.validate()?;
+        if self.aggregator != AggregatorConfig::FedAsync && self.algo != Algo::FedAsync {
+            return e(format!(
+                "aggregator {:?} requires algo = fedasync: the {} baseline never \
+                 routes updates through the aggregation layer",
+                self.aggregator.label(),
+                self.algo.name()
+            ));
         }
         if let Some(d) = self.staleness.drop_above {
             if d > self.staleness.max {
@@ -407,6 +559,58 @@ impl ExperimentConfig {
             }
         }
 
+        let agg = v.get("aggregator");
+        if let Some(name) = agg.as_str() {
+            self.aggregator = AggregatorConfig::parse_spec(name)?;
+        } else if let Some(obj) = agg.as_obj() {
+            // Strict like [scenario]: a typo'd or misplaced key must not
+            // silently run a different aggregation rule than configured.
+            let kind = agg
+                .get("kind")
+                .as_str()
+                .ok_or_else(|| err("[aggregator] table needs kind = \"...\"".into()))?;
+            let mut parsed = AggregatorConfig::parse_spec(kind)?;
+            let known: &[&str] = match parsed {
+                AggregatorConfig::FedAsync => &["kind"],
+                AggregatorConfig::Buffered { .. } => &["kind", "k"],
+                AggregatorConfig::DistanceAdaptive { .. } => &["kind", "clamp_lo", "clamp_hi"],
+            };
+            for key in obj.keys() {
+                if !known.contains(&key.as_str()) {
+                    return Err(err(format!(
+                        "aggregator: key {key:?} does not apply to kind {kind:?} (known: {})",
+                        known.join(", ")
+                    )));
+                }
+            }
+            match &mut parsed {
+                AggregatorConfig::FedAsync => {}
+                AggregatorConfig::Buffered { k } => {
+                    let node = agg.get("k");
+                    if !matches!(node, Json::Null) {
+                        *k = node
+                            .as_usize()
+                            .ok_or_else(|| err("aggregator: k must be an integer".into()))?;
+                    }
+                }
+                AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi } => {
+                    for (name, slot) in [("clamp_lo", clamp_lo), ("clamp_hi", clamp_hi)] {
+                        let node = agg.get(name);
+                        if !matches!(node, Json::Null) {
+                            *slot = node.as_f64().ok_or_else(|| {
+                                err(format!("aggregator: {name} must be a number"))
+                            })?;
+                        }
+                    }
+                }
+            }
+            self.aggregator = parsed;
+        } else if !matches!(agg, Json::Null) {
+            return Err(err(
+                "aggregator must be a strategy name string or an [aggregator] table".into(),
+            ));
+        }
+
         let sc = v.get("scenario");
         if let Some(name) = sc.as_str() {
             self.scenario = Some(crate::scenario::presets::named(name).ok_or_else(|| {
@@ -492,6 +696,22 @@ impl ExperimentConfig {
         );
         o.insert("staleness_max", Json::Num(self.staleness.max as f64));
         o.insert("staleness_fn", Json::Str(self.staleness.func.label()));
+        {
+            // Full table so provenance round-trips through `apply_json`.
+            let mut a = JsonObj::new();
+            a.insert("kind", Json::Str(self.aggregator.name().into()));
+            match self.aggregator {
+                AggregatorConfig::FedAsync => {}
+                AggregatorConfig::Buffered { k } => {
+                    a.insert("k", Json::Num(k as f64));
+                }
+                AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi } => {
+                    a.insert("clamp_lo", Json::Num(clamp_lo));
+                    a.insert("clamp_hi", Json::Num(clamp_hi));
+                }
+            }
+            o.insert("aggregator", Json::Obj(a));
+        }
         if let Some(sc) = &self.scenario {
             o.insert("scenario", sc.to_json());
         }
@@ -677,6 +897,108 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.algo = Algo::Sgd;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn aggregator_spec_parsing() {
+        assert_eq!(AggregatorConfig::parse_spec("fedasync").unwrap(), AggregatorConfig::FedAsync);
+        assert_eq!(
+            AggregatorConfig::parse_spec("buffered").unwrap(),
+            AggregatorConfig::Buffered { k: DEFAULT_BUFFER_K }
+        );
+        assert_eq!(
+            AggregatorConfig::parse_spec("buffered:16").unwrap(),
+            AggregatorConfig::Buffered { k: 16 }
+        );
+        assert_eq!(
+            AggregatorConfig::parse_spec("distance:0.05..1.5").unwrap(),
+            AggregatorConfig::DistanceAdaptive { clamp_lo: 0.05, clamp_hi: 1.5 }
+        );
+        assert_eq!(
+            AggregatorConfig::parse_spec("distance").unwrap(),
+            AggregatorConfig::DistanceAdaptive {
+                clamp_lo: DEFAULT_DISTANCE_CLAMP.0,
+                clamp_hi: DEFAULT_DISTANCE_CLAMP.1
+            }
+        );
+        assert!(AggregatorConfig::parse_spec("zen").is_err());
+        assert!(AggregatorConfig::parse_spec("buffered:none").is_err());
+        assert!(AggregatorConfig::parse_spec("distance:0.5").is_err());
+        assert!(AggregatorConfig::parse_spec("fedasync:3").is_err());
+    }
+
+    #[test]
+    fn aggregator_toml_table_and_string() {
+        let doc = crate::util::toml::parse(
+            r#"
+            [aggregator]
+            kind = "buffered"
+            k = 12
+            "#,
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.aggregator, AggregatorConfig::Buffered { k: 12 });
+        // Provenance round-trips through apply_json.
+        let mut back = ExperimentConfig::default();
+        back.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.aggregator, cfg.aggregator);
+
+        let doc = crate::util::toml::parse("aggregator = \"distance:0.2..1.0\"").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        assert_eq!(
+            cfg.aggregator,
+            AggregatorConfig::DistanceAdaptive { clamp_lo: 0.2, clamp_hi: 1.0 }
+        );
+
+        // A table without kind, a wrong-typed node, and an unknown name
+        // are errors, not silent fallbacks to FedAsync.
+        let doc = crate::util::toml::parse("[aggregator]\nk = 4").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse("aggregator = 5").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse("aggregator = \"zen\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+
+        // Strict table semantics: wrong-typed parameters and keys that
+        // don't apply to the kind must error, not degrade to defaults.
+        let doc =
+            crate::util::toml::parse("[aggregator]\nkind = \"buffered\"\nk = \"16\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse("[aggregator]\nkind = \"fedasync\"\nk = 4").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc =
+            crate::util::toml::parse("[aggregator]\nkind = \"buffered\"\nclamp_lo = 0.1").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse(
+            "[aggregator]\nkind = \"distance\"\nclamp_lo = \"tiny\"",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+    }
+
+    #[test]
+    fn aggregator_validation() {
+        let mut c = ExperimentConfig::default();
+        c.aggregator = AggregatorConfig::Buffered { k: 0 };
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.aggregator = AggregatorConfig::DistanceAdaptive { clamp_lo: 0.0, clamp_hi: 1.0 };
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.aggregator = AggregatorConfig::DistanceAdaptive { clamp_lo: 2.0, clamp_hi: 1.0 };
+        assert!(c.validate().is_err());
+        // A non-default aggregator only makes sense for FedAsync: the
+        // baselines never route updates through the aggregation layer.
+        let mut c = ExperimentConfig::default();
+        c.aggregator = AggregatorConfig::Buffered { k: 8 };
+        c.validate().unwrap();
+        c.algo = Algo::Sgd;
+        c.local_update = LocalUpdate::Sgd;
+        assert!(c.validate().is_err());
     }
 
     #[test]

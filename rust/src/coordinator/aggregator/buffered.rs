@@ -1,0 +1,148 @@
+//! Buffered K-update aggregation with staleness-aware weights.
+//!
+//! The FedBuff-style rule from "Achieving Linear Speedup in Asynchronous
+//! Federated Learning with Heterogeneous Clients": instead of moving the
+//! global model on every arrival, accept updates into a staging buffer
+//! and commit one blended update per `k` acceptances.
+//!
+//! The blend is a staleness-weighted mean with weights normalized to 1,
+//! maintained *incrementally* through the repo's mix kernel: absorbing
+//! update `x_i` with weight `w_i` into the running blend `m` is
+//! `m ← m + (w_i / W_i)·(x_i − m)` where `W_i = w_1 + … + w_i` — exactly
+//! [`mix_inplace`] with `α = w_i/W_i`.  The absorb pass itself never
+//! allocates; the staging buffer costs one allocation per k-update
+//! commit cycle, recycled through the shared `BufferPool` when one is
+//! attached (the threaded server).  The final blend equals
+//! `Σ (w_i/W)·x_i` with `Σ w_i/W = 1` by construction (pinned by
+//! `prop_buffered_blend_normalizes` in `rust/tests/proptests.rs`).
+//!
+//! Weights are the staleness function values `w_i = s(t−τ_i)`, so a
+//! stale update still enters the blend but moves it less, and the blend
+//! itself commits with `α = α_base(t) · (W/k̂)` (`k̂` = updates actually
+//! absorbed) — a buffer full of fresh updates commits at full strength,
+//! a buffer of stale ones is discounted the way a single stale update
+//! would be.  The controller's drop cutoff applies per update *before*
+//! buffering.
+//!
+//! At end-of-run the engine drains the partial buffer through
+//! [`Aggregator::flush`], so every accepted update is applied exactly
+//! once (also property-pinned).
+
+use std::sync::Arc;
+
+use crate::coordinator::aggregator::{AggregateDecision, Aggregator};
+use crate::coordinator::snapshot::BufferPool;
+use crate::coordinator::staleness::{AlphaController, AlphaDecision};
+use crate::coordinator::updater::mix_inplace;
+use crate::runtime::ParamVec;
+
+/// Accumulate `k` accepted updates, then apply one normalized
+/// staleness-weighted blend.
+pub struct Buffered {
+    alpha: AlphaController,
+    k: usize,
+    /// Staging buffers come from here when attached (threaded server,
+    /// where the committed blend is released back by the updater);
+    /// `None` allocates one staging buffer per commit cycle.
+    pool: Option<Arc<BufferPool>>,
+    /// Running weighted mean of the buffered updates.
+    staging: Option<ParamVec>,
+    /// Σ wᵢ over the current buffer.
+    weight_sum: f64,
+    /// Updates absorbed into the current buffer.
+    count: usize,
+}
+
+impl Buffered {
+    /// `k` is the buffer size (≥ 1; `k = 1` degenerates to per-update
+    /// application with `α·s(t−τ)`, numerically FedAsync).
+    pub fn new(alpha: AlphaController, k: usize, pool: Option<Arc<BufferPool>>) -> Buffered {
+        assert!(k >= 1, "buffered aggregation needs k >= 1");
+        Buffered { alpha, k, pool, staging: None, weight_sum: 0.0, count: 0 }
+    }
+
+    /// Updates currently staged (telemetry/tests).
+    pub fn pending(&self) -> usize {
+        self.count
+    }
+
+    /// Fold `x_new` with weight `w` into the running weighted mean.
+    fn absorb(&mut self, x_new: &[f32], w: f64) {
+        self.weight_sum += w;
+        self.count += 1;
+        match self.staging.take() {
+            None => {
+                let mut buf = match &self.pool {
+                    Some(pool) => pool.acquire_clear(x_new.len()),
+                    None => Vec::with_capacity(x_new.len()),
+                };
+                buf.extend_from_slice(x_new);
+                self.staging = Some(buf);
+            }
+            Some(mut m) => {
+                // m ← m + (w/W)(x − m): running mean whose weights
+                // normalize to 1 — the same kernel the commit mix uses.
+                mix_inplace(&mut m, x_new, (w / self.weight_sum) as f32);
+                self.staging = Some(m);
+            }
+        }
+    }
+
+    /// α for committing the current blend at epoch `t`: the base decay
+    /// schedule discounted by the buffer's mean staleness weight.
+    ///
+    /// `t` is the server-commit counter (the model version the blend
+    /// becomes), so `alpha_decay_at` is measured in *commits* — the
+    /// paper's "decay at epoch N" reading, where an epoch is one server
+    /// update.  Note that under the sampled protocol the run budget is
+    /// offered tasks, and a buffered run makes only `epochs / k`
+    /// commits: configure `alpha_decay_at` against that commit count
+    /// (see `configs/buffered_k8.toml`), not against the task budget.
+    fn blend_alpha(&self, t: u64) -> f64 {
+        let mean_w = self.weight_sum / self.count.max(1) as f64;
+        (self.alpha.base_at(t as usize) * mean_w).clamp(f64::MIN_POSITIVE, 1.0)
+    }
+}
+
+impl Aggregator for Buffered {
+    fn name(&self) -> &'static str {
+        "buffered"
+    }
+
+    fn offer(
+        &mut self,
+        x_new: &[f32],
+        _current: &[f32],
+        staleness: u64,
+        t: u64,
+    ) -> AggregateDecision {
+        // The controller's cutoff gates entry to the buffer; its α value
+        // is not used directly — the blend carries the staleness weight.
+        if let AlphaDecision::Drop = self.alpha.decide(t as usize, staleness) {
+            return AggregateDecision::Drop;
+        }
+        let w = self.alpha.func().eval(staleness).max(f64::MIN_POSITIVE);
+        self.absorb(x_new, w);
+        if self.count >= self.k {
+            AggregateDecision::ApplyStaged { alpha: self.blend_alpha(t) }
+        } else {
+            AggregateDecision::Buffer
+        }
+    }
+
+    fn take_staged(&mut self) -> Option<ParamVec> {
+        let staged = self.staging.take()?;
+        self.weight_sum = 0.0;
+        self.count = 0;
+        Some(staged)
+    }
+
+    fn flush(&mut self, t: u64) -> Option<(ParamVec, f64)> {
+        if self.count == 0 {
+            return None;
+        }
+        let alpha = self.blend_alpha(t);
+        let staged = self.take_staged()?;
+        Some((staged, alpha))
+    }
+}

@@ -1,0 +1,97 @@
+//! Distance-adaptive mixing weights (AsyncFedED-style).
+//!
+//! AsyncFedED's observation: staleness counts *versions*, not *drift* —
+//! an update trained on a 10-epoch-old model that barely moved is less
+//! dangerous than a fresh update pointing far away.  This strategy
+//! therefore scales the staleness-adapted α by the update's relative
+//! parameter distance
+//!
+//! ```text
+//! α_eff = α·s(t−τ) · clamp(‖x_new − x_t‖₂ / ‖x_t‖₂, lo, hi)
+//! ```
+//!
+//! so near-duplicate updates (tiny relative distance) barely perturb the
+//! model while divergent ones get amplified *up to the clamp* — the
+//! `[lo, hi]` clamp is the safety device keeping the scale (and with the
+//! final `min(1)` the α itself) inside `(0, 1]` no matter how degenerate
+//! the geometry gets (zero-norm init models are ε-guarded).  The α bound
+//! is property-pinned by `prop_distance_adaptive_alpha_in_unit_interval`
+//! in `rust/tests/proptests.rs`.
+//!
+//! The distance pass is one fused read over both vectors (no temporary),
+//! so the strategy adds a single O(P) scan per offered update on top of
+//! the mix itself — `bench_aggregators` measures the overhead.
+
+use crate::coordinator::aggregator::{AggregateDecision, Aggregator};
+use crate::coordinator::staleness::{AlphaController, AlphaDecision};
+use crate::runtime::ParamVec;
+
+/// Guard against division by a zero-norm model (e.g. an all-zeros init).
+const NORM_EPS: f64 = 1e-12;
+
+/// Scale `α·s(t−τ)` by the clamped relative distance
+/// `‖x_new − x_t‖ / ‖x_t‖`.
+pub struct DistanceAdaptive {
+    alpha: AlphaController,
+    clamp_lo: f64,
+    clamp_hi: f64,
+}
+
+impl DistanceAdaptive {
+    /// `clamp_lo`/`clamp_hi` bound the distance scale (both > 0,
+    /// `lo ≤ hi` — validated at config time).
+    pub fn new(alpha: AlphaController, clamp_lo: f64, clamp_hi: f64) -> DistanceAdaptive {
+        assert!(
+            clamp_lo > 0.0 && clamp_hi >= clamp_lo,
+            "distance clamp [{clamp_lo}, {clamp_hi}] invalid"
+        );
+        DistanceAdaptive { alpha, clamp_lo, clamp_hi }
+    }
+}
+
+impl Aggregator for DistanceAdaptive {
+    fn name(&self) -> &'static str {
+        "distance"
+    }
+
+    fn offer(
+        &mut self,
+        x_new: &[f32],
+        current: &[f32],
+        staleness: u64,
+        t: u64,
+    ) -> AggregateDecision {
+        let alpha_t = match self.alpha.decide(t as usize, staleness) {
+            AlphaDecision::Drop => return AggregateDecision::Drop,
+            AlphaDecision::Mix(a) => a,
+        };
+        // One fused pass: ‖x_new − x_t‖² and ‖x_t‖² together.
+        debug_assert_eq!(x_new.len(), current.len());
+        let (mut dist_sq, mut norm_sq) = (0.0f64, 0.0f64);
+        for (&n, &c) in x_new.iter().zip(current) {
+            let d = (n - c) as f64;
+            dist_sq += d * d;
+            let c = c as f64;
+            norm_sq += c * c;
+        }
+        let ratio = dist_sq.sqrt() / norm_sq.sqrt().max(NORM_EPS);
+        // NaN can only arise from inf/inf on pathological inputs; treat
+        // it as "maximally far" rather than poisoning α.
+        let scale = if ratio.is_finite() {
+            ratio.clamp(self.clamp_lo, self.clamp_hi)
+        } else {
+            self.clamp_hi
+        };
+        AggregateDecision::Apply {
+            alpha: (alpha_t * scale).clamp(f64::MIN_POSITIVE, 1.0),
+        }
+    }
+
+    fn take_staged(&mut self) -> Option<ParamVec> {
+        None
+    }
+
+    fn flush(&mut self, _t: u64) -> Option<(ParamVec, f64)> {
+        None
+    }
+}

@@ -1,0 +1,54 @@
+//! The paper's rule as a strategy object: apply immediately, α from the
+//! staleness controller.
+//!
+//! This is the default aggregator and the one whose numerics are pinned:
+//! its [`Aggregator::offer`] is a pass-through to
+//! [`AlphaController::decide`], exactly the call the updater made before
+//! the aggregation layer existed, so the golden sampled trace
+//! (`rust/tests/golden_trace.rs`) stays byte-identical across the
+//! refactor.  It never stages anything — `take_staged` and `flush` are
+//! permanently empty.
+
+use crate::coordinator::aggregator::{AggregateDecision, Aggregator};
+use crate::coordinator::staleness::{AlphaController, AlphaDecision};
+use crate::runtime::ParamVec;
+
+/// Paper Algorithm 1: mix every surviving update immediately with
+/// `α_t = α·s(t−τ)` (drop when the controller's cutoff fires).
+pub struct FedAsync {
+    alpha: AlphaController,
+}
+
+impl FedAsync {
+    /// Wrap a configured α controller.
+    pub fn new(alpha: AlphaController) -> FedAsync {
+        FedAsync { alpha }
+    }
+}
+
+impl Aggregator for FedAsync {
+    fn name(&self) -> &'static str {
+        "fedasync"
+    }
+
+    fn offer(
+        &mut self,
+        _x_new: &[f32],
+        _current: &[f32],
+        staleness: u64,
+        t: u64,
+    ) -> AggregateDecision {
+        match self.alpha.decide(t as usize, staleness) {
+            AlphaDecision::Drop => AggregateDecision::Drop,
+            AlphaDecision::Mix(alpha) => AggregateDecision::Apply { alpha },
+        }
+    }
+
+    fn take_staged(&mut self) -> Option<ParamVec> {
+        None
+    }
+
+    fn flush(&mut self, _t: u64) -> Option<(ParamVec, f64)> {
+        None
+    }
+}

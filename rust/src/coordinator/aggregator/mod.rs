@@ -1,0 +1,242 @@
+//! Pluggable server aggregation strategies.
+//!
+//! The paper's server update is one line — `x_t = (1−α_t)·x_{t−1} +
+//! α_t·x_new` with `α_t = α·s(t−τ)` (§4) — and before this module that
+//! line was hard-coded into the updater, so the system could express
+//! exactly one aggregation rule.  Related work shows the same
+//! asynchronous loop supports a *family* of server rules; this module
+//! extracts the rule behind an [`Aggregator`] trait so the engine's
+//! arrival path (delivery → offer → commit → record) stays written once
+//! while the per-update decision becomes a strategy object:
+//!
+//! | strategy                      | rule                                               |
+//! |-------------------------------|----------------------------------------------------|
+//! | [`FedAsync`]                  | apply immediately with `α·s(t−τ)` (paper Alg. 1)   |
+//! | [`Buffered`]                  | stage K updates, apply one normalized blend        |
+//! | [`DistanceAdaptive`]          | α scaled by `‖x_new − x_t‖ / ‖x_t‖`, clamped       |
+//!
+//! The contract is a three-way decision per offered update — apply
+//! (with an effective α), buffer (absorb into a staging blend, model
+//! unchanged), or drop (staleness cutoff) — plus a [`Aggregator::flush`]
+//! hook the engine calls at end-of-run so a partially filled staging
+//! buffer is committed rather than silently lost (*flush-on-drain*).
+//!
+//! [`FedAsync`] reproduces the pre-refactor updater decision-for-decision
+//! — the golden sampled trace (`rust/tests/golden_trace.rs`) pins it
+//! byte-identical to the output this repo produced before the
+//! aggregation layer existed.  Strategy selection is config-driven
+//! ([`AggregatorConfig`]: `[aggregator]` TOML table or `--aggregator`
+//! CLI flag); [`for_config`] builds the strategy object the
+//! [`UpdaterCore`](crate::coordinator::core::UpdaterCore) drives.
+//!
+//! See DESIGN.md §"Aggregation layer" for the decision flow and the
+//! staleness interaction of each strategy.
+
+pub mod buffered;
+pub mod distance;
+pub mod fedasync;
+
+pub use buffered::Buffered;
+pub use distance::DistanceAdaptive;
+pub use fedasync::FedAsync;
+
+use std::sync::Arc;
+
+use crate::config::{AggregatorConfig, ExperimentConfig};
+use crate::coordinator::snapshot::BufferPool;
+use crate::coordinator::staleness::AlphaController;
+use crate::runtime::ParamVec;
+
+/// What the updater should do with the update it was just offered.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AggregateDecision {
+    /// Mix the offered update itself into the model with this α.
+    Apply {
+        /// Effective mixing weight, in `(0, 1]`.
+        alpha: f64,
+    },
+    /// Mix the aggregator's staged blend ([`Aggregator::take_staged`])
+    /// into the model with this α; the offered update has already been
+    /// absorbed into the blend.
+    ApplyStaged {
+        /// Effective mixing weight for the blend, in `(0, 1]`.
+        alpha: f64,
+    },
+    /// Update absorbed into the staging buffer; the model does not move
+    /// this round.
+    Buffer,
+    /// Update rejected (staleness above the strategy's cutoff).
+    Drop,
+}
+
+/// One server aggregation rule, driven per offered update by
+/// [`Updater::apply`](crate::coordinator::updater::Updater::apply).
+///
+/// The updater owns the mix itself (engine selection, buffer pooling,
+/// version history); the aggregator only decides *what* to mix and with
+/// *which* α.  Implementations must be deterministic functions of their
+/// inputs — no RNG — so every execution mode replays the same decisions.
+pub trait Aggregator: Send {
+    /// Strategy name for logs and metric labels.
+    fn name(&self) -> &'static str;
+
+    /// Decide the fate of an update arriving with the given staleness at
+    /// epoch `t` (the version the update would become if applied).
+    /// `current` is the model `x_{t−1}` the mix would blend into.
+    fn offer(
+        &mut self,
+        x_new: &[f32],
+        current: &[f32],
+        staleness: u64,
+        t: u64,
+    ) -> AggregateDecision;
+
+    /// Hand over the staged blend after an
+    /// [`AggregateDecision::ApplyStaged`]; resets the staging state.
+    /// `None` for strategies that never buffer.
+    fn take_staged(&mut self) -> Option<ParamVec>;
+
+    /// End-of-run drain: the staging buffer's remaining blend and its α,
+    /// or `None` when nothing is pending.  The engine commits this as one
+    /// final update so no accepted update is lost at shutdown.
+    fn flush(&mut self, t: u64) -> Option<(ParamVec, f64)>;
+}
+
+/// Build the strategy object an experiment config asks for.
+///
+/// `pool` (threaded server) lets buffering strategies draw their staging
+/// buffers from the shared recycler instead of allocating; the virtual
+/// modes pass `None`.
+pub fn for_config(cfg: &ExperimentConfig, pool: Option<Arc<BufferPool>>) -> Box<dyn Aggregator> {
+    let alpha =
+        AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness);
+    match cfg.aggregator {
+        AggregatorConfig::FedAsync => Box::new(FedAsync::new(alpha)),
+        AggregatorConfig::Buffered { k } => Box::new(Buffered::new(alpha, k, pool)),
+        AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi } => {
+            Box::new(DistanceAdaptive::new(alpha, clamp_lo, clamp_hi))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{StalenessConfig, StalenessFn};
+
+    fn controller(drop_above: Option<u64>) -> AlphaController {
+        AlphaController::new(
+            0.5,
+            1.0,
+            usize::MAX,
+            &StalenessConfig { max: 16, func: StalenessFn::Poly { a: 0.5 }, drop_above },
+        )
+    }
+
+    #[test]
+    fn for_config_builds_the_configured_strategy() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(for_config(&cfg, None).name(), "fedasync");
+        cfg.aggregator = AggregatorConfig::Buffered { k: 4 };
+        assert_eq!(for_config(&cfg, None).name(), "buffered");
+        cfg.aggregator = AggregatorConfig::DistanceAdaptive { clamp_lo: 0.1, clamp_hi: 2.0 };
+        assert_eq!(for_config(&cfg, None).name(), "distance");
+    }
+
+    #[test]
+    fn fedasync_matches_alpha_controller_exactly() {
+        // The default strategy must replicate AlphaController::decide
+        // bit-for-bit — this is what keeps the golden trace byte-identical.
+        use crate::coordinator::staleness::AlphaDecision;
+        let ctl = controller(Some(8));
+        let mut agg = FedAsync::new(controller(Some(8)));
+        for t in 1..=40u64 {
+            for s in 1..=12u64 {
+                let want = ctl.decide(t as usize, s);
+                let got = agg.offer(&[1.0; 4], &[0.0; 4], s, t);
+                match (want, got) {
+                    (AlphaDecision::Drop, AggregateDecision::Drop) => {}
+                    (AlphaDecision::Mix(a), AggregateDecision::Apply { alpha }) => {
+                        assert_eq!(a.to_bits(), alpha.to_bits(), "t={t} s={s}");
+                    }
+                    (w, g) => panic!("t={t} s={s}: controller {w:?} vs aggregator {g:?}"),
+                }
+            }
+        }
+        assert!(agg.take_staged().is_none());
+        assert!(agg.flush(41).is_none());
+    }
+
+    #[test]
+    fn buffered_commits_every_k_and_flushes_the_tail() {
+        let mut agg = Buffered::new(controller(None), 3, None);
+        let xs: Vec<Vec<f32>> = (0..7).map(|i| vec![i as f32; 2]).collect();
+        let mut commits = 0;
+        let mut buffers = 0;
+        for (i, x) in xs.iter().enumerate() {
+            match agg.offer(x, &[0.0; 2], 1, i as u64 + 1) {
+                AggregateDecision::ApplyStaged { alpha } => {
+                    assert!(alpha > 0.0 && alpha <= 1.0);
+                    assert!(agg.take_staged().is_some());
+                    commits += 1;
+                }
+                AggregateDecision::Buffer => buffers += 1,
+                other => panic!("unexpected decision {other:?}"),
+            }
+        }
+        assert_eq!(commits, 2, "7 updates at k=3 commit twice in-stream");
+        assert_eq!(buffers, 5);
+        // The 7th update is still staged; flush drains it exactly once.
+        let (blend, alpha) = agg.flush(8).expect("pending tail");
+        assert_eq!(blend, vec![6.0; 2], "tail blend is the 7th update");
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        assert!(agg.flush(9).is_none(), "flush is idempotent");
+    }
+
+    #[test]
+    fn buffered_blend_is_normalized_weighted_mean() {
+        // Identical inputs must blend to themselves no matter the
+        // staleness mix — the weights sum to 1 by construction.
+        let mut agg = Buffered::new(controller(None), 4, None);
+        for (i, s) in [1u64, 5, 9, 2].into_iter().enumerate() {
+            let d = agg.offer(&[3.0; 4], &[0.0; 4], s, i as u64 + 1);
+            if i == 3 {
+                assert!(matches!(d, AggregateDecision::ApplyStaged { .. }));
+            }
+        }
+        let blend = agg.take_staged().unwrap();
+        for v in blend {
+            assert!((v - 3.0).abs() < 1e-6, "blend drifted off the common value: {v}");
+        }
+    }
+
+    #[test]
+    fn buffered_respects_the_drop_cutoff() {
+        let mut agg = Buffered::new(controller(Some(4)), 2, None);
+        assert_eq!(agg.offer(&[1.0; 2], &[0.0; 2], 9, 1), AggregateDecision::Drop);
+        assert!(agg.flush(2).is_none(), "dropped updates are not staged");
+    }
+
+    #[test]
+    fn distance_adaptive_scales_and_clamps() {
+        let mut agg = DistanceAdaptive::new(controller(None), 0.25, 2.0);
+        // Far update (ratio >> hi): scale clamps to hi.
+        let far = agg.offer(&[100.0; 4], &[1.0; 4], 1, 1);
+        // Near update (ratio << lo): scale clamps to lo.
+        let near = agg.offer(&[1.0001; 4], &[1.0; 4], 1, 1);
+        let alpha_of = |d: AggregateDecision| match d {
+            AggregateDecision::Apply { alpha } => alpha,
+            other => panic!("unexpected decision {other:?}"),
+        };
+        let (a_far, a_near) = (alpha_of(far), alpha_of(near));
+        assert!(a_far > a_near, "larger relative distance ⇒ larger (clamped) α");
+        assert!(a_far <= 1.0 && a_near > 0.0);
+        // Base α 0.5 at staleness 1 is 0.5/√2; lo/hi clamp the scale.
+        let base = 0.5 * (2.0f64).powf(-0.5);
+        assert!((a_far - (base * 2.0).min(1.0)).abs() < 1e-12);
+        assert!((a_near - base * 0.25).abs() < 1e-12);
+        // Zero model: the ε guard keeps the ratio finite, clamp bounds it.
+        let zero = alpha_of(agg.offer(&[1.0; 4], &[0.0; 4], 1, 1));
+        assert!(zero > 0.0 && zero <= 1.0);
+    }
+}

@@ -14,10 +14,10 @@
 use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
+use crate::coordinator::aggregator;
 use crate::coordinator::model_store::ModelStore;
 use crate::coordinator::recorder::EvalRecorder;
 use crate::coordinator::snapshot::BufferPool;
-use crate::coordinator::staleness::AlphaController;
 use crate::coordinator::updater::{MixEngine, UpdateOutcome, Updater};
 use crate::coordinator::Trainer;
 use crate::federated::data::Dataset;
@@ -26,8 +26,11 @@ use crate::runtime::{ParamVec, RuntimeError};
 
 /// Updater + model history + recorder, wired per the experiment config.
 pub struct UpdaterCore<'a> {
+    /// Mix mechanics driving the config's aggregation strategy.
     pub updater: Updater,
+    /// Versioned global-model history.
     pub store: ModelStore,
+    /// Grid-aligned metrics recorder.
     pub rec: EvalRecorder<'a>,
 }
 
@@ -36,7 +39,9 @@ impl<'a> UpdaterCore<'a> {
     /// tasks carry their own anchor, `max_staleness + 1` for the sampled
     /// protocol's historical reads.  `pool` (threaded server) makes the
     /// updater recycle mix buffers and evicted versions instead of
-    /// allocating per update; the sequential simulators pass `None`.
+    /// allocating per update; the sequential simulators pass `None`.  The
+    /// aggregation strategy comes from `cfg.aggregator`
+    /// ([`aggregator::for_config`]).
     pub fn new(
         cfg: &ExperimentConfig,
         initial: ParamVec,
@@ -44,11 +49,10 @@ impl<'a> UpdaterCore<'a> {
         test: &'a Dataset,
         pool: Option<Arc<BufferPool>>,
     ) -> UpdaterCore<'a> {
-        let alpha =
-            AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness);
+        let agg = aggregator::for_config(cfg, pool.clone());
         let updater = match pool {
-            Some(pool) => Updater::with_pool(alpha, MixEngine::Native, pool),
-            None => Updater::new(alpha, MixEngine::Native),
+            Some(pool) => Updater::with_pool(agg, MixEngine::Native, pool),
+            None => Updater::new(agg, MixEngine::Native),
         };
         UpdaterCore {
             updater,
@@ -59,7 +63,9 @@ impl<'a> UpdaterCore<'a> {
 
     /// Offer one worker update `(x_new, τ)` and do the server accounting:
     /// 2 comms per task (model down + model up), H gradients when the
-    /// update is applied, and the α/staleness/loss window counters.
+    /// update enters the model (applied now or absorbed into a staging
+    /// blend that will commit), the applied/buffered totals, and the
+    /// α/staleness/loss window counters.
     pub fn offer<T: Trainer>(
         &mut self,
         trainer: &T,
@@ -69,10 +75,28 @@ impl<'a> UpdaterCore<'a> {
     ) -> Result<UpdateOutcome, RuntimeError> {
         let out = self.updater.apply(trainer, &mut self.store, x_new, tau)?;
         self.rec.counters.comms += 2;
-        if out.applied {
+        if out.applied || out.buffered {
             self.rec.counters.gradients += trainer.local_iters() as u64;
         }
+        self.rec.counters.applied += out.applied as u64;
+        self.rec.counters.buffered += out.buffered as u64;
         self.rec.counters.record_update(out.alpha_eff, out.staleness, loss as f64);
+        Ok(out)
+    }
+
+    /// Flush the aggregation strategy's partial staging buffer (if any)
+    /// as one final commit — the engine calls this at end-of-run so a
+    /// buffering aggregator never loses accepted updates at shutdown.
+    /// No new row is recorded and no comms are counted: the flushed
+    /// updates were accounted when they were offered.
+    pub fn drain<T: Trainer>(
+        &mut self,
+        trainer: &T,
+    ) -> Result<Option<UpdateOutcome>, RuntimeError> {
+        let out = self.updater.drain(trainer, &mut self.store)?;
+        if out.is_some() {
+            self.rec.counters.applied += 1;
+        }
         Ok(out)
     }
 
@@ -159,8 +183,15 @@ mod tests {
         let test = test_dataset();
         let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 8, &test, None);
 
-        let manual_updater = Updater::new(
-            AlphaController::new(cfg.alpha, cfg.alpha_decay, cfg.alpha_decay_at, &cfg.staleness),
+        let mut manual_updater = Updater::new(
+            Box::new(crate::coordinator::aggregator::FedAsync::new(
+                crate::coordinator::staleness::AlphaController::new(
+                    cfg.alpha,
+                    cfg.alpha_decay,
+                    cfg.alpha_decay_at,
+                    &cfg.staleness,
+                ),
+            )),
             MixEngine::Native,
         );
         let mut manual_store = ModelStore::new(vec![0.0; 4], 8);
@@ -202,6 +233,30 @@ mod tests {
         // 5 tasks × 2 comms; gradients only for the 4 applied × H=5.
         assert_eq!(core.rec.counters.comms, 10);
         assert_eq!(core.rec.counters.gradients, 20);
+    }
+
+    #[test]
+    fn buffered_core_accounting_and_drain() {
+        let mut cfg = cfg(100, 10, None);
+        cfg.aggregator = crate::config::AggregatorConfig::Buffered { k: 4 };
+        let test = test_dataset();
+        let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 8, &test, None);
+        for _ in 0..6 {
+            let v = core.store.current_version();
+            core.offer(&StubTrainer, &[1.0; 4], v, 1.0).unwrap();
+        }
+        // 6 offers at k=4: one in-stream commit, 2 updates still staged.
+        assert_eq!(core.store.current_version(), 1);
+        assert_eq!(core.rec.counters.applied, 1);
+        assert_eq!(core.rec.counters.buffered, 6, "every accepted offer is absorbed");
+        // Buffered offers still represent H gradients of accepted work.
+        assert_eq!(core.rec.counters.gradients, 6 * 5);
+        assert_eq!(core.rec.counters.comms, 12);
+        // Drain commits the pending pair as one final version, once.
+        assert!(core.drain(&StubTrainer).unwrap().is_some());
+        assert_eq!(core.store.current_version(), 2);
+        assert_eq!(core.rec.counters.applied, 2);
+        assert!(core.drain(&StubTrainer).unwrap().is_none());
     }
 
     #[test]

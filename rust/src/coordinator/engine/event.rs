@@ -50,6 +50,8 @@ pub struct EventDriver<'a> {
 }
 
 impl<'a> EventDriver<'a> {
+    /// Wire a driver over the repeat's fleet/data with `inflight` tasks
+    /// kept outstanding (clamped to the fleet size).
     pub fn new(
         cfg: &ExperimentConfig,
         data: &'a FederatedData,

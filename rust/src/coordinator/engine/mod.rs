@@ -17,9 +17,13 @@
 //! 2. [`TimeDriver::start`] the substrate (spawn threads / pump tasks),
 //! 3. loop until the epoch target: take the next [`Arrival`] from the
 //!    driver, draw its delivery fate from the scenario's
-//!    [`ClientBehavior`], [`UpdaterCore::offer`] each surviving copy, and
-//!    record grid-aligned rows on the driver's [`Clock`],
-//! 4. [`TimeDriver::shutdown`] the substrate (drain + join) — run even
+//!    [`ClientBehavior`], [`UpdaterCore::offer`] each surviving copy —
+//!    where the configured [`Aggregator`] strategy decides apply /
+//!    buffer / drop — and record grid-aligned rows on the driver's
+//!    [`Clock`] whenever the model actually advanced,
+//! 4. flush the aggregator's staging buffer ([`UpdaterCore::drain`]) so
+//!    a buffering strategy never loses accepted updates at shutdown,
+//! 5. [`TimeDriver::shutdown`] the substrate (drain + join) — run even
 //!    when the loop erred, so a failure never wedges worker threads.
 //!
 //! The drivers supply only the mode-specific physics:
@@ -32,9 +36,12 @@
 //!
 //! Cross-mode conformance is therefore a property of construction: the
 //! delivery/offer/record path cannot drift between modes because it
-//! exists exactly once.  New modes (sharded multi-updater servers, new
-//! aggregation protocols) cost one driver, not three reimplementations.
+//! exists exactly once.  New modes cost one driver, and new server rules
+//! cost one [`Aggregator`] strategy — the two axes compose, which is
+//! exactly what the aggregator × driver conformance suite
+//! (`rust/tests/integration_training.rs`) exercises.
 //!
+//! [`Aggregator`]: crate::coordinator::aggregator::Aggregator
 //! [`EventQueue`]: crate::federated::network::EventQueue
 
 pub mod event;
@@ -58,10 +65,13 @@ use crate::util::rng::Rng;
 
 /// A completed local-training result arriving at the server's doorstep.
 pub struct Arrival {
+    /// Device that ran the task.
     pub device: usize,
     /// Global-model version the task trained from.
     pub tau: u64,
+    /// The locally trained model.
     pub x_new: ParamVec,
+    /// Mean local training loss the task reported.
     pub loss: f32,
 }
 
@@ -164,6 +174,8 @@ pub struct Engine<'e, T: Trainer> {
 }
 
 impl<'e, T: Trainer> Engine<'e, T> {
+    /// Engine over one trainer/config/population triple; pair it with a
+    /// core and a driver via [`Engine::run`].
     pub fn new(
         trainer: &'e T,
         cfg: &'e ExperimentConfig,
@@ -216,7 +228,11 @@ impl<'e, T: Trainer> Engine<'e, T> {
                 Clock::Versions => (ticks as f64 / epochs as f64).min(1.0),
             };
             let Some(arrival) = driver.next_completion(self.trainer, core, progress)? else {
-                break;
+                // Substrate exhausted before the target (threaded: every
+                // worker exited).  Skip the aggregator flush below: a
+                // staged blend must not nudge the version over the line
+                // and mask the driver's failure detection in `shutdown`.
+                return Ok(());
             };
             let Arrival { device, tau, x_new, loss } = arrival;
 
@@ -250,6 +266,13 @@ impl<'e, T: Trainer> Engine<'e, T> {
                 // The sampled protocol rows on offered tasks, applied or
                 // not, with virtual time = the task counter.
                 tasks_done += 1;
+                if tasks_done >= epochs {
+                    // Last task of the run: flush the aggregator's
+                    // staging buffer *before* the final grid row records,
+                    // so the row's model and applied count reflect every
+                    // accepted update (flush-on-drain).
+                    core.drain(self.trainer)?;
+                }
                 let now = driver.now();
                 let clients = self.behavior.present_count(progress);
                 self.record(core, driver, tasks_done as usize, now, clients)?;
@@ -260,6 +283,15 @@ impl<'e, T: Trainer> Engine<'e, T> {
             };
             driver.after_delivery(self.trainer, core, x_new, refill_progress)?;
         }
+        // Flush-on-drain: a buffering aggregator may still hold accepted
+        // updates in its staging blend; commit them as one final version
+        // so nothing accepted is silently lost at shutdown.  On the task
+        // clock this already happened before the final row; here it
+        // covers the version clocks, whose flush lands past the last
+        // grid row (the budget is met, the work is kept).  FedAsync and
+        // distance-adaptive never stage — a no-op for them, which is
+        // what keeps the golden sampled trace byte-identical.
+        core.drain(self.trainer)?;
         Ok(())
     }
 

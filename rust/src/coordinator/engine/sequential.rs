@@ -41,6 +41,9 @@ pub struct SequentialDriver<'a> {
 }
 
 impl<'a> SequentialDriver<'a> {
+    /// Wire a driver over the repeat's fleet/data; `max_staleness` bounds
+    /// the sampled draw (the core's history ring must retain that many
+    /// versions plus one).
     pub fn new(
         cfg: &ExperimentConfig,
         data: &'a FederatedData,

@@ -98,6 +98,7 @@ pub fn run_fedavg<T: Trainer>(
                 *dst = s * inv;
             }
             rec.counters.gradients += h * survivors as u64;
+            rec.counters.applied += 1;
             rec.counters
                 .record_update(1.0 / survivors as f64, 1, loss_sum / survivors as f64);
         }

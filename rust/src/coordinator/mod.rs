@@ -4,6 +4,9 @@
 //!   update sequence written once, parameterized by a `TimeDriver`
 //!   (sequential sampled staleness, discrete-event virtual time, or the
 //!   real-thread server).
+//! * [`aggregator`] — the pluggable server rule the engine drives per
+//!   arriving update: FedAsync (paper), buffered K-update blends, or
+//!   distance-adaptive α.
 //! * [`virtual_mode`] — thin constructors for the two virtual-time
 //!   drivers (the paper's evaluation protocol).
 //! * [`server`] — thin constructor for the Figure-1 architecture on real
@@ -24,6 +27,9 @@
 //! closed-form quadratic problems in `analysis` (used to validate the
 //! paper's Theorems 1–2 against the true optimality gap).
 
+#![warn(missing_docs)]
+
+pub mod aggregator;
 pub mod core;
 pub mod engine;
 pub mod fedavg;
@@ -45,6 +51,7 @@ use crate::runtime::{EvalMetrics, ModelRuntime, ParamVec, RuntimeError};
 /// `anchor = None` ⇒ Algorithm 1 Option I (plain SGD);
 /// `Some(x_t)` ⇒ Option II (prox-SGD toward the received global model).
 pub trait Trainer {
+    /// Flat parameter-vector length P.
     fn param_count(&self) -> usize;
 
     /// Initial global model for a repeat index.

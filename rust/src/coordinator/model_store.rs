@@ -38,10 +38,12 @@ impl ModelStore {
         ModelStore { ring, current_version: 0, capacity, evicted: None }
     }
 
+    /// Epoch stamp `t` of the current model.
     pub fn current_version(&self) -> u64 {
         self.current_version
     }
 
+    /// The current model `x_t`.
     pub fn current(&self) -> &ParamVec {
         self.ring.back().expect("non-empty ring")
     }
@@ -97,6 +99,7 @@ impl ModelStore {
         }
     }
 
+    /// Number of versions currently held in the ring.
     pub fn retained(&self) -> usize {
         self.ring.len()
     }

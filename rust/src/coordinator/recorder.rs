@@ -16,7 +16,9 @@ use crate::runtime::RuntimeError;
 
 /// Row recorder with a fixed eval grid.
 pub struct EvalRecorder<'a> {
+    /// The run's accumulating metric series.
     pub log: MetricsLog,
+    /// Cumulative and windowed counters sampled into each row.
     pub counters: RunningCounters,
     eval_every: usize,
     test: &'a Dataset,
@@ -24,6 +26,8 @@ pub struct EvalRecorder<'a> {
 }
 
 impl<'a> EvalRecorder<'a> {
+    /// Recorder for a `label`led series on the grid `0, eval_every, …,
+    /// epochs`, evaluating against `test`.
     pub fn new(
         label: String,
         eval_every: usize,
@@ -66,6 +70,8 @@ impl<'a> EvalRecorder<'a> {
             alpha_eff,
             staleness,
             clients,
+            applied: self.counters.applied,
+            buffered: self.counters.buffered,
         });
         Ok(())
     }

@@ -39,18 +39,26 @@ pub use crate::coordinator::engine::threaded::TIME_SCALE;
 /// Jobs handled by the compute-service thread (PJRT in production; tests
 /// and benches plug in a native mock — see [`run_server_core`]).
 pub enum ComputeJob {
+    /// Run one local-training task (H minibatch iterations).
     Train {
+        /// Device whose data shard trains.
         device: usize,
         /// Shared snapshot of the global model the task departs from.
         params: Arc<ParamVec>,
+        /// Algorithm 1 Option II: anchor to the received model.
         prox: bool,
+        /// Learning rate γ.
         gamma: f32,
+        /// Proximal weight ρ (Option II).
         rho: f32,
+        /// Where the trained model + mean loss goes.
         reply: Sender<Result<(ParamVec, f32), String>>,
     },
+    /// Evaluate a model on the held-out set.
     Eval {
         /// Shared snapshot of the model under evaluation (no copy).
         params: Arc<ParamVec>,
+        /// Where the metrics go.
         reply: Sender<Result<EvalMetrics, String>>,
     },
 }

@@ -56,6 +56,7 @@ pub fn run_sgd<T: Trainer>(
         )?;
         params = next;
         rec.counters.gradients += h;
+        rec.counters.applied += 1;
         // No communication: the model never leaves the single worker.
         rec.counters.record_update(1.0, 0, loss as f64);
         rec.maybe_record(

@@ -33,7 +33,9 @@ use crate::runtime::ParamVec;
 /// One published global model: `(t, x_t)`.
 #[derive(Clone)]
 pub struct ModelSnapshot {
+    /// Epoch stamp `t`.
     pub version: u64,
+    /// Shared handle to `x_t` (never copied by readers).
     pub params: Arc<ParamVec>,
 }
 
@@ -43,6 +45,7 @@ pub struct SnapshotCell {
 }
 
 impl SnapshotCell {
+    /// Cell initially publishing `(version, params)`.
     pub fn new(version: u64, params: Arc<ParamVec>) -> SnapshotCell {
         SnapshotCell { slot: RwLock::new(ModelSnapshot { version, params }) }
     }
@@ -78,6 +81,7 @@ pub struct BufferPool {
 }
 
 impl BufferPool {
+    /// Pool holding at most `capacity` parked buffers.
     pub fn new(capacity: usize) -> BufferPool {
         BufferPool { free: Mutex::new(Vec::with_capacity(capacity)), capacity }
     }

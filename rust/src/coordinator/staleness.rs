@@ -28,6 +28,8 @@ pub enum AlphaDecision {
 }
 
 impl AlphaController {
+    /// Controller for base `alpha` with the `×decay at decay_at` schedule
+    /// and the staleness config's `s(t−τ)` family + drop cutoff.
     pub fn new(
         alpha: f64,
         decay: f64,
@@ -65,6 +67,7 @@ impl AlphaController {
         AlphaDecision::Mix(alpha.clamp(0.0, 1.0))
     }
 
+    /// The staleness function `s` this controller weights with.
     pub fn func(&self) -> StalenessFn {
         self.func
     }

@@ -1,8 +1,15 @@
-//! The server's mixing update — FedAsync's single line of math:
+//! The server's mixing update — the commit half of the aggregation layer:
 //!
 //! ```text
-//! x_t = (1 − α_t)·x_{t−1} + α_t·x_new        α_t = α·s(t−τ)
+//! x_t = (1 − α_t)·x_{t−1} + α_t·y
 //! ```
+//!
+//! where `y` and `α_t` come from the configured
+//! [`Aggregator`](crate::coordinator::aggregator::Aggregator) strategy
+//! (`y` is the offered update itself for FedAsync/distance-adaptive, or
+//! a staged blend for buffered aggregation).  The [`Updater`] owns the
+//! mechanics every strategy shares: the mix kernels below, the version
+//! history push, and buffer-pool recycling.
 //!
 //! Two engines:
 //! * [`MixEngine::Native`] — allocation-free fused loop over the flat
@@ -13,16 +20,18 @@
 
 use std::sync::Arc;
 
+use crate::coordinator::aggregator::{AggregateDecision, Aggregator};
 use crate::coordinator::model_store::ModelStore;
 use crate::coordinator::snapshot::BufferPool;
-use crate::coordinator::staleness::{AlphaController, AlphaDecision};
 use crate::coordinator::Trainer;
 use crate::runtime::RuntimeError;
 
 /// Which implementation performs the blend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MixEngine {
+    /// Fused in-process loop (LLVM auto-vectorized).
     Native,
+    /// The AOT-compiled Pallas `mix` kernel via PJRT.
     Pjrt,
 }
 
@@ -122,18 +131,24 @@ pub fn mix_into_buf(x: &[f32], y: &[f32], alpha: f32, out: &mut Vec<f32>) {
 /// Outcome of offering one worker update to the updater.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct UpdateOutcome {
-    /// New epoch `t` if applied, unchanged version if dropped.
+    /// New epoch `t` if applied, unchanged version if dropped/buffered.
     pub version: u64,
+    /// The global model advanced (directly or via a staged blend commit).
     pub applied: bool,
-    /// α_t actually used (0 when dropped).
+    /// The update was absorbed into an aggregation staging buffer.
+    pub buffered: bool,
+    /// α_t actually used (0 when dropped or merely buffered).
     pub alpha_eff: f64,
+    /// Version distance `t − τ` of the offered update.
     pub staleness: u64,
 }
 
-/// Applies staleness-weighted updates to a [`ModelStore`].
+/// Applies aggregated updates to a [`ModelStore`], per the decisions of
+/// a pluggable [`Aggregator`] strategy.
 pub struct Updater {
-    pub alpha: AlphaController,
+    /// Which implementation performs the blend.
     pub engine: MixEngine,
+    agg: Box<dyn Aggregator>,
     /// When set, mix outputs are drawn from this pool and the storage of
     /// evicted model versions is returned to it — the threaded server's
     /// steady-state allocation loop (see `coordinator::snapshot`).
@@ -141,19 +156,30 @@ pub struct Updater {
 }
 
 impl Updater {
-    pub fn new(alpha: AlphaController, engine: MixEngine) -> Updater {
-        Updater { alpha, engine, pool: None }
+    /// An updater driving the given aggregation strategy.
+    pub fn new(agg: Box<dyn Aggregator>, engine: MixEngine) -> Updater {
+        Updater { engine, agg, pool: None }
     }
 
     /// An updater that recycles parameter buffers through `pool`.
-    pub fn with_pool(alpha: AlphaController, engine: MixEngine, pool: Arc<BufferPool>) -> Updater {
-        Updater { alpha, engine, pool: Some(pool) }
+    pub fn with_pool(
+        agg: Box<dyn Aggregator>,
+        engine: MixEngine,
+        pool: Arc<BufferPool>,
+    ) -> Updater {
+        Updater { engine, agg, pool: Some(pool) }
+    }
+
+    /// Name of the aggregation strategy in charge.
+    pub fn aggregator_name(&self) -> &'static str {
+        self.agg.name()
     }
 
     /// Offer `(x_new, τ)` to the server at the next epoch (paper
-    /// Algorithm 1, updater thread body).
+    /// Algorithm 1, updater thread body): the aggregator decides, this
+    /// method commits.
     pub fn apply<T: Trainer>(
-        &self,
+        &mut self,
         trainer: &T,
         store: &mut ModelStore,
         x_new: &[f32],
@@ -165,43 +191,114 @@ impl Updater {
         let t_next = store.current_version() + 1;
         debug_assert!(tau < t_next, "update from the future: tau={tau} t={t_next}");
         let staleness = t_next.saturating_sub(tau);
-        match self.alpha.decide(t_next as usize, staleness) {
-            AlphaDecision::Drop => Ok(UpdateOutcome {
+        match self.agg.offer(x_new, store.current(), staleness, t_next) {
+            AggregateDecision::Drop => Ok(UpdateOutcome {
                 version: store.current_version(),
                 applied: false,
+                buffered: false,
                 alpha_eff: 0.0,
                 staleness,
             }),
-            AlphaDecision::Mix(alpha) => {
-                let x = match self.engine {
-                    // Single fused pass: read current + x_new, write the
-                    // new history entry directly (no clone-then-rewrite),
-                    // into a recycled buffer when a pool is attached.
-                    MixEngine::Native => match &self.pool {
-                        Some(pool) => {
-                            let mut out = pool.acquire_clear(x_new.len());
-                            mix_into_buf(store.current(), x_new, alpha as f32, &mut out);
-                            out
-                        }
-                        None => mix_into(store.current(), x_new, alpha as f32),
-                    },
-                    MixEngine::Pjrt => {
-                        let mut x = store.current().clone();
-                        trainer.mix(&mut x, x_new, alpha as f32)?;
-                        x
-                    }
-                };
-                let version = store.push(x);
-                // Close the loop: the version just evicted from the ring
-                // is dead storage unless a snapshot still holds it.
+            AggregateDecision::Buffer => Ok(UpdateOutcome {
+                version: store.current_version(),
+                applied: false,
+                buffered: true,
+                alpha_eff: 0.0,
+                staleness,
+            }),
+            AggregateDecision::Apply { alpha } => {
+                let version = self.commit(trainer, store, x_new, alpha)?;
+                Ok(UpdateOutcome {
+                    version,
+                    applied: true,
+                    buffered: false,
+                    alpha_eff: alpha,
+                    staleness,
+                })
+            }
+            AggregateDecision::ApplyStaged { alpha } => {
+                let staged = self.agg.take_staged().ok_or_else(|| {
+                    RuntimeError::History(
+                        "aggregator decided ApplyStaged with an empty staging buffer".into(),
+                    )
+                })?;
+                let version = self.commit(trainer, store, &staged, alpha)?;
                 if let Some(pool) = &self.pool {
-                    if let Some(buf) = store.take_evicted() {
-                        pool.release(buf);
-                    }
+                    pool.release(staged);
                 }
-                Ok(UpdateOutcome { version, applied: true, alpha_eff: alpha, staleness })
+                Ok(UpdateOutcome {
+                    version,
+                    applied: true,
+                    buffered: true,
+                    alpha_eff: alpha,
+                    staleness,
+                })
             }
         }
+    }
+
+    /// End-of-run drain: commit the aggregator's partial staging buffer
+    /// (if any) as one final version, so no accepted update is lost at
+    /// shutdown.  `None` when nothing was pending.
+    pub fn drain<T: Trainer>(
+        &mut self,
+        trainer: &T,
+        store: &mut ModelStore,
+    ) -> Result<Option<UpdateOutcome>, RuntimeError> {
+        let t_next = store.current_version() + 1;
+        let Some((staged, alpha)) = self.agg.flush(t_next) else {
+            return Ok(None);
+        };
+        let version = self.commit(trainer, store, &staged, alpha)?;
+        if let Some(pool) = &self.pool {
+            pool.release(staged);
+        }
+        Ok(Some(UpdateOutcome {
+            version,
+            applied: true,
+            buffered: false,
+            alpha_eff: alpha,
+            staleness: 0,
+        }))
+    }
+
+    /// The mechanics every strategy shares: mix `y` into the current
+    /// model with `alpha`, push the result as the next version, recycle
+    /// the evicted version's storage.
+    fn commit<T: Trainer>(
+        &self,
+        trainer: &T,
+        store: &mut ModelStore,
+        y: &[f32],
+        alpha: f64,
+    ) -> Result<u64, RuntimeError> {
+        let x = match self.engine {
+            // Single fused pass: read current + y, write the new history
+            // entry directly (no clone-then-rewrite), into a recycled
+            // buffer when a pool is attached.
+            MixEngine::Native => match &self.pool {
+                Some(pool) => {
+                    let mut out = pool.acquire_clear(y.len());
+                    mix_into_buf(store.current(), y, alpha as f32, &mut out);
+                    out
+                }
+                None => mix_into(store.current(), y, alpha as f32),
+            },
+            MixEngine::Pjrt => {
+                let mut x = store.current().clone();
+                trainer.mix(&mut x, y, alpha as f32)?;
+                x
+            }
+        };
+        let version = store.push(x);
+        // Close the loop: the version just evicted from the ring is dead
+        // storage unless a snapshot still holds it.
+        if let Some(pool) = &self.pool {
+            if let Some(buf) = store.take_evicted() {
+                pool.release(buf);
+            }
+        }
+        Ok(version)
     }
 }
 
@@ -209,6 +306,8 @@ impl Updater {
 mod tests {
     use super::*;
     use crate::config::{StalenessConfig, StalenessFn};
+    use crate::coordinator::aggregator::FedAsync;
+    use crate::coordinator::staleness::AlphaController;
 
     /// Minimal Trainer for updater tests (native mixing only).
     struct NullTrainer;
@@ -244,12 +343,12 @@ mod tests {
 
     fn updater(func: StalenessFn, drop_above: Option<u64>) -> Updater {
         Updater::new(
-            AlphaController::new(
+            Box::new(FedAsync::new(AlphaController::new(
                 0.5,
                 1.0,
                 usize::MAX,
                 &StalenessConfig { max: 16, func, drop_above },
-            ),
+            ))),
             MixEngine::Native,
         )
     }
@@ -291,7 +390,7 @@ mod tests {
 
     #[test]
     fn fresh_update_advances_version() {
-        let u = updater(StalenessFn::Constant, None);
+        let mut u = updater(StalenessFn::Constant, None);
         let mut store = ModelStore::new(vec![0.0; 4], 8);
         // Update computed from version 0, arriving as epoch 1: staleness 1
         // (the paper's freshest case).
@@ -307,7 +406,7 @@ mod tests {
 
     #[test]
     fn stale_update_gets_smaller_alpha() {
-        let u = updater(StalenessFn::Poly { a: 0.5 }, None);
+        let mut u = updater(StalenessFn::Poly { a: 0.5 }, None);
         let mut store = ModelStore::new(vec![0.0; 4], 32);
         for _ in 0..9 {
             store.push(vec![0.0; 4]);
@@ -324,7 +423,7 @@ mod tests {
 
     #[test]
     fn drop_leaves_model_untouched() {
-        let u = updater(StalenessFn::Constant, Some(3));
+        let mut u = updater(StalenessFn::Constant, Some(3));
         let mut store = ModelStore::new(vec![0.0; 4], 32);
         for _ in 0..9 {
             store.push(vec![0.0; 4]);
@@ -339,15 +438,15 @@ mod tests {
 
     #[test]
     fn pooled_apply_matches_unpooled_and_recycles() {
-        let plain = updater(StalenessFn::Constant, None);
+        let mut plain = updater(StalenessFn::Constant, None);
         let pool = Arc::new(BufferPool::new(4));
-        let pooled = Updater::with_pool(
-            AlphaController::new(
+        let mut pooled = Updater::with_pool(
+            Box::new(FedAsync::new(AlphaController::new(
                 0.5,
                 1.0,
                 usize::MAX,
                 &StalenessConfig { max: 16, func: StalenessFn::Constant, drop_above: None },
-            ),
+            ))),
             MixEngine::Native,
             Arc::clone(&pool),
         );
@@ -365,8 +464,41 @@ mod tests {
     }
 
     #[test]
+    fn buffered_updater_commits_blend_and_drains_tail() {
+        use crate::coordinator::aggregator::Buffered;
+        let ctl = AlphaController::new(
+            0.5,
+            1.0,
+            usize::MAX,
+            &StalenessConfig { max: 16, func: StalenessFn::Constant, drop_above: None },
+        );
+        let mut u = Updater::new(Box::new(Buffered::new(ctl, 2, None)), MixEngine::Native);
+        let mut store = ModelStore::new(vec![0.0; 2], 4);
+        // First offer buffers; the model does not move.
+        let a = u.apply(&NullTrainer, &mut store, &[1.0, 1.0], 0).unwrap();
+        assert!(!a.applied && a.buffered && a.alpha_eff == 0.0);
+        assert_eq!(store.current_version(), 0);
+        // Second offer commits the equal-weight blend (constant s): the
+        // blend is 2.0 per element, α = 0.5 ⇒ x = 1.0 (exact dyadics).
+        let b = u.apply(&NullTrainer, &mut store, &[3.0, 3.0], 0).unwrap();
+        assert!(b.applied && b.buffered);
+        assert_eq!(b.version, 1);
+        assert_eq!(store.current(), &vec![1.0; 2]);
+        // Third offer buffers; drain flushes exactly that one update:
+        // x = 1 + 0.5·(5 − 1) = 3.
+        let c = u.apply(&NullTrainer, &mut store, &[5.0, 5.0], 1).unwrap();
+        assert!(!c.applied && c.buffered);
+        let d = u.drain(&NullTrainer, &mut store).unwrap().expect("pending tail");
+        assert!(d.applied);
+        assert_eq!(store.current_version(), 2);
+        assert_eq!(store.current(), &vec![3.0; 2]);
+        // Nothing left: drain is idempotent.
+        assert!(u.drain(&NullTrainer, &mut store).unwrap().is_none());
+    }
+
+    #[test]
     fn mixed_model_stays_on_segment() {
-        let u = updater(StalenessFn::Constant, None);
+        let mut u = updater(StalenessFn::Constant, None);
         let mut store = ModelStore::new(vec![-1.0; 4], 8);
         u.apply(&NullTrainer, &mut store, &[3.0; 4], 0).unwrap();
         for &v in store.current() {

@@ -36,8 +36,16 @@ use crate::scenario::behavior_for;
 /// How staleness is produced in virtual mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StalenessSource {
-    Sampled { max: u64 },
-    Emergent { inflight: usize },
+    /// The paper's protocol: staleness drawn uniformly from `[1, max]`.
+    Sampled {
+        /// Maximum sampled staleness.
+        max: u64,
+    },
+    /// Discrete-event simulation: staleness emerges from task overlap.
+    Emergent {
+        /// Tasks kept in flight on the virtual fleet.
+        inflight: usize,
+    },
 }
 
 /// Run FedAsync for `cfg.epochs` global epochs; returns the metric series.

@@ -11,6 +11,12 @@
 //! present) and a cumulative per-run staleness histogram
 //! ([`StalenessHist`], written as `<stem>.staleness.csv`), which is what
 //! the cross-mode conformance suite compares.
+//!
+//! The aggregation layer adds two more cumulative columns: `applied`
+//! (server commits — model-version advances, one per staged blend) and
+//! `buffered` (updates absorbed into a staging buffer).  For the default
+//! FedAsync aggregator `applied` tracks the epoch counter and `buffered`
+//! stays 0; a buffered run shows `buffered ≈ k × applied`.
 
 use std::io::Write;
 use std::path::Path;
@@ -41,6 +47,12 @@ pub struct MetricsRow {
     /// Devices participating at this point of the run (scenario churn);
     /// the full fleet when no scenario is active.
     pub clients: usize,
+    /// Server commits so far: model-version advances, counting a staged
+    /// blend once (equals `epoch` for the default FedAsync aggregator).
+    pub applied: u64,
+    /// Updates absorbed into an aggregation staging buffer so far (0 for
+    /// non-buffering aggregators).
+    pub buffered: u64,
 }
 
 /// A labelled series of metric rows (one run, or a mean over repeats).
@@ -55,8 +67,8 @@ pub struct MetricsLog {
     pub staleness_hist: StalenessHist,
 }
 
-pub const CSV_HEADER: &str =
-    "epoch,gradients,comms,sim_time,train_loss,test_loss,test_acc,alpha_eff,staleness,clients";
+pub const CSV_HEADER: &str = "epoch,gradients,comms,sim_time,train_loss,test_loss,test_acc,\
+                              alpha_eff,staleness,clients,applied,buffered";
 
 impl MetricsLog {
     pub fn new(label: impl Into<String>) -> Self {
@@ -114,6 +126,10 @@ impl MetricsLog {
                     staleness: get(|r| r.staleness),
                     clients: (runs.iter().map(|r| r.rows[i].clients).sum::<usize>() as f64 / n)
                         .round() as usize,
+                    applied: (runs.iter().map(|r| r.rows[i].applied).sum::<u64>() as f64 / n)
+                        .round() as u64,
+                    buffered: (runs.iter().map(|r| r.rows[i].buffered).sum::<u64>() as f64 / n)
+                        .round() as u64,
                 }
             })
             .collect();
@@ -129,7 +145,7 @@ impl MetricsLog {
         out.push('\n');
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{:.4},{:.6},{:.6},{:.6},{:.5},{:.3},{}\n",
+                "{},{},{},{:.4},{:.6},{:.6},{:.6},{:.5},{:.3},{},{},{}\n",
                 r.epoch,
                 r.gradients,
                 r.comms,
@@ -139,7 +155,9 @@ impl MetricsLog {
                 r.test_acc,
                 r.alpha_eff,
                 r.staleness,
-                r.clients
+                r.clients,
+                r.applied,
+                r.buffered
             ));
         }
         out
@@ -178,7 +196,7 @@ impl MetricsLog {
                 continue;
             }
             let f: Vec<&str> = line.split(',').collect();
-            if f.len() != 10 {
+            if f.len() != 12 {
                 return Err(format!("line {}: {} fields", i + 2, f.len()));
             }
             let p = |s: &str| s.parse::<f64>().map_err(|e| format!("line {}: {e}", i + 2));
@@ -193,6 +211,8 @@ impl MetricsLog {
                 alpha_eff: p(f[7])?,
                 staleness: p(f[8])?,
                 clients: p(f[9])? as usize,
+                applied: p(f[10])? as u64,
+                buffered: p(f[11])? as u64,
             });
         }
         Ok(MetricsLog {
@@ -293,6 +313,12 @@ impl StalenessHist {
 pub struct RunningCounters {
     pub gradients: u64,
     pub comms: u64,
+    /// Cumulative server commits (model-version advances; a staged blend
+    /// counts once) — the metric rows' `applied` column.
+    pub applied: u64,
+    /// Cumulative updates absorbed into an aggregation staging buffer —
+    /// the metric rows' `buffered` column.
+    pub buffered: u64,
     /// Cumulative staleness distribution (never reset by `snapshot`).
     pub hist: StalenessHist,
     /// Sum/count of α_t since last snapshot.
@@ -348,6 +374,8 @@ mod tests {
             alpha_eff: 0.5,
             staleness: 2.0,
             clients: 10,
+            applied: epoch as u64,
+            buffered: 0,
         }
     }
 

@@ -4,9 +4,69 @@
 //! Optimization* (2019), as a three-layer rust + JAX + Pallas system:
 //! the rust coordinator here (Layer 3) executes AOT-compiled JAX/Pallas
 //! artifacts (Layers 2/1) through PJRT — python never runs at training
-//! time.  See DESIGN.md for the architecture, the threaded server's
-//! snapshot-cell design, and the offline-environment substitutions
-//! (including the pure-std `xla` stub this build uses).
+//! time.  See DESIGN.md for the deep dives and the offline-environment
+//! substitutions (including the pure-std `xla` stub this build uses);
+//! README.md for the CLI quickstart and the preset catalogue.
+//!
+//! ## Architecture: one run, layer by layer
+//!
+//! A training run flows through five layers, each owned by one module
+//! tree:
+//!
+//! ```text
+//! config ─▶ scenario ─▶ engine / drivers ─▶ aggregator ─▶ metrics
+//!  what       who          when                how          what
+//!  to run     trains       time advances       updates      happened
+//!                                              land
+//! ```
+//!
+//! 1. **Config** ([`config`]) — a typed [`config::ExperimentConfig`]
+//!    describes the run end-to-end: algorithm, hyperparameters (γ, ρ, α,
+//!    staleness policy), federation shape, execution mode, aggregation
+//!    strategy ([`config::AggregatorConfig`]), and optional client
+//!    population (`[scenario]`).  Loaded from TOML, overridable from the
+//!    CLI, serialized into every result file for provenance.
+//! 2. **Scenario** ([`scenario`]) — compiles the declarative population
+//!    (speed tiers, churn, straggler bursts, delivery faults) into one
+//!    [`scenario::ClientBehavior`] object that every execution mode
+//!    consults, so "the same scenario" means the same thing everywhere.
+//! 3. **Engine & drivers** ([`coordinator::engine`]) — Algorithm 1's
+//!    invariant update sequence written once
+//!    ([`coordinator::engine::Engine`]), parameterized by a
+//!    [`coordinator::engine::TimeDriver`] that supplies the mode's
+//!    physics: [`coordinator::engine::SequentialDriver`] (the paper's
+//!    sampled-staleness protocol),
+//!    [`coordinator::engine::EventDriver`] (discrete-event virtual time,
+//!    emergent staleness), or
+//!    [`coordinator::engine::ThreadedDriver`] (real scheduler ∥ worker ∥
+//!    updater threads over channels and the
+//!    [`coordinator::snapshot::SnapshotCell`]).
+//! 4. **Aggregator** ([`coordinator::aggregator`]) — the pluggable
+//!    server rule deciding what happens to each arriving update: apply
+//!    it (paper FedAsync, [`coordinator::aggregator::FedAsync`]), stage
+//!    it into a K-update blend
+//!    ([`coordinator::aggregator::Buffered`]), or scale α by parameter
+//!    distance ([`coordinator::aggregator::DistanceAdaptive`]) — all
+//!    driven through the one shared
+//!    [`coordinator::core::UpdaterCore`], whose
+//!    [`coordinator::updater::Updater`] owns the mix mechanics.
+//! 5. **Metrics** ([`federated::metrics`]) — grid-aligned
+//!    [`federated::metrics::MetricsRow`]s (loss/accuracy against epochs,
+//!    gradients, comms, plus `applied`/`buffered` aggregation counters
+//!    and the scenario's `clients` column) and the per-run staleness
+//!    histogram, written as CSV + JSON provenance.
+//!
+//! Because the drivers and the aggregators are orthogonal axes of the
+//! same engine loop, the cross-mode conformance suite runs every
+//! strategy × every driver and requires one story; the golden trace
+//! pins the default path byte-for-byte.
+//!
+//! Supporting casts: [`federated`] (synthetic data, non-IID partitions,
+//! simulated devices, event queue), [`runtime`] (PJRT artifact loading
+//! and execution), [`analysis`] (closed-form quadratics + Theorem 1/2
+//! validation), [`experiment`] (figure presets and the repeat-averaging
+//! runner), [`util`] (pure-std substrates: rng, json, toml, cli,
+//! logging, stats, property testing).
 
 pub mod analysis;
 pub mod config;

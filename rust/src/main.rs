@@ -93,6 +93,11 @@ fn train_spec() -> CommandSpec {
         .opt("staleness-a", None, "staleness fn parameter a")
         .opt("staleness-b", None, "staleness fn parameter b")
         .opt("local-update", None, "sgd (option I) | prox (option II)")
+        .opt(
+            "aggregator",
+            None,
+            "server aggregation: fedasync | buffered[:K] | distance[:LO..HI]",
+        )
         .opt("mode", None, "virtual | threads (engine time driver)")
         .opt("seed", None, "root RNG seed")
         .opt(
@@ -165,6 +170,10 @@ fn build_config(a: &Args) -> Result<ExperimentConfig, String> {
             "prox" => LocalUpdate::Prox,
             other => return Err(format!("unknown local-update {other:?}")),
         };
+    }
+    if let Some(spec) = a.get("aggregator") {
+        cfg.aggregator =
+            fedasync::config::AggregatorConfig::parse_spec(&spec).map_err(|e| e.to_string())?;
     }
     if a.supplied("mode") {
         cfg.mode = match a.str("mode").map_err(cli_err)?.as_str() {
@@ -254,6 +263,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     );
     if let Some(sc) = &cfg.scenario {
         log_info!("train", "scenario: {}", sc.name);
+    }
+    if cfg.aggregator != fedasync::config::AggregatorConfig::FedAsync {
+        log_info!("train", "aggregator: {}", cfg.aggregator.label());
     }
     let log = runner::run(&rt, &cfg).map_err(|e| e.to_string())?;
     let stem = format!("{}_{}", cfg.name, cfg.model);

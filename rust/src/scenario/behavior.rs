@@ -110,6 +110,7 @@ pub struct UniformBehavior {
 }
 
 impl UniformBehavior {
+    /// Baseline population over `devices` clients.
     pub fn new(devices: usize) -> UniformBehavior {
         UniformBehavior { n: devices.max(1), tier: SpeedTier::nominal() }
     }
@@ -163,6 +164,8 @@ pub struct ScenarioBehavior {
 }
 
 impl ScenarioBehavior {
+    /// Compile `sc` for a fleet of `devices`, drawing every per-device
+    /// assignment deterministically from `seed`.
     pub fn new(sc: &ScenarioConfig, devices: usize, seed: u64) -> ScenarioBehavior {
         assert!(devices > 0, "scenario behavior needs a non-empty fleet");
         let n = devices;

@@ -51,6 +51,8 @@
 //! `<stem>.staleness.csv`) and a per-row effective-client-count column
 //! (`clients` in the metrics CSV).
 
+#![warn(missing_docs)]
+
 pub mod behavior;
 pub mod presets;
 
@@ -61,9 +63,10 @@ pub use behavior::{
 use crate::config::ConfigError;
 use crate::util::json::{Json, JsonObj};
 
-/// Default log-normal link-latency parameters (match
+/// Default log-normal link-latency μ (matches
 /// `federated::network::LatencyModel::default`).
 pub const DEFAULT_LATENCY_MU: f64 = -3.0;
+/// Default log-normal link-latency σ.
 pub const DEFAULT_LATENCY_SIGMA: f64 = 0.8;
 
 /// One device speed tier: a share of the fleet with its own compute speed
@@ -74,8 +77,9 @@ pub struct SpeedTier {
     pub fraction: f64,
     /// Relative compute speed (1.0 = nominal, < 1 = slower).
     pub speed: f64,
-    /// Log-normal link latency `exp(N(mu, sigma))` for this tier.
+    /// Log-normal link latency `exp(N(mu, sigma))` for this tier: μ.
     pub latency_mu: f64,
+    /// Log-normal link latency: σ.
     pub latency_sigma: f64,
 }
 
@@ -95,7 +99,9 @@ impl SpeedTier {
 /// fraction of the fleet participates (until the next phase).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ChurnPhase {
+    /// Run progress `p` at which this phase starts.
     pub at: f64,
+    /// Fraction of the fleet present from `at` onward, in `(0, 1]`.
     pub present: f64,
 }
 
@@ -103,9 +109,13 @@ pub struct ChurnPhase {
 /// runs `slowdown`× slower.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StragglerBurst {
+    /// Burst window start (run progress).
     pub from: f64,
+    /// Burst window end, exclusive (run progress).
     pub until: f64,
+    /// Fraction of the fleet affected, in `(0, 1]`.
     pub fraction: f64,
+    /// Multiplicative slowdown for affected devices (≥ 1).
     pub slowdown: f64,
 }
 
@@ -125,12 +135,15 @@ pub struct FaultModel {
 /// layer existed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioConfig {
+    /// Label for logs and provenance.
     pub name: String,
     /// Empty = single nominal tier.
     pub tiers: Vec<SpeedTier>,
     /// Empty = the whole fleet is always present.
     pub churn: Vec<ChurnPhase>,
+    /// Straggler bursts (empty = none).
     pub bursts: Vec<StragglerBurst>,
+    /// Delivery-fault probabilities.
     pub faults: FaultModel,
 }
 

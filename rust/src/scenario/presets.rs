@@ -59,6 +59,7 @@ fn tier(fraction: f64, speed: f64) -> SpeedTier {
     }
 }
 
+/// Names [`named`] resolves, for CLI listings and error messages.
 pub fn preset_names() -> &'static [&'static str] {
     &["tiered_fleet", "diurnal_churn", "straggler_storm", "lossy_uplink"]
 }

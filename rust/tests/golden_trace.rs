@@ -107,7 +107,8 @@ fn rows_to_json(log: &MetricsLog) -> String {
         out.push_str(&format!(
             "    {{\"epoch\": {}, \"gradients\": {}, \"comms\": {}, \"sim_time\": {:?}, \
              \"train_loss\": {:?}, \"test_loss\": {:?}, \"test_acc\": {:?}, \
-             \"alpha_eff\": {:?}, \"staleness\": {:?}, \"clients\": {}}}{}\n",
+             \"alpha_eff\": {:?}, \"staleness\": {:?}, \"clients\": {}, \
+             \"applied\": {}, \"buffered\": {}}}{}\n",
             r.epoch,
             r.gradients,
             r.comms,
@@ -118,6 +119,8 @@ fn rows_to_json(log: &MetricsLog) -> String {
             r.alpha_eff,
             r.staleness,
             r.clients,
+            r.applied,
+            r.buffered,
             if i + 1 == log.rows.len() { "" } else { "," }
         ));
     }
@@ -153,6 +156,15 @@ fn golden_trace_matches_fixture() {
         assert_eq!(got.gradients as i64, int("gradients"), "row {i}: gradients");
         assert_eq!(got.comms as i64, int("comms"), "row {i}: comms");
         assert_eq!(got.clients as i64, int("clients"), "row {i}: clients");
+        // applied/buffered postdate the fixture format; compare when the
+        // fixture carries them (a pre-aggregator fixture stays valid —
+        // that absence is itself the byte-identity proof for the columns
+        // that existed before the aggregation layer).
+        for (key, have) in [("applied", got.applied), ("buffered", got.buffered)] {
+            if let Some(want) = w.get(key).as_i64() {
+                assert_eq!(have as i64, want, "row {i}: {key}");
+            }
+        }
         for (key, have) in [
             ("sim_time", got.sim_time),
             ("train_loss", got.train_loss),
@@ -184,4 +196,22 @@ fn golden_hist_pins_staleness_accounting() {
     assert_eq!(log.staleness_hist.total(), 12);
     assert_eq!(log.staleness_hist.support(), vec![1]);
     assert!((log.staleness_hist.mean() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn golden_default_aggregator_is_fedasync_applying_every_update() {
+    // The default aggregator must be FedAsync: every offered update is
+    // applied immediately (applied tracks the epoch counter) and nothing
+    // is ever staged — the aggregation layer is invisible by default.
+    let log = run_golden();
+    let last = log.rows.last().expect("rows");
+    assert_eq!(last.applied, 12, "default aggregator must apply all 12 updates");
+    assert!(
+        log.rows.iter().all(|r| r.buffered == 0),
+        "default aggregator must never buffer"
+    );
+    assert!(
+        log.rows.iter().all(|r| r.applied == r.epoch as u64),
+        "FedAsync applied-count must track the epoch counter"
+    );
 }

@@ -177,12 +177,16 @@ fn conformance_quad() -> QuadraticProblem {
     QuadraticProblem::new(CONF_DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
 }
 
-/// Shrink a shipped scenario config to conformance-test size without
-/// touching its scenario block or staleness policy.
-fn conformance_cfg(path: &std::path::Path) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::from_toml_file(path)
-        .unwrap_or_else(|e| panic!("{path:?}: {e}"));
-    assert!(cfg.scenario.is_some(), "{path:?} must carry a [scenario] table");
+/// Shrink a config to conformance-test size and normalize the knobs the
+/// cross-mode loss band depends on.  Shared by the scenario suite and
+/// the aggregator suite below, so their baselines stay in lockstep.
+///
+/// The α schedule is pinned flat and the staleness function to Poly:
+/// the conformance bands are about the axis under test (population or
+/// aggregation strategy), and Poly keeps every staleness level
+/// learning, while e.g. Hinge would conflate the band with how hard
+/// each mode's staleness distribution hits b.
+fn conformance_shrink(cfg: &mut ExperimentConfig) {
     cfg.epochs = CONF_EPOCHS;
     cfg.eval_every = CONF_EPOCHS / 4;
     cfg.repeats = 1;
@@ -192,14 +196,19 @@ fn conformance_cfg(path: &std::path::Path) -> ExperimentConfig {
     cfg.alpha_decay = 1.0;
     cfg.alpha_decay_at = usize::MAX;
     cfg.local_update = LocalUpdate::Sgd;
-    // Normalize the α schedule across presets: the conformance band is
-    // about the *population* (tiers/churn/bursts/faults), and Poly keeps
-    // every staleness level learning, while e.g. Hinge would conflate the
-    // band with how hard each mode's staleness distribution hits b.
     cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
     cfg.federation.devices = CONF_DEVICES;
     cfg.worker_threads = 3;
     cfg.max_inflight = 4;
+}
+
+/// Shrink a shipped scenario config to conformance-test size without
+/// touching its scenario block or staleness cutoff policy.
+fn conformance_cfg(path: &std::path::Path) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::from_toml_file(path)
+        .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    assert!(cfg.scenario.is_some(), "{path:?} must carry a [scenario] table");
+    conformance_shrink(&mut cfg);
     cfg.validate().unwrap_or_else(|e| panic!("{path:?} shrunk: {e}"));
     cfg
 }
@@ -309,6 +318,108 @@ fn scenario_presets_conform_across_modes() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Aggregator × driver conformance (artifact-free).
+//
+// The aggregation layer and the time drivers are orthogonal axes of the
+// engine: every strategy must run through every driver and tell one
+// story.  This is the aggregation-layer counterpart of the scenario
+// conformance suite above.
+// ---------------------------------------------------------------------
+
+/// Conformance-sized config with no scenario: the axis under test here
+/// is the aggregator, against the uniform baseline population.
+fn aggregator_conformance_cfg(agg: fedasync::config::AggregatorConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("agg_{}", agg.name());
+    conformance_shrink(&mut cfg);
+    cfg.staleness.max = 8;
+    cfg.aggregator = agg;
+    cfg.validate().unwrap_or_else(|e| panic!("aggregator conformance cfg: {e}"));
+    cfg
+}
+
+#[test]
+fn aggregators_conform_across_modes() {
+    use fedasync::config::AggregatorConfig;
+    let strategies = [
+        AggregatorConfig::FedAsync,
+        AggregatorConfig::Buffered { k: 4 },
+        AggregatorConfig::DistanceAdaptive { clamp_lo: 0.2, clamp_hi: 2.0 },
+    ];
+    for agg in strategies {
+        let cfg = aggregator_conformance_cfg(agg);
+        let logs: Vec<(&str, MetricsLog)> = ["sampled", "emergent", "threaded"]
+            .into_iter()
+            .map(|m| (m, run_conformance_mode(&cfg, m)))
+            .collect();
+
+        let mut finals = Vec::new();
+        for (mode, log) in &logs {
+            let first = log.rows.first().expect("rows").test_loss;
+            let last = log.rows.last().expect("rows");
+            assert!(
+                last.test_loss.is_finite() && last.test_loss < first * 0.5,
+                "{agg:?} {mode}: no learning ({first} -> {})",
+                last.test_loss
+            );
+            assert!(
+                log.staleness_hist.total() > 0,
+                "{agg:?} {mode}: empty staleness histogram"
+            );
+            // The applied/buffered columns must match the strategy's
+            // semantics in every mode.
+            match agg {
+                AggregatorConfig::Buffered { k } => {
+                    assert!(last.buffered > 0, "{agg:?} {mode}: nothing buffered");
+                    assert!(
+                        last.applied * k as u64 >= last.buffered
+                            && last.buffered >= last.applied.saturating_sub(1) * k as u64,
+                        "{agg:?} {mode}: applied={} buffered={} inconsistent with k={k}",
+                        last.applied,
+                        last.buffered
+                    );
+                }
+                _ => {
+                    assert_eq!(
+                        last.buffered, 0,
+                        "{agg:?} {mode}: non-buffering strategy buffered updates"
+                    );
+                    assert!(
+                        last.applied as usize >= cfg.epochs,
+                        "{agg:?} {mode}: applied {} < epochs",
+                        last.applied
+                    );
+                }
+            }
+            finals.push(last.test_loss);
+        }
+
+        // One loss band across the three executions of the same strategy.
+        let lo = finals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = finals.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            hi <= lo.max(1e-3) * 100.0,
+            "{agg:?}: cross-mode final losses diverged: {finals:?}"
+        );
+    }
+}
+
+#[test]
+fn buffered_flush_on_drain_catches_the_tail() {
+    // 10 epochs at k=4 in the sampled protocol: 10 accepted updates =
+    // 2 in-stream commits + a 2-update tail the end-of-run flush must
+    // commit (versions 3), so no accepted update is lost at shutdown.
+    use fedasync::config::AggregatorConfig;
+    let mut cfg = aggregator_conformance_cfg(AggregatorConfig::Buffered { k: 4 });
+    cfg.epochs = 10;
+    cfg.eval_every = 5;
+    let log = run_conformance_mode(&cfg, "sampled");
+    let last = log.rows.last().expect("rows");
+    assert_eq!(last.buffered, 10, "all 10 accepted updates absorbed");
+    assert_eq!(last.applied, 3, "2 in-stream commits + 1 drain flush");
 }
 
 #[test]

@@ -504,6 +504,8 @@ fn prop_metrics_csv_roundtrip() {
                 alpha_eff: g.f64_in(0.0, 1.0),
                 staleness: g.f64_in(0.0, 32.0),
                 clients: g.size(1, 500),
+                applied: g.rng.below(1_000_000),
+                buffered: g.rng.below(1_000_000),
             });
         }
         let back = MetricsLog::from_csv("series", &log.to_csv()).map_err(|e| e)?;
@@ -593,4 +595,205 @@ fn shipped_config_files_parse_and_validate() {
         seen += 1;
     }
     assert!(seen >= 2, "expected shipped configs, found {seen}");
+}
+
+// ---------------------------------------------------------------------
+// Aggregation-strategy properties (coordinator::aggregator).
+// ---------------------------------------------------------------------
+
+/// Minimal Trainer for driving `Updater` on the native mix path (the
+/// aggregator tests never touch training or evaluation).
+struct NullTrainer;
+
+impl fedasync::coordinator::Trainer for NullTrainer {
+    fn param_count(&self) -> usize {
+        0
+    }
+    fn init_params(&self, _: usize) -> Result<Vec<f32>, fedasync::runtime::RuntimeError> {
+        unreachable!("aggregator properties feed updates directly")
+    }
+    fn local_train(
+        &self,
+        _: &[f32],
+        _: Option<&[f32]>,
+        _: &mut fedasync::federated::device::SimDevice,
+        _: &fedasync::federated::data::Dataset,
+        _: f32,
+        _: f32,
+    ) -> Result<(Vec<f32>, f32), fedasync::runtime::RuntimeError> {
+        unreachable!()
+    }
+    fn evaluate(
+        &self,
+        _: &[f32],
+        _: &fedasync::federated::data::Dataset,
+    ) -> Result<fedasync::runtime::EvalMetrics, fedasync::runtime::RuntimeError> {
+        unreachable!()
+    }
+    fn local_iters(&self) -> usize {
+        1
+    }
+}
+
+#[test]
+fn prop_buffered_blend_normalizes() {
+    // The staged blend must equal the explicitly normalized
+    // staleness-weighted mean Σ (wᵢ/W)·xᵢ with Σ wᵢ/W = 1 — in
+    // particular, identical inputs blend to themselves regardless of the
+    // staleness mix.
+    use fedasync::coordinator::aggregator::{AggregateDecision, Aggregator, Buffered};
+    use fedasync::coordinator::staleness::AlphaController;
+    check("buffered-blend-normalizes", 100, |g| {
+        let k = g.size(1, 12);
+        let dim = g.size(1, 40);
+        let func = random_staleness_fn(g);
+        let ctl = AlphaController::new(
+            g.f64_in(0.01, 1.0),
+            1.0,
+            usize::MAX,
+            &StalenessConfig { max: 64, func, drop_above: None },
+        );
+        let mut agg = Buffered::new(ctl, k, None);
+        let current = vec![0.0f32; dim];
+        let mut updates: Vec<(Vec<f32>, u64)> = Vec::new();
+        for i in 0..k {
+            let x = g.vec_f32(dim, 2.0);
+            let s = 1 + g.index(16) as u64;
+            let d = agg.offer(&x, &current, s, i as u64 + 1);
+            updates.push((x, s));
+            if i + 1 < k {
+                prop_ensure!(d == AggregateDecision::Buffer, "early commit at {i}");
+            } else {
+                prop_ensure!(
+                    matches!(d, AggregateDecision::ApplyStaged { alpha } if alpha > 0.0 && alpha <= 1.0),
+                    "k-th offer must commit with α in (0,1], got {d:?}"
+                );
+            }
+        }
+        let blend = agg.take_staged().expect("staged blend");
+        // Reference: direct normalized weighted mean in f64.
+        let weights: Vec<f64> = updates
+            .iter()
+            .map(|(_, s)| func.eval(*s).max(f64::MIN_POSITIVE))
+            .collect();
+        let w_total: f64 = weights.iter().sum();
+        prop_ensure!(
+            (weights.iter().map(|w| w / w_total).sum::<f64>() - 1.0).abs() < 1e-12,
+            "normalized weights must sum to 1"
+        );
+        for j in 0..dim {
+            let want: f64 = updates
+                .iter()
+                .zip(&weights)
+                .map(|((x, _), w)| (w / w_total) * x[j] as f64)
+                .sum();
+            let got = blend[j] as f64;
+            prop_ensure!(
+                (got - want).abs() < 1e-3,
+                "blend[{j}] = {got} vs normalized mean {want} (k={k})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_buffered_flush_applies_every_update_exactly_once() {
+    // Over a random offer stream, every accepted update is absorbed into
+    // exactly one commit: floor(n/k) commits happen in-stream and the
+    // drain commits the tail exactly once, leaving the buffer empty.
+    use fedasync::coordinator::aggregator::Buffered;
+    use fedasync::coordinator::staleness::AlphaController;
+    use fedasync::coordinator::updater::{MixEngine, Updater};
+    check("buffered-flush-exactly-once", 100, |g| {
+        let k = g.size(1, 8);
+        let n = g.size(0, 40);
+        let dim = g.size(1, 8);
+        let ctl = AlphaController::new(
+            g.f64_in(0.01, 1.0),
+            1.0,
+            usize::MAX,
+            &StalenessConfig { max: 64, func: random_staleness_fn(g), drop_above: None },
+        );
+        let mut u = Updater::new(Box::new(Buffered::new(ctl, k, None)), MixEngine::Native);
+        let mut store = ModelStore::new(vec![0.0f32; dim], 4);
+        let (mut absorbed, mut commits) = (0usize, 0usize);
+        for _ in 0..n {
+            let x = g.vec_f32(dim, 1.0);
+            let tau = store.current_version();
+            let out = u.apply(&NullTrainer, &mut store, &x, tau).map_err(|e| e.to_string())?;
+            absorbed += out.buffered as usize;
+            commits += out.applied as usize;
+        }
+        prop_ensure!(absorbed == n, "absorbed {absorbed} of {n} accepted updates");
+        prop_ensure!(commits == n / k, "in-stream commits {commits} != {n}/{k}");
+        prop_ensure!(
+            store.current_version() == (n / k) as u64,
+            "version {} != commit count",
+            store.current_version()
+        );
+        let tail = u.drain(&NullTrainer, &mut store).map_err(|e| e.to_string())?;
+        prop_ensure!(
+            tail.is_some() == (n % k != 0),
+            "drain committed {:?} with tail of {}",
+            tail.is_some(),
+            n % k
+        );
+        prop_ensure!(
+            store.current_version() == (n / k + (n % k != 0) as usize) as u64,
+            "post-drain version {}",
+            store.current_version()
+        );
+        // Exactly once: a second drain finds nothing.
+        prop_ensure!(
+            u.drain(&NullTrainer, &mut store).map_err(|e| e.to_string())?.is_none(),
+            "drain must be idempotent"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distance_adaptive_alpha_in_unit_interval() {
+    // Whatever the geometry — zero models, huge updates, degenerate
+    // clamps — a non-dropped decision's α stays in (0, 1].
+    use fedasync::coordinator::aggregator::{AggregateDecision, Aggregator, DistanceAdaptive};
+    use fedasync::coordinator::staleness::AlphaController;
+    check("distance-alpha-unit-interval", 200, |g| {
+        let dim = g.size(1, 32);
+        let drop_above = g.bool().then(|| g.index(16) as u64);
+        let ctl = AlphaController::new(
+            g.f64_in(0.01, 1.0),
+            g.f64_in(0.1, 1.0),
+            g.index(100),
+            &StalenessConfig { max: 64, func: random_staleness_fn(g), drop_above },
+        );
+        let lo = g.f64_in(1e-6, 10.0);
+        let hi = lo + g.f64_in(0.0, 1e3);
+        let mut agg = DistanceAdaptive::new(ctl, lo, hi);
+        for _ in 0..20 {
+            let scale = [0.0f32, 1e-20, 1.0, 1e18][g.index(4)];
+            let current: Vec<f32> = g.vec_f32(dim, 1.0).iter().map(|v| v * scale).collect();
+            let x_new = g.vec_f32(dim, [0.0f32, 1.0, 1e15][g.index(3)].max(1e-3));
+            let s = 1 + g.index(32) as u64;
+            let t = 1 + g.index(200) as u64;
+            match agg.offer(&x_new, &current, s, t) {
+                AggregateDecision::Apply { alpha } => {
+                    prop_ensure!(
+                        alpha > 0.0 && alpha <= 1.0 && alpha.is_finite(),
+                        "α = {alpha} escaped (0, 1] (lo={lo} hi={hi} s={s})"
+                    );
+                    if let Some(cut) = drop_above {
+                        prop_ensure!(s <= cut, "applied above the cutoff s={s} cut={cut}");
+                    }
+                }
+                AggregateDecision::Drop => {
+                    let cut = drop_above.ok_or("drop without a drop policy")?;
+                    prop_ensure!(s > cut, "dropped below the cutoff (s={s}, cut={cut})");
+                }
+                other => return Err(format!("distance never buffers, got {other:?}")),
+            }
+        }
+        Ok(())
+    });
 }
