@@ -1,0 +1,96 @@
+//! Compute-plane perf snapshot, machine-readable: writes
+//! `BENCH_compute.json` with
+//!
+//! * **ns/task** for the fused SoA `local_train` kernel across model
+//!   dims × local-iteration counts H (scratch-recycled, the steady-state
+//!   configuration every driver runs),
+//! * **ns/eval** for the exact O(n·dim) objective loop vs the O(dim)
+//!   moment evaluator `global_f_fast`,
+//! * **allocs/task** in the sequential driver's steady state, measured
+//!   with a counting global allocator around a probe-bracketed window of
+//!   a real engine run — the identical workload
+//!   `rust/tests/alloc_regression.rs` pins to exactly 0 (both include
+//!   `tests/support/alloc_probe.rs`).
+//!
+//! CI runs this and uploads the JSON next to `BENCH_engine.json`, so the
+//! compute plane's cost trajectory is trackable PR over PR.
+//!
+//! ```bash
+//! cargo bench --bench bench_compute
+//! ```
+
+#[path = "../tests/support/alloc_probe.rs"]
+mod alloc_probe;
+
+#[global_allocator]
+static COUNTER: alloc_probe::CountingAlloc = alloc_probe::CountingAlloc;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::coordinator::{TaskScratch, Trainer};
+use fedasync::util::stats::BenchTimer;
+
+const DEVICES: usize = 16;
+
+fn main() {
+    let timer = BenchTimer::quick();
+    println!("== bench_compute: compute-plane snapshot -> BENCH_compute.json ==\n");
+    let mut fields: Vec<(String, f64)> = Vec::new();
+
+    // ----------------------------------------------- fused kernel ns/task
+    let data = dummy_dataset();
+    for &dim in &[8usize, 64, 512] {
+        for &h in &[1usize, 5, 20] {
+            let p = QuadraticProblem::new(DEVICES, dim, 0.5, 2.0, 2.0, 0.05, h, 3);
+            let mut fleet = dummy_fleet(DEVICES, 5);
+            let mut scratch = TaskScratch::new();
+            let x0 = Trainer::init_params(&p, 0).expect("init");
+            let mut dev = 0usize;
+            let r = timer.run(&format!("local_train/dim={dim}/h={h}"), || {
+                let (x, loss) = p
+                    .local_train(&x0, None, &mut fleet[dev], &data, 0.05, 0.0, &mut scratch)
+                    .expect("train");
+                std::hint::black_box(loss);
+                scratch.release(x);
+                dev = (dev + 1) % DEVICES;
+            });
+            println!("{}", r.report(Some(1.0)));
+            fields.push((format!("task_ns_dim{dim}_h{h}"), r.median_ns()));
+        }
+    }
+
+    // ------------------------------------------- exact vs fast evaluation
+    println!();
+    for &dim in &[64usize, 512, 4096] {
+        let p = QuadraticProblem::new(DEVICES, dim, 0.5, 2.0, 2.0, 0.0, 5, 3);
+        let mut x = p.x_star();
+        x.iter_mut().for_each(|v| *v += 0.5);
+        let r = timer.run(&format!("eval_exact/dim={dim}"), || {
+            std::hint::black_box(p.global_f(&x));
+        });
+        println!("{}", r.report(Some(1.0)));
+        fields.push((format!("eval_exact_ns_dim{dim}"), r.median_ns()));
+        let r = timer.run(&format!("eval_fast/dim={dim}"), || {
+            std::hint::black_box(p.global_f_fast(&x));
+        });
+        println!("{}", r.report(Some(1.0)));
+        fields.push((format!("eval_fast_ns_dim{dim}"), r.median_ns()));
+    }
+
+    // ------------------------------------------------------- allocs/task
+    println!();
+    let report = alloc_probe::run_steady_state();
+    assert_eq!(report.final_epoch, 600, "steady-state run must complete");
+    let allocs = report.allocs_in_window as f64 / report.tasks as f64;
+    println!("allocs/task (sequential steady state): {allocs:.3}");
+    fields.push(("allocs_per_task_steady_state".into(), allocs));
+
+    // -------------------------------------------------------------- JSON
+    let mut json = String::from("{\n  \"schema\": \"bench_compute.v1\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let sep = if i + 1 == fields.len() { "" } else { "," };
+        json.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_compute.json", &json).expect("write BENCH_compute.json");
+    println!("\nwrote BENCH_compute.json");
+}

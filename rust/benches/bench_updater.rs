@@ -42,6 +42,7 @@ impl fedasync::coordinator::Trainer for NoTrainer {
         _: &fedasync::federated::data::Dataset,
         _: f32,
         _: f32,
+        _: &mut fedasync::coordinator::TaskScratch,
     ) -> Result<(Vec<f32>, f32), fedasync::runtime::RuntimeError> {
         unreachable!()
     }

@@ -15,10 +15,33 @@
 //!
 //! Both run through the *same* coordinator code as the PJRT model, so the
 //! theory checks also exercise the production control path.
+//!
+//! ## Compute-plane layout (DESIGN.md §"Compute plane")
+//!
+//! These trainers *are* the simulated fleet's compute plane, so their hot
+//! path is built for throughput:
+//!
+//! * **SoA storage** — `centers`/`curvatures` are contiguous row-major
+//!   `n × dim` `Vec<f32>`s; a device's task streams its row once per
+//!   local iteration instead of chasing `Vec<Vec<_>>` pointers.
+//! * **Fused kernel** — gradient, noise, prox anchoring and the SGD step
+//!   are one pass over `dim` with the *same per-element FP op order* as
+//!   the original scalar two-pass loop, so results are bit-identical
+//!   (property-pinned below) and the pinned golden trace never moves.
+//! * **Hoisted loss** — the reported training loss only needs the final
+//!   iterate, so the objective is evaluated once per task, not once per
+//!   local iteration, and through [`QuadraticProblem::global_f_fast`] —
+//!   an O(dim) closed form over precomputed per-coordinate moments
+//!   `Σᵢdᵢⱼ`, `Σᵢdᵢⱼcᵢⱼ`, `Σᵢdᵢⱼcᵢⱼ²` (the exact O(n·dim) loop stays as
+//!   [`QuadraticProblem::global_f`], property-tested against it).
+//! * **Zero allocation** — all working state (the returned model buffer,
+//!   gradient accumulator, batched noise draws) comes from the caller's
+//!   [`TaskScratch`]; `rust/tests/alloc_regression.rs` pins 0 allocs per
+//!   task in the sequential driver's steady state.
 
-use std::cell::RefCell;
+use std::cell::{OnceCell, RefCell};
 
-use crate::coordinator::Trainer;
+use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::Dataset;
 use crate::federated::device::SimDevice;
 use crate::runtime::{EvalMetrics, ParamVec, RuntimeError};
@@ -27,10 +50,19 @@ use crate::util::rng::Rng;
 /// Strongly convex per-device quadratics with a shared closed form.
 pub struct QuadraticProblem {
     pub dim: usize,
-    /// `n × dim` device centers.
-    pub(crate) centers: Vec<Vec<f32>>,
-    /// `n × dim` diagonal curvatures, in `[mu, l]`.
-    pub(crate) curvatures: Vec<Vec<f32>>,
+    /// Device count n.
+    n: usize,
+    /// Row-major `n × dim` device centers (device i's row is
+    /// `centers[i*dim .. (i+1)*dim]`).
+    centers: Vec<f32>,
+    /// Row-major `n × dim` diagonal curvatures, in `[mu, l]`.
+    curvatures: Vec<f32>,
+    /// Per-coordinate moment `Σᵢ dᵢⱼ` for the O(dim) evaluator.
+    m_d: Vec<f64>,
+    /// Per-coordinate moment `Σᵢ dᵢⱼ·cᵢⱼ`.
+    m_dc: Vec<f64>,
+    /// Per-coordinate moment `Σᵢ dᵢⱼ·cᵢⱼ²`.
+    m_dcc: Vec<f64>,
     /// Std-dev of the additive gradient noise (≈ √V1).
     pub noise_std: f64,
     /// Local iterations per task (H).
@@ -60,26 +92,35 @@ impl QuadraticProblem {
     ) -> QuadraticProblem {
         assert!(mu > 0.0 && l >= mu);
         let mut rng = Rng::seed_from(seed ^ 0x0BAD_F00D);
-        let centers: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..dim).map(|_| (rng.gaussian() * spread) as f32).collect())
-            .collect();
-        let curvatures: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..dim).map(|_| rng.uniform(mu, l) as f32).collect())
-            .collect();
-        // x*_j = (Σ_i d_ij·c_ij) / (Σ_i d_ij); F* = F(x*).
-        let mut x_star = vec![0.0f64; dim];
-        for j in 0..dim {
-            let (mut num, mut den) = (0.0f64, 0.0f64);
-            for i in 0..n {
-                num += curvatures[i][j] as f64 * centers[i][j] as f64;
-                den += curvatures[i][j] as f64;
+        // Row-major fill in the same draw order as the seed's
+        // row-of-rows construction, so seeded problems are unchanged.
+        let centers: Vec<f32> = (0..n * dim).map(|_| (rng.gaussian() * spread) as f32).collect();
+        let curvatures: Vec<f32> = (0..n * dim).map(|_| rng.uniform(mu, l) as f32).collect();
+        // Per-coordinate moments: F(x) = (1/2n)·Σⱼ (Aⱼ·xⱼ² − 2·Bⱼ·xⱼ + Cⱼ)
+        // with Aⱼ = Σᵢdᵢⱼ, Bⱼ = Σᵢdᵢⱼcᵢⱼ, Cⱼ = Σᵢdᵢⱼcᵢⱼ².
+        let mut m_d = vec![0.0f64; dim];
+        let mut m_dc = vec![0.0f64; dim];
+        let mut m_dcc = vec![0.0f64; dim];
+        for i in 0..n {
+            let row = i * dim;
+            for j in 0..dim {
+                let d = curvatures[row + j] as f64;
+                let c = centers[row + j] as f64;
+                m_d[j] += d;
+                m_dc[j] += d * c;
+                m_dcc[j] += d * c * c;
             }
-            x_star[j] = num / den;
         }
+        // x*_j = (Σ_i d_ij·c_ij) / (Σ_i d_ij); F* = F(x*).
+        let x_star: Vec<f64> = (0..dim).map(|j| m_dc[j] / m_d[j]).collect();
         let mut problem = QuadraticProblem {
             dim,
+            n,
             centers,
             curvatures,
+            m_d,
+            m_dc,
+            m_dcc,
             noise_std,
             h,
             x_star,
@@ -90,50 +131,161 @@ impl QuadraticProblem {
             init_scale: spread.max(1.0) * 2.0,
         };
         let xs: Vec<f32> = problem.x_star.iter().map(|&v| v as f32).collect();
-        problem.f_star = problem.global_f(&xs);
+        // f_star through the *fast* evaluator: `gap` subtracts it from
+        // fast evaluations, so the gap at x* is exactly zero.
+        problem.f_star = problem.global_f_fast(&xs);
         problem
     }
 
-    /// Global objective `F(x)`.
-    pub fn global_f(&self, x: &[f32]) -> f64 {
-        let n = self.centers.len();
-        let mut total = 0.0f64;
-        for i in 0..n {
-            for j in 0..self.dim {
-                let d = (x[j] - self.centers[i][j]) as f64;
-                total += 0.5 * self.curvatures[i][j] as f64 * d * d;
-            }
-        }
-        total / n as f64
+    /// Device count n.
+    pub fn devices(&self) -> usize {
+        self.n
     }
 
-    /// Optimality gap `F(x) − F(x*)` (the quantity in Theorems 1–2).
+    /// Center `c_ij` (row-major lookup).
+    #[inline]
+    pub(crate) fn center(&self, i: usize, j: usize) -> f32 {
+        self.centers[i * self.dim + j]
+    }
+
+    /// Curvature `d_ij` (row-major lookup).
+    #[inline]
+    pub(crate) fn curv(&self, i: usize, j: usize) -> f32 {
+        self.curvatures[i * self.dim + j]
+    }
+
+    /// Global objective `F(x)` — the exact O(n·dim) reference loop.
+    ///
+    /// Kept as the ground truth the O(dim) [`QuadraticProblem::global_f_fast`]
+    /// is property-tested against; hot paths (per-task loss, eval-grid
+    /// rows, benches) use the fast form.
+    pub fn global_f(&self, x: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for i in 0..self.n {
+            let row = i * self.dim;
+            for j in 0..self.dim {
+                let d = (x[j] - self.centers[row + j]) as f64;
+                total += 0.5 * self.curvatures[row + j] as f64 * d * d;
+            }
+        }
+        total / self.n as f64
+    }
+
+    /// O(dim) closed-form objective from the precomputed per-coordinate
+    /// moments: `F(x) = (1/2n)·Σⱼ (Aⱼxⱼ² − 2Bⱼxⱼ + Cⱼ)`.
+    ///
+    /// Within ~1e-7 relative of [`QuadraticProblem::global_f`] (the only
+    /// difference is the f32 `x−c` subtraction the exact loop performs);
+    /// `rust/tests/proptests.rs` pins the 1e-6 bound.
+    pub fn global_f_fast(&self, x: &[f32]) -> f64 {
+        let mut total = 0.0f64;
+        for j in 0..self.dim {
+            let xj = x[j] as f64;
+            total += self.m_d[j] * xj * xj - 2.0 * self.m_dc[j] * xj + self.m_dcc[j];
+        }
+        0.5 * total / self.n as f64
+    }
+
+    /// Optimality gap `F(x) − F(x*)` (the quantity in Theorems 1–2),
+    /// via the O(dim) evaluator (both terms, so the gap at `x*` is 0).
     pub fn gap(&self, x: &[f32]) -> f64 {
-        (self.global_f(x) - self.f_star).max(0.0)
+        (self.global_f_fast(x) - self.f_star).max(0.0)
     }
 
     pub fn x_star(&self) -> Vec<f32> {
         self.x_star.iter().map(|&v| v as f32).collect()
     }
 
-    fn device_grad(&self, device: usize, x: &[f32], out: &mut [f64]) {
-        if device == crate::coordinator::sgd::CENTRALIZED_DEVICE {
-            // The centralized SGD baseline sees the *global* objective.
-            let n = self.centers.len();
-            for j in 0..self.dim {
-                out[j] = (0..n)
-                    .map(|i| {
-                        self.curvatures[i][j] as f64 * (x[j] - self.centers[i][j]) as f64
-                    })
-                    .sum::<f64>()
-                    / n as f64;
+    /// The one fused local-SGD kernel both closed-form trainers run: H
+    /// iterations of gradient + optional cosine-ripple term + noise +
+    /// prox + step, each a single pass over `dim` with the seed scalar
+    /// path's per-element FP op order (property-pinned below).
+    ///
+    /// `ripple = Some(w)` inserts the weakly-convex problem's
+    /// `−w·sin(x_j)` gradient addend between the quadratic gradient and
+    /// the noise, exactly where the seed placed it; `None` skips the op
+    /// entirely so the pure quadratic's sequence is untouched.  Keeping
+    /// the op sequence in one function is what lets one bitwise property
+    /// cover both trainers.
+    fn fused_local_train(
+        &self,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        device_id: usize,
+        gamma: f32,
+        rho: f32,
+        ripple: Option<f64>,
+        scratch: &mut TaskScratch,
+    ) -> ParamVec {
+        let centralized = device_id == crate::coordinator::sgd::CENTRALIZED_DEVICE;
+        let mut x = scratch.acquire(self.dim);
+        x.extend_from_slice(params);
+        let mut rng = self.rng.borrow_mut();
+        if centralized {
+            // The centralized SGD baseline sees the *global* objective:
+            // accumulate the device-mean gradient row-major (the same
+            // per-coordinate f64 add order as summing device-by-device),
+            // then take the fused noise/step pass.
+            for _ in 0..self.h {
+                let (g, noise) = scratch.grad_and_noise(self.dim);
+                for k in 0..self.n {
+                    let row = k * self.dim;
+                    for j in 0..self.dim {
+                        g[j] += self.curvatures[row + j] as f64
+                            * (x[j] - self.centers[row + j]) as f64;
+                    }
+                }
+                if self.noise_std > 0.0 {
+                    rng.fill_gaussian(noise);
+                }
+                let n_f = self.n as f64;
+                for j in 0..self.dim {
+                    let mut gj = g[j] / n_f;
+                    if let Some(w) = ripple {
+                        // d/dx_j [w·cos(x_j)] = −w·sin(x_j)
+                        gj -= w * (x[j] as f64).sin();
+                    }
+                    gj += if self.noise_std > 0.0 {
+                        noise[j] * self.noise_std
+                    } else {
+                        0.0
+                    };
+                    if let Some(a) = anchor {
+                        gj += rho as f64 * (x[j] - a[j]) as f64;
+                    }
+                    x[j] -= gamma * gj as f32;
+                }
             }
-            return;
+        } else {
+            // One contiguous row per device (SoA): stream it with unit
+            // stride once per local iteration.
+            let i = device_id % self.n;
+            let row = i * self.dim;
+            let cen = &self.centers[row..row + self.dim];
+            let cur = &self.curvatures[row..row + self.dim];
+            for _ in 0..self.h {
+                let noise = scratch.noise(self.dim);
+                if self.noise_std > 0.0 {
+                    rng.fill_gaussian(noise);
+                }
+                for j in 0..self.dim {
+                    let mut gj = cur[j] as f64 * (x[j] - cen[j]) as f64;
+                    if let Some(w) = ripple {
+                        gj -= w * (x[j] as f64).sin();
+                    }
+                    gj += if self.noise_std > 0.0 {
+                        noise[j] * self.noise_std
+                    } else {
+                        0.0
+                    };
+                    if let Some(a) = anchor {
+                        gj += rho as f64 * (x[j] - a[j]) as f64;
+                    }
+                    x[j] -= gamma * gj as f32;
+                }
+            }
         }
-        for j in 0..self.dim {
-            out[j] = self.curvatures[device][j] as f64
-                * (x[j] - self.centers[device][j]) as f64;
-        }
+        x
     }
 }
 
@@ -157,33 +309,14 @@ impl Trainer for QuadraticProblem {
         _data: &Dataset,
         gamma: f32,
         rho: f32,
+        scratch: &mut TaskScratch,
     ) -> Result<(ParamVec, f32), RuntimeError> {
-        let i = if device.id == crate::coordinator::sgd::CENTRALIZED_DEVICE {
-            device.id
-        } else {
-            device.id % self.centers.len()
-        };
-        let mut x: Vec<f32> = params.to_vec();
-        let mut g = vec![0.0f64; self.dim];
-        let mut rng = self.rng.borrow_mut();
-        let mut last_f = 0.0f64;
-        for _ in 0..self.h {
-            self.device_grad(i, &x, &mut g);
-            for j in 0..self.dim {
-                let noise = if self.noise_std > 0.0 {
-                    rng.gaussian() * self.noise_std
-                } else {
-                    0.0
-                };
-                let mut gj = g[j] + noise;
-                if let Some(a) = anchor {
-                    gj += rho as f64 * (x[j] - a[j]) as f64;
-                }
-                x[j] -= gamma * gj as f32;
-            }
-            last_f = self.global_f(&x);
-        }
-        Ok((x, last_f as f32))
+        let x = self.fused_local_train(params, anchor, device.id, gamma, rho, None, scratch);
+        // Only the final iterate's objective is reported, so evaluate it
+        // once, after the H-loop, through the O(dim) closed form — the
+        // seed recomputed the O(n·dim) objective inside every iteration.
+        let f = self.global_f_fast(&x);
+        Ok((x, f as f32))
     }
 
     fn evaluate(&self, params: &[f32], _test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
@@ -206,37 +339,50 @@ pub struct WeaklyConvexProblem {
     pub base: QuadraticProblem,
     /// Weak-convexity modulus `w` (= μ in Definition 3).
     pub w: f64,
+    /// Lazily computed (then cached) approximate optimum — evaluation
+    /// used to redo the 2000-step descent on every eval-grid row.
+    f_star_cache: OnceCell<f64>,
 }
 
 impl WeaklyConvexProblem {
     pub fn new(base: QuadraticProblem, w: f64) -> WeaklyConvexProblem {
         assert!(w >= 0.0);
-        WeaklyConvexProblem { base, w }
+        WeaklyConvexProblem { base, w, f_star_cache: OnceCell::new() }
     }
 
+    /// Exact objective (reference loop + ripple).
     pub fn global_f(&self, x: &[f32]) -> f64 {
-        self.base.global_f(x) + self.w * x.iter().map(|&v| (v as f64).cos()).sum::<f64>()
+        self.base.global_f(x) + self.ripple(x)
+    }
+
+    /// O(dim) objective: the base's moment closed form + ripple.
+    pub fn global_f_fast(&self, x: &[f32]) -> f64 {
+        self.base.global_f_fast(x) + self.ripple(x)
+    }
+
+    fn ripple(&self, x: &[f32]) -> f64 {
+        self.w * x.iter().map(|&v| (v as f64).cos()).sum::<f64>()
     }
 
     /// Numerically locate the global optimum near the quadratic minimizer
     /// (valid when `w ≪ μ·spread`: the ripple only shifts the basin).
+    /// Computed once and cached — the descent itself is O(dim) per step
+    /// via the base moments.
     pub fn approx_f_star(&self) -> f64 {
-        let mut x = self.base.x_star();
-        // Deterministic gradient descent on the true F (no noise).
-        for _ in 0..2000 {
-            for j in 0..x.len() {
-                let mut g = 0.0f64;
-                let n = self.base.centers.len();
-                for i in 0..n {
-                    g += self.base.curvatures[i][j] as f64
-                        * (x[j] - self.base.centers[i][j]) as f64;
+        *self.f_star_cache.get_or_init(|| {
+            let mut x = self.base.x_star();
+            // Deterministic gradient descent on the true F (no noise);
+            // mean base gradient = (Aⱼ·xⱼ − Bⱼ)/n via the moments.
+            let n_f = self.base.n as f64;
+            for _ in 0..2000 {
+                for j in 0..x.len() {
+                    let g = (self.base.m_d[j] * x[j] as f64 - self.base.m_dc[j]) / n_f
+                        - self.w * (x[j] as f64).sin();
+                    x[j] -= 0.1 * g as f32;
                 }
-                g /= n as f64;
-                g -= self.w * (x[j] as f64).sin();
-                x[j] -= 0.1 * g as f32;
             }
-        }
-        self.global_f(&x)
+            self.global_f_fast(&x)
+        })
     }
 }
 
@@ -257,37 +403,16 @@ impl Trainer for WeaklyConvexProblem {
         _data: &Dataset,
         gamma: f32,
         rho: f32,
+        scratch: &mut TaskScratch,
     ) -> Result<(ParamVec, f32), RuntimeError> {
-        let i = if device.id == crate::coordinator::sgd::CENTRALIZED_DEVICE {
-            device.id
-        } else {
-            device.id % self.base.centers.len()
-        };
-        let mut x: Vec<f32> = params.to_vec();
-        let mut g = vec![0.0f64; self.base.dim];
-        let mut rng = self.base.rng.borrow_mut();
-        for _ in 0..self.base.h {
-            self.base.device_grad(i, &x, &mut g);
-            for j in 0..self.base.dim {
-                let noise = if self.base.noise_std > 0.0 {
-                    rng.gaussian() * self.base.noise_std
-                } else {
-                    0.0
-                };
-                // d/dx_j [w·cos(x_j)] = −w·sin(x_j)
-                let mut gj = g[j] - self.w * (x[j] as f64).sin() + noise;
-                if let Some(a) = anchor {
-                    gj += rho as f64 * (x[j] - a[j]) as f64;
-                }
-                x[j] -= gamma * gj as f32;
-            }
-        }
-        let f = self.global_f(&x);
+        let w = Some(self.w);
+        let x = self.base.fused_local_train(params, anchor, device.id, gamma, rho, w, scratch);
+        let f = self.global_f_fast(&x);
         Ok((x, f as f32))
     }
 
     fn evaluate(&self, params: &[f32], _test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
-        let gap = (self.global_f(params) - self.approx_f_star()).max(0.0);
+        let gap = (self.global_f_fast(params) - self.approx_f_star()).max(0.0);
         Ok(EvalMetrics { loss: gap, accuracy: 1.0 / (1.0 + gap), samples: 1 })
     }
 
@@ -333,9 +458,129 @@ pub fn dummy_fleet(n: usize, seed: u64) -> Vec<SimDevice> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::sgd::CENTRALIZED_DEVICE;
+    use crate::federated::device::AvailabilityModel;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
 
     fn problem(noise: f64) -> QuadraticProblem {
         QuadraticProblem::new(10, 8, 0.5, 2.0, 3.0, noise, 5, 42)
+    }
+
+    /// The seed's scalar AoS path, verbatim: two passes per local
+    /// iteration (`device_grad` into `g`, then noise/prox/step, with the
+    /// weakly-convex `−w·sin` term between them when `ripple` is set),
+    /// loss = exact `global_f` of the final iterate (+ ripple).  The
+    /// fused SoA kernel must reproduce the trajectory bit-for-bit for
+    /// both trainers.
+    fn seed_scalar_local_train(
+        p: &QuadraticProblem,
+        params: &[f32],
+        anchor: Option<&[f32]>,
+        device: usize,
+        gamma: f32,
+        rho: f32,
+        ripple: Option<f64>,
+    ) -> (Vec<f32>, f64) {
+        let mut x: Vec<f32> = params.to_vec();
+        let mut g = vec![0.0f64; p.dim];
+        let mut rng = p.rng.borrow_mut();
+        for _ in 0..p.h {
+            if device == CENTRALIZED_DEVICE {
+                for j in 0..p.dim {
+                    g[j] = (0..p.n)
+                        .map(|i| p.curv(i, j) as f64 * (x[j] - p.center(i, j)) as f64)
+                        .sum::<f64>()
+                        / p.n as f64;
+                }
+            } else {
+                let i = device % p.n;
+                for j in 0..p.dim {
+                    g[j] = p.curv(i, j) as f64 * (x[j] - p.center(i, j)) as f64;
+                }
+            }
+            for j in 0..p.dim {
+                let noise = if p.noise_std > 0.0 {
+                    rng.gaussian() * p.noise_std
+                } else {
+                    0.0
+                };
+                let mut gj = g[j];
+                if let Some(w) = ripple {
+                    gj -= w * (x[j] as f64).sin();
+                }
+                gj += noise;
+                if let Some(a) = anchor {
+                    gj += rho as f64 * (x[j] - a[j]) as f64;
+                }
+                x[j] -= gamma * gj as f32;
+            }
+        }
+        drop(rng);
+        let cos_sum = x.iter().map(|&v| (v as f64).cos()).sum::<f64>();
+        let last_f = p.global_f(&x) + ripple.map_or(0.0, |w| w * cos_sum);
+        (x, last_f)
+    }
+
+    #[test]
+    fn prop_fused_soa_local_train_bitwise_matches_seed_scalar_path() {
+        check("fused-matches-seed-scalar", 60, |g| {
+            let n = g.size(1, 8);
+            let dim = g.size(1, 24);
+            let h = g.size(1, 6);
+            let noise = if g.bool() { 0.0 } else { 0.05 };
+            // Half the cases run the weakly-convex ripple path, so both
+            // trainers' op sequences are pinned by the one property.
+            let ripple = g.bool().then(|| g.f64_in(0.0, 0.3));
+            let seed = g.rng.next_u64();
+            // Two identical problems: construction consumes the same
+            // draws, so their RNGs are in lockstep afterwards.
+            let fused = QuadraticProblem::new(n, dim, 0.5, 2.0, 2.0, noise, h, seed);
+            let reference = QuadraticProblem::new(n, dim, 0.5, 2.0, 2.0, noise, h, seed);
+            let data = dummy_dataset();
+            let device = match g.index(4) {
+                0 => CENTRALIZED_DEVICE,
+                _ => g.index(n + 2), // exercises the `id % n` wrap too
+            };
+            let mut dev = SimDevice::new(
+                device,
+                vec![0],
+                1.0,
+                AvailabilityModel { mean_up: 1e18, mean_down: 1e-9 },
+                Rng::seed_from(1),
+            );
+            let x0 = Trainer::init_params(&fused, 0).map_err(|e| e.to_string())?;
+            let (use_prox, rho) = if g.bool() {
+                (true, 1.5f32)
+            } else {
+                (false, 0.0f32)
+            };
+            let anchor = use_prox.then(|| x0.as_slice());
+            let mut scratch = TaskScratch::new();
+            let (got, got_loss) = match ripple {
+                None => fused
+                    .local_train(&x0, anchor, &mut dev, &data, 0.1, rho, &mut scratch)
+                    .map_err(|e| e.to_string())?,
+                Some(w) => WeaklyConvexProblem::new(fused, w)
+                    .local_train(&x0, anchor, &mut dev, &data, 0.1, rho, &mut scratch)
+                    .map_err(|e| e.to_string())?,
+            };
+            let (want, want_loss) =
+                seed_scalar_local_train(&reference, &x0, anchor, device, 0.1, rho, ripple);
+            prop_ensure!(
+                got == want,
+                "trajectory drifted (n={n} dim={dim} h={h} noise={noise} prox={use_prox} \
+                 ripple={ripple:?} dev={device})"
+            );
+            // Loss goes through the O(dim) evaluator — not bitwise, but
+            // within the evaluator's pinned tolerance of the exact loop.
+            let denom = want_loss.abs().max(1e-9);
+            prop_ensure!(
+                ((got_loss as f64 - want_loss) / denom).abs() < 1e-5,
+                "loss drifted: fast {got_loss} vs exact {want_loss}"
+            );
+            Ok(())
+        });
     }
 
     #[test]
@@ -343,12 +588,11 @@ mod tests {
         let p = problem(0.0);
         let xs = p.x_star();
         // Mean gradient at x* must vanish.
-        let n = p.centers.len();
         for j in 0..p.dim {
-            let g: f64 = (0..n)
-                .map(|i| p.curvatures[i][j] as f64 * (xs[j] - p.centers[i][j]) as f64)
+            let g: f64 = (0..p.n)
+                .map(|i| p.curv(i, j) as f64 * (xs[j] - p.center(i, j)) as f64)
                 .sum::<f64>()
-                / n as f64;
+                / p.n as f64;
             assert!(g.abs() < 1e-5, "grad[{j}]={g}");
         }
         assert!(p.gap(&xs) < 1e-9);
@@ -367,14 +611,15 @@ mod tests {
         let p = problem(0.0);
         let data = dummy_dataset();
         let mut fleet = dummy_fleet(4, 1);
+        let mut scratch = TaskScratch::new();
         let x0 = Trainer::init_params(&p, 0).unwrap();
-        let (x1, _) = p.local_train(&x0, None, &mut fleet[3], &data, 0.1, 0.0).unwrap();
+        let (x1, _) = p
+            .local_train(&x0, None, &mut fleet[3], &data, 0.1, 0.0, &mut scratch)
+            .unwrap();
         // Device 3's own objective must decrease.
         let f_dev = |x: &[f32]| -> f64 {
             (0..p.dim)
-                .map(|j| {
-                    0.5 * p.curvatures[3][j] as f64 * ((x[j] - p.centers[3][j]) as f64).powi(2)
-                })
+                .map(|j| 0.5 * p.curv(3, j) as f64 * ((x[j] - p.center(3, j)) as f64).powi(2))
                 .sum()
         };
         assert!(f_dev(&x1) < f_dev(&x0));
@@ -385,10 +630,13 @@ mod tests {
         let p = problem(0.0);
         let data = dummy_dataset();
         let mut fleet = dummy_fleet(2, 2);
+        let mut scratch = TaskScratch::new();
         let anchor = Trainer::init_params(&p, 0).unwrap();
-        let (free, _) = p.local_train(&anchor, None, &mut fleet[1], &data, 0.2, 0.0).unwrap();
+        let (free, _) = p
+            .local_train(&anchor, None, &mut fleet[1], &data, 0.2, 0.0, &mut scratch)
+            .unwrap();
         let (prox, _) = p
-            .local_train(&anchor, Some(&anchor), &mut fleet[1], &data, 0.2, 5.0)
+            .local_train(&anchor, Some(&anchor), &mut fleet[1], &data, 0.2, 5.0, &mut scratch)
             .unwrap();
         let dist = |x: &[f32]| -> f64 {
             x.iter()
@@ -398,6 +646,26 @@ mod tests {
                 .sqrt()
         };
         assert!(dist(&prox) < dist(&free));
+    }
+
+    #[test]
+    fn local_train_reuses_released_buffers() {
+        // The returned model buffer must cycle through the scratch: after
+        // release, the next task gets the same allocation back.
+        let p = problem(0.1);
+        let data = dummy_dataset();
+        let mut fleet = dummy_fleet(2, 3);
+        let mut scratch = TaskScratch::new();
+        let x0 = Trainer::init_params(&p, 0).unwrap();
+        let (x1, _) = p
+            .local_train(&x0, None, &mut fleet[0], &data, 0.1, 0.0, &mut scratch)
+            .unwrap();
+        let ptr = x1.as_ptr();
+        scratch.release(x1);
+        let (x2, _) = p
+            .local_train(&x0, None, &mut fleet[1], &data, 0.1, 0.0, &mut scratch)
+            .unwrap();
+        assert_eq!(x2.as_ptr(), ptr, "second task did not reuse the released buffer");
     }
 
     #[test]
@@ -424,6 +692,19 @@ mod tests {
         let wc = WeaklyConvexProblem::new(problem(0.0), 0.05);
         let xs = wc.base.x_star();
         assert!(wc.approx_f_star() <= wc.global_f(&xs) + 1e-9);
+    }
+
+    #[test]
+    fn weakly_convex_fast_matches_exact() {
+        let wc = WeaklyConvexProblem::new(problem(0.0), 0.1);
+        let mut x = wc.base.x_star();
+        x.iter_mut().for_each(|v| *v += 0.3);
+        let exact = wc.global_f(&x);
+        let fast = wc.global_f_fast(&x);
+        assert!(
+            (fast - exact).abs() <= 1e-6 * exact.abs().max(1e-12),
+            "exact {exact} vs fast {fast}"
+        );
     }
 
     #[test]

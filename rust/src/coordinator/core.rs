@@ -37,10 +37,13 @@ pub struct UpdaterCore<'a> {
 impl<'a> UpdaterCore<'a> {
     /// `history` is the model-version retention window: 1 for servers whose
     /// tasks carry their own anchor, `max_staleness + 1` for the sampled
-    /// protocol's historical reads.  `pool` (threaded server) makes the
-    /// updater recycle mix buffers and evicted versions instead of
-    /// allocating per update; the sequential simulators pass `None`.  The
-    /// aggregation strategy comes from `cfg.aggregator`
+    /// protocol's historical reads.  `pool` is the buffer recycler the
+    /// updater draws mix-output buffers from and returns displaced model
+    /// versions to: the threaded server passes its shared pool (workers
+    /// feed it across the channel hop), the virtual drivers pass `None`
+    /// and get a small private one — every mode's steady state mixes
+    /// allocation-free (the mix output cycles with the version the push
+    /// displaces).  The aggregation strategy comes from `cfg.aggregator`
     /// ([`aggregator::for_config`]).
     pub fn new(
         cfg: &ExperimentConfig,
@@ -49,11 +52,9 @@ impl<'a> UpdaterCore<'a> {
         test: &'a Dataset,
         pool: Option<Arc<BufferPool>>,
     ) -> UpdaterCore<'a> {
-        let agg = aggregator::for_config(cfg, pool.clone());
-        let updater = match pool {
-            Some(pool) => Updater::with_pool(agg, MixEngine::Native, pool),
-            None => Updater::new(agg, MixEngine::Native),
-        };
+        let pool = pool.unwrap_or_else(|| Arc::new(BufferPool::new(4)));
+        let agg = aggregator::for_config(cfg, Some(Arc::clone(&pool)));
+        let updater = Updater::with_pool(agg, MixEngine::Native, pool);
         UpdaterCore {
             updater,
             store: ModelStore::new(initial, history.max(1)),
@@ -147,6 +148,7 @@ mod tests {
             _: &Dataset,
             _: f32,
             _: f32,
+            _: &mut crate::coordinator::TaskScratch,
         ) -> Result<(ParamVec, f32), RuntimeError> {
             unreachable!("core tests feed updates directly")
         }

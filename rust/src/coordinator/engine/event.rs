@@ -15,7 +15,7 @@
 use crate::config::ExperimentConfig;
 use crate::coordinator::core::UpdaterCore;
 use crate::coordinator::engine::{prox_args, Arrival, Clock, TimeDriver};
-use crate::coordinator::Trainer;
+use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::FederatedData;
 use crate::federated::device::SimDevice;
 use crate::federated::network::EventQueue;
@@ -47,6 +47,11 @@ pub struct EventDriver<'a> {
     use_prox: bool,
     rho: f32,
     gamma: f32,
+    /// Reusable per-task working memory (spent update buffers return via
+    /// [`TimeDriver::after_delivery`]).
+    scratch: TaskScratch,
+    /// Reusable idle-device scan buffer for the `assign` scheduler step.
+    idle: Vec<usize>,
 }
 
 impl<'a> EventDriver<'a> {
@@ -74,6 +79,8 @@ impl<'a> EventDriver<'a> {
             use_prox,
             rho,
             gamma: cfg.gamma,
+            scratch: TaskScratch::new(),
+            idle: Vec::new(),
         }
     }
 
@@ -87,17 +94,27 @@ impl<'a> EventDriver<'a> {
         progress: f64,
     ) -> Result<bool, RuntimeError> {
         let now = self.queue.now();
-        let (fleet, busy, behavior) = (&mut *self.fleet, &self.busy, self.behavior);
-        let idle: Vec<usize> = (0..fleet.len())
-            .filter(|&d| !busy[d] && behavior.is_present(d, progress) && fleet[d].is_eligible(now))
-            .collect();
-        if idle.is_empty() {
+        self.idle.clear();
+        {
+            let (fleet, busy, behavior, idle) =
+                (&mut *self.fleet, &self.busy, self.behavior, &mut self.idle);
+            for d in 0..fleet.len() {
+                if !busy[d] && behavior.is_present(d, progress) && fleet[d].is_eligible(now) {
+                    idle.push(d);
+                }
+            }
+        }
+        if self.idle.is_empty() {
             return Ok(false);
         }
-        let device = idle[self.rng.index(idle.len())];
+        let device = self.idle[self.rng.index(self.idle.len())];
         self.busy[device] = true;
         let tau = core.store.current_version();
-        let anchor = core.store.current().clone();
+        // Borrow the published model straight out of the history ring —
+        // the borrow ends with local_train, before the updater can touch
+        // the store, so no per-assignment O(P) clone is needed (the same
+        // zero-copy anchor path the sequential driver takes).
+        let anchor = core.store.current();
         // Downlink + compute (scenario-slowed) + uplink, plus randomized
         // check-in jitter; link latencies come from the device's tier.
         let dev = &mut self.fleet[device];
@@ -106,12 +123,13 @@ impl<'a> EventDriver<'a> {
             + dev.compute_time(trainer.local_iters(), 50) * self.behavior.slowdown(device, progress)
             + self.behavior.link_latency(device, &mut self.rng);
         let (x_new, loss) = trainer.local_train(
-            &anchor,
+            anchor,
             if self.use_prox { Some(anchor.as_slice()) } else { None },
             dev,
             &self.data.train,
             self.gamma,
             self.rho,
+            &mut self.scratch,
         )?;
         self.queue.schedule_in(delay, Completion { device, tau, x_new, loss });
         Ok(true)
@@ -175,10 +193,12 @@ impl<'a, T: Trainer> TimeDriver<T> for EventDriver<'a> {
         &mut self,
         trainer: &T,
         core: &mut UpdaterCore<'_>,
-        _spent: Vec<f32>,
+        spent: Vec<f32>,
         progress: f64,
     ) -> Result<(), RuntimeError> {
-        // Keep the pipeline full.
+        // Recycle the consumed update buffer, then keep the pipeline full
+        // (the refilled task usually draws the buffer right back out).
+        self.scratch.release(spent);
         let _ = self.assign(trainer, core, progress)?;
         Ok(())
     }

@@ -18,10 +18,10 @@
 use crate::config::ExperimentConfig;
 use crate::coordinator::core::UpdaterCore;
 use crate::coordinator::engine::{prox_args, Arrival, Clock, TimeDriver};
-use crate::coordinator::Trainer;
+use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::FederatedData;
 use crate::federated::device::SimDevice;
-use crate::runtime::RuntimeError;
+use crate::runtime::{ParamVec, RuntimeError};
 use crate::scenario::{pick_present, ClientBehavior};
 use crate::util::rng::Rng;
 
@@ -38,6 +38,10 @@ pub struct SequentialDriver<'a> {
     use_prox: bool,
     rho: f32,
     gamma: f32,
+    /// Reusable per-task working memory; spent update buffers come back
+    /// via [`TimeDriver::after_delivery`], so the steady state runs
+    /// allocation-free (pinned by `rust/tests/alloc_regression.rs`).
+    scratch: TaskScratch,
 }
 
 impl<'a> SequentialDriver<'a> {
@@ -63,6 +67,7 @@ impl<'a> SequentialDriver<'a> {
             use_prox,
             rho,
             gamma: cfg.gamma,
+            scratch: TaskScratch::new(),
         }
     }
 }
@@ -119,7 +124,21 @@ impl<'a, T: Trainer> TimeDriver<T> for SequentialDriver<'a> {
             &self.data.train,
             self.gamma,
             self.rho,
+            &mut self.scratch,
         )?;
         Ok(Some(Arrival { device, tau, x_new, loss }))
+    }
+
+    fn after_delivery(
+        &mut self,
+        _trainer: &T,
+        _core: &mut UpdaterCore<'_>,
+        spent: ParamVec,
+        _progress: f64,
+    ) -> Result<(), RuntimeError> {
+        // The engine has copied/mixed everything it needs; park the spent
+        // update buffer for the next task instead of dropping it.
+        self.scratch.release(spent);
+        Ok(())
     }
 }

@@ -249,8 +249,23 @@ impl<T: Trainer> TimeDriver<T> for ThreadedDriver {
         spent: ParamVec,
         _progress: f64,
     ) -> Result<(), RuntimeError> {
-        // The update buffer is consumed; hand it back for reuse.
-        self.pool.release(spent);
+        // The update buffer is consumed; close whichever recycling loop
+        // is hungriest.  The updater's mix output draws from the shared
+        // pool, so keep it primed first; surplus buffers ship back across
+        // the channel hop so the compute service's task scratch reuses
+        // them for the next trained model.  (Eviction reclaims also feed
+        // the pool, but only when no in-flight snapshot still shares the
+        // displaced version — this path is the reliable supply.)
+        if self.pool.pooled() == 0 {
+            self.pool.release(spent);
+            return Ok(());
+        }
+        match self.job_tx.send(ComputeJob::Recycle(spent)) {
+            Ok(()) => {}
+            // Service already gone (shutdown race): park locally instead.
+            Err(mpsc::SendError(ComputeJob::Recycle(buf))) => self.pool.release(buf),
+            Err(_) => {}
+        }
         Ok(())
     }
 

@@ -7,7 +7,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::recorder::EvalRecorder;
-use crate::coordinator::Trainer;
+use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::FederatedData;
 use crate::federated::device::SimDevice;
 use crate::federated::metrics::MetricsLog;
@@ -51,10 +51,13 @@ pub fn run_fedavg<T: Trainer>(
     let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
     rec.maybe_record(trainer, 0, &params, 0.0, k)?;
     let mut sim_time = 0.0f64;
+    let mut scratch = TaskScratch::new();
+    // One accumulator for the whole run, re-zeroed per epoch.
+    let mut sum = vec![0.0f32; p];
 
     for t in 1..=cfg.epochs {
         let selected = rng.choose_k(fleet.len(), k);
-        let mut sum = vec![0.0f32; p];
+        sum.fill(0.0);
         let mut survivors = 0usize;
         let mut loss_sum = 0.0f64;
         let mut slowest = 0.0f64;
@@ -79,11 +82,13 @@ pub fn run_fedavg<T: Trainer>(
                 &data.train,
                 cfg.gamma,
                 0.0,
+                &mut scratch,
             )?;
             rec.counters.comms += 1;
             for (s, x) in sum.iter_mut().zip(&x_new) {
                 *s += x;
             }
+            scratch.release(x_new);
             survivors += 1;
             loss_sum += loss as f64;
             slowest = slowest.max(task_time);

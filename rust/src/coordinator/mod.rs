@@ -19,6 +19,10 @@
 //! * [`staleness`] — α_t control: `α·s(t−τ)`, decay schedule, drop policy.
 //! * [`model_store`] — versioned global-model history (stale reads).
 //! * [`snapshot`] — the versioned `Arc` snapshot cell + update-buffer pool.
+//! * [`scratch`] — reusable per-task working memory ([`TaskScratch`])
+//!   threaded through [`Trainer::local_train`]; with the buffer pool and
+//!   the store's `Arc`-reusing push it makes the compute plane's steady
+//!   state allocation-free per task.
 //! * [`recorder`] — grid-aligned metrics rows shared by all coordinators.
 //! * [`updater`] — the mixing update with native and PJRT/Pallas engines.
 //!
@@ -35,12 +39,15 @@ pub mod engine;
 pub mod fedavg;
 pub mod model_store;
 pub mod recorder;
+pub mod scratch;
 pub mod server;
 pub mod sgd;
 pub mod snapshot;
 pub mod staleness;
 pub mod updater;
 pub mod virtual_mode;
+
+pub use scratch::TaskScratch;
 
 use crate::federated::data::Dataset;
 use crate::federated::device::SimDevice;
@@ -59,6 +66,13 @@ pub trait Trainer {
 
     /// H local iterations starting from `params`; returns the locally
     /// trained model and mean training loss.
+    ///
+    /// `scratch` is the caller's reusable working memory: the returned
+    /// model buffer should be drawn from [`TaskScratch::acquire`] so the
+    /// driver can recycle it after delivery, and per-iteration state
+    /// (gradient accumulator, noise draws) lives in the scratch instead
+    /// of fresh allocations — the compute plane's steady state is
+    /// allocation-free per task (see `coordinator::scratch`).
     fn local_train(
         &self,
         params: &[f32],
@@ -67,6 +81,7 @@ pub trait Trainer {
         data: &Dataset,
         gamma: f32,
         rho: f32,
+        scratch: &mut TaskScratch,
     ) -> Result<(ParamVec, f32), RuntimeError>;
 
     /// Held-out evaluation.
@@ -100,7 +115,11 @@ impl Trainer for ModelRuntime {
         data: &Dataset,
         gamma: f32,
         rho: f32,
+        scratch: &mut TaskScratch,
     ) -> Result<(ParamVec, f32), RuntimeError> {
+        // The PJRT path owns its device buffers; the host-side scratch
+        // only matters for the closed-form trainers.
+        let _ = scratch;
         let m = &self.manifest;
         let batch = device.next_epoch_batch(data, m.local_iters, m.batch_size);
         self.train_epoch(params, anchor, &batch, gamma, rho)

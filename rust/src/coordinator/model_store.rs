@@ -25,8 +25,13 @@ pub struct ModelStore {
     current_version: u64,
     capacity: usize,
     /// The entry most recently pushed out of the ring, held for
-    /// [`ModelStore::take_evicted`] reclamation.
+    /// [`ModelStore::take_evicted`] reclamation.  Only populated when the
+    /// evicted `Arc` was still shared at push time (a snapshot holds it);
+    /// unshared evictions take the zero-allocation swap path below.
     evicted: Option<Arc<ParamVec>>,
+    /// Parameter buffer displaced by the last reuse-path push, ready for
+    /// immediate reclamation (no `Arc` bookkeeping involved).
+    evicted_buf: Option<ParamVec>,
 }
 
 impl ModelStore {
@@ -35,7 +40,7 @@ impl ModelStore {
         assert!(capacity >= 1);
         let mut ring = VecDeque::with_capacity(capacity);
         ring.push_back(Arc::new(initial));
-        ModelStore { ring, current_version: 0, capacity, evicted: None }
+        ModelStore { ring, current_version: 0, capacity, evicted: None, evicted_buf: None }
     }
 
     /// Epoch stamp `t` of the current model.
@@ -72,9 +77,33 @@ impl ModelStore {
     }
 
     /// Install a new current model, advancing the version by one.
+    ///
+    /// When the ring is full and the evicted front entry is unshared (no
+    /// snapshot holds it — always true for the virtual-time drivers,
+    /// which borrow instead of `Arc`-cloning), its `Arc` allocation is
+    /// *reused*: the new parameters are swapped into it and the displaced
+    /// buffer is parked for [`ModelStore::take_evicted`].  A steady-state
+    /// push is then allocation-free end to end — the alloc-regression
+    /// test depends on this.  A still-shared front entry falls back to
+    /// `Arc::new` + parking the shared handle, exactly as before.
     pub fn push(&mut self, params: ParamVec) -> u64 {
         if self.ring.len() == self.capacity {
-            self.evicted = self.ring.pop_front();
+            let mut front = self.ring.pop_front().expect("non-empty ring");
+            match Arc::get_mut(&mut front) {
+                Some(slot) => {
+                    let old = std::mem::replace(slot, params);
+                    self.ring.push_back(front);
+                    self.current_version += 1;
+                    self.evicted_buf = Some(old);
+                    // Either kind of eviction retires the previous parked
+                    // one: a still-shared Arc parked earlier is released
+                    // to its last holder (same bound as the pre-swap
+                    // behavior, where the next eviction overwrote it).
+                    self.evicted = None;
+                    return self.current_version;
+                }
+                None => self.evicted = Some(front),
+            }
         }
         self.ring.push_back(Arc::new(params));
         self.current_version += 1;
@@ -83,13 +112,17 @@ impl ModelStore {
 
     /// Best-effort reclaim of the version most recently evicted by
     /// [`ModelStore::push`] — `Some` only when no snapshot still shares
-    /// it, so a recycled buffer can never tear a reader's model.  A
-    /// still-shared version stays parked for one retry (the threaded
-    /// server retries right after republishing); if it is still shared
-    /// when the next eviction overwrites the slot, it is simply freed by
-    /// its last holder rather than recycled — the pool's primary supply
-    /// is consumed worker update buffers, not evictions.
+    /// it, so a recycled buffer can never tear a reader's model.  The
+    /// reuse-path buffer is handed back directly; a still-shared version
+    /// stays parked for one retry (the threaded server retries right
+    /// after republishing); if it is still shared when the next eviction
+    /// overwrites the slot, it is simply freed by its last holder rather
+    /// than recycled — the pool's primary supply is consumed worker
+    /// update buffers, not evictions.
     pub fn take_evicted(&mut self) -> Option<ParamVec> {
+        if let Some(buf) = self.evicted_buf.take() {
+            return Some(buf);
+        }
         match Arc::try_unwrap(self.evicted.take()?) {
             Ok(params) => Some(params),
             Err(still_shared) => {
@@ -156,6 +189,19 @@ mod tests {
         // Once the last reader lets go, a retry reclaims it.
         drop(snap);
         assert_eq!(s.take_evicted(), Some(vec![1.0]));
+    }
+
+    #[test]
+    fn push_swap_path_hands_back_the_displaced_buffer() {
+        // Unshared eviction reuses the Arc allocation and parks the old
+        // parameter buffer (same heap identity) for reclamation.
+        let mut s = store(1);
+        let old_ptr = s.current().as_ptr();
+        s.push(vec![5.0]);
+        assert_eq!(s.current()[0], 5.0);
+        let got = s.take_evicted().expect("unshared eviction reclaims");
+        assert_eq!(got, vec![0.0]);
+        assert_eq!(got.as_ptr(), old_ptr, "displaced buffer identity preserved");
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Per-task scratch memory: the compute plane's zero-allocation handle.
+//!
+//! Before this module every [`Trainer::local_train`] call allocated its
+//! working state from scratch — a `params.to_vec()` copy of the model, a
+//! fresh gradient buffer, and (with noise enabled) per-draw temporaries —
+//! so the steady-state cost of a simulated task was dominated by the
+//! allocator, not the math.  [`TaskScratch`] owns that working state and
+//! is threaded through the `local_train` signature, so each time driver
+//! (sequential, event, threaded compute service) reuses one scratch for
+//! its entire run:
+//!
+//! * **output buffers** ([`TaskScratch::acquire`] / [`TaskScratch::release`])
+//!   — the trained model a task returns is drawn from a small free-list
+//!   and handed back by the driver once the engine has consumed the
+//!   update (`TimeDriver::after_delivery` for the virtual drivers; a
+//!   `ComputeJob::Recycle` hop for the threaded service), closing the
+//!   loop after the first task;
+//! * **gradient accumulator** ([`TaskScratch::grad_zeroed`]) — the f64
+//!   per-coordinate buffer the centralized-SGD path sums the global
+//!   gradient into;
+//! * **noise buffer** ([`TaskScratch::noise`]) — filled batch-wise by
+//!   [`Rng::fill_gaussian`](crate::util::rng::Rng::fill_gaussian) once
+//!   per local iteration instead of one RefCell-guarded draw per element.
+//!
+//! The free-list is deliberately bounded: the steady-state working set is
+//! one buffer per in-flight task, and an unbounded list would quietly
+//! turn a leak into a cache.  `rust/tests/alloc_regression.rs` pins the
+//! resulting invariant — 0 allocations per task in the sequential
+//! driver's steady state — with a counting global allocator.
+//!
+//! [`Trainer::local_train`]: crate::coordinator::Trainer::local_train
+
+use crate::runtime::ParamVec;
+
+/// Buffers parked in the free-list beyond this are dropped on release.
+const FREE_CAP: usize = 32;
+
+/// Reusable working memory for [`Trainer::local_train`] calls.
+///
+/// Not thread-safe by design — each driver (or compute-service thread)
+/// owns one and passes `&mut` per task; cross-thread recycling goes
+/// through [`BufferPool`](crate::coordinator::snapshot::BufferPool) or a
+/// channel hop instead.
+///
+/// [`Trainer::local_train`]: crate::coordinator::Trainer::local_train
+#[derive(Debug, Default)]
+pub struct TaskScratch {
+    /// f64 gradient accumulator (centralized path sums all devices here).
+    g: Vec<f64>,
+    /// Raw standard-normal draws for one local iteration.
+    noise: Vec<f64>,
+    /// Parked parameter-sized output buffers.
+    free: Vec<ParamVec>,
+}
+
+impl TaskScratch {
+    /// An empty scratch; buffers are grown on first use and reused after.
+    pub fn new() -> TaskScratch {
+        TaskScratch { g: Vec::new(), noise: Vec::new(), free: Vec::new() }
+    }
+
+    /// An *empty* output buffer with capacity for `len` elements, drawn
+    /// from the free-list when possible.  Callers fill it (e.g.
+    /// `extend_from_slice` from the received model) and return it as the
+    /// task's trained parameters; the driver [`release`]s it once spent.
+    ///
+    /// [`release`]: TaskScratch::release
+    pub fn acquire(&mut self, len: usize) -> ParamVec {
+        match self.free.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.reserve(len);
+                v
+            }
+            None => Vec::with_capacity(len),
+        }
+    }
+
+    /// Park a spent output buffer for reuse (dropped beyond the bound).
+    pub fn release(&mut self, buf: ParamVec) {
+        if self.free.len() < FREE_CAP {
+            self.free.push(buf);
+        }
+    }
+
+    /// The gradient accumulator, sized to `len` and zero-filled.
+    pub fn grad_zeroed(&mut self, len: usize) -> &mut [f64] {
+        self.g.clear();
+        self.g.resize(len, 0.0);
+        &mut self.g
+    }
+
+    /// The noise buffer, sized to `len` (contents unspecified — callers
+    /// overwrite it with `Rng::fill_gaussian` before reading).
+    pub fn noise(&mut self, len: usize) -> &mut [f64] {
+        self.noise.resize(len, 0.0);
+        &mut self.noise
+    }
+
+    /// Gradient accumulator (zeroed) and noise buffer together, for the
+    /// centralized path that needs both live in one iteration.
+    pub fn grad_and_noise(&mut self, len: usize) -> (&mut [f64], &mut [f64]) {
+        self.g.clear();
+        self.g.resize(len, 0.0);
+        self.noise.resize(len, 0.0);
+        (&mut self.g, &mut self.noise)
+    }
+
+    /// Buffers currently parked in the free-list.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_recycles_released_buffers() {
+        let mut s = TaskScratch::new();
+        let mut a = s.acquire(8);
+        a.extend_from_slice(&[1.0; 8]);
+        let ptr = a.as_ptr();
+        s.release(a);
+        assert_eq!(s.pooled(), 1);
+        let b = s.acquire(8);
+        // Same allocation, handed back empty with capacity intact.
+        assert_eq!(b.as_ptr(), ptr);
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 8);
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn acquire_grows_capacity_for_larger_requests() {
+        let mut s = TaskScratch::new();
+        s.release(Vec::with_capacity(4));
+        let b = s.acquire(64);
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 64);
+    }
+
+    #[test]
+    fn free_list_is_bounded() {
+        let mut s = TaskScratch::new();
+        for _ in 0..(FREE_CAP + 10) {
+            s.release(Vec::with_capacity(2));
+        }
+        assert_eq!(s.pooled(), FREE_CAP);
+    }
+
+    #[test]
+    fn grad_is_zeroed_every_time() {
+        let mut s = TaskScratch::new();
+        {
+            let g = s.grad_zeroed(4);
+            g.iter_mut().for_each(|v| *v = 9.0);
+        }
+        let g = s.grad_zeroed(4);
+        assert!(g.iter().all(|&v| v == 0.0));
+        assert_eq!(g.len(), 4);
+    }
+
+    #[test]
+    fn noise_resizes_to_requested_len() {
+        let mut s = TaskScratch::new();
+        assert_eq!(s.noise(7).len(), 7);
+        assert_eq!(s.noise(3).len(), 3);
+        let (g, n) = s.grad_and_noise(5);
+        assert_eq!((g.len(), n.len()), (5, 5));
+        assert!(g.iter().all(|&v| v == 0.0));
+    }
+}

@@ -26,7 +26,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::core::UpdaterCore;
 use crate::coordinator::engine::{Engine, ThreadedDriver};
 use crate::coordinator::snapshot::{BufferPool, SnapshotCell};
-use crate::coordinator::Trainer;
+use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::{Dataset, FederatedData};
 use crate::federated::device::{AvailabilityModel, SimDevice};
 use crate::federated::metrics::MetricsLog;
@@ -61,6 +61,10 @@ pub enum ComputeJob {
         /// Where the metrics go.
         reply: Sender<Result<EvalMetrics, String>>,
     },
+    /// A spent update buffer coming back from the engine for reuse: the
+    /// service parks it in its [`TaskScratch`] so the next `Train` job's
+    /// output is allocation-free.  Fire-and-forget — no reply.
+    Recycle(ParamVec),
 }
 
 /// Run the threaded FedAsync server; blocks until `cfg.epochs` updates.
@@ -153,6 +157,7 @@ impl Trainer for ServiceTrainer {
         _data: &Dataset,
         _gamma: f32,
         _rho: f32,
+        _scratch: &mut TaskScratch,
     ) -> Result<(ParamVec, f32), RuntimeError> {
         Err(RuntimeError::Load(
             "threaded mode trains via the worker pool, not the updater".into(),
@@ -214,12 +219,17 @@ pub fn run_server_core(
 pub fn serve_native<T: Trainer>(trainer: T, devices: usize, jobs: Receiver<ComputeJob>) {
     let data = crate::analysis::quadratic::dummy_dataset();
     let mut fleet = crate::analysis::quadratic::dummy_fleet(devices, 7);
+    // One scratch for the service thread: `Recycle` jobs feed spent
+    // buffers back into it, so steady-state `Train` output reuses the
+    // buffer the engine just consumed instead of allocating.
+    let mut scratch = TaskScratch::new();
     while let Ok(job) = jobs.recv() {
         match job {
             ComputeJob::Train { device, params, prox, gamma, rho, reply } => {
                 let anchor = if prox { Some(params.as_slice()) } else { None };
+                let dev = &mut fleet[device];
                 let result = trainer
-                    .local_train(&params, anchor, &mut fleet[device], &data, gamma, rho)
+                    .local_train(&params, anchor, dev, &data, gamma, rho, &mut scratch)
                     .map_err(|e| e.to_string());
                 let _ = reply.send(result);
             }
@@ -227,6 +237,7 @@ pub fn serve_native<T: Trainer>(trainer: T, devices: usize, jobs: Receiver<Compu
                 let result = trainer.evaluate(&params, &data).map_err(|e| e.to_string());
                 let _ = reply.send(result);
             }
+            ComputeJob::Recycle(buf) => scratch.release(buf),
         }
     }
 }
@@ -257,6 +268,7 @@ fn compute_service(
         .collect();
     let _ = ready.send(Ok(rt.manifest.local_iters));
 
+    let mut scratch = TaskScratch::new();
     while let Ok(job) = jobs.recv() {
         match job {
             ComputeJob::Train { device, params, prox, gamma, rho, reply } => {
@@ -276,6 +288,10 @@ fn compute_service(
                     .map_err(|e| e.to_string());
                 let _ = reply.send(result);
             }
+            // The PJRT runtime owns its output buffers, so recycled ones
+            // just park in the scratch (bounded) until a future runtime
+            // path can draw from it.
+            ComputeJob::Recycle(buf) => scratch.release(buf),
         }
     }
 }

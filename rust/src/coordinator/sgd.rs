@@ -9,7 +9,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::recorder::EvalRecorder;
-use crate::coordinator::Trainer;
+use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::FederatedData;
 use crate::federated::device::{AvailabilityModel, SimDevice};
 use crate::federated::metrics::MetricsLog;
@@ -41,6 +41,7 @@ pub fn run_sgd<T: Trainer>(
     );
     let mut params = trainer.init_params(seed as usize)?;
     let h = trainer.local_iters() as u64;
+    let mut scratch = TaskScratch::new();
 
     let mut rec = EvalRecorder::new(cfg.series_label(), cfg.eval_every, cfg.epochs, &data.test);
     rec.maybe_record(trainer, 0, &params, 0.0, 1)?;
@@ -53,8 +54,10 @@ pub fn run_sgd<T: Trainer>(
             &data.train,
             cfg.gamma,
             0.0,
+            &mut scratch,
         )?;
-        params = next;
+        // Two buffers ping-pong through the scratch for the whole run.
+        scratch.release(std::mem::replace(&mut params, next));
         rec.counters.gradients += h;
         rec.counters.applied += 1;
         // No communication: the model never leaves the single worker.

@@ -326,6 +326,7 @@ mod tests {
             _: &crate::federated::data::Dataset,
             _: f32,
             _: f32,
+            _: &mut crate::coordinator::TaskScratch,
         ) -> Result<(Vec<f32>, f32), RuntimeError> {
             unreachable!()
         }

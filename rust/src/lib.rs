@@ -63,10 +63,11 @@
 //!
 //! Supporting casts: [`federated`] (synthetic data, non-IID partitions,
 //! simulated devices, event queue), [`runtime`] (PJRT artifact loading
-//! and execution), [`analysis`] (closed-form quadratics + Theorem 1/2
-//! validation), [`experiment`] (figure presets and the repeat-averaging
-//! runner), [`util`] (pure-std substrates: rng, json, toml, cli,
-//! logging, stats, property testing).
+//! and execution), [`analysis`] (the closed-form compute plane: fused
+//! SoA quadratic trainers, O(dim) evaluators, Theorem 1/2 validation —
+//! zero-allocation per task via [`coordinator::scratch`]), [`experiment`]
+//! (figure presets and the repeat-averaging runner), [`util`] (pure-std
+//! substrates: rng, json, toml, cli, logging, stats, property testing).
 
 pub mod analysis;
 pub mod config;

@@ -1,0 +1,37 @@
+//! Zero-allocation regression for the compute plane.
+//!
+//! The sequential driver's steady state — local_train (fused SoA kernel
+//! over `TaskScratch` buffers) → delivery draw → offer (pooled mix +
+//! Arc-reusing history push) → off-grid record → buffer recycle — must
+//! perform **zero heap allocations per task**.  A counting global
+//! allocator measures a probe-bracketed window of steady-state tasks
+//! inside a real engine run; any new allocation on the hot path (a
+//! stray `to_vec`, a fresh mix buffer, a non-recycled history push)
+//! fails this test.
+//!
+//! The probe machinery and the measured run live in
+//! `tests/support/alloc_probe.rs`, shared with `bench_compute` so the
+//! pinned invariant and the published `allocs_per_task_steady_state`
+//! bench field always measure the same workload.
+//!
+//! This file is its own test binary with a single `#[test]` so no
+//! concurrent test can allocate inside the measurement window.
+
+#[path = "support/alloc_probe.rs"]
+mod alloc_probe;
+
+#[global_allocator]
+static COUNTER: alloc_probe::CountingAlloc = alloc_probe::CountingAlloc;
+
+#[test]
+fn sequential_driver_steady_state_allocates_zero_per_task() {
+    let report = alloc_probe::run_steady_state();
+    assert_eq!(report.final_epoch, 600, "run must complete");
+    assert_eq!(
+        report.allocs_in_window,
+        0,
+        "steady state allocated {} times over {} tasks (want 0/task)",
+        report.allocs_in_window,
+        report.tasks
+    );
+}

@@ -49,8 +49,11 @@ impl Trainer for ConstTrainer {
         _data: &Dataset,
         _gamma: f32,
         _rho: f32,
+        scratch: &mut fedasync::coordinator::TaskScratch,
     ) -> Result<(ParamVec, f32), RuntimeError> {
-        Ok((vec![1.0; 4], 2.0))
+        let mut x = scratch.acquire(4);
+        x.resize(4, 1.0);
+        Ok((x, 2.0))
     }
     fn evaluate(&self, params: &[f32], _test: &Dataset) -> Result<EvalMetrics, RuntimeError> {
         let mean = params.iter().map(|&x| x as f64).sum::<f64>() / params.len() as f64;

@@ -598,6 +598,38 @@ fn shipped_config_files_parse_and_validate() {
 }
 
 // ---------------------------------------------------------------------
+// Compute-plane properties (analysis::quadratic).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_quadratic_fast_evaluator_matches_exact_loop() {
+    // The O(dim) moment evaluator must stay within 1e-6 relative of the
+    // exact O(n·dim) loop for random x (the bitwise fused-kernel pin
+    // lives next to the private state in analysis::quadratic's tests).
+    use fedasync::analysis::quadratic::QuadraticProblem;
+    check("quadratic-fast-evaluator", 100, |g| {
+        let n = g.size(1, 16);
+        let dim = g.size(1, 48);
+        let spread = g.f64_in(0.5, 4.0);
+        let seed = g.rng.next_u64();
+        let p = QuadraticProblem::new(n, dim, 0.5, 2.0, spread, 0.0, 1, seed);
+        for _ in 0..4 {
+            let x = g.vec_f32(dim, 4.0);
+            let exact = p.global_f(&x);
+            let fast = p.global_f_fast(&x);
+            prop_ensure!(
+                (fast - exact).abs() <= 1e-6 * exact.abs().max(1e-12),
+                "n={n} dim={dim}: exact {exact} vs fast {fast}"
+            );
+        }
+        // The gap is defined through the fast evaluator on both sides,
+        // so it is exactly zero at the closed-form minimizer.
+        prop_ensure!(p.gap(&p.x_star()) == 0.0, "gap(x*) != 0");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
 // Aggregation-strategy properties (coordinator::aggregator).
 // ---------------------------------------------------------------------
 
@@ -620,6 +652,7 @@ impl fedasync::coordinator::Trainer for NullTrainer {
         _: &fedasync::federated::data::Dataset,
         _: f32,
         _: f32,
+        _: &mut fedasync::coordinator::TaskScratch,
     ) -> Result<(Vec<f32>, f32), fedasync::runtime::RuntimeError> {
         unreachable!()
     }

@@ -29,14 +29,17 @@ const H: usize = 5;
 /// every parameter 10% toward 1.0; eval reports mean squared distance
 /// from 1.0 as loss.
 fn mock_service(jobs: mpsc::Receiver<ComputeJob>) {
+    let mut scratch = fedasync::coordinator::TaskScratch::new();
     while let Ok(job) = jobs.recv() {
         match job {
             ComputeJob::Train { params, reply, .. } => {
-                let x_new: Vec<f32> = params.iter().map(|&v| v + 0.1 * (1.0 - v)).collect();
+                let mut x_new = scratch.acquire(params.len());
+                x_new.extend(params.iter().map(|&v| v + 0.1 * (1.0 - v)));
                 let loss =
                     params.iter().map(|&v| (1.0 - v).abs()).sum::<f32>() / params.len() as f32;
                 let _ = reply.send(Ok((x_new, loss)));
             }
+            ComputeJob::Recycle(buf) => scratch.release(buf),
             ComputeJob::Eval { params, reply } => {
                 let loss = params
                     .iter()

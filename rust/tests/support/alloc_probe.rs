@@ -1,0 +1,170 @@
+//! Shared steady-state allocation probe for the alloc-regression test
+//! and `bench_compute` — one definition of the counting allocator, the
+//! window-bracketing probe behavior, and the sequential engine run they
+//! both measure, so the tier-1 "0 allocs/task" pin and the published
+//! `allocs_per_task_steady_state` bench field can never measure two
+//! different workloads.
+//!
+//! Not a test file itself: it lives in a subdirectory (cargo only
+//! auto-builds `tests/*.rs`), and each consumer includes it via
+//! `#[path]` and installs [`CountingAlloc`] as its own
+//! `#[global_allocator]` (the attribute is per-binary).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::config::{ExperimentConfig, LocalUpdate, StalenessFn};
+use fedasync::coordinator::core::UpdaterCore;
+use fedasync::coordinator::engine::{Engine, SequentialDriver};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::data::FederatedData;
+use fedasync::scenario::{ClientBehavior, Delivery, UniformBehavior};
+use fedasync::util::rng::Rng;
+
+/// System allocator wrapper that counts every allocation entry point
+/// (dealloc is free to happen — steady state may *shrink*, never grow).
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+fn allocs_now() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Tasks run before the window opens (steady footprint reached: scratch
+/// buffers, the history ring, the staleness histogram, the buffer pool).
+const WARMUP_TASKS: u64 = 200;
+/// Task cycles measured inside the window.
+const MEASURE_TASKS: u64 = 200;
+
+/// Uniform population that snapshots the allocation counter at the
+/// window edges; `delivery` is the engine's once-per-arrival hook, so
+/// bracketing deliveries `N` and `N + M` measures `M` complete task
+/// cycles (train → deliver → offer → off-grid record → recycle).
+struct ProbeBehavior {
+    inner: UniformBehavior,
+    deliveries: AtomicU64,
+    window_start: AtomicU64,
+    window_end: AtomicU64,
+}
+
+impl ClientBehavior for ProbeBehavior {
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn is_present(&self, device: usize, progress: f64) -> bool {
+        self.inner.is_present(device, progress)
+    }
+
+    fn present_count(&self, progress: f64) -> usize {
+        self.inner.present_count(progress)
+    }
+
+    fn slowdown(&self, device: usize, progress: f64) -> f64 {
+        self.inner.slowdown(device, progress)
+    }
+
+    fn link_latency(&self, device: usize, rng: &mut Rng) -> f64 {
+        self.inner.link_latency(device, rng)
+    }
+
+    fn sample_staleness(&self, device: usize, progress: f64, max: u64, rng: &mut Rng) -> u64 {
+        self.inner.sample_staleness(device, progress, max, rng)
+    }
+
+    fn delivery(&self, device: usize, progress: f64, rng: &mut Rng) -> Delivery {
+        let k = self.deliveries.fetch_add(1, Ordering::Relaxed);
+        if k == WARMUP_TASKS {
+            self.window_start.store(allocs_now(), Ordering::Relaxed);
+        } else if k == WARMUP_TASKS + MEASURE_TASKS {
+            self.window_end.store(allocs_now(), Ordering::Relaxed);
+        }
+        self.inner.delivery(device, progress, rng)
+    }
+}
+
+/// What [`run_steady_state`] measured.
+pub struct SteadyStateReport {
+    /// Heap allocations observed inside the probe window.
+    pub allocs_in_window: u64,
+    /// Task cycles the window spans.
+    pub tasks: u64,
+    /// Final epoch the run reached (sanity: the run completed).
+    pub final_epoch: usize,
+}
+
+/// One sequential-driver engine run on the closed-form quadratic with
+/// the eval grid kept clear of the probe window; panics if the window
+/// never closed.
+pub fn run_steady_state() -> SteadyStateReport {
+    const DEVICES: usize = 8;
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "alloc_probe".into();
+    cfg.epochs = 600;
+    cfg.eval_every = 600; // rows only at t = 0 and t = 600: window is row-free
+    cfg.repeats = 1;
+    cfg.seed = 1;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.max = 4;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.staleness.drop_above = None;
+    cfg.federation.devices = DEVICES;
+
+    // Gradient noise on, so the fill_gaussian path is inside the window.
+    let problem = QuadraticProblem::new(DEVICES, 16, 0.5, 2.0, 2.0, 0.05, 5, 1);
+    let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+    let mut fleet = dummy_fleet(DEVICES, 2);
+    let probe = ProbeBehavior {
+        inner: UniformBehavior::new(DEVICES),
+        deliveries: AtomicU64::new(0),
+        window_start: AtomicU64::new(0),
+        window_end: AtomicU64::new(0),
+    };
+
+    let core = UpdaterCore::new(
+        &cfg,
+        Trainer::init_params(&problem, 0).expect("init"),
+        cfg.staleness.max as usize + 1,
+        &data.test,
+        None,
+    );
+    let driver =
+        SequentialDriver::new(&cfg, &data, &mut fleet, &probe, cfg.seed, cfg.staleness.max);
+    let log = Engine::new(&problem, &cfg, &probe).run(core, driver).expect("steady-state run");
+
+    let start = probe.window_start.load(Ordering::Relaxed);
+    let end = probe.window_end.load(Ordering::Relaxed);
+    assert!(start > 0 && end >= start, "probe window never closed");
+    SteadyStateReport {
+        allocs_in_window: end - start,
+        tasks: MEASURE_TASKS,
+        final_epoch: log.rows.last().expect("rows").epoch,
+    }
+}
