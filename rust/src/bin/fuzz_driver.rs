@@ -1,0 +1,145 @@
+//! `fuzz_driver` — deterministic in-tree fuzzing CLI.
+//!
+//! ```text
+//! fuzz_driver list                          show targets
+//! fuzz_driver <target|all> [options]        fuzz, optionally replay corpus
+//! ```
+//!
+//! Same seed ⇒ same byte buffers ⇒ same verdict, on any machine.  CI
+//! runs the smoke matrix (`--replay-corpus` plus a bounded iteration
+//! budget per target, fixed `--seed 1`); a red run prints the shrunk
+//! failing input as hex — feed it back through the corpus directory to
+//! pin the regression, or reproduce with the same seed locally.
+//!
+//! Exit codes: 0 clean, 1 invariant violation found, 2 usage error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fedasync::fuzzing::{runner, targets};
+use fedasync::util::cli::{Args, CommandSpec};
+
+fn spec() -> CommandSpec {
+    CommandSpec::new(
+        "fuzz_driver",
+        "deterministic fuzzing over the crate's hostile-input surfaces",
+    )
+    .opt("seed", Some("1"), "root seed for input generation")
+    .opt("iters", Some("500"), "fuzz iterations per target (0 = skip fuzzing)")
+    .opt("max-len", Some("256"), "maximum input buffer length in bytes")
+    .opt("write-crashes", None, "directory to write failing inputs into")
+    .flag("replay-corpus", "replay the checked-in regression corpus first")
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = match Args::parse(spec(), &argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!("\nusage: fuzz_driver <target|all|list> [options]");
+            return ExitCode::from(2);
+        }
+    };
+    let which = a.positional.first().map(String::as_str).unwrap_or("list");
+
+    if which == "list" {
+        for t in targets::all() {
+            println!("{:<16} {}", t.name, t.about);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let selected: Vec<&targets::TargetSpec> = if which == "all" {
+        targets::all().iter().collect()
+    } else {
+        match targets::find(which) {
+            Some(t) => vec![t],
+            None => {
+                let names: Vec<&str> = targets::all().iter().map(|t| t.name).collect();
+                eprintln!("unknown target {which:?}; targets: {}, all", names.join(", "));
+                return ExitCode::from(2);
+            }
+        }
+    };
+
+    let (seed, iters, max_len) = match (a.u64("seed"), a.u64("iters"), a.usize("max-len")) {
+        (Ok(s), Ok(i), Ok(m)) => (s, i, m.max(1)),
+        (s, i, m) => {
+            for e in [s.err(), i.err(), m.err()].into_iter().flatten() {
+                eprintln!("{e}");
+            }
+            return ExitCode::from(2);
+        }
+    };
+    let crash_dir = a.get("write-crashes").map(PathBuf::from);
+
+    // Targets signal failure by panicking; the runner catches and
+    // reports, so the default per-panic backtrace spew is pure noise.
+    std::panic::set_hook(Box::new(|_| {}));
+
+    let mut failed = false;
+    for t in &selected {
+        if a.flag("replay-corpus") {
+            match runner::replay_corpus(t) {
+                Ok(n) => println!("{:<16} corpus: {n} entries ok", t.name),
+                Err(msg) => {
+                    println!("{:<16} corpus: FAILED — {msg}", t.name);
+                    failed = true;
+                    continue;
+                }
+            }
+        }
+        if iters == 0 {
+            continue;
+        }
+        let summary = runner::run_target(t, seed, iters, max_len);
+        match &summary.failure {
+            None => println!(
+                "{:<16} fuzz: {} iters ok (seed {seed}, max-len {max_len})",
+                t.name, summary.iters
+            ),
+            Some(f) => {
+                failed = true;
+                println!(
+                    "{:<16} fuzz: FAILED at iter {} (seed {seed}): {}",
+                    t.name, f.iter, f.message
+                );
+                println!("  input  ({:>4} bytes): {}", f.input.len(), hex(&f.input));
+                println!("  shrunk ({:>4} bytes): {}", f.shrunk.len(), hex(&f.shrunk));
+                if let Some(dir) = &crash_dir {
+                    if let Err(e) = write_crash(dir, t.name, f) {
+                        eprintln!("  (could not write crash files: {e})");
+                    } else {
+                        let stem = format!("{}-{}", t.name, f.iter);
+                        println!("  wrote {}/{stem}.bin (+ -full.bin)", dir.display());
+                    }
+                }
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    use std::fmt::Write as _;
+    const SHOWN: usize = 64;
+    let mut s = String::new();
+    for b in bytes.iter().take(SHOWN) {
+        let _ = write!(s, "{b:02x}");
+    }
+    if bytes.len() > SHOWN {
+        s.push('…');
+    }
+    s
+}
+
+fn write_crash(dir: &std::path::Path, target: &str, f: &runner::Failure) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{target}-{}.bin", f.iter)), &f.shrunk)?;
+    std::fs::write(dir.join(format!("{target}-{}-full.bin", f.iter)), &f.input)
+}

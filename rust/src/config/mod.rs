@@ -189,15 +189,22 @@ impl AggregatorConfig {
 
     /// Parse a compact CLI spec: `fedasync`, `buffered`, `buffered:16`,
     /// `distance`, or `distance:0.05..1.5`.
+    ///
+    /// Parameters are validated here too (not just in config
+    /// [`AggregatorConfig::validate`]): a spec that parses is a spec
+    /// that runs, so `buffered:0`, `distance:1..0`, or a non-finite
+    /// clamp fail at the flag, with the offending spec in the message.
     pub fn parse_spec(spec: &str) -> Result<AggregatorConfig, ConfigError> {
         let (kind, param) = match spec.split_once(':') {
             Some((k, p)) => (k, Some(p)),
             None => (spec, None),
         };
-        match kind {
+        let cfg = match kind {
             "fedasync" => match param {
-                None => Ok(AggregatorConfig::FedAsync),
-                Some(p) => Err(ConfigError(format!("fedasync takes no parameter, got {p:?}"))),
+                None => AggregatorConfig::FedAsync,
+                Some(p) => {
+                    return Err(ConfigError(format!("fedasync takes no parameter, got {p:?}")))
+                }
             },
             "buffered" => {
                 let k = match param {
@@ -206,7 +213,7 @@ impl AggregatorConfig {
                         .parse()
                         .map_err(|e| ConfigError(format!("buffered:{p}: {e}")))?,
                 };
-                Ok(AggregatorConfig::Buffered { k })
+                AggregatorConfig::Buffered { k }
             }
             "distance" | "distance_adaptive" => {
                 let (clamp_lo, clamp_hi) = match param {
@@ -222,12 +229,16 @@ impl AggregatorConfig {
                         (parse(lo)?, parse(hi)?)
                     }
                 };
-                Ok(AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi })
+                AggregatorConfig::DistanceAdaptive { clamp_lo, clamp_hi }
             }
-            other => Err(ConfigError(format!(
-                "unknown aggregator {other:?} (fedasync | buffered[:K] | distance[:LO..HI])"
-            ))),
-        }
+            other => {
+                return Err(ConfigError(format!(
+                    "unknown aggregator {other:?} (fedasync | buffered[:K] | distance[:LO..HI])"
+                )))
+            }
+        };
+        cfg.validate().map_err(|e| ConfigError(format!("{spec}: {}", e.0)))?;
+        Ok(cfg)
     }
 
     /// Validate strategy parameters.
@@ -925,6 +936,46 @@ mod tests {
         assert!(AggregatorConfig::parse_spec("buffered:none").is_err());
         assert!(AggregatorConfig::parse_spec("distance:0.5").is_err());
         assert!(AggregatorConfig::parse_spec("fedasync:3").is_err());
+    }
+
+    #[test]
+    fn aggregator_spec_rejects_malformed_edges() {
+        // A spec that parses is a spec that runs: parameter validity is
+        // enforced at parse time, not deferred to config validation.
+        let bad = [
+            // buffered edges: zero, negatives, empties, junk around the k.
+            "buffered:0",
+            "buffered:-1",
+            "buffered:",
+            "buffered: 4",
+            "buffered:4 ",
+            "buffered:4:4",
+            "buffered:99999999999999999999999",
+            // distance edges: empty/inverted/degenerate/non-finite clamps.
+            "distance:1..0",
+            "distance:0..1",
+            "distance:-1..1",
+            "distance:..",
+            "distance:1..",
+            "distance:..1",
+            "distance:",
+            "distance:nan..1",
+            "distance:0.1..nan",
+            "distance:inf..inf",
+            "distance:0.1..1e999",
+            // empty segments and stray separators.
+            "",
+            ":",
+            ":buffered",
+            "fedasync:",
+        ];
+        for spec in bad {
+            let err = AggregatorConfig::parse_spec(spec);
+            assert!(err.is_err(), "{spec:?} should be rejected, got {err:?}");
+        }
+        // The error message names the offending spec for CLI users.
+        let msg = AggregatorConfig::parse_spec("buffered:0").unwrap_err().0;
+        assert!(msg.contains("buffered:0"), "unhelpful message: {msg}");
     }
 
     #[test]

@@ -81,6 +81,7 @@ impl<'a> UpdaterCore<'a> {
         }
         self.rec.counters.applied += out.applied as u64;
         self.rec.counters.buffered += out.buffered as u64;
+        self.rec.counters.dropped += (!out.applied && !out.buffered) as u64;
         self.rec.counters.record_update(out.alpha_eff, out.staleness, loss as f64);
         Ok(out)
     }
@@ -259,6 +260,49 @@ mod tests {
         assert_eq!(core.store.current_version(), 2);
         assert_eq!(core.rec.counters.applied, 2);
         assert!(core.drain(&StubTrainer).unwrap().is_none());
+    }
+
+    #[test]
+    fn totals_conserve_every_arrival() {
+        // FedAsync: every offer is applied or dropped, and the final
+        // totals account for each one exactly once.
+        let cfg = cfg(100, 10, Some(2));
+        let test = test_dataset();
+        let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 8, &test, None);
+        for _ in 0..4 {
+            let v = core.store.current_version();
+            core.offer(&StubTrainer, &[1.0; 4], v, 1.0).unwrap();
+        }
+        let v = core.store.current_version();
+        core.offer(&StubTrainer, &[9.0; 4], v.saturating_sub(3), 1.0).unwrap();
+        let log = core.finish();
+        assert_eq!(log.totals.arrivals, 5);
+        assert_eq!(log.totals.applied, 4);
+        assert_eq!(log.totals.buffered, 0);
+        assert_eq!(log.totals.dropped, 1);
+        assert_eq!(log.totals.arrivals, log.staleness_hist.total());
+        assert_eq!(log.totals.applied + log.totals.dropped, log.totals.arrivals);
+    }
+
+    #[test]
+    fn buffered_totals_conserve_and_drain() {
+        // Buffered k=4, 6 accepted offers: buffered counts absorbed
+        // offers, applied counts blends (1 in-stream + 1 drain flush).
+        let mut cfg = cfg(100, 10, None);
+        cfg.aggregator = crate::config::AggregatorConfig::Buffered { k: 4 };
+        let test = test_dataset();
+        let mut core = UpdaterCore::new(&cfg, vec![0.0; 4], 8, &test, None);
+        for _ in 0..6 {
+            let v = core.store.current_version();
+            core.offer(&StubTrainer, &[1.0; 4], v, 1.0).unwrap();
+        }
+        core.drain(&StubTrainer).unwrap();
+        let log = core.finish();
+        assert_eq!(log.totals.arrivals, 6);
+        assert_eq!(log.totals.buffered, 6);
+        assert_eq!(log.totals.dropped, 0);
+        assert_eq!(log.totals.applied, 2, "ceil(6/4) blends after drain");
+        assert_eq!(log.totals.buffered + log.totals.dropped, log.totals.arrivals);
     }
 
     #[test]

@@ -32,6 +32,12 @@
 //! paper's Theorems 1–2 against the true optimality gap).
 
 #![warn(missing_docs)]
+// Hot-path panic hygiene: `unwrap`/`expect` are banned in non-test
+// coordinator code (clippy.toml `disallowed-methods`; allowed crate-wide
+// in Cargo.toml, re-armed here).  Invariant-backed impossibilities use
+// `match`/`let-else` with `unreachable!` so the justification is at the
+// use site; recoverable cases must thread a `Result`.
+#![cfg_attr(not(test), warn(clippy::disallowed_methods))]
 
 pub mod aggregator;
 pub mod core;

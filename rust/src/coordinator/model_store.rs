@@ -50,13 +50,20 @@ impl ModelStore {
 
     /// The current model `x_t`.
     pub fn current(&self) -> &ParamVec {
-        self.ring.back().expect("non-empty ring")
+        match self.ring.back() {
+            Some(current) => current,
+            // `new` seeds the ring and `push` never empties it.
+            None => unreachable!("model ring is never empty"),
+        }
     }
 
     /// Shared handle to the current model — O(1), no parameter copy.
     /// This is what the threaded server publishes to its scheduler.
     pub fn current_arc(&self) -> Arc<ParamVec> {
-        Arc::clone(self.ring.back().expect("non-empty ring"))
+        match self.ring.back() {
+            Some(current) => Arc::clone(current),
+            None => unreachable!("model ring is never empty"),
+        }
     }
 
     /// Model at `version`, if still retained.
@@ -88,7 +95,11 @@ impl ModelStore {
     /// `Arc::new` + parking the shared handle, exactly as before.
     pub fn push(&mut self, params: ParamVec) -> u64 {
         if self.ring.len() == self.capacity {
-            let mut front = self.ring.pop_front().expect("non-empty ring");
+            let Some(mut front) = self.ring.pop_front() else {
+                // capacity >= 1 (asserted in `new`), so a full ring has
+                // a front to evict.
+                unreachable!("full ring is non-empty");
+            };
             match Arc::get_mut(&mut front) {
                 Some(slot) => {
                     let old = std::mem::replace(slot, params);

@@ -11,7 +11,7 @@
 
 use crate::coordinator::Trainer;
 use crate::federated::data::Dataset;
-use crate::federated::metrics::{MetricsLog, MetricsRow, RunningCounters};
+use crate::federated::metrics::{AccountingTotals, MetricsLog, MetricsRow, RunningCounters};
 use crate::runtime::RuntimeError;
 
 /// Row recorder with a fixed eval grid.
@@ -76,10 +76,16 @@ impl<'a> EvalRecorder<'a> {
         Ok(())
     }
 
-    /// Close the run: moves the cumulative staleness histogram into the
-    /// log and hands it back.
+    /// Close the run: moves the cumulative staleness histogram and the
+    /// final accounting totals into the log and hands it back.
     pub fn finish(self) -> MetricsLog {
         let EvalRecorder { mut log, counters, .. } = self;
+        log.totals = AccountingTotals {
+            arrivals: counters.hist.total(),
+            applied: counters.applied,
+            buffered: counters.buffered,
+            dropped: counters.dropped,
+        };
         log.staleness_hist = counters.hist;
         log
     }

@@ -55,6 +55,27 @@ pub struct MetricsRow {
     pub buffered: u64,
 }
 
+/// Final cumulative server-side accounting for one run, attached by the
+/// recorder at finish time.  Deliberately *not* part of the CSV schema
+/// (the pinned golden trace predates it); the differential-execution
+/// fuzzer and conformance tooling read it to check conservation
+/// invariants — every arrival is applied, absorbed into a staging
+/// buffer, or dropped, and nothing staged survives shutdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AccountingTotals {
+    /// Updates offered to the server, counting each delivered copy
+    /// (applied, buffered, or dropped) — `== staleness_hist.total()`.
+    pub arrivals: u64,
+    /// Server commits (model-version advances), including the
+    /// end-of-run drain flush.  For non-buffering strategies this
+    /// counts accepted offers 1:1; for buffered it counts blends.
+    pub applied: u64,
+    /// Offers absorbed into an aggregation staging buffer.
+    pub buffered: u64,
+    /// Offers rejected outright by the staleness cutoff.
+    pub dropped: u64,
+}
+
 /// A labelled series of metric rows (one run, or a mean over repeats).
 #[derive(Debug, Clone, Default)]
 pub struct MetricsLog {
@@ -65,6 +86,8 @@ pub struct MetricsLog {
     pub provenance: Option<Json>,
     /// Cumulative staleness distribution over every offered update.
     pub staleness_hist: StalenessHist,
+    /// Final cumulative accounting (zeroed for logs parsed from CSV).
+    pub totals: AccountingTotals,
 }
 
 pub const CSV_HEADER: &str = "epoch,gradients,comms,sim_time,train_loss,test_loss,test_acc,\
@@ -77,6 +100,7 @@ impl MetricsLog {
             rows: Vec::new(),
             provenance: None,
             staleness_hist: StalenessHist::default(),
+            totals: AccountingTotals::default(),
         }
     }
 
@@ -134,10 +158,15 @@ impl MetricsLog {
             })
             .collect();
         let mut staleness_hist = StalenessHist::default();
+        let mut totals = AccountingTotals::default();
         for r in runs {
             staleness_hist.merge(&r.staleness_hist);
+            totals.arrivals += r.totals.arrivals;
+            totals.applied += r.totals.applied;
+            totals.buffered += r.totals.buffered;
+            totals.dropped += r.totals.dropped;
         }
-        MetricsLog { label, rows, provenance: runs[0].provenance.clone(), staleness_hist }
+        MetricsLog { label, rows, provenance: runs[0].provenance.clone(), staleness_hist, totals }
     }
 
     pub fn to_csv(&self) -> String {
@@ -220,6 +249,7 @@ impl MetricsLog {
             rows,
             provenance: None,
             staleness_hist: StalenessHist::default(),
+            totals: AccountingTotals::default(),
         })
     }
 }
@@ -319,6 +349,10 @@ pub struct RunningCounters {
     /// Cumulative updates absorbed into an aggregation staging buffer —
     /// the metric rows' `buffered` column.
     pub buffered: u64,
+    /// Cumulative offers rejected by the staleness cutoff.  Not sampled
+    /// into rows (the CSV schema is golden-trace pinned); surfaced via
+    /// [`AccountingTotals`] for conservation checks.
+    pub dropped: u64,
     /// Cumulative staleness distribution (never reset by `snapshot`).
     pub hist: StalenessHist,
     /// Sum/count of α_t since last snapshot.

@@ -1,0 +1,187 @@
+//! Finite, deterministic byte budget behind every fuzz case.
+//!
+//! A [`ByteSource`] is the only entropy a fuzz target sees: a fixed byte
+//! buffer consumed left to right through typed draws (`u8`, `u64`,
+//! `index`, `f64_in`, …).  Two properties make it the right substrate
+//! for regression fuzzing:
+//!
+//! * **Replayable** — the buffer *is* the test case.  A failing input is
+//!   saved as its raw bytes and replayed byte-for-byte from the corpus;
+//!   no generator state needs to be reconstructed.
+//! * **Shrinkable** — draws past the end of the buffer return zero, so
+//!   truncating or zeroing bytes always yields another valid (usually
+//!   simpler) input.  The shrinker in [`runner`](super::runner) leans on
+//!   this: it never has to understand what the bytes mean.
+//!
+//! Seeded construction ([`ByteSource::from_seed`]) fills the buffer from
+//! the repo's own [`Rng`] stream, so `--seed N` reproduces the exact
+//! byte sequence — and therefore the exact verdict — on any machine.
+
+use crate::util::rng::Rng;
+
+/// A finite stream of fuzz bytes; draws return zero once exhausted.
+#[derive(Debug, Clone)]
+pub struct ByteSource {
+    bytes: Vec<u8>,
+    pos: usize,
+}
+
+impl ByteSource {
+    /// Deterministic buffer of `len` bytes derived from `seed`.
+    pub fn from_seed(seed: u64, len: usize) -> ByteSource {
+        let mut rng = Rng::seed_from(seed);
+        let mut bytes = Vec::with_capacity(len);
+        while bytes.len() < len {
+            bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+        }
+        bytes.truncate(len);
+        ByteSource { bytes, pos: 0 }
+    }
+
+    /// Wrap an explicit buffer (corpus replay, shrinking candidates).
+    pub fn from_bytes(bytes: Vec<u8>) -> ByteSource {
+        ByteSource { bytes, pos: 0 }
+    }
+
+    /// Bytes consumed so far.
+    pub fn taken(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left in the budget.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.pos >= self.bytes.len()
+    }
+
+    /// Next byte, or 0 once the budget is spent.
+    pub fn u8(&mut self) -> u8 {
+        let b = self.bytes.get(self.pos).copied().unwrap_or(0);
+        self.pos = self.pos.saturating_add(1).min(self.bytes.len());
+        b
+    }
+
+    /// Convention used by every raw/structured mode switch: the byte's
+    /// low bit decides, so corpus files can pin a branch with `\x00`/`\x01`.
+    pub fn bool(&mut self) -> bool {
+        self.u8() & 1 == 1
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        u32::from_le_bytes([self.u8(), self.u8(), self.u8(), self.u8()])
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        (u64::from(self.u32()) << 32) | u64::from(self.u32())
+    }
+
+    /// Uniform-ish index in `[0, n)`; 0 when `n == 0`.  Modulo bias is
+    /// irrelevant for fuzzing and keeps the byte cost at 4.
+    pub fn index(&mut self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        self.u32() as usize % n
+    }
+
+    /// Inclusive integer range.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.u64() % (hi - lo + 1)
+    }
+
+    /// `f64` in `[lo, hi)`; always finite for finite bounds.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let frac = f64::from(self.u32()) / (f64::from(u32::MAX) + 1.0);
+        lo + (hi - lo) * frac
+    }
+
+    /// Length draw biased toward small values (most structure bugs live
+    /// in small inputs; occasional large draws keep coverage honest).
+    pub fn len_biased(&mut self, max: usize) -> usize {
+        let b = self.u8() as usize;
+        if b < 192 {
+            b % (max.min(8) + 1)
+        } else {
+            b % (max + 1)
+        }
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+
+    /// Consume the rest of the budget as raw bytes (raw-text mode).
+    pub fn rest(&mut self) -> Vec<u8> {
+        let out = self.bytes[self.pos..].to_vec();
+        self.pos = self.bytes.len();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_streams_are_deterministic() {
+        let mut a = ByteSource::from_seed(9, 64);
+        let mut b = ByteSource::from_seed(9, 64);
+        for _ in 0..64 {
+            assert_eq!(a.u8(), b.u8());
+        }
+        assert_ne!(
+            ByteSource::from_seed(9, 8).u64(),
+            ByteSource::from_seed(10, 8).u64()
+        );
+    }
+
+    #[test]
+    fn exhaustion_yields_zeros() {
+        let mut s = ByteSource::from_bytes(vec![0xff, 0xff]);
+        assert_eq!(s.u8(), 0xff);
+        assert_eq!(s.u8(), 0xff);
+        assert!(s.is_exhausted());
+        assert_eq!(s.u8(), 0);
+        assert_eq!(s.u64(), 0);
+        assert_eq!(s.index(7), 0);
+        assert!(!s.bool());
+        assert_eq!(s.taken(), 2);
+    }
+
+    #[test]
+    fn draws_stay_in_range() {
+        let mut s = ByteSource::from_seed(3, 4096);
+        while !s.is_exhausted() {
+            let n = 1 + s.index(40);
+            assert!(s.index(n) < n);
+            let x = s.f64_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x) && x.is_finite());
+            let r = s.range_u64(5, 9);
+            assert!((5..=9).contains(&r));
+            assert!(s.len_biased(100) <= 100);
+        }
+    }
+
+    #[test]
+    fn rest_consumes_everything() {
+        let mut s = ByteSource::from_bytes(vec![1, 2, 3, 4]);
+        assert_eq!(s.u8(), 1);
+        assert_eq!(s.rest(), vec![2, 3, 4]);
+        assert!(s.is_exhausted());
+        assert!(s.rest().is_empty());
+    }
+
+    #[test]
+    fn bool_is_low_bit() {
+        let mut s = ByteSource::from_bytes(vec![0x01, 0x02, 0xff, 0x00]);
+        assert!(s.bool());
+        assert!(!s.bool());
+        assert!(s.bool());
+        assert!(!s.bool());
+    }
+}

@@ -1,0 +1,39 @@
+//! In-tree, pure-std, deterministic fuzzing and differential execution.
+//!
+//! No `cargo-fuzz`, no libFuzzer, no coverage feedback — the offline
+//! build environment rules them out — but the three properties that
+//! matter for a reproduction repo are all here:
+//!
+//! 1. **Determinism.**  A fuzz case is a byte buffer
+//!    ([`ByteSource`](byte_source::ByteSource)) derived from a seed via
+//!    the repo's own `util::rng` stream.  `--seed N` reproduces the
+//!    exact inputs, so a CI failure replays locally bit-for-bit.
+//! 2. **Structure awareness.**  Targets ([`targets`]) alternate between
+//!    raw-text mode and fragment-composed generation, reaching deep
+//!    parser states that uniform random bytes essentially never hit.
+//! 3. **Regression permanence.**  Failing inputs are shrunk
+//!    ([`runner::shrink`]) and checked into
+//!    `rust/tests/fixtures/fuzz_corpus/`, which the tier-1 suite
+//!    replays on every build (`rust/tests/fuzz_corpus.rs`).
+//!
+//! Two targets go beyond parsers:
+//!
+//! * `event_queue` — model-based differential of the discrete-event
+//!   queue against a brute-force reference on `(time, seq)` order.
+//! * `differential` — the headline: a random valid experiment config is
+//!   executed through all three time drivers (sampled, emergent,
+//!   threaded) and must satisfy the cross-mode conformance bands plus
+//!   the accounting conservation laws (`applied + buffered + dropped`
+//!   accounts for every arrival).
+//!
+//! Driving it: `cargo run --release --bin fuzz_driver -- <target> --seed N`
+//! (see `fuzz_driver --help`, and DESIGN.md §Correctness tooling for the
+//! corpus workflow).
+
+pub mod byte_source;
+pub mod runner;
+pub mod targets;
+
+pub use byte_source::ByteSource;
+pub use runner::{execute, replay_corpus, run_target, shrink, Failure, RunSummary};
+pub use targets::{all, find, TargetSpec};

@@ -1,0 +1,270 @@
+//! Deterministic fuzz loop: seeded generation, panic capture, input
+//! shrinking, and regression-corpus replay.
+//!
+//! The loop is intentionally boring: derive a byte buffer from the run
+//! seed, hand it to the target inside `catch_unwind`, and stop at the
+//! first failure.  Everything interesting lives in the follow-up —
+//! [`shrink`] reduces a failing buffer by truncation, chunk removal, and
+//! chunk zeroing (all of which keep the buffer a valid [`ByteSource`]
+//! input), and the minimized bytes are what gets checked into
+//! `rust/tests/fixtures/fuzz_corpus/<target>/` so the failure replays as
+//! a tier-1 regression test forever after.
+//!
+//! Determinism contract: `run_target(t, seed, iters, max_len)` executes
+//! the identical byte buffers — and therefore returns the identical
+//! verdict — on every machine and every run.  No wall clock, no global
+//! RNG, no thread timing enters generation.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+use crate::fuzzing::byte_source::ByteSource;
+use crate::fuzzing::targets::TargetSpec;
+use crate::util::rng::Rng;
+
+/// A minimized failing input with its provenance.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    /// 0-based iteration at which the failure was found.
+    pub iter: u64,
+    /// Panic message from the original (unshrunk) input.
+    pub message: String,
+    /// The original failing buffer.
+    pub input: Vec<u8>,
+    /// The shrunk buffer (still failing, usually much smaller).
+    pub shrunk: Vec<u8>,
+}
+
+/// Result of one fuzzing run over a target.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    /// Iterations actually executed (short of the request on failure).
+    pub iters: u64,
+    /// First failure found, already shrunk; `None` = clean run.
+    pub failure: Option<Failure>,
+}
+
+/// Execute the target once on an explicit buffer, converting a panic
+/// into `Err(message)`.
+pub fn execute(target: &TargetSpec, bytes: &[u8]) -> Result<(), String> {
+    let buf = bytes.to_vec();
+    let run = target.run;
+    catch_unwind(AssertUnwindSafe(move || {
+        let mut src = ByteSource::from_bytes(buf);
+        run(&mut src);
+    }))
+    .map_err(|payload| {
+        if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    })
+}
+
+/// Fuzz `target` for up to `iters` cases, stopping (and shrinking) at
+/// the first failure.  Buffers are derived deterministically from
+/// `seed`; lengths vary in `[1, max_len]` with a bias toward short.
+pub fn run_target(target: &TargetSpec, seed: u64, iters: u64, max_len: usize) -> RunSummary {
+    let mut master = Rng::seed_from(seed);
+    let max_len = max_len.max(1);
+    for iter in 0..iters {
+        // Short buffers find structural bugs fastest; every 4th case
+        // gets the full budget so deep inputs stay covered.
+        let len = if iter % 4 == 0 {
+            max_len
+        } else {
+            1 + master.index(max_len)
+        };
+        let case_seed = master.next_u64();
+        let bytes = ByteSource::from_seed(case_seed, len).rest();
+        if let Err(message) = execute(target, &bytes) {
+            let shrunk = shrink(target, &bytes);
+            return RunSummary {
+                iters: iter + 1,
+                failure: Some(Failure { iter, message, input: bytes, shrunk }),
+            };
+        }
+    }
+    RunSummary { iters, failure: None }
+}
+
+/// Shrink a failing buffer: repeatedly try truncations, chunk removals,
+/// and chunk zeroings, keeping any candidate that still fails.  Bounded
+/// by an attempt budget so pathological targets cannot loop forever.
+pub fn shrink(target: &TargetSpec, bytes: &[u8]) -> Vec<u8> {
+    let mut best = bytes.to_vec();
+    let mut budget: u32 = 1000;
+    let mut progress = true;
+    while progress && budget > 0 {
+        progress = false;
+        for candidate in candidates(&best) {
+            if budget == 0 {
+                break;
+            }
+            budget -= 1;
+            if candidate != best && execute(target, &candidate).is_err() {
+                best = candidate;
+                progress = true;
+                break;
+            }
+        }
+    }
+    best
+}
+
+/// Reduction candidates for one shrink round, simplest-first.
+fn candidates(bytes: &[u8]) -> Vec<Vec<u8>> {
+    let n = bytes.len();
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    // Truncations.
+    for keep in [0, n / 4, n / 2, n * 3 / 4, n - 1] {
+        if keep < n {
+            out.push(bytes[..keep].to_vec());
+        }
+    }
+    // Chunk removals, halving chunk size down to 1 byte.
+    let mut chunk = (n / 2).max(1);
+    loop {
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let mut c = Vec::with_capacity(n - (end - start));
+            c.extend_from_slice(&bytes[..start]);
+            c.extend_from_slice(&bytes[end..]);
+            out.push(c);
+            start += chunk;
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk /= 2;
+    }
+    // Chunk zeroings (same schedule), skipping already-zero spans.
+    let mut chunk = (n / 2).max(1);
+    loop {
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            if bytes[start..end].iter().any(|&b| b != 0) {
+                let mut c = bytes.to_vec();
+                c[start..end].fill(0);
+                out.push(c);
+            }
+            start += chunk;
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk /= 2;
+    }
+    out
+}
+
+/// Where a target's regression corpus lives in the repo.
+pub fn corpus_dir(target_name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/fuzz_corpus")
+        .join(target_name)
+}
+
+/// Replay every checked-in corpus entry for `target`; returns the entry
+/// count, or the first failing entry's path and panic message.  A
+/// missing directory is an empty corpus, not an error.
+pub fn replay_corpus(target: &TargetSpec) -> Result<usize, String> {
+    let dir = corpus_dir(target.name);
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(0),
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_file())
+        .collect();
+    paths.sort();
+    for path in &paths {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        execute(target, &bytes)
+            .map_err(|msg| format!("corpus entry {} failed: {msg}", path.display()))?;
+    }
+    Ok(paths.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A target that panics iff the input contains the byte 0xAB after
+    /// at least 4 bytes of prefix — enough structure for the shrinker
+    /// to have real work to do.
+    fn trip_target(src: &mut ByteSource) {
+        let bytes = src.rest();
+        if bytes.len() >= 4 && bytes.contains(&0xAB) {
+            panic!("tripwire byte found");
+        }
+    }
+
+    const TRIP: TargetSpec =
+        TargetSpec { name: "tripwire", about: "test-only", run: trip_target };
+
+    fn quiet<R>(f: impl FnOnce() -> R) -> R {
+        // Suppress the default panic printout for intentionally-tripped
+        // panics; restore the hook for the rest of the test binary.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = f();
+        std::panic::set_hook(hook);
+        r
+    }
+
+    #[test]
+    fn execute_reports_panic_messages() {
+        quiet(|| {
+            assert!(execute(&TRIP, &[0, 0, 0, 0]).is_ok());
+            let err = execute(&TRIP, &[0, 0, 0, 0xAB]).unwrap_err();
+            assert!(err.contains("tripwire"), "{err}");
+        });
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        quiet(|| {
+            let a = run_target(&TRIP, 7, 200, 64);
+            let b = run_target(&TRIP, 7, 200, 64);
+            assert_eq!(a.iters, b.iters);
+            match (&a.failure, &b.failure) {
+                (None, None) => {}
+                (Some(fa), Some(fb)) => {
+                    assert_eq!(fa.iter, fb.iter);
+                    assert_eq!(fa.input, fb.input);
+                    assert_eq!(fa.shrunk, fb.shrunk);
+                }
+                _ => panic!("verdicts diverged across identical runs"),
+            }
+        });
+    }
+
+    #[test]
+    fn shrinker_minimizes_to_the_essence() {
+        quiet(|| {
+            let noisy: Vec<u8> = (0..64u8).map(|i| if i == 40 { 0xAB } else { i }).collect();
+            assert!(execute(&TRIP, &noisy).is_err());
+            let small = shrink(&TRIP, &noisy);
+            assert!(execute(&TRIP, &small).is_err(), "shrunk input must still fail");
+            assert!(small.len() <= 8, "expected near-minimal input, got {small:?}");
+            assert!(small.contains(&0xAB));
+        });
+    }
+
+    #[test]
+    fn corpus_dir_is_repo_relative() {
+        let d = corpus_dir("toml");
+        assert!(d.ends_with("rust/tests/fixtures/fuzz_corpus/toml"));
+    }
+}

@@ -67,13 +67,17 @@
 //! SoA quadratic trainers, O(dim) evaluators, Theorem 1/2 validation —
 //! zero-allocation per task via [`coordinator::scratch`]), [`experiment`]
 //! (figure presets and the repeat-averaging runner), [`util`] (pure-std
-//! substrates: rng, json, toml, cli, logging, stats, property testing).
+//! substrates: rng, json, toml, cli, logging, stats, property testing),
+//! and [`fuzzing`] (deterministic structure-aware fuzz targets, the
+//! differential-execution harness, and the regression-corpus runner
+//! behind the `fuzz_driver` binary).
 
 pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod experiment;
 pub mod federated;
+pub mod fuzzing;
 pub mod runtime;
 pub mod scenario;
 pub mod util;

@@ -277,4 +277,55 @@ mod tests {
         assert!(e.0.contains("--epochs"));
         assert!(e.0.contains("run training"));
     }
+
+    #[test]
+    fn hostile_argv_never_panics() {
+        // Error-path hardening (fuzzed): any byte-string argv must come
+        // back as Ok or Err, never a panic — including through every
+        // typed accessor.
+        let weird = [
+            vec!["--"],
+            vec!["--="],
+            vec!["--=v"],
+            vec!["---epochs", "3"],
+            vec!["--epochs="],
+            vec!["--epochs=1=2"],
+            vec!["--verbose=true"],
+            vec!["--algo", "--epochs"],
+            vec!["--", "--epochs", "5"],
+            vec!["\u{0}\u{1}", "--epochs", "\u{ffff}"],
+            vec!["--épochs", "5"],
+            vec!["--epochs", "٥"],
+            vec!["--gamma", "-"],
+            vec!["--gamma", "1e999"],
+        ];
+        for case in weird {
+            let r = Args::parse(spec(), &argv(&case));
+            if let Ok(a) = r {
+                // Accessors must degrade to Err, not panic, on garbage.
+                let _ = a.usize("epochs");
+                let _ = a.f64("gamma");
+                let _ = a.str("algo");
+                let _ = a.list::<f64>("gamma");
+                let _ = a.flag("verbose");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_argv_semantics() {
+        // "--" is not a registered option, so it errors (no silent skip).
+        assert!(Args::parse(spec(), &argv(&["--"])).is_err());
+        // An inline empty value is a real (empty) value.
+        let a = Args::parse(spec(), &argv(&["--algo="])).unwrap();
+        assert_eq!(a.str("algo").unwrap(), "");
+        // A flag given a value is rejected, not ignored.
+        assert!(Args::parse(spec(), &argv(&["--verbose=yes"])).is_err());
+        // An option may consume a "--looking" token as its value.
+        let a = Args::parse(spec(), &argv(&["--algo", "--epochs"])).unwrap();
+        assert_eq!(a.str("algo").unwrap(), "--epochs");
+        // Overflowing numerics surface as accessor errors.
+        let a = Args::parse(spec(), &argv(&["--epochs", "99999999999999999999"])).unwrap();
+        assert!(a.usize("epochs").is_err());
+    }
 }

@@ -66,12 +66,29 @@ impl JsonObj {
     }
 }
 
+/// Maximum container nesting [`Json::parse`] accepts.  The parser is
+/// recursive-descent, so unbounded `[[[[…` input would otherwise turn
+/// into a stack overflow (an abort, not an `Err`); past this depth it
+/// returns a [`JsonErrorKind::TooDeep`] error instead.
+pub const MAX_DEPTH: usize = 128;
+
+/// Machine-readable class of a parse failure, for callers that branch
+/// on *why* parsing failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonErrorKind {
+    /// Malformed input text.
+    Syntax,
+    /// Containers nested deeper than [`MAX_DEPTH`].
+    TooDeep,
+}
+
 /// Parse error with byte offset and a short context excerpt.
 #[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub message: String,
     pub context: String,
+    pub kind: JsonErrorKind,
 }
 
 impl fmt::Display for JsonError {
@@ -150,7 +167,7 @@ impl Json {
     // ------------------------------------------------------------- parsing
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -258,16 +275,35 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, message: &str) -> JsonError {
+        self.err_kind(message, JsonErrorKind::Syntax)
+    }
+
+    fn err_kind(&self, message: &str, kind: JsonErrorKind) -> JsonError {
         let end = (self.pos + 20).min(self.bytes.len());
         JsonError {
             offset: self.pos,
             message: message.to_string(),
             context: String::from_utf8_lossy(&self.bytes[self.pos..end]).into_owned(),
+            kind,
         }
+    }
+
+    /// Enter one container level, failing past [`MAX_DEPTH`].
+    fn descend(&mut self) -> Result<(), JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err_kind(
+                &format!("containers nested deeper than {MAX_DEPTH}"),
+                JsonErrorKind::TooDeep,
+            ));
+        }
+        self.depth += 1;
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -411,6 +447,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
+        let items = self.array_items();
+        self.depth -= 1;
+        items
+    }
+
+    fn array_items(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -434,6 +477,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
+        let entries = self.object_entries();
+        self.depth -= 1;
+        entries
+    }
+
+    fn object_entries(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut obj = JsonObj::new();
         self.skip_ws();
@@ -504,6 +554,24 @@ mod tests {
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn nesting_bounded_at_max_depth() {
+        // Exactly MAX_DEPTH containers parse…
+        let ok = format!("{}0{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // …one more is an explicit TooDeep error, not a stack overflow.
+        let deep = format!("{}0{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&deep).unwrap_err();
+        assert_eq!(e.kind, JsonErrorKind::TooDeep);
+        // Mixed object/array nesting counts every container level, and
+        // unterminated deep input fails the same way.
+        let mixed = "[{\"k\":".repeat(MAX_DEPTH);
+        let e = Json::parse(&format!("{mixed}0")).unwrap_err();
+        assert_eq!(e.kind, JsonErrorKind::TooDeep);
+        // Ordinary syntax errors keep the Syntax kind.
+        assert_eq!(Json::parse("[1,]").unwrap_err().kind, JsonErrorKind::Syntax);
     }
 
     #[test]

@@ -75,26 +75,55 @@ fn err(line: usize, message: &str) -> TomlError {
     TomlError { line, message: message.to_string() }
 }
 
+/// Tracks whether a scan position is inside a basic string, honoring
+/// `\"` escapes (a backslash-escaped quote does not close the string).
+/// Shared by every top-level scanner so they can't disagree about where
+/// strings end.
+#[derive(Default)]
+struct StrState {
+    in_str: bool,
+    escaped: bool,
+}
+
+impl StrState {
+    /// Feed one char; returns true when `c` is *inside* a string (or is
+    /// one of its delimiters), so top-level syntax chars should be
+    /// ignored at this position.
+    fn step(&mut self, c: char) -> bool {
+        if self.in_str {
+            if self.escaped {
+                self.escaped = false;
+            } else if c == '\\' {
+                self.escaped = true;
+            } else if c == '"' {
+                self.in_str = false;
+            }
+            true
+        } else if c == '"' {
+            self.in_str = true;
+            true
+        } else {
+            false
+        }
+    }
+}
+
 /// Find the `=` separating key from value (not inside a quoted key).
 fn find_eq(s: &str) -> Option<usize> {
-    let mut in_str = false;
+    let mut st = StrState::default();
     for (i, c) in s.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            '=' if !in_str => return Some(i),
-            _ => {}
+        if !st.step(c) && c == '=' {
+            return Some(i);
         }
     }
     None
 }
 
 fn strip_comment(line: &str) -> &str {
-    let mut in_str = false;
+    let mut st = StrState::default();
     for (i, c) in line.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
-            _ => {}
+        if !st.step(c) && c == '#' {
+            return &line[..i];
         }
     }
     line
@@ -163,15 +192,42 @@ fn parse_value(s: &str, line: usize) -> Result<Json, TomlError> {
     if s.starts_with('[') {
         return parse_array(s, line);
     }
-    // Numbers; allow underscores per TOML.
-    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    // Numbers; TOML underscores are only legal between two digits.
+    let cleaned = clean_number(s)
+        .ok_or_else(|| err(line, &format!("misplaced underscore in number {s:?}")))?;
     if let Ok(i) = cleaned.parse::<i64>() {
         return Ok(Json::Num(i as f64));
     }
     if let Ok(f) = cleaned.parse::<f64>() {
-        return Ok(Json::Num(f));
+        // `f64::from_str` accepts "nan"/"inf"/overflowing literals; none
+        // of these are in the TOML-subset grammar, and a non-finite
+        // `Json::Num` would poison every downstream consumer.
+        if f.is_finite() {
+            return Ok(Json::Num(f));
+        }
+        return Err(err(line, &format!("non-finite number {s:?}")));
     }
     Err(err(line, &format!("cannot parse value {s:?}")))
+}
+
+/// Strip TOML numeric underscores, rejecting misplaced ones: an
+/// underscore must sit between two digits (`1_000`; not `_1`, `1_`,
+/// or `1__0`).
+fn clean_number(s: &str) -> Option<String> {
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len());
+    for (i, c) in s.char_indices() {
+        if c == '_' {
+            let prev_digit = i > 0 && bytes[i - 1].is_ascii_digit();
+            let next_digit = bytes.get(i + 1).is_some_and(|b| b.is_ascii_digit());
+            if !(prev_digit && next_digit) {
+                return None;
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Some(out)
 }
 
 fn parse_array(s: &str, line: usize) -> Result<Json, TomlError> {
@@ -194,23 +250,23 @@ fn parse_array(s: &str, line: usize) -> Result<Json, TomlError> {
 fn split_top_level(s: &str) -> Vec<String> {
     let mut parts = Vec::new();
     let mut depth = 0usize;
-    let mut in_str = false;
+    let mut st = StrState::default();
     let mut cur = String::new();
     for c in s.chars() {
+        if st.step(c) {
+            cur.push(c);
+            continue;
+        }
         match c {
-            '"' => {
-                in_str = !in_str;
-                cur.push(c);
-            }
-            '[' if !in_str => {
+            '[' => {
                 depth += 1;
                 cur.push(c);
             }
-            ']' if !in_str => {
+            ']' => {
                 depth = depth.saturating_sub(1);
                 cur.push(c);
             }
-            ',' if !in_str && depth == 0 => {
+            ',' if depth == 0 => {
                 parts.push(std::mem::take(&mut cur));
             }
             _ => cur.push(c),
@@ -292,6 +348,38 @@ mod tests {
     fn string_escapes() {
         let v = parse(r#"s = "a\nb\"c\"""#).unwrap();
         assert_eq!(v.get("s").as_str(), Some("a\nb\"c\""));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        // Regression (fuzz): `split_top_level` used to toggle its string
+        // state on the escaped quote, mis-splitting the array.
+        let v = parse(r#"xs = ["a\"b", "c"]"#).unwrap();
+        assert_eq!(v.get("xs").at(0).as_str(), Some("a\"b"));
+        assert_eq!(v.get("xs").at(1).as_str(), Some("c"));
+        // Same state machine guards comment stripping and `=` search.
+        let v = parse(r##"s = "a\"# not a comment" # real"##).unwrap();
+        assert_eq!(v.get("s").as_str(), Some("a\"# not a comment"));
+        let v = parse(r#"s = "\"=\"""#).unwrap();
+        assert_eq!(v.get("s").as_str(), Some("\"=\""));
+    }
+
+    #[test]
+    fn misplaced_underscores_rejected() {
+        // Regression (fuzz): blanket underscore filtering accepted these.
+        for doc in ["n = _1", "n = 1_", "n = _1_", "n = 1__0", "n = 1_.5", "n = 1._5"] {
+            assert!(parse(doc).is_err(), "{doc:?} should be rejected");
+        }
+        assert_eq!(parse("n = 1_000").unwrap().get("n").as_i64(), Some(1000));
+        assert_eq!(parse("x = 1_0.2_5").unwrap().get("x").as_f64(), Some(10.25));
+    }
+
+    #[test]
+    fn non_finite_numbers_rejected() {
+        // Regression (fuzz): these parsed into non-finite `Json::Num`.
+        for doc in ["x = nan", "x = inf", "x = -inf", "x = infinity", "x = 1e999"] {
+            assert!(parse(doc).is_err(), "{doc:?} should be rejected");
+        }
     }
 
     #[test]

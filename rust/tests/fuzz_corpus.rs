@@ -1,0 +1,55 @@
+//! Tier-1 replay of the checked-in fuzz regression corpus, plus a
+//! bounded smoke pass over every fuzz target.
+//!
+//! The corpus (`rust/tests/fixtures/fuzz_corpus/<target>/`) is the
+//! permanent record of inputs that once broke a parser or an execution
+//! invariant: every entry must stay green on every build.  The smoke
+//! pass runs each target for a small, fixed-seed iteration budget so a
+//! freshly introduced panic path fails here — in `cargo test` — before
+//! CI's deeper `fuzz_driver` matrix ever runs.
+
+use fedasync::fuzzing::{replay_corpus, run_target, targets};
+
+#[test]
+fn corpus_replays_clean() {
+    let mut total = 0;
+    for t in targets::all() {
+        match replay_corpus(t) {
+            Ok(n) => {
+                assert!(n > 0, "target {} has no corpus entries — directory missing?", t.name);
+                total += n;
+            }
+            Err(msg) => panic!("target {}: {msg}", t.name),
+        }
+    }
+    assert!(total >= 20, "corpus suspiciously small: {total} entries");
+}
+
+#[test]
+fn fuzz_smoke_parsers_hold_under_seeded_bombardment() {
+    for t in targets::all() {
+        if t.name == "differential" {
+            continue; // covered by its own (expensive) smoke below
+        }
+        let iters = if t.name == "event_queue" { 300 } else { 200 };
+        let summary = run_target(t, 1, iters, 256);
+        if let Some(f) = &summary.failure {
+            panic!(
+                "target {} failed at iter {} (seed 1): {}\n  shrunk input: {:?}",
+                t.name, f.iter, f.message, f.shrunk
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_smoke_differential_drivers_conform() {
+    let t = targets::find("differential").expect("differential target registered");
+    let summary = run_target(t, 1, 2, 64);
+    if let Some(f) = &summary.failure {
+        panic!(
+            "differential execution diverged at iter {} (seed 1): {}\n  config bytes: {:?}",
+            f.iter, f.message, f.shrunk
+        );
+    }
+}
