@@ -79,7 +79,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             );
         }
         log.write_csv(std::path::Path::new("results/e2e"), &cfg.name)?;
-        wall.push((cfg.series_label(), secs, log.rows.last().unwrap().clone()));
+        wall.push((cfg.series_label(), secs, *log.rows.last().unwrap()));
         results.push(log);
     }
 

@@ -1,0 +1,174 @@
+//! Fleet-scale perf snapshot, machine-readable: writes
+//! `BENCH_scale.json` with, per fleet size (10k / 100k / 1M clients),
+//!
+//! * **behavior_compile_ms** — time to compile the `million_fleet`
+//!   scenario population into its SoA arrays (tier ids, churn ranks,
+//!   burst bitsets),
+//! * **event_epochs_per_sec** — event-driver throughput of a real
+//!   engine run over that fleet with metrics streamed to a sink
+//!   (timer-wheel scheduling + rejection-sampling assign + SoA behavior
+//!   queries on the hot path),
+//! * **rss_mb** — resident set size after the run (`/proc/self/status`
+//!   VmRSS; 0.0 where unavailable), the memory story of the scale
+//!   plane.  Scales run ascending, so each reading is the high-water
+//!   mark up to and including that fleet;
+//!
+//! plus **queue_wheel_ns_per_op_1m** / **queue_heap_ns_per_op_1m** —
+//! steady-state pop+schedule cost of the hierarchical timer wheel vs
+//! the retired binary heap with one million pending events (the
+//! motivating comparison for the wheel).
+//!
+//! CI runs this and uploads the JSON next to the other `BENCH_*.json`
+//! snapshots, so fleet-scale throughput and memory are trackable PR
+//! over PR; README §Scale quotes these fields.
+//!
+//! ```bash
+//! cargo bench --bench bench_scale
+//! ```
+
+use std::time::Instant;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::config::{ExperimentConfig, LocalUpdate, StalenessFn};
+use fedasync::coordinator::core::UpdaterCore;
+use fedasync::coordinator::engine::{Engine, EventDriver};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::data::FederatedData;
+use fedasync::federated::network::{EventQueue, HeapEventQueue};
+use fedasync::scenario::{presets, ScenarioBehavior};
+use fedasync::util::rng::Rng;
+use fedasync::util::stats::BenchTimer;
+
+/// Fleet sizes and their JSON field suffixes.
+const SCALES: [(usize, &str); 3] = [(10_000, "10k"), (100_000, "100k"), (1_000_000, "1m")];
+/// Epochs per engine run — identical at every scale so epochs/sec is
+/// comparable across fleet sizes.
+const EPOCHS: usize = 1_000;
+/// Outstanding tasks kept in flight by the event driver.
+const INFLIGHT: usize = 256;
+/// Pending events for the queue steady-state comparison.
+const QUEUE_PENDING: usize = 1_000_000;
+
+/// Resident set size in MB from `/proc/self/status`; 0.0 where the file
+/// or the field is unavailable (non-Linux).
+fn rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let digits = rest.trim().trim_end_matches("kB").trim();
+            return digits.parse::<f64>().unwrap_or(0.0) / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Scale-sized experiment config: the `scenario_million` knobs with the
+/// horizon truncated to the bench's fixed epoch budget.
+fn scale_cfg(devices: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "bench_scale".into();
+    cfg.epochs = EPOCHS;
+    cfg.eval_every = EPOCHS / 4;
+    cfg.repeats = 1;
+    cfg.seed = 1;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.max = 16;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.staleness.drop_above = None;
+    cfg.federation.devices = devices;
+    cfg
+}
+
+fn main() {
+    let timer = BenchTimer::quick();
+    println!("== bench_scale: fleet-scale snapshot -> BENCH_scale.json ==\n");
+    let mut fields: Vec<(String, f64)> = Vec::new();
+    let sc = presets::named("million_fleet").expect("million_fleet preset");
+
+    // --------------------------------------- engine throughput per scale
+    for (devices, suffix) in SCALES {
+        let cfg = scale_cfg(devices);
+        // Small model, one local iteration: the timed region is the
+        // scale plane (queue + behavior + assign), not the kernel.
+        let problem = QuadraticProblem::new(devices, 8, 0.5, 2.0, 2.0, 0.05, 1, 1);
+        let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+        let mut fleet = dummy_fleet(devices, 2);
+
+        let t0 = Instant::now();
+        let behavior = ScenarioBehavior::new(&sc, devices, cfg.seed);
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("behavior_compile/{suffix}: {compile_ms:.1} ms");
+        fields.push((format!("behavior_compile_ms_{suffix}"), compile_ms));
+
+        let mut core = UpdaterCore::new(
+            &cfg,
+            Trainer::init_params(&problem, 0).expect("init"),
+            cfg.staleness.max as usize + 1,
+            &data.test,
+            None,
+        );
+        core.rec
+            .log
+            .stream_rows_to(Box::new(std::io::sink()))
+            .expect("attach streaming sink");
+        let driver = EventDriver::new(&cfg, &data, &mut fleet, &behavior, cfg.seed, INFLIGHT);
+        let t0 = Instant::now();
+        let log = Engine::new(&problem, &cfg, &behavior)
+            .run(core, driver)
+            .expect("scale run");
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(log.last().expect("final row").epoch, EPOCHS, "run must complete");
+        assert!(log.rows.is_empty(), "streaming run must not buffer rows");
+
+        let eps = EPOCHS as f64 / secs.max(1e-9);
+        let rss = rss_mb();
+        println!("event_epochs_per_sec/{suffix}: {eps:.0} ({secs:.2} s for {EPOCHS} epochs)");
+        println!("rss_mb/{suffix}: {rss:.0}\n");
+        fields.push((format!("event_epochs_per_sec_{suffix}"), eps));
+        fields.push((format!("rss_mb_{suffix}"), rss));
+    }
+
+    // ------------------------------- queue cost with one million pending
+    // Steady state at constant occupancy: pop the earliest event, push a
+    // replacement a uniform horizon ahead — the wheel's slot reuse and
+    // the heap's sift cost are both exercised where they differ most.
+    let mut rng = Rng::seed_from(7);
+    let mut wheel: EventQueue<u32> = EventQueue::new();
+    for i in 0..QUEUE_PENDING {
+        wheel.schedule_at(rng.uniform(0.0, 3600.0), i as u32);
+    }
+    let r = timer.run("queue_wheel/pending=1m", || {
+        let ev = wheel.pop().expect("wheel pending");
+        wheel.schedule_in(rng.uniform(0.0, 3600.0), ev.payload);
+    });
+    println!("{}", r.report(Some(1.0)));
+    fields.push(("queue_wheel_ns_per_op_1m".into(), r.median_ns()));
+
+    let mut rng = Rng::seed_from(7);
+    let mut heap: HeapEventQueue<u32> = HeapEventQueue::new();
+    for i in 0..QUEUE_PENDING {
+        heap.schedule_at(rng.uniform(0.0, 3600.0), i as u32);
+    }
+    let r = timer.run("queue_heap/pending=1m", || {
+        let ev = heap.pop().expect("heap pending");
+        heap.schedule_in(rng.uniform(0.0, 3600.0), ev.payload);
+    });
+    println!("{}", r.report(Some(1.0)));
+    fields.push(("queue_heap_ns_per_op_1m".into(), r.median_ns()));
+
+    // -------------------------------------------------------------- JSON
+    let mut json = String::from("{\n  \"schema\": \"bench_scale.v1\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let sep = if i + 1 == fields.len() { "" } else { "," };
+        json.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_scale.json", &json).expect("write BENCH_scale.json");
+    println!("\nwrote BENCH_scale.json");
+}

@@ -94,20 +94,44 @@ impl<'a> EventDriver<'a> {
         progress: f64,
     ) -> Result<bool, RuntimeError> {
         let now = self.queue.now();
-        self.idle.clear();
-        {
-            let (fleet, busy, behavior, idle) =
-                (&mut *self.fleet, &self.busy, self.behavior, &mut self.idle);
-            for d in 0..fleet.len() {
-                if !busy[d] && behavior.is_present(d, progress) && fleet[d].is_eligible(now) {
-                    idle.push(d);
-                }
+        // Rejection-sample a usable device first: at million-client scale
+        // the exhaustive idle/present/eligible sweep is O(n) *per task*,
+        // while a uniform draw lands on a usable device within a few
+        // tries whenever a non-trivial fraction of the fleet is free.
+        // Both paths pick uniformly over the usable set, so the task
+        // distribution is unchanged; only the draw count differs (the
+        // event driver is conformance-banded, not trace-pinned).
+        let mut picked = None;
+        for _ in 0..16 {
+            let d = self.rng.index(self.fleet.len());
+            if !self.busy[d]
+                && self.behavior.is_present(d, progress)
+                && self.fleet[d].is_eligible(now)
+            {
+                picked = Some(d);
+                break;
             }
         }
-        if self.idle.is_empty() {
-            return Ok(false);
-        }
-        let device = self.idle[self.rng.index(self.idle.len())];
+        let device = if let Some(d) = picked {
+            d
+        } else {
+            // Sparse fleet: fall back to the exact scan, which is also
+            // what decides that *nothing* is available right now.
+            self.idle.clear();
+            {
+                let (fleet, busy, behavior, idle) =
+                    (&mut *self.fleet, &self.busy, self.behavior, &mut self.idle);
+                for d in 0..fleet.len() {
+                    if !busy[d] && behavior.is_present(d, progress) && fleet[d].is_eligible(now) {
+                        idle.push(d);
+                    }
+                }
+            }
+            if self.idle.is_empty() {
+                return Ok(false);
+            }
+            self.idle[self.rng.index(self.idle.len())]
+        };
         self.busy[device] = true;
         let tau = core.store.current_version();
         // Borrow the published model straight out of the history ring —

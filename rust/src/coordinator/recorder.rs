@@ -77,7 +77,10 @@ impl<'a> EvalRecorder<'a> {
     }
 
     /// Close the run: moves the cumulative staleness histogram and the
-    /// final accounting totals into the log and hands it back.
+    /// final accounting totals into the log, flushes a streaming sink if
+    /// one is attached, and hands the log back.  A stream write error is
+    /// kept deferred — retrievable via [`MetricsLog::flush_stream`] on
+    /// the returned log — so the run itself never fails over metrics I/O.
     pub fn finish(self) -> MetricsLog {
         let EvalRecorder { mut log, counters, .. } = self;
         log.totals = AccountingTotals {
@@ -87,6 +90,7 @@ impl<'a> EvalRecorder<'a> {
             dropped: counters.dropped,
         };
         log.staleness_hist = counters.hist;
+        log.sync_stream();
         log
     }
 }

@@ -24,7 +24,7 @@ use std::path::Path;
 use crate::util::json::Json;
 
 /// One evaluation point during a run.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricsRow {
     /// Global epoch `t` (server updates so far).
     pub epoch: usize,
@@ -76,8 +76,51 @@ pub struct AccountingTotals {
     pub dropped: u64,
 }
 
+/// Incremental row emitter: rows are formatted into a reusable line
+/// buffer and written to the sink as they arrive, so a streaming run's
+/// resident memory stays flat no matter how long it is.  Only the first
+/// and last rows are retained (for `last`/`final_metrics`); write errors
+/// are deferred and surfaced by [`MetricsLog::flush_stream`] so the hot
+/// path stays infallible.
+struct RowStream {
+    sink: Box<dyn Write + Send>,
+    /// Reusable format buffer — steady-state emission allocates nothing.
+    line: String,
+    emitted: u64,
+    first: Option<MetricsRow>,
+    last: Option<MetricsRow>,
+    error: Option<std::io::Error>,
+}
+
+impl RowStream {
+    fn emit(&mut self, r: &MetricsRow) {
+        self.line.clear();
+        write_row(&mut self.line, r);
+        if self.error.is_none() {
+            if let Err(e) = self.sink.write_all(self.line.as_bytes()) {
+                self.error = Some(e);
+            }
+        }
+        self.emitted += 1;
+        if self.first.is_none() {
+            self.first = Some(*r);
+        }
+        self.last = Some(*r);
+    }
+}
+
 /// A labelled series of metric rows (one run, or a mean over repeats).
-#[derive(Debug, Clone, Default)]
+///
+/// Two storage modes:
+///
+/// * **Buffered** (default): rows accumulate in [`MetricsLog::rows`] —
+///   what the figure pipeline, `mean_of`, and the golden trace consume.
+/// * **Streaming** (after [`MetricsLog::stream_rows_to`]): rows are
+///   written to a sink as CSV the moment they are pushed and are *not*
+///   retained (`rows` stays empty; `last`/`final_metrics` still work).
+///   This is what keeps million-client, long-horizon runs at O(1)
+///   resident memory — `rust/tests/alloc_regression.rs` pins that the
+///   steady-state emission path performs zero allocations.
 pub struct MetricsLog {
     /// Series label for figures ("FedAsync+Poly", "FedAvg", ...).
     pub label: String,
@@ -88,10 +131,68 @@ pub struct MetricsLog {
     pub staleness_hist: StalenessHist,
     /// Final cumulative accounting (zeroed for logs parsed from CSV).
     pub totals: AccountingTotals,
+    stream: Option<RowStream>,
+}
+
+impl std::fmt::Debug for MetricsLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsLog")
+            .field("label", &self.label)
+            .field("rows", &self.rows)
+            .field("provenance", &self.provenance)
+            .field("staleness_hist", &self.staleness_hist)
+            .field("totals", &self.totals)
+            .field("streaming", &self.stream.is_some())
+            .finish()
+    }
+}
+
+impl Clone for MetricsLog {
+    /// Clones the recorded data; the stream sink (if any) stays with the
+    /// original — a clone is always a buffered log.
+    fn clone(&self) -> Self {
+        MetricsLog {
+            label: self.label.clone(),
+            rows: self.rows.clone(),
+            provenance: self.provenance.clone(),
+            staleness_hist: self.staleness_hist.clone(),
+            totals: self.totals,
+            stream: None,
+        }
+    }
+}
+
+impl Default for MetricsLog {
+    fn default() -> Self {
+        MetricsLog::new(String::new())
+    }
 }
 
 pub const CSV_HEADER: &str = "epoch,gradients,comms,sim_time,train_loss,test_loss,test_acc,\
                               alpha_eff,staleness,clients,applied,buffered";
+
+/// Append one CSV row to `out` — the single formatting point shared by
+/// `to_csv` and the streaming path, so their bytes cannot diverge.
+fn write_row(out: &mut String, r: &MetricsRow) {
+    use std::fmt::Write as _;
+    // Writing to a String is infallible.
+    let _ = writeln!(
+        out,
+        "{},{},{},{:.4},{:.6},{:.6},{:.6},{:.5},{:.3},{},{},{}",
+        r.epoch,
+        r.gradients,
+        r.comms,
+        r.sim_time,
+        r.train_loss,
+        r.test_loss,
+        r.test_acc,
+        r.alpha_eff,
+        r.staleness,
+        r.clients,
+        r.applied,
+        r.buffered
+    );
+}
 
 impl MetricsLog {
     pub fn new(label: impl Into<String>) -> Self {
@@ -101,15 +202,88 @@ impl MetricsLog {
             provenance: None,
             staleness_hist: StalenessHist::default(),
             totals: AccountingTotals::default(),
+            stream: None,
+        }
+    }
+
+    /// Switch to streaming mode: write the CSV header and every
+    /// subsequent row straight to `sink`, retaining nothing in memory.
+    /// Rows already buffered are flushed to the sink first.  Call
+    /// [`MetricsLog::flush_stream`] (the recorder's `finish` does) to
+    /// surface deferred write errors.
+    pub fn stream_rows_to(&mut self, sink: Box<dyn Write + Send>) -> std::io::Result<()> {
+        let mut s = RowStream {
+            sink,
+            line: String::with_capacity(160),
+            emitted: 0,
+            first: None,
+            last: None,
+            error: None,
+        };
+        s.sink.write_all(CSV_HEADER.as_bytes())?;
+        s.sink.write_all(b"\n")?;
+        for r in self.rows.drain(..) {
+            s.emit(&r);
+        }
+        match s.error.take() {
+            Some(e) => Err(e),
+            None => {
+                self.stream = Some(s);
+                Ok(())
+            }
+        }
+    }
+
+    /// Is this log emitting rows to a sink instead of buffering them?
+    pub fn is_streaming(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    /// Rows recorded so far, regardless of storage mode.
+    pub fn rows_recorded(&self) -> u64 {
+        match &self.stream {
+            Some(s) => s.emitted,
+            None => self.rows.len() as u64,
+        }
+    }
+
+    /// Flush the streaming sink and surface any write error deferred by
+    /// the infallible `push` path.  No-op for buffered logs.
+    pub fn flush_stream(&mut self) -> std::io::Result<()> {
+        if let Some(s) = &mut self.stream {
+            if let Some(e) = s.error.take() {
+                return Err(e);
+            }
+            s.sink.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Flush the sink but keep any deferred write error in place for
+    /// [`MetricsLog::flush_stream`] to surface — the recorder's
+    /// end-of-run hook, which must not swallow errors or fail the run.
+    pub(crate) fn sync_stream(&mut self) {
+        if let Some(s) = &mut self.stream {
+            if s.error.is_none() {
+                if let Err(e) = s.sink.flush() {
+                    s.error = Some(e);
+                }
+            }
         }
     }
 
     pub fn push(&mut self, row: MetricsRow) {
-        self.rows.push(row);
+        match &mut self.stream {
+            Some(s) => s.emit(&row),
+            None => self.rows.push(row),
+        }
     }
 
     pub fn last(&self) -> Option<&MetricsRow> {
-        self.rows.last()
+        match &self.stream {
+            Some(s) => s.last.as_ref(),
+            None => self.rows.last(),
+        }
     }
 
     /// Final-accuracy summary (figures 8–10 plot metrics "at the end of
@@ -166,28 +340,23 @@ impl MetricsLog {
             totals.buffered += r.totals.buffered;
             totals.dropped += r.totals.dropped;
         }
-        MetricsLog { label, rows, provenance: runs[0].provenance.clone(), staleness_hist, totals }
+        MetricsLog {
+            label,
+            rows,
+            provenance: runs[0].provenance.clone(),
+            staleness_hist,
+            totals,
+            stream: None,
+        }
     }
 
+    /// CSV for the buffered rows (a streaming log has already written its
+    /// rows to the sink, so this is header-only).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(CSV_HEADER);
         out.push('\n');
         for r in &self.rows {
-            out.push_str(&format!(
-                "{},{},{},{:.4},{:.6},{:.6},{:.6},{:.5},{:.3},{},{},{}\n",
-                r.epoch,
-                r.gradients,
-                r.comms,
-                r.sim_time,
-                r.train_loss,
-                r.test_loss,
-                r.test_acc,
-                r.alpha_eff,
-                r.staleness,
-                r.clients,
-                r.applied,
-                r.buffered
-            ));
+            write_row(&mut out, r);
         }
         out
     }
@@ -250,6 +419,7 @@ impl MetricsLog {
             provenance: None,
             staleness_hist: StalenessHist::default(),
             totals: AccountingTotals::default(),
+            stream: None,
         })
     }
 }
@@ -263,19 +433,25 @@ pub const STALENESS_OVERFLOW: u64 = 64;
 /// bucket clips the tail).  This is the per-scenario signal the cross-mode
 /// conformance suite compares: two execution modes running the same
 /// scenario must produce overlapping staleness supports.
-#[derive(Debug, Clone, Default, PartialEq)]
+///
+/// Storage is a fixed inline array (the bucket range is bounded by
+/// construction), so `record` never allocates — a requirement of the
+/// streaming-metrics contract pinned by `rust/tests/alloc_regression.rs`.
+#[derive(Debug, Clone, PartialEq)]
 pub struct StalenessHist {
-    counts: Vec<u64>,
+    counts: [u64; STALENESS_OVERFLOW as usize + 1],
     total: u64,
+}
+
+impl Default for StalenessHist {
+    fn default() -> Self {
+        StalenessHist { counts: [0u64; STALENESS_OVERFLOW as usize + 1], total: 0 }
+    }
 }
 
 impl StalenessHist {
     pub fn record(&mut self, staleness: u64) {
-        let b = staleness.min(STALENESS_OVERFLOW) as usize;
-        if self.counts.len() <= b {
-            self.counts.resize(b + 1, 0);
-        }
-        self.counts[b] += 1;
+        self.counts[staleness.min(STALENESS_OVERFLOW) as usize] += 1;
         self.total += 1;
     }
 
@@ -288,10 +464,7 @@ impl StalenessHist {
     }
 
     pub fn count(&self, staleness: u64) -> u64 {
-        self.counts
-            .get(staleness.min(STALENESS_OVERFLOW) as usize)
-            .copied()
-            .unwrap_or(0)
+        self.counts[staleness.min(STALENESS_OVERFLOW) as usize]
     }
 
     /// Staleness values with non-zero mass, ascending.
@@ -319,9 +492,6 @@ impl StalenessHist {
     }
 
     pub fn merge(&mut self, other: &StalenessHist) {
-        if self.counts.len() < other.counts.len() {
-            self.counts.resize(other.counts.len(), 0);
-        }
         for (dst, &src) in self.counts.iter_mut().zip(&other.counts) {
             *dst += src;
         }
@@ -522,6 +692,69 @@ mod tests {
         assert_eq!(alpha2, 0.0);
         assert_eq!(stale2, 0.0);
         assert!(loss2.is_nan());
+    }
+
+    /// Test sink that lets the test read back what the stream wrote.
+    #[derive(Clone, Default)]
+    struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(b);
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn streaming_log_emits_identical_csv_bytes() {
+        let mut buffered = MetricsLog::new("s");
+        buffered.push(row(0, 0.1));
+        buffered.push(row(4, 0.3));
+        buffered.push(row(8, 0.5));
+
+        let sink = SharedBuf::default();
+        let mut streamed = MetricsLog::new("s");
+        streamed.stream_rows_to(Box::new(sink.clone())).unwrap();
+        assert!(streamed.is_streaming());
+        streamed.push(row(0, 0.1));
+        streamed.push(row(4, 0.3));
+        streamed.push(row(8, 0.5));
+        streamed.flush_stream().unwrap();
+
+        let bytes = sink.0.lock().unwrap().clone();
+        assert_eq!(String::from_utf8(bytes).unwrap(), buffered.to_csv());
+        // Nothing retained but the endpoints.
+        assert!(streamed.rows.is_empty());
+        assert_eq!(streamed.rows_recorded(), 3);
+        assert_eq!(streamed.last(), buffered.last());
+        assert_eq!(streamed.final_metrics(), buffered.final_metrics());
+    }
+
+    #[test]
+    fn stream_rows_to_flushes_already_buffered_rows() {
+        let mut log = MetricsLog::new("s");
+        log.push(row(0, 0.1));
+        let sink = SharedBuf::default();
+        log.stream_rows_to(Box::new(sink.clone())).unwrap();
+        log.push(row(4, 0.2));
+        let bytes = sink.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        assert_eq!(text.lines().count(), 3, "header + both rows:\n{text}");
+        assert!(log.rows.is_empty());
+        assert_eq!(log.rows_recorded(), 2);
+    }
+
+    #[test]
+    fn cloned_streaming_log_is_buffered() {
+        let mut log = MetricsLog::new("s");
+        log.stream_rows_to(Box::new(std::io::sink())).unwrap();
+        log.push(row(0, 0.1));
+        let copy = log.clone();
+        assert!(!copy.is_streaming());
+        assert_eq!(copy.rows_recorded(), 0, "clone starts from the buffered (empty) rows");
     }
 
     #[test]

@@ -7,6 +7,26 @@
 //! *emerge* from device/network heterogeneity in `virtual-time` mode —
 //! complementing the paper's direct uniform-staleness sampling protocol,
 //! which is also implemented (`coordinator::virtual_mode`).
+//!
+//! Two queue implementations share the same (time, seq) total order:
+//!
+//! * [`EventQueue`] — a hierarchical timer wheel (calendar queue) with
+//!   O(1) amortized push/pop at million-event horizons.  This is what
+//!   every driver uses.
+//! * [`HeapEventQueue`] — the original `BinaryHeap` implementation, kept
+//!   in-tree as the *reference model*: the wheel is property-tested and
+//!   fuzz-differentialed against it (`rust/tests/proptests.rs`,
+//!   `fuzzing::targets::event_queue_target`), so pop order can never
+//!   drift.
+//!
+//! Why the wheel preserves the order exactly: the bucket index
+//! `b(at) = floor(at / granularity)` is monotone in `at`, so
+//! `b(x) < b(y)` implies `x < y` regardless of how floating-point
+//! division rounds at bucket boundaries.  Cross-bucket order is therefore
+//! decided by bucket index alone, and *within* a bucket events sit in a
+//! small [`BinaryHeap`] ordered by the identical `(time, seq)` [`Event`]
+//! comparison the old queue used.  Equal timestamps always share a bucket,
+//! so FIFO-by-`seq` ties behave bit-for-bit like the heap.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -65,11 +85,45 @@ impl<T: PartialEq> PartialOrd for Event<T> {
     }
 }
 
-/// Discrete-event queue with a monotone virtual clock.
+/// Fine (level-0) wheel slots per coarse bucket.
+const L0_SLOTS: u64 = 256;
+/// Coarse (level-1) wheel slots.
+const L1_SLOTS: u64 = 64;
+/// Default bucket width in virtual seconds: 10 ms resolves the latency
+/// model's 50 ms median into distinct buckets while keeping the coarse
+/// window (`L0_SLOTS · L1_SLOTS · granularity` ≈ 164 s) wide enough that
+/// steady-state task completions never touch the overflow heap.
+const DEFAULT_GRANULARITY: f64 = 0.01;
+
+/// Discrete-event queue with a monotone virtual clock: a two-level timer
+/// wheel plus an overflow heap for the far future.
+///
+/// Layout (see module docs for the ordering argument):
+///
+/// * `current` — every event whose bucket is at or before the cursor;
+///   a small heap ordered by `(time, seq)`.
+/// * `l0` — fine slots covering the rest of the cursor's coarse bucket
+///   (`granularity` each; slot = bucket mod [`L0_SLOTS`]).
+/// * `l1` — coarse slots covering the next [`L1_SLOTS`] coarse buckets
+///   (`L0_SLOTS · granularity` each; one coarse bucket per slot).
+/// * `overflow` — min-heap for everything beyond the coarse window;
+///   re-homed one window at a time as the cursor reaches it.
+///
+/// Push and pop are O(1) amortized: a push indexes a slot (or heap-pushes
+/// into a small bucket), and each pop's slot scan is paid for by the
+/// events that made the slots non-empty.
 pub struct EventQueue<T: PartialEq> {
-    heap: BinaryHeap<Event<T>>,
+    granularity: f64,
     now: f64,
     seq: u64,
+    len: usize,
+    /// Fine bucket index of the wheel position; all events in `l0`, `l1`,
+    /// and `overflow` have bucket strictly greater than this.
+    cursor: u64,
+    current: BinaryHeap<Event<T>>,
+    l0: Vec<Vec<Event<T>>>,
+    l1: Vec<Vec<Event<T>>>,
+    overflow: BinaryHeap<Event<T>>,
 }
 
 impl<T: PartialEq> Default for EventQueue<T> {
@@ -80,7 +134,186 @@ impl<T: PartialEq> Default for EventQueue<T> {
 
 impl<T: PartialEq> EventQueue<T> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+        Self::with_granularity(DEFAULT_GRANULARITY)
+    }
+
+    /// Queue with an explicit bucket width in virtual seconds.  Pop order
+    /// is identical for every granularity (the property tests sweep
+    /// several); the knob only moves work between the wheel arrays and
+    /// the per-bucket heaps.  Panics unless `granularity` is finite and
+    /// positive.
+    pub fn with_granularity(granularity: f64) -> Self {
+        assert!(
+            granularity.is_finite() && granularity > 0.0,
+            "non-positive event-queue granularity {granularity}"
+        );
+        EventQueue {
+            granularity,
+            now: 0.0,
+            seq: 0,
+            len: 0,
+            cursor: 0,
+            current: BinaryHeap::new(),
+            l0: (0..L0_SLOTS).map(|_| Vec::new()).collect(),
+            l1: (0..L1_SLOTS).map(|_| Vec::new()).collect(),
+            overflow: BinaryHeap::new(),
+        }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Fine bucket index for a timestamp.  The `as u64` cast floors and
+    /// saturates (huge `at / granularity` collapses into the top bucket —
+    /// monotonicity, and thus ordering, survives; only slot dispersion
+    /// degrades).  `at` is never negative here: the clock starts at 0 and
+    /// schedule times are clamped to `now`.
+    fn bucket(&self, at: f64) -> u64 {
+        (at / self.granularity) as u64
+    }
+
+    /// Route an event to the structure that owns its bucket.  Invariant
+    /// maintained: everything in `l0`/`l1`/`overflow` has bucket strictly
+    /// greater than `cursor`.
+    fn place(&mut self, ev: Event<T>) {
+        let b = self.bucket(ev.at);
+        if b <= self.cursor {
+            self.current.push(ev);
+            return;
+        }
+        let c = b / L0_SLOTS;
+        let ccur = self.cursor / L0_SLOTS;
+        if c == ccur {
+            self.l0[(b % L0_SLOTS) as usize].push(ev);
+        } else if c - ccur <= L1_SLOTS {
+            // `c > ccur` because `b > cursor` and `c >= ccur`.  The window
+            // (ccur, ccur + L1_SLOTS] maps each coarse value to a unique
+            // slot, so a slot never mixes coarse buckets.
+            self.l1[(c % L1_SLOTS) as usize].push(ev);
+        } else {
+            self.overflow.push(ev);
+        }
+    }
+
+    /// Move the cursor to the next non-empty bucket and drain it toward
+    /// `current`.  Only called when `current` is empty and `len > 0`.
+    fn advance(&mut self) {
+        // Level 0: remaining fine slots of the cursor's coarse bucket.
+        let ccur = self.cursor / L0_SLOTS;
+        let base = ccur * L0_SLOTS;
+        for s in ((self.cursor - base) as usize + 1)..L0_SLOTS as usize {
+            if !self.l0[s].is_empty() {
+                self.cursor = base + s as u64;
+                let mut slot = std::mem::take(&mut self.l0[s]);
+                self.current.extend(slot.drain(..));
+                self.l0[s] = slot; // keep the slot's capacity
+                return;
+            }
+        }
+        // Level 1: the next L1_SLOTS coarse buckets.  A non-empty slot
+        // holds exactly one coarse value; jump the cursor to its first
+        // fine bucket and scatter (first fine bucket → current, rest →
+        // l0), so the next advance pass finds them at level 0.
+        for dc in 1..=L1_SLOTS {
+            let Some(c) = ccur.checked_add(dc) else { break };
+            let s = (c % L1_SLOTS) as usize;
+            if !self.l1[s].is_empty() {
+                self.cursor = c * L0_SLOTS;
+                let mut slot = std::mem::take(&mut self.l1[s]);
+                for ev in slot.drain(..) {
+                    self.place(ev);
+                }
+                self.l1[s] = slot;
+                return;
+            }
+        }
+        // Overflow: jump to the earliest far-future event's coarse bucket
+        // and re-home its whole coarse window.  The overflow heap pops in
+        // ascending (time, seq), so coarse indices arrive ascending and
+        // the window drain stops at the first event beyond it — re-homing
+        // is O(k log n) in the window population, not O(n).
+        if let Some(first) = self.overflow.peek() {
+            let cmin = self.bucket(first.at) / L0_SLOTS;
+            self.cursor = cmin * L0_SLOTS;
+            while self
+                .overflow
+                .peek()
+                .is_some_and(|ev| self.bucket(ev.at) / L0_SLOTS <= cmin + L1_SLOTS)
+            {
+                if let Some(ev) = self.overflow.pop() {
+                    self.place(ev);
+                }
+            }
+        }
+    }
+
+    /// Schedule `payload` at absolute virtual time `at` (clamped to now).
+    ///
+    /// Panics on non-finite `at`: a NaN or infinite timestamp would poison
+    /// the heap order, so it is a caller bug, not a schedulable event.
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.len += 1;
+        self.place(Event { at, seq, payload });
+    }
+
+    /// Schedule after a relative delay.  Panics on non-finite delay.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        assert!(delay.is_finite(), "non-finite event delay {delay}");
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay.max(0.0), payload);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        loop {
+            if let Some(ev) = self.current.pop() {
+                self.now = ev.at;
+                self.len -= 1;
+                return Some(ev);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            self.advance();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// The original binary-heap event queue, kept as the **reference model**
+/// for [`EventQueue`]: same API, same `(time, seq)` order, O(log n) ops.
+///
+/// Nothing in the simulator uses it; it exists so the property tests and
+/// the `event_queue` fuzz target can differential-test the timer wheel
+/// against an implementation whose ordering is trivially correct.
+pub struct HeapEventQueue<T: PartialEq> {
+    heap: BinaryHeap<Event<T>>,
+    now: f64,
+    seq: u64,
+}
+
+impl<T: PartialEq> Default for HeapEventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: PartialEq> HeapEventQueue<T> {
+    pub fn new() -> Self {
+        HeapEventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
     }
 
     /// Current virtual time (the timestamp of the last popped event).
@@ -89,9 +322,7 @@ impl<T: PartialEq> EventQueue<T> {
     }
 
     /// Schedule `payload` at absolute virtual time `at` (clamped to now).
-    ///
-    /// Panics on non-finite `at`: a NaN or infinite timestamp would poison
-    /// the heap order, so it is a caller bug, not a schedulable event.
+    /// Panics on non-finite `at`.
     pub fn schedule_at(&mut self, at: f64, payload: T) {
         assert!(at.is_finite(), "non-finite event time {at}");
         let at = at.max(self.now);
@@ -186,6 +417,75 @@ mod tests {
     fn nan_delay_rejected() {
         let mut q = EventQueue::new();
         q.schedule_in(f64::NAN, "poison");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive event-queue granularity")]
+    fn zero_granularity_rejected() {
+        let _ = EventQueue::<u32>::with_granularity(0.0);
+    }
+
+    #[test]
+    fn horizon_rollover_crosses_every_wheel_level() {
+        // Default granularity: l0 covers 2.56 s, l1 ~164 s.  These hit
+        // current, l0, l1, and overflow, and must still pop sorted.
+        let mut q = EventQueue::new();
+        let times = [1e6, 0.001, 500.0, 2.0, 170.0, 1e4, 0.5, 163.0, 3.0];
+        for (i, &t) in times.iter().enumerate() {
+            q.schedule_at(t, i);
+        }
+        let mut sorted = times;
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let popped: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.at)).collect();
+        assert_eq!(popped, sorted);
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 1e6);
+    }
+
+    #[test]
+    fn wheel_matches_heap_on_an_interleaved_workload() {
+        // Smoke-scale differential; the exhaustive version lives in
+        // rust/tests/proptests.rs and the event_queue fuzz target.
+        let mut rng = Rng::seed_from(42);
+        let mut wheel = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        for step in 0..5000u32 {
+            if rng.f64() < 0.6 || wheel.is_empty() {
+                // Quantized times manufacture ties and bucket collisions.
+                let at = (rng.f64() * 400.0 * 8.0).floor() / 8.0;
+                wheel.schedule_at(at, step);
+                heap.schedule_at(at, step);
+            } else {
+                let w = wheel.pop().unwrap();
+                let h = heap.pop().unwrap();
+                assert_eq!((w.at, w.seq, w.payload), (h.at, h.seq, h.payload));
+                assert_eq!(wheel.now(), heap.now());
+            }
+            assert_eq!(wheel.len(), heap.len());
+        }
+        while let Some(h) = heap.pop() {
+            let w = wheel.pop().unwrap();
+            assert_eq!((w.at, w.seq, w.payload), (h.at, h.seq, h.payload));
+        }
+        assert!(wheel.is_empty());
+    }
+
+    #[test]
+    fn granularity_does_not_change_pop_order() {
+        let times = [0.05, 12.0, 0.05, 3.3, 900.0, 3.3, 0.0];
+        let mut reference: Option<Vec<(f64, u64)>> = None;
+        for g in [1e-4, 0.01, 1.0, 250.0] {
+            let mut q = EventQueue::with_granularity(g);
+            for (i, &t) in times.iter().enumerate() {
+                q.schedule_at(t, i);
+            }
+            let popped: Vec<(f64, u64)> =
+                std::iter::from_fn(|| q.pop().map(|e| (e.at, e.seq))).collect();
+            match &reference {
+                None => reference = Some(popped),
+                Some(r) => assert_eq!(&popped, r, "granularity {g}"),
+            }
+        }
     }
 
     #[test]

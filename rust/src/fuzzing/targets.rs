@@ -24,7 +24,7 @@
 //! | `aggregator_spec` | no panic; `Ok` implies a validated config            |
 //! | `scenario`        | no panic; `Ok` implies `validate()` passes           |
 //! | `manifest`        | no panic on arbitrary manifest-shaped JSON           |
-//! | `event_queue`     | pops match a reference model on (time, seq) order    |
+//! | `event_queue`     | timer wheel ≡ retired heap ≡ model on (time, seq)    |
 //! | `differential`    | sampled/emergent/threaded drivers agree (see below)  |
 //!
 //! The differential target is the headline: it draws a random valid
@@ -102,7 +102,7 @@ static TARGETS: [TargetSpec; 8] = [
     },
     TargetSpec {
         name: "event_queue",
-        about: "EventQueue vs a reference model on (time, seq) pop order",
+        about: "timer-wheel EventQueue vs HeapEventQueue vs model pop order",
         run: event_queue_target,
     },
     TargetSpec {
@@ -414,12 +414,19 @@ fn manifest_target(src: &mut ByteSource) {
 /// `(time, seq)`).  Any divergence in pop order, timestamps, the clock,
 /// or queue length is a bug in one of them.
 fn event_queue_target(src: &mut ByteSource) {
-    use crate::federated::network::EventQueue;
+    use crate::federated::network::{EventQueue, HeapEventQueue};
 
-    let mut q: EventQueue<u32> = EventQueue::new();
+    // Three-way differential: the timer-wheel queue vs the retired binary
+    // heap (kept in-tree as the reference model) vs a brute-force Vec
+    // scan.  Op kinds deliberately manufacture the wheel's hard cases —
+    // exact (time, seq) ties, same-coarse-bucket collisions, and far
+    // future times that force L1/overflow horizon rollover.
+    let mut wheel: EventQueue<u32> = EventQueue::new();
+    let mut heap: HeapEventQueue<u32> = HeapEventQueue::new();
     let mut model: Vec<(f64, u64, u32)> = Vec::new();
     let mut model_now = 0.0f64;
     let mut model_seq = 0u64;
+    let mut last_at = 0.0f64;
 
     let model_pop = |model: &mut Vec<(f64, u64, u32)>, now: &mut f64| {
         let best = model
@@ -436,35 +443,62 @@ fn event_queue_target(src: &mut ByteSource) {
 
     let ops = 1 + src.len_biased(48);
     for op in 0..ops {
-        match src.index(3) {
-            0 => {
-                let at = src.f64_in(-5.0, 50.0);
-                let id = op as u32;
-                q.schedule_at(at, id);
-                model.push((at.max(model_now), model_seq, id));
+        let id = op as u32;
+        let kind = src.index(7);
+        let at = match kind {
+            // Plain absolute time (past times clamp to `now`).
+            0 => Some(src.f64_in(-5.0, 50.0)),
+            // Exact tie with the previous schedule: (time, seq) order.
+            1 => Some(last_at),
+            // Quantized to the default 0.01 granularity: many events
+            // share one fine slot without being exact ties.
+            2 => Some(src.index(2048) as f64 * 0.01),
+            // Coarse 0.25s grid: ties plus dense neighboring buckets.
+            3 => Some((src.f64_in(0.0, 200.0) * 4.0).floor() / 4.0),
+            // Far future: lands in L1 or overflow, forcing rollover.
+            4 => Some(src.f64_in(1e4, 1e6)),
+            _ => None,
+        };
+        match (kind, at) {
+            (_, Some(at)) => {
+                wheel.schedule_at(at, id);
+                heap.schedule_at(at, id);
+                let eff = at.max(model_now);
+                model.push((eff, model_seq, id));
                 model_seq += 1;
+                last_at = eff;
             }
-            1 => {
+            (5, None) => {
                 let delay = src.f64_in(0.0, 10.0);
-                let id = op as u32;
-                q.schedule_in(delay, id);
-                model.push((model_now + delay, model_seq, id));
+                wheel.schedule_in(delay, id);
+                heap.schedule_in(delay, id);
+                let eff = model_now + delay;
+                model.push((eff, model_seq, id));
                 model_seq += 1;
+                last_at = eff;
             }
             _ => {
-                let got = q.pop().map(|e| (e.at, e.payload));
-                let want = model_pop(&mut model, &mut model_now);
-                assert_eq!(got, want, "pop diverged at op {op}");
+                let got = wheel.pop().map(|e| (e.at.to_bits(), e.payload));
+                let ref_heap = heap.pop().map(|e| (e.at.to_bits(), e.payload));
+                let want = model_pop(&mut model, &mut model_now)
+                    .map(|(at, id)| (at.to_bits(), id));
+                assert_eq!(got, ref_heap, "wheel/heap pop diverged at op {op}");
+                assert_eq!(got, want, "wheel/model pop diverged at op {op}");
             }
         }
-        assert_eq!(q.len(), model.len(), "length diverged at op {op}");
-        assert_eq!(q.now(), model_now, "clock diverged at op {op}");
+        assert_eq!(wheel.len(), model.len(), "wheel length diverged at op {op}");
+        assert_eq!(heap.len(), model.len(), "heap length diverged at op {op}");
+        assert_eq!(wheel.now().to_bits(), model_now.to_bits(), "wheel clock diverged at op {op}");
+        assert_eq!(heap.now().to_bits(), model_now.to_bits(), "heap clock diverged at op {op}");
     }
-    // Drain both completely: total order must agree to the last event.
+    // Drain all three completely: total order must agree to the last event.
     loop {
-        let got = q.pop().map(|e| (e.at, e.payload));
-        let want = model_pop(&mut model, &mut model_now);
-        assert_eq!(got, want, "drain diverged");
+        let got = wheel.pop().map(|e| (e.at.to_bits(), e.payload));
+        let ref_heap = heap.pop().map(|e| (e.at.to_bits(), e.payload));
+        let want =
+            model_pop(&mut model, &mut model_now).map(|(at, id)| (at.to_bits(), id));
+        assert_eq!(got, ref_heap, "wheel/heap drain diverged");
+        assert_eq!(got, want, "wheel/model drain diverged");
         if got.is_none() {
             break;
         }

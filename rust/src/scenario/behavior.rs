@@ -146,28 +146,75 @@ impl ClientBehavior for UniformBehavior {
     }
 }
 
+/// Dense bitset: burst membership for a million-client fleet is one bit
+/// per device (125 KB at n = 1M) instead of a `Vec<bool>` byte per
+/// device.
+#[derive(Debug, Clone)]
+struct Bitset {
+    words: Vec<u64>,
+}
+
+impl Bitset {
+    fn new(n: usize) -> Bitset {
+        Bitset { words: vec![0u64; n.div_ceil(64)] }
+    }
+
+    fn set(&mut self, i: usize) {
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    fn get(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+}
+
 /// A [`ScenarioConfig`] compiled for a concrete fleet: per-device tier
 /// assignment, churn ranks, and burst membership are all drawn once from
 /// the seed, so every mode sees the identical population.
+///
+/// State is structure-of-arrays, sized for fleets of 10⁶+ devices: tier
+/// assignment is one `u16` per device, churn rank one `u32`, burst
+/// membership one *bit* — ~7 bytes/device total, versus the ~50 the
+/// original per-client layout needed.  Every RNG draw (compile-time
+/// shuffles and `choose_k`, query-time latency/staleness/delivery draws)
+/// and every floating-point operation happens in the identical order as
+/// [`super::reference::ReferenceScenarioBehavior`], the retired
+/// per-client implementation kept as the property-test oracle
+/// (`prop_soa_behavior_matches_reference`), so decisions are pinned
+/// draw-for-draw and bit-for-bit.
 pub struct ScenarioBehavior {
     name: String,
     n: usize,
-    tiers: Vec<SpeedTier>,
+    /// Per-tier `1.0 / speed` (the value `slowdown` starts from; dividing
+    /// once at compile time is bit-identical to dividing per query).
+    tier_inv_speed: Vec<f64>,
+    /// Per-tier log-normal link-latency μ.
+    tier_latency_mu: Vec<f64>,
+    /// Per-tier log-normal link-latency σ.
+    tier_latency_sigma: Vec<f64>,
     /// Tier index per device.
-    tier_of: Vec<usize>,
+    tier_of: Vec<u16>,
     /// Devices with `churn_rank < present_count(p)` are present at `p`.
-    churn_rank: Vec<usize>,
+    churn_rank: Vec<u32>,
     churn: Vec<super::ChurnPhase>,
-    /// `(burst, member?)` per configured burst.
-    bursts: Vec<(super::StragglerBurst, Vec<bool>)>,
+    /// Burst windows, in config order (the order `slowdown` multiplies).
+    bursts: Vec<super::StragglerBurst>,
+    /// One membership bitset per burst, parallel to `bursts`.
+    burst_members: Vec<Bitset>,
     faults: super::FaultModel,
 }
 
 impl ScenarioBehavior {
     /// Compile `sc` for a fleet of `devices`, drawing every per-device
     /// assignment deterministically from `seed`.
+    ///
+    /// The draw protocol (tier-deal shuffle, churn-rank shuffle, one
+    /// `choose_k` per burst) is pinned against the reference model —
+    /// shuffle and `choose_k` consume RNG draws as a function of length
+    /// only, so the compact element types cannot shift the stream.
     pub fn new(sc: &ScenarioConfig, devices: usize, seed: u64) -> ScenarioBehavior {
         assert!(devices > 0, "scenario behavior needs a non-empty fleet");
+        assert!(devices <= u32::MAX as usize, "fleet too large for u32 churn ranks");
         let n = devices;
         let mut rng = Rng::seed_from(seed ^ 0x5CE4_4210);
 
@@ -182,9 +229,10 @@ impl ScenarioBehavior {
                 .map(|t| SpeedTier { fraction: t.fraction / total, ..t.clone() })
                 .collect()
         };
+        assert!(tiers.len() <= u16::MAX as usize, "too many tiers for u16 indices");
         let mut order: Vec<usize> = (0..n).collect();
         rng.shuffle(&mut order);
-        let mut tier_of = vec![0usize; n];
+        let mut tier_of = vec![0u16; n];
         let mut acc = 0.0f64;
         let mut start = 0usize;
         for (ti, t) in tiers.iter().enumerate() {
@@ -195,7 +243,7 @@ impl ScenarioBehavior {
                 ((acc * n as f64).round() as usize).min(n)
             };
             for &d in &order[start..end.max(start)] {
-                tier_of[d] = ti;
+                tier_of[d] = ti as u16;
             }
             start = end.max(start);
         }
@@ -203,33 +251,35 @@ impl ScenarioBehavior {
         // Churn ranks: an independent shuffle decides who leaves first.
         let mut churn_order: Vec<usize> = (0..n).collect();
         rng.shuffle(&mut churn_order);
-        let mut churn_rank = vec![0usize; n];
+        let mut churn_rank = vec![0u32; n];
         for (rank, &d) in churn_order.iter().enumerate() {
-            churn_rank[d] = rank;
+            churn_rank[d] = rank as u32;
         }
 
         // Burst membership: an independent draw per burst.
-        let bursts = sc
-            .bursts
-            .iter()
-            .map(|b| {
-                let k = ((b.fraction * n as f64).ceil() as usize).clamp(1, n);
-                let mut member = vec![false; n];
-                for d in rng.choose_k(n, k) {
-                    member[d] = true;
-                }
-                (*b, member)
-            })
-            .collect();
+        let mut bursts = Vec::with_capacity(sc.bursts.len());
+        let mut burst_members = Vec::with_capacity(sc.bursts.len());
+        for b in &sc.bursts {
+            let k = ((b.fraction * n as f64).ceil() as usize).clamp(1, n);
+            let mut member = Bitset::new(n);
+            for d in rng.choose_k(n, k) {
+                member.set(d);
+            }
+            bursts.push(*b);
+            burst_members.push(member);
+        }
 
         ScenarioBehavior {
             name: sc.name.clone(),
             n,
-            tiers,
+            tier_inv_speed: tiers.iter().map(|t| 1.0 / t.speed).collect(),
+            tier_latency_mu: tiers.iter().map(|t| t.latency_mu).collect(),
+            tier_latency_sigma: tiers.iter().map(|t| t.latency_sigma).collect(),
             tier_of,
             churn_rank,
             churn: sc.churn.clone(),
             bursts,
+            burst_members,
             faults: sc.faults,
         }
     }
@@ -248,8 +298,8 @@ impl ScenarioBehavior {
         level
     }
 
-    fn tier(&self, device: usize) -> &SpeedTier {
-        &self.tiers[self.tier_of[device.min(self.n - 1)]]
+    fn tier_index(&self, device: usize) -> usize {
+        self.tier_of[device.min(self.n - 1)] as usize
     }
 }
 
@@ -259,7 +309,7 @@ impl ClientBehavior for ScenarioBehavior {
     }
 
     fn is_present(&self, device: usize, progress: f64) -> bool {
-        self.churn_rank[device.min(self.n - 1)] < self.present_count(progress)
+        (self.churn_rank[device.min(self.n - 1)] as usize) < self.present_count(progress)
     }
 
     fn present_count(&self, progress: f64) -> usize {
@@ -267,9 +317,9 @@ impl ClientBehavior for ScenarioBehavior {
     }
 
     fn slowdown(&self, device: usize, progress: f64) -> f64 {
-        let mut s = 1.0 / self.tier(device).speed;
-        for (b, member) in &self.bursts {
-            if member[device.min(self.n - 1)] && progress >= b.from && progress < b.until {
+        let mut s = self.tier_inv_speed[self.tier_index(device)];
+        for (b, member) in self.bursts.iter().zip(&self.burst_members) {
+            if member.get(device.min(self.n - 1)) && progress >= b.from && progress < b.until {
                 s *= b.slowdown;
             }
         }
@@ -277,8 +327,8 @@ impl ClientBehavior for ScenarioBehavior {
     }
 
     fn link_latency(&self, device: usize, rng: &mut Rng) -> f64 {
-        let t = self.tier(device);
-        rng.lognormal(t.latency_mu, t.latency_sigma)
+        let ti = self.tier_index(device);
+        rng.lognormal(self.tier_latency_mu[ti], self.tier_latency_sigma[ti])
     }
 
     fn sample_staleness(&self, device: usize, progress: f64, max: u64, rng: &mut Rng) -> u64 {

@@ -55,6 +55,7 @@
 
 pub mod behavior;
 pub mod presets;
+pub mod reference;
 
 pub use behavior::{
     behavior_for, pick_present, ClientBehavior, Delivery, ScenarioBehavior, UniformBehavior,

@@ -44,6 +44,32 @@ pub fn named(name: &str) -> Option<ScenarioConfig> {
         "lossy_uplink" => {
             sc.faults = FaultModel { drop_prob: 0.15, duplicate_prob: 0.05 };
         }
+        // The scale-ceiling population (`configs/scenario_million.toml`
+        // runs it over a 10⁶-device fleet): heterogeneity on every axis
+        // at once — four speed tiers down to 0.08× with matching link
+        // degradation, a deep diurnal trough, a mid-run straggler burst,
+        // and light transport faults.  Sized so the SoA behavior arrays,
+        // the timer-wheel horizon, and the streaming metrics path all
+        // get exercised by one scenario.
+        "million_fleet" => {
+            sc.tiers = vec![
+                tier(0.35, 1.0),
+                tier(0.35, 0.45),
+                tier(0.2, 0.2),
+                tier(0.1, 0.08),
+            ];
+            sc.churn = vec![
+                ChurnPhase { at: 0.3, present: 0.6 },
+                ChurnPhase { at: 0.75, present: 0.85 },
+            ];
+            sc.bursts = vec![StragglerBurst {
+                from: 0.45,
+                until: 0.6,
+                fraction: 0.1,
+                slowdown: 6.0,
+            }];
+            sc.faults = FaultModel { drop_prob: 0.01, duplicate_prob: 0.01 };
+        }
         _ => return None,
     }
     Some(sc)
@@ -61,7 +87,7 @@ fn tier(fraction: f64, speed: f64) -> SpeedTier {
 
 /// Names [`named`] resolves, for CLI listings and error messages.
 pub fn preset_names() -> &'static [&'static str] {
-    &["tiered_fleet", "diurnal_churn", "straggler_storm", "lossy_uplink"]
+    &["tiered_fleet", "diurnal_churn", "straggler_storm", "lossy_uplink", "million_fleet"]
 }
 
 #[cfg(test)]

@@ -1,0 +1,180 @@
+//! The pre-SoA, struct-of-vecs scenario behavior, kept as the
+//! **reference model** for property tests.
+//!
+//! [`ReferenceScenarioBehavior`] is the original per-client
+//! implementation that [`super::ScenarioBehavior`] replaced when the
+//! fleet state was compacted into SoA arrays: it stores whole
+//! [`SpeedTier`] structs, `Vec<usize>` assignments, and one `Vec<bool>`
+//! per straggler burst.  Nothing in the simulator uses it; it exists so
+//! `rust/tests/proptests.rs` can assert — draw for draw, bit for bit —
+//! that the compact representation makes the *same* latency, churn,
+//! straggler, staleness, and delivery decisions from the same seed.
+//!
+//! The compile-time RNG protocol (one shuffle for tier dealing, one for
+//! churn ranks, one `choose_k` per burst, all from `seed ^ 0x5CE4_4210`)
+//! and the query-time draw counts are the pinned contract; any edit here
+//! must be mirrored in `behavior.rs` and vice versa.
+
+use super::{ClientBehavior, Delivery, ScenarioConfig, SpeedTier};
+use crate::util::rng::Rng;
+
+/// A [`ScenarioConfig`] compiled for a concrete fleet with per-client
+/// heap structures (the original layout).  See the module docs: this is
+/// the property-test oracle for [`super::ScenarioBehavior`].
+pub struct ReferenceScenarioBehavior {
+    name: String,
+    n: usize,
+    tiers: Vec<SpeedTier>,
+    /// Tier index per device.
+    tier_of: Vec<usize>,
+    /// Devices with `churn_rank < present_count(p)` are present at `p`.
+    churn_rank: Vec<usize>,
+    churn: Vec<super::ChurnPhase>,
+    /// `(burst, member?)` per configured burst.
+    bursts: Vec<(super::StragglerBurst, Vec<bool>)>,
+    faults: super::FaultModel,
+}
+
+impl ReferenceScenarioBehavior {
+    /// Compile `sc` for a fleet of `devices`, drawing every per-device
+    /// assignment deterministically from `seed` — the identical protocol
+    /// [`super::ScenarioBehavior::new`] pins itself to.
+    pub fn new(sc: &ScenarioConfig, devices: usize, seed: u64) -> ReferenceScenarioBehavior {
+        assert!(devices > 0, "scenario behavior needs a non-empty fleet");
+        let n = devices;
+        let mut rng = Rng::seed_from(seed ^ 0x5CE4_4210);
+
+        // Normalize tiers (empty = single nominal tier) and deal devices
+        // into them in a seeded random order.
+        let tiers: Vec<SpeedTier> = if sc.tiers.is_empty() {
+            vec![SpeedTier::nominal()]
+        } else {
+            let total: f64 = sc.tiers.iter().map(|t| t.fraction).sum();
+            sc.tiers
+                .iter()
+                .map(|t| SpeedTier { fraction: t.fraction / total, ..t.clone() })
+                .collect()
+        };
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut tier_of = vec![0usize; n];
+        let mut acc = 0.0f64;
+        let mut start = 0usize;
+        for (ti, t) in tiers.iter().enumerate() {
+            acc += t.fraction;
+            let end = if ti + 1 == tiers.len() {
+                n
+            } else {
+                ((acc * n as f64).round() as usize).min(n)
+            };
+            for &d in &order[start..end.max(start)] {
+                tier_of[d] = ti;
+            }
+            start = end.max(start);
+        }
+
+        // Churn ranks: an independent shuffle decides who leaves first.
+        let mut churn_order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut churn_order);
+        let mut churn_rank = vec![0usize; n];
+        for (rank, &d) in churn_order.iter().enumerate() {
+            churn_rank[d] = rank;
+        }
+
+        // Burst membership: an independent draw per burst.
+        let bursts = sc
+            .bursts
+            .iter()
+            .map(|b| {
+                let k = ((b.fraction * n as f64).ceil() as usize).clamp(1, n);
+                let mut member = vec![false; n];
+                for d in rng.choose_k(n, k) {
+                    member[d] = true;
+                }
+                (*b, member)
+            })
+            .collect();
+
+        ReferenceScenarioBehavior {
+            name: sc.name.clone(),
+            n,
+            tiers,
+            tier_of,
+            churn_rank,
+            churn: sc.churn.clone(),
+            bursts,
+            faults: sc.faults,
+        }
+    }
+
+    /// Present fraction of the fleet at progress `p` (last phase at or
+    /// before `p` wins; 1.0 before the first phase).
+    fn present_level(&self, progress: f64) -> f64 {
+        let mut level = 1.0;
+        for c in &self.churn {
+            if c.at <= progress {
+                level = c.present;
+            } else {
+                break;
+            }
+        }
+        level
+    }
+
+    fn tier(&self, device: usize) -> &SpeedTier {
+        &self.tiers[self.tier_of[device.min(self.n - 1)]]
+    }
+}
+
+impl ClientBehavior for ReferenceScenarioBehavior {
+    fn label(&self) -> String {
+        self.name.clone()
+    }
+
+    fn is_present(&self, device: usize, progress: f64) -> bool {
+        self.churn_rank[device.min(self.n - 1)] < self.present_count(progress)
+    }
+
+    fn present_count(&self, progress: f64) -> usize {
+        ((self.present_level(progress) * self.n as f64).ceil() as usize).clamp(1, self.n)
+    }
+
+    fn slowdown(&self, device: usize, progress: f64) -> f64 {
+        let mut s = 1.0 / self.tier(device).speed;
+        for (b, member) in &self.bursts {
+            if member[device.min(self.n - 1)] && progress >= b.from && progress < b.until {
+                s *= b.slowdown;
+            }
+        }
+        s
+    }
+
+    fn link_latency(&self, device: usize, rng: &mut Rng) -> f64 {
+        let t = self.tier(device);
+        rng.lognormal(t.latency_mu, t.latency_sigma)
+    }
+
+    fn sample_staleness(&self, device: usize, progress: f64, max: u64, rng: &mut Rng) -> u64 {
+        // Uniform draw reshaped by the device's slowdown — identical
+        // formula and draw count to the SoA path.
+        let max = max.max(1);
+        let sl = self.slowdown(device, progress).max(1e-6);
+        let u = rng.f64().powf(1.0 / sl);
+        (1 + (u * max as f64).floor() as u64).min(max)
+    }
+
+    fn delivery(&self, _device: usize, _progress: f64, rng: &mut Rng) -> Delivery {
+        let f = &self.faults;
+        if f.drop_prob <= 0.0 && f.duplicate_prob <= 0.0 {
+            return Delivery::Deliver;
+        }
+        let u = rng.f64();
+        if u < f.drop_prob {
+            Delivery::Drop
+        } else if u < f.drop_prob + f.duplicate_prob {
+            Delivery::Duplicate
+        } else {
+            Delivery::Deliver
+        }
+    }
+}

@@ -14,8 +14,19 @@
 //! pinned invariant and the published `allocs_per_task_steady_state`
 //! bench field always measure the same workload.
 //!
-//! This file is its own test binary with a single `#[test]` so no
-//! concurrent test can allocate inside the measurement window.
+//! This file is its own test binary, and the measured runs serialize on
+//! a lock, so no concurrent test can allocate inside a measurement
+//! window.
+//!
+//! Two windows are pinned:
+//! * sequential driver on a uniform fleet — exactly **zero** heap
+//!   allocations per task (the original compute-plane pin);
+//! * event driver on a `million_fleet` scenario slice with a metrics
+//!   row *streamed every epoch* — a small O(1)-per-task ceiling
+//!   (timer-wheel slots size lazily), with the row path required to
+//!   emit through the sink rather than buffer.
+
+use std::sync::Mutex;
 
 #[path = "support/alloc_probe.rs"]
 mod alloc_probe;
@@ -23,8 +34,21 @@ mod alloc_probe;
 #[global_allocator]
 static COUNTER: alloc_probe::CountingAlloc = alloc_probe::CountingAlloc;
 
+/// Serializes the measured engine runs across test threads.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Ceiling on event-driver steady-state allocations, per task cycle.
+///
+/// The path is not zero-alloc by design — timer-wheel slots size
+/// themselves lazily and the fallback idle scan may grow its buffer —
+/// but each source is O(1) amortized per task.  Anything O(rows) or
+/// O(fleet) per task (a buffered metrics row, a per-assign scan
+/// allocation) blows well past this bound.
+const EVENT_ALLOCS_PER_TASK_CEILING: u64 = 4;
+
 #[test]
 fn sequential_driver_steady_state_allocates_zero_per_task() {
+    let _guard = SERIAL.lock().unwrap();
     let report = alloc_probe::run_steady_state();
     assert_eq!(report.final_epoch, 600, "run must complete");
     assert_eq!(
@@ -33,5 +57,27 @@ fn sequential_driver_steady_state_allocates_zero_per_task() {
         "steady state allocated {} times over {} tasks (want 0/task)",
         report.allocs_in_window,
         report.tasks
+    );
+}
+
+#[test]
+fn event_driver_steady_state_allocates_o1_per_task_while_streaming() {
+    let _guard = SERIAL.lock().unwrap();
+    let report = alloc_probe::run_event_steady_state();
+    assert_eq!(report.final_epoch, 520, "run must complete");
+    assert!(!report.rows_buffered, "streaming log buffered rows in memory");
+    assert!(
+        report.rows_emitted >= report.tasks,
+        "only {} rows streamed over {}+ task cycles — eval grid not inside the window",
+        report.rows_emitted,
+        report.tasks
+    );
+    let ceiling = EVENT_ALLOCS_PER_TASK_CEILING * report.tasks;
+    assert!(
+        report.allocs_in_window <= ceiling,
+        "event steady state allocated {} times over {} tasks (ceiling {})",
+        report.allocs_in_window,
+        report.tasks,
+        ceiling
     );
 }

@@ -320,6 +320,107 @@ fn scenario_presets_conform_across_modes() {
     }
 }
 
+/// Dedicated truncated run of the scale-ceiling preset: the
+/// `scenario_million` population (four tiers, deep churn, mid-run
+/// burst, transport faults) over a fleet two orders of magnitude
+/// larger than the generic conformance sweep above — big enough that
+/// the SoA behavior arrays, the timer-wheel far-horizon path, and the
+/// rejection-sampling assign loop all run in anger, yet bounded so the
+/// CI scenario-smoke job clears its time budget.  Same conformance
+/// story: all three executions learn, final losses share a band, and
+/// staleness supports overlap pairwise.
+#[test]
+fn scenario_million_truncated_conforms_across_modes() {
+    const DEVICES: usize = 1024;
+    const EPOCHS: usize = 160;
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/scenario_million.toml");
+    let mut cfg =
+        ExperimentConfig::from_toml_file(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    assert!(cfg.scenario.is_some(), "{path:?} must carry a [scenario] table");
+    conformance_shrink(&mut cfg);
+    cfg.epochs = EPOCHS;
+    cfg.eval_every = EPOCHS / 4;
+    cfg.federation.devices = DEVICES;
+    cfg.max_inflight = 8;
+    cfg.validate().unwrap_or_else(|e| panic!("{path:?} truncated: {e}"));
+
+    let p = QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3);
+    let run = |mode: &str| -> MetricsLog {
+        match mode {
+            "sampled" | "emergent" => {
+                let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+                let mut fleet = dummy_fleet(DEVICES, 5);
+                let source = if mode == "sampled" {
+                    StalenessSource::Sampled { max: cfg.staleness.max }
+                } else {
+                    StalenessSource::Emergent { inflight: cfg.max_inflight }
+                };
+                run_fedasync(&p, &cfg, &data, &mut fleet, CONF_SEED, source)
+                    .unwrap_or_else(|e| panic!("{mode} run: {e}"))
+            }
+            "threaded" => {
+                let init = p.init_params(CONF_SEED as usize).expect("init");
+                let h = p.local_iters();
+                let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+                let svc = std::thread::spawn(move || {
+                    serve_native(
+                        QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3),
+                        DEVICES,
+                        job_rx,
+                    )
+                });
+                let behavior = scenario::behavior_for(&cfg, DEVICES, CONF_SEED);
+                let test = dummy_dataset();
+                let log = run_server_core(&cfg, CONF_SEED, &test, init, h, job_tx, behavior)
+                    .unwrap_or_else(|e| panic!("threaded run: {e}"));
+                svc.join().expect("service join");
+                log
+            }
+            other => panic!("unknown mode {other}"),
+        }
+    };
+
+    let logs: Vec<(&str, MetricsLog)> =
+        ["sampled", "emergent", "threaded"].into_iter().map(|m| (m, run(m))).collect();
+
+    let mut finals = Vec::new();
+    for (mode, log) in &logs {
+        let first = log.rows.first().expect("rows").test_loss;
+        let last = log.rows.last().expect("rows").test_loss;
+        assert!(
+            last.is_finite() && last < first * 0.5,
+            "scenario_million {mode}: no learning ({first} -> {last})"
+        );
+        assert!(
+            log.staleness_hist.total() > 0,
+            "scenario_million {mode}: empty staleness histogram"
+        );
+        assert!(log.rows.iter().all(|r| r.clients >= 1 && r.clients <= DEVICES));
+        finals.push(last);
+    }
+    let lo = finals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = finals.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        hi <= lo.max(1e-3) * 100.0,
+        "scenario_million: cross-mode final losses diverged: {finals:?}"
+    );
+    for i in 0..logs.len() {
+        for j in i + 1..logs.len() {
+            let a: std::collections::BTreeSet<u64> =
+                logs[i].1.staleness_hist.support().into_iter().collect();
+            let b: std::collections::BTreeSet<u64> =
+                logs[j].1.staleness_hist.support().into_iter().collect();
+            assert!(
+                a.intersection(&b).next().is_some(),
+                "scenario_million: {} and {} staleness supports are disjoint: {a:?} vs {b:?}",
+                logs[i].0,
+                logs[j].0
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Aggregator × driver conformance (artifact-free).
 //

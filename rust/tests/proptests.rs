@@ -13,7 +13,7 @@ use fedasync::coordinator::staleness::{AlphaController, AlphaDecision};
 use fedasync::coordinator::updater::{
     mix_inplace, mix_inplace_sharded, mix_into, mix_into_buf, SHARD_MIN_LEN,
 };
-use fedasync::federated::network::EventQueue;
+use fedasync::federated::network::{EventQueue, HeapEventQueue};
 use fedasync::federated::{data, partition};
 use fedasync::prop_ensure;
 use fedasync::util::prop::{check, Gen};
@@ -893,6 +893,240 @@ fn prop_event_queue_matches_reference_model() {
             prop_ensure!(q.len() == model.len(), "length drift after op {i}");
             prop_ensure!(q.now() == now, "clock drift: {} vs {now}", q.now());
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wheel_matches_heap_pop_order() {
+    // Differential: the timer-wheel `EventQueue` vs the retained
+    // binary-heap reference (`HeapEventQueue`) must agree on every pop —
+    // (time, seq, payload) bitwise — across workloads engineered to
+    // stress exactly where a calendar queue could diverge from a heap:
+    // exact timestamp ties (seq tie-break), coarse-bucket collisions
+    // (times quantized onto bucket boundaries), and horizon rollover
+    // through the L1 wheel and the overflow heap, at several
+    // granularities.  The `event_queue` fuzz target runs the same
+    // three-way differential over raw byte streams.
+    check("wheel-vs-heap", 300, |g| {
+        let granularity = [1e-3, 0.01, 0.5, 10.0][g.index(4)];
+        let horizon = [5.0, 100.0, 50_000.0][g.index(3)];
+        let mut wheel: EventQueue<usize> = EventQueue::with_granularity(granularity);
+        let mut heap: HeapEventQueue<usize> = HeapEventQueue::new();
+        let ops = g.size(1, 400);
+        let mut last_at = 0.0f64;
+        for i in 0..ops {
+            match g.index(6) {
+                0 | 1 => {
+                    let at = g.f64_in(0.0, horizon);
+                    last_at = at;
+                    wheel.schedule_at(at, i);
+                    heap.schedule_at(at, i);
+                }
+                2 => {
+                    // Exact tie with an earlier schedule: pops must stay
+                    // FIFO by seq.
+                    wheel.schedule_at(last_at, i);
+                    heap.schedule_at(last_at, i);
+                }
+                3 => {
+                    // Bucket-boundary collision: a time landing exactly on
+                    // a multiple of the wheel granularity.
+                    let at = (g.f64_in(0.0, horizon) / granularity).floor() * granularity;
+                    last_at = at;
+                    wheel.schedule_at(at, i);
+                    heap.schedule_at(at, i);
+                }
+                4 => {
+                    let delay = g.f64_in(0.0, horizon / 10.0);
+                    wheel.schedule_in(delay, i);
+                    heap.schedule_in(delay, i);
+                }
+                _ => match (wheel.pop(), heap.pop()) {
+                    (None, None) => {}
+                    (Some(w), Some(h)) => {
+                        prop_ensure!(
+                            w.at.to_bits() == h.at.to_bits()
+                                && w.seq == h.seq
+                                && w.payload == h.payload,
+                            "pop diverged: wheel ({}, {}, {}) vs heap ({}, {}, {})",
+                            w.at,
+                            w.seq,
+                            w.payload,
+                            h.at,
+                            h.seq,
+                            h.payload
+                        );
+                    }
+                    (w, h) => {
+                        return Err(format!(
+                            "emptiness diverged: wheel {:?} vs heap {:?}",
+                            w.map(|e| e.payload),
+                            h.map(|e| e.payload)
+                        ))
+                    }
+                },
+            }
+            prop_ensure!(wheel.len() == heap.len(), "length drift after op {i}");
+            prop_ensure!(
+                wheel.now().to_bits() == heap.now().to_bits(),
+                "clock drift: {} vs {}",
+                wheel.now(),
+                heap.now()
+            );
+        }
+        // Full drain: the tail (which exercises L1 scans and overflow
+        // re-homing) must match event for event.
+        loop {
+            match (wheel.pop(), heap.pop()) {
+                (None, None) => break,
+                (Some(w), Some(h)) => {
+                    prop_ensure!(
+                        w.at.to_bits() == h.at.to_bits() && w.seq == h.seq && w.payload == h.payload,
+                        "drain diverged at seq {} vs {}",
+                        w.seq,
+                        h.seq
+                    );
+                }
+                (w, h) => {
+                    return Err(format!(
+                        "drain emptiness diverged: wheel {:?} vs heap {:?}",
+                        w.map(|e| e.payload),
+                        h.map(|e| e.payload)
+                    ))
+                }
+            }
+        }
+        prop_ensure!(wheel.is_empty() && heap.is_empty(), "drain left events behind");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_soa_behavior_matches_reference() {
+    // The SoA-compiled ScenarioBehavior vs the retained per-client
+    // reference implementation: same seed, same scenario, same fleet ⇒
+    // draw-for-draw, bit-for-bit identical decisions on every query.
+    // Each behavior consumes its own RNG clone of one shared seed; after
+    // an identical op sequence both cursors must sit at the same stream
+    // position (the final draw comparison), which catches any draw-count
+    // drift — e.g. the zero-fault `delivery` early-return consuming a
+    // draw on one side only.  Half the cases run the shipped presets
+    // (including `million_fleet`), half run randomized scenarios.
+    use fedasync::scenario::reference::ReferenceScenarioBehavior;
+    use fedasync::scenario::{
+        presets, ChurnPhase, ClientBehavior, FaultModel, ScenarioBehavior, ScenarioConfig,
+        SpeedTier, StragglerBurst,
+    };
+    use fedasync::util::rng::Rng;
+
+    check("soa-behavior-vs-reference", 80, |g| {
+        let sc = if g.bool() {
+            let names = presets::preset_names();
+            let name = names[g.index(names.len())];
+            presets::named(name).ok_or_else(|| format!("missing preset {name}"))?
+        } else {
+            let mut sc = ScenarioConfig { name: "soa-prop".into(), ..ScenarioConfig::default() };
+            if g.bool() {
+                sc.tiers = (0..g.size(1, 4))
+                    .map(|_| SpeedTier {
+                        fraction: g.f64_in(0.05, 1.0),
+                        speed: g.f64_in(0.05, 4.0),
+                        latency_mu: g.f64_in(-4.0, 0.0),
+                        latency_sigma: g.f64_in(0.0, 1.5),
+                    })
+                    .collect();
+            }
+            if g.bool() {
+                let mut at = 0.0;
+                sc.churn = (0..g.size(1, 3))
+                    .map(|_| {
+                        at = g.f64_in(at, 1.0);
+                        ChurnPhase { at, present: g.f64_in(0.05, 1.0) }
+                    })
+                    .collect();
+            }
+            if g.bool() {
+                sc.bursts = (0..g.size(1, 3))
+                    .map(|_| {
+                        let from = g.f64_in(0.0, 0.9);
+                        StragglerBurst {
+                            from,
+                            until: g.f64_in(from, 1.0),
+                            fraction: g.f64_in(0.01, 1.0),
+                            slowdown: g.f64_in(1.0, 16.0),
+                        }
+                    })
+                    .collect();
+            }
+            if g.bool() {
+                // Faulty transport half the time; the other half keeps the
+                // zero-fault delivery fast path (which must consume no
+                // draws on either side).
+                sc.faults =
+                    FaultModel { drop_prob: g.f64_in(0.0, 0.4), duplicate_prob: g.f64_in(0.0, 0.4) };
+            }
+            sc
+        };
+        let n = g.size(1, 300);
+        let seed = g.index(1_000_000) as u64;
+        let soa = ScenarioBehavior::new(&sc, n, seed);
+        let rf = ReferenceScenarioBehavior::new(&sc, n, seed);
+        prop_ensure!(soa.label() == rf.label(), "labels diverged");
+
+        let mut rng_soa = Rng::seed_from(seed ^ 0xD1FF);
+        let mut rng_ref = Rng::seed_from(seed ^ 0xD1FF);
+        for op in 0..64 {
+            let d = g.index(n + 2); // past-the-fleet indices exercise the clamp
+            let p = g.f64_in(-0.1, 1.1);
+            match g.index(6) {
+                0 => prop_ensure!(
+                    soa.is_present(d, p) == rf.is_present(d, p),
+                    "is_present({d}, {p}) diverged at op {op}"
+                ),
+                1 => prop_ensure!(
+                    soa.present_count(p) == rf.present_count(p),
+                    "present_count({p}) diverged at op {op}"
+                ),
+                2 => {
+                    let (a, b) = (soa.slowdown(d, p), rf.slowdown(d, p));
+                    prop_ensure!(
+                        a.to_bits() == b.to_bits(),
+                        "slowdown({d}, {p}) diverged at op {op}: {a} vs {b}"
+                    );
+                }
+                3 => {
+                    let (a, b) =
+                        (soa.link_latency(d, &mut rng_soa), rf.link_latency(d, &mut rng_ref));
+                    prop_ensure!(
+                        a.to_bits() == b.to_bits(),
+                        "link_latency({d}) diverged at op {op}: {a} vs {b}"
+                    );
+                }
+                4 => {
+                    let max = 1 + g.index(64) as u64;
+                    let (a, b) = (
+                        soa.sample_staleness(d, p, max, &mut rng_soa),
+                        rf.sample_staleness(d, p, max, &mut rng_ref),
+                    );
+                    prop_ensure!(
+                        a == b,
+                        "sample_staleness({d}, {p}, {max}) diverged at op {op}: {a} vs {b}"
+                    );
+                }
+                _ => {
+                    let (a, b) =
+                        (soa.delivery(d, p, &mut rng_soa), rf.delivery(d, p, &mut rng_ref));
+                    prop_ensure!(a == b, "delivery({d}, {p}) diverged at op {op}: {a:?} vs {b:?}");
+                }
+            }
+        }
+        // Draw-count pin: identical op sequences must leave both RNG
+        // cursors at the same stream position.
+        prop_ensure!(
+            rng_soa.f64().to_bits() == rng_ref.f64().to_bits(),
+            "RNG streams desynchronized: one side consumed a different number of draws"
+        );
         Ok(())
     });
 }

@@ -16,10 +16,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
 use fedasync::config::{ExperimentConfig, LocalUpdate, StalenessFn};
 use fedasync::coordinator::core::UpdaterCore;
-use fedasync::coordinator::engine::{Engine, SequentialDriver};
+use fedasync::coordinator::engine::{Engine, EventDriver, SequentialDriver};
 use fedasync::coordinator::Trainer;
 use fedasync::federated::data::FederatedData;
-use fedasync::scenario::{ClientBehavior, Delivery, UniformBehavior};
+use fedasync::scenario::{presets, ClientBehavior, Delivery, ScenarioBehavior, UniformBehavior};
 use fedasync::util::rng::Rng;
 
 /// System allocator wrapper that counts every allocation entry point
@@ -59,18 +59,21 @@ const WARMUP_TASKS: u64 = 200;
 /// Task cycles measured inside the window.
 const MEASURE_TASKS: u64 = 200;
 
-/// Uniform population that snapshots the allocation counter at the
+/// Wrapper population that snapshots the allocation counter at the
 /// window edges; `delivery` is the engine's once-per-arrival hook, so
 /// bracketing deliveries `N` and `N + M` measures `M` complete task
 /// cycles (train → deliver → offer → off-grid record → recycle).
-struct ProbeBehavior {
-    inner: UniformBehavior,
+/// Generic over the wrapped behavior: the sequential pin runs it over
+/// [`UniformBehavior`], the event-driver pin over the `million_fleet`
+/// [`ScenarioBehavior`].
+struct ProbeBehavior<B: ClientBehavior> {
+    inner: B,
     deliveries: AtomicU64,
     window_start: AtomicU64,
     window_end: AtomicU64,
 }
 
-impl ClientBehavior for ProbeBehavior {
+impl<B: ClientBehavior> ClientBehavior for ProbeBehavior<B> {
     fn label(&self) -> String {
         self.inner.label()
     }
@@ -166,5 +169,91 @@ pub fn run_steady_state() -> SteadyStateReport {
         allocs_in_window: end - start,
         tasks: MEASURE_TASKS,
         final_epoch: log.rows.last().expect("rows").epoch,
+    }
+}
+
+/// What [`run_event_steady_state`] measured.
+// Only the alloc-regression binary calls the event-driver probe;
+// `bench_compute` includes this file too, so the items are allowed to
+// be unused per-binary.
+#[allow(dead_code)]
+pub struct EventSteadyStateReport {
+    /// Heap allocations observed inside the probe window.
+    pub allocs_in_window: u64,
+    /// Task cycles the window spans.
+    pub tasks: u64,
+    /// Rows the streaming log emitted over the whole run.
+    pub rows_emitted: u64,
+    /// Whether any row was buffered in memory (must stay `false`).
+    pub rows_buffered: bool,
+    /// Final epoch the run reached (sanity: the run completed).
+    pub final_epoch: usize,
+}
+
+/// One event-driver engine run over a `million_fleet` scenario slice
+/// with metrics streamed to a sink and a row recorded **every** epoch,
+/// so the probe window brackets the full scale plane: timer-wheel
+/// scheduling, SoA behavior queries, and streaming row emission.
+///
+/// Unlike the sequential pin this is not a zero-alloc path — timer-wheel
+/// slots lazily size themselves and the fallback idle scan may grow its
+/// buffer — but every such source is O(1) amortized per task, and rows
+/// must leave through the sink rather than accumulate: the caller
+/// asserts a small per-task allocation bound and an empty `rows` vec.
+#[allow(dead_code)]
+pub fn run_event_steady_state() -> EventSteadyStateReport {
+    const DEVICES: usize = 2048;
+    const INFLIGHT: usize = 64;
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "alloc_probe_event".into();
+    cfg.epochs = 520; // window closes at delivery 400; ~1% fault slack
+    cfg.eval_every = 1; // a streamed row lands inside every task cycle
+    cfg.repeats = 1;
+    cfg.seed = 7;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.max = 16;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.staleness.drop_above = None;
+    cfg.federation.devices = DEVICES;
+
+    let sc = presets::named("million_fleet").expect("million_fleet preset");
+    let problem = QuadraticProblem::new(DEVICES, 16, 0.5, 2.0, 2.0, 0.05, 5, 1);
+    let data = FederatedData { train: dummy_dataset(), test: dummy_dataset() };
+    let mut fleet = dummy_fleet(DEVICES, 2);
+    let probe = ProbeBehavior {
+        inner: ScenarioBehavior::new(&sc, DEVICES, cfg.seed),
+        deliveries: AtomicU64::new(0),
+        window_start: AtomicU64::new(0),
+        window_end: AtomicU64::new(0),
+    };
+
+    let mut core = UpdaterCore::new(
+        &cfg,
+        Trainer::init_params(&problem, 0).expect("init"),
+        cfg.staleness.max as usize + 1,
+        &data.test,
+        None,
+    );
+    core.rec
+        .log
+        .stream_rows_to(Box::new(std::io::sink()))
+        .expect("attach streaming sink");
+    let driver = EventDriver::new(&cfg, &data, &mut fleet, &probe, cfg.seed, INFLIGHT);
+    let log =
+        Engine::new(&problem, &cfg, &probe).run(core, driver).expect("event steady-state run");
+
+    let start = probe.window_start.load(Ordering::Relaxed);
+    let end = probe.window_end.load(Ordering::Relaxed);
+    assert!(start > 0 && end >= start, "probe window never closed");
+    EventSteadyStateReport {
+        allocs_in_window: end - start,
+        tasks: MEASURE_TASKS,
+        rows_emitted: log.rows_recorded(),
+        rows_buffered: !log.rows.is_empty(),
+        final_epoch: log.last().expect("final row").epoch,
     }
 }
