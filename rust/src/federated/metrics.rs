@@ -211,7 +211,17 @@ impl MetricsLog {
     /// Rows already buffered are flushed to the sink first.  Call
     /// [`MetricsLog::flush_stream`] (the recorder's `finish` does) to
     /// surface deferred write errors.
+    ///
+    /// Errors if the log is already streaming: silently swapping sinks
+    /// would drop the old sink's deferred write error, reset the
+    /// emitted/first/last bookkeeping, and write a second CSV header.
     pub fn stream_rows_to(&mut self, sink: Box<dyn Write + Send>) -> std::io::Result<()> {
+        if self.is_streaming() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::AlreadyExists,
+                "MetricsLog is already streaming to a sink",
+            ));
+        }
         let mut s = RowStream {
             sink,
             line: String::with_capacity(160),
@@ -745,6 +755,18 @@ mod tests {
         assert_eq!(text.lines().count(), 3, "header + both rows:\n{text}");
         assert!(log.rows.is_empty());
         assert_eq!(log.rows_recorded(), 2);
+    }
+
+    #[test]
+    fn stream_rows_to_rejects_an_already_streaming_log() {
+        let mut log = MetricsLog::new("s");
+        log.stream_rows_to(Box::new(std::io::sink())).unwrap();
+        log.push(row(0, 0.1));
+        let err = log.stream_rows_to(Box::new(std::io::sink())).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::AlreadyExists);
+        // The original stream is untouched.
+        assert!(log.is_streaming());
+        assert_eq!(log.rows_recorded(), 1);
     }
 
     #[test]

@@ -200,8 +200,25 @@ impl<T: PartialEq> EventQueue<T> {
     /// Move the cursor to the next non-empty bucket and drain it toward
     /// `current`.  Only called when `current` is empty and `len > 0`.
     fn advance(&mut self) {
-        // Level 0: remaining fine slots of the cursor's coarse bucket.
         let ccur = self.cursor / L0_SLOTS;
+        // Re-home overflow events whose coarse bucket has entered the
+        // current window *before* scanning the wheel levels.  The window
+        // slides forward as the cursor advances, so an event that was
+        // far-future when scheduled can now belong in l0/l1; scanning l1
+        // first would pop a later-timed event scheduled after the cursor
+        // moved, then drag the cursor (and the monotone clock) backward
+        // when the overflow branch finally ran.  Each event crosses
+        // overflow → wheel at most once, so amortized cost stays O(1).
+        while self
+            .overflow
+            .peek()
+            .is_some_and(|ev| self.bucket(ev.at) / L0_SLOTS <= ccur + L1_SLOTS)
+        {
+            if let Some(ev) = self.overflow.pop() {
+                self.place(ev);
+            }
+        }
+        // Level 0: remaining fine slots of the cursor's coarse bucket.
         let base = ccur * L0_SLOTS;
         for s in ((self.cursor - base) as usize + 1)..L0_SLOTS as usize {
             if !self.l0[s].is_empty() {
@@ -440,6 +457,30 @@ mod tests {
         assert_eq!(popped, sorted);
         assert!(q.is_empty());
         assert_eq!(q.now(), 1e6);
+    }
+
+    #[test]
+    fn overflow_events_beat_later_events_scheduled_into_the_new_window() {
+        // Regression: at default granularity the coarse window from the
+        // origin covers ~164 s, so 300 s starts in the overflow heap while
+        // 140 s sits in l1.  Popping 140 slides the window past bucket 300;
+        // a 303 s event scheduled *now* lands in l1 while the earlier
+        // 300 s event is still in overflow.  advance() must re-home the
+        // overflow window before trusting an l1 hit, or it pops 303 first
+        // and then drags the cursor — and the clock — backward.
+        let mut q = EventQueue::new();
+        q.schedule_at(300.0, "a");
+        q.schedule_at(140.0, "b");
+        let b = q.pop().unwrap();
+        assert_eq!((b.at, b.payload), (140.0, "b"));
+        q.schedule_at(303.0, "c");
+        let a = q.pop().unwrap();
+        assert_eq!((a.at, a.payload), (300.0, "a"));
+        assert_eq!(q.now(), 300.0, "clock must not regress");
+        let c = q.pop().unwrap();
+        assert_eq!((c.at, c.payload), (303.0, "c"));
+        assert_eq!(q.now(), 303.0);
+        assert!(q.is_empty());
     }
 
     #[test]
