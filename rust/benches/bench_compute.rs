@@ -6,6 +6,10 @@
 //!   configuration every driver runs),
 //! * **ns/eval** for the exact O(n·dim) objective loop vs the O(dim)
 //!   moment evaluator `global_f_fast`,
+//! * **ns/element and GB/s** for the scalar reference kernels vs the
+//!   lane-chunked fast paths in `util::kernels` (fused local step vs the
+//!   H-tiled trainer, mix, moment evaluation) — the scalar-vs-vectorized
+//!   split `perf.md` tracks PR over PR,
 //! * **allocs/task** in the sequential driver's steady state, measured
 //!   with a counting global allocator around a probe-bracketed window of
 //!   a real engine run — the identical workload
@@ -27,6 +31,8 @@ static COUNTER: alloc_probe::CountingAlloc = alloc_probe::CountingAlloc;
 
 use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
 use fedasync::coordinator::{TaskScratch, Trainer};
+use fedasync::util::kernels;
+use fedasync::util::rng::Rng;
 use fedasync::util::stats::BenchTimer;
 
 const DEVICES: usize = 16;
@@ -76,6 +82,110 @@ fn main() {
         fields.push((format!("eval_fast_ns_dim{dim}"), r.median_ns()));
     }
 
+    // ------------------------- scalar vs lane-chunked kernels (ns/element)
+    //
+    // The equivalence contract is pinned by tests and the fuzz target;
+    // this section prices it.  Bytes/element accounting: the scalar fused
+    // path re-reads x/cen/cur and rewrites x every local iteration
+    // (16 B × H), the tiled fast path makes one memory pass (16 B total),
+    // and mixing reads x,y and writes x (12 B).  Iterates converge to the
+    // row center and plateau at ulp scale, so repeated timed calls stay
+    // out of denormal territory.
+    println!();
+    let mut rng = Rng::seed_from(7);
+    const H: usize = 5;
+    let mut speedup_4096 = 0.0;
+    let mut fused_row = (0.0f64, 0.0f64);
+    for &dim in &[512usize, 4096, 16384] {
+        let cen: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        let cur: Vec<f32> = (0..dim).map(|_| 0.5 + (rng.gaussian() as f32).abs()).collect();
+        let mut x: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        let r = timer.run(&format!("fused_scalar/dim={dim}/h={H}"), || {
+            for _ in 0..H {
+                kernels::quad_step_scalar(&mut x, &cen, &cur, &[], 0.0, None, None, 0.0, 0.05);
+            }
+            std::hint::black_box(&x);
+        });
+        println!("{}", r.report(Some(dim as f64)));
+        let scalar_elem = r.median_ns() / dim as f64;
+        let scalar_gbps = (H * 16 * dim) as f64 / r.median_ns();
+        fields.push((format!("fused_scalar_task_ns_dim{dim}"), r.median_ns()));
+        fields.push((format!("fused_scalar_ns_per_elem_dim{dim}"), scalar_elem));
+        fields.push((format!("fused_scalar_gbps_dim{dim}"), scalar_gbps));
+        let r = timer.run(&format!("fused_fast/dim={dim}/h={H}"), || {
+            kernels::quad_train_tiled(&mut x, &cen, &cur, None, 0.0, 0.05, H);
+            std::hint::black_box(&x);
+        });
+        println!("{}", r.report(Some(dim as f64)));
+        let fast_elem = r.median_ns() / dim as f64;
+        let fast_gbps = (16 * dim) as f64 / r.median_ns();
+        fields.push((format!("fused_fast_task_ns_dim{dim}"), r.median_ns()));
+        fields.push((format!("fused_fast_ns_per_elem_dim{dim}"), fast_elem));
+        fields.push((format!("fused_fast_gbps_dim{dim}"), fast_gbps));
+        let speedup = scalar_elem / fast_elem;
+        fields.push((format!("fused_speedup_dim{dim}"), speedup));
+        println!("  fused dim={dim}: {scalar_elem:.3} -> {fast_elem:.3} ns/elem ({speedup:.2}x)");
+        if dim == 4096 {
+            speedup_4096 = speedup;
+            fused_row = (scalar_elem, fast_elem);
+        }
+    }
+
+    println!();
+    let mut mix_gbps_1m = 0.0;
+    for &dim in &[4096usize, 1_000_000] {
+        let y: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        let mut x: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        let r = timer.run(&format!("mix_scalar/dim={dim}"), || {
+            kernels::mix_scalar(&mut x, &y, 0.37);
+            std::hint::black_box(&x);
+        });
+        println!("{}", r.report(Some(dim as f64)));
+        let scalar_elem = r.median_ns() / dim as f64;
+        let scalar_gbps = (12 * dim) as f64 / r.median_ns();
+        fields.push((format!("mix_scalar_ns_per_elem_dim{dim}"), scalar_elem));
+        fields.push((format!("mix_scalar_gbps_dim{dim}"), scalar_gbps));
+        let r = timer.run(&format!("mix_chunked/dim={dim}"), || {
+            kernels::mix_chunked(&mut x, &y, 0.37);
+            std::hint::black_box(&x);
+        });
+        println!("{}", r.report(Some(dim as f64)));
+        let fast_elem = r.median_ns() / dim as f64;
+        let fast_gbps = (12 * dim) as f64 / r.median_ns();
+        fields.push((format!("mix_chunked_ns_per_elem_dim{dim}"), fast_elem));
+        fields.push((format!("mix_chunked_gbps_dim{dim}"), fast_gbps));
+        fields.push((format!("mix_speedup_dim{dim}"), scalar_elem / fast_elem));
+        if dim == 1_000_000 {
+            mix_gbps_1m = fast_gbps;
+        }
+    }
+
+    println!();
+    for &dim in &[4096usize, 16384] {
+        let cen: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        let cur: Vec<f32> = (0..dim).map(|_| 0.5 + (rng.gaussian() as f32).abs()).collect();
+        let x: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+        let mut m_d = vec![0.0f64; dim];
+        let mut m_dc = vec![0.0f64; dim];
+        let mut m_dcc = vec![0.0f64; dim];
+        kernels::moment_accum(&mut m_d, &mut m_dc, &mut m_dcc, &cen, &cur);
+        let r = timer.run(&format!("moment_eval_scalar/dim={dim}"), || {
+            std::hint::black_box(kernels::moment_eval_scalar(&x, &m_d, &m_dc, &m_dcc));
+        });
+        println!("{}", r.report(Some(dim as f64)));
+        let scalar_elem = r.median_ns() / dim as f64;
+        fields.push((format!("moment_eval_scalar_ns_per_elem_dim{dim}"), scalar_elem));
+        let r = timer.run(&format!("moment_eval_chunked/dim={dim}"), || {
+            std::hint::black_box(kernels::moment_eval_chunked(&x, &m_d, &m_dc, &m_dcc));
+        });
+        println!("{}", r.report(Some(dim as f64)));
+        let fast_elem = r.median_ns() / dim as f64;
+        let fast_gbps = (28 * dim) as f64 / r.median_ns();
+        fields.push((format!("moment_eval_chunked_ns_per_elem_dim{dim}"), fast_elem));
+        fields.push((format!("moment_eval_gbps_dim{dim}"), fast_gbps));
+        fields.push((format!("moment_eval_speedup_dim{dim}"), scalar_elem / fast_elem));
+    }
+
     // ------------------------------------------------------- allocs/task
     println!();
     let report = alloc_probe::run_steady_state();
@@ -84,8 +194,14 @@ fn main() {
     println!("allocs/task (sequential steady state): {allocs:.3}");
     fields.push(("allocs_per_task_steady_state".into(), allocs));
 
+    // Ready-to-paste perf.md trajectory row (column order documented there).
+    println!(
+        "\nperf.md row:\n| PR 8 | (date) | {:.3} | {:.3} | {:.2}x | {:.1} | {allocs:.3} |",
+        fused_row.0, fused_row.1, speedup_4096, mix_gbps_1m
+    );
+
     // -------------------------------------------------------------- JSON
-    let mut json = String::from("{\n  \"schema\": \"bench_compute.v1\",\n");
+    let mut json = String::from("{\n  \"schema\": \"bench_compute.v2\",\n");
     for (i, (k, v)) in fields.iter().enumerate() {
         let sep = if i + 1 == fields.len() { "" } else { "," };
         json.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));

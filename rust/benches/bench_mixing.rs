@@ -2,6 +2,9 @@
 //!
 //! Compares the two engines across parameter-vector sizes:
 //! * native — the in-place fused rust loop the threaded server uses,
+//!   reported as the scalar reference vs the dispatched (lane-chunked by
+//!   default) `util::kernels` path, with ns/element and GB/s next to the
+//!   raw ns/call,
 //! * pjrt   — the Pallas `mix` kernel artifact through PJRT (the TPU-server
 //!   story; on CPU it pays dispatch + host↔device copies).
 //!
@@ -10,6 +13,7 @@
 
 use fedasync::coordinator::updater::{mix_inplace, mix_inplace_sharded};
 use fedasync::runtime::{model_dir, ModelRuntime};
+use fedasync::util::kernels;
 use fedasync::util::rng::Rng;
 use fedasync::util::stats::BenchTimer;
 
@@ -18,16 +22,28 @@ fn main() {
     let mut rng = Rng::seed_from(1);
     println!("== bench_mixing: server update engines ==\n");
 
-    // Native mixing across scales (up to CNN-paper-sized vectors).
+    // Native mixing across scales (up to CNN-paper-sized vectors): the
+    // scalar reference vs the dispatched path (lane-chunked under the
+    // default `fast-kernels` feature).  12 B move per element: read x,
+    // read y, write x.
     for &p in &[6_922usize, 165_530, 1_000_000, 4_600_000] {
         let mut x: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
         let y: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+        let r = timer.run(&format!("native_mix_scalar/p={p}"), || {
+            kernels::mix_scalar(&mut x, &y, 0.37);
+            std::hint::black_box(&x);
+        });
+        println!("{}", r.report(Some(p as f64)));
+        let scalar_elem = r.median_ns() / p as f64;
         let r = timer.run(&format!("native_mix/p={p}"), || {
             mix_inplace(&mut x, &y, 0.37);
             std::hint::black_box(&x);
         });
         // items = params blended per call.
         println!("{}", r.report(Some(p as f64)));
+        let elem = r.median_ns() / p as f64;
+        let gbps = (12 * p) as f64 / r.median_ns();
+        println!("  p={p}: {scalar_elem:.3} ns/elem scalar, {elem:.3} fast, {gbps:.1} GB/s");
     }
 
     // Sharded native mixing: chunked across scoped threads.  On a 1-core
@@ -42,6 +58,9 @@ fn main() {
                 std::hint::black_box(&x);
             });
             println!("{}", r.report(Some(p as f64)));
+            let elem = r.median_ns() / p as f64;
+            let gbps = (12 * p) as f64 / r.median_ns();
+            println!("  p={p}/shards={shards}: {elem:.3} ns/elem, {gbps:.1} GB/s");
         }
     }
 
@@ -66,6 +85,8 @@ fn main() {
             std::hint::black_box(rt.mix(&x, &y, 0.37).unwrap());
         });
         println!("{}", r.report(Some(p as f64)));
+        let elem = r.median_ns() / p as f64;
+        println!("  {model}: {elem:.3} ns/elem (incl. host<->device copies)");
     }
 
     // Sanity: the two engines agree numerically.

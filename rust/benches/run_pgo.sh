@@ -1,0 +1,105 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization harness for the fedasync crate.
+#
+# Pipeline (see DESIGN.md §"Vectorized kernels" and perf.md):
+#   1. baseline  — `cargo bench --bench bench_compute` on the ordinary
+#                  release profile; BENCH_compute.json is kept for the delta.
+#   2. instrument — rebuild with `-Cprofile-generate` and replay a real
+#                  workload mix: the scenario-preset tour (every shipped
+#                  scenario through the virtual driver) plus the
+#                  differential fuzz target (all three time drivers).
+#   3. merge     — `llvm-profdata merge` the raw profiles.
+#   4. optimize  — rebuild with `-Cprofile-use` and re-run the bench;
+#                  the before/after JSON pair lands in target/pgo/.
+#
+# Environment:
+#   PGO_SMOKE=1     truncate the replay workload (CI smoke budget).
+#   LLVM_PROFDATA   explicit path to llvm-profdata; otherwise PATH, then
+#                   the rustup sysroot (llvm-tools component) is searched.
+set -euo pipefail
+
+cd "$(dirname "$0")/../.."
+
+PGO_DIR="target/pgo"
+PROF_RAW="$PGO_DIR/raw"
+PROF_DATA="$PGO_DIR/merged.profdata"
+mkdir -p "$PROF_RAW"
+
+find_llvm_profdata() {
+    if [[ -n "${LLVM_PROFDATA:-}" ]]; then
+        echo "$LLVM_PROFDATA"
+        return
+    fi
+    if command -v llvm-profdata >/dev/null 2>&1; then
+        echo "llvm-profdata"
+        return
+    fi
+    local sysroot host tool
+    sysroot="$(rustc --print sysroot)"
+    host="$(rustc -vV | sed -n 's/^host: //p')"
+    tool="$sysroot/lib/rustlib/$host/bin/llvm-profdata"
+    if [[ -x "$tool" ]]; then
+        echo "$tool"
+        return
+    fi
+    echo "error: llvm-profdata not found (install the llvm-tools rustup" >&2
+    echo "component or set LLVM_PROFDATA)" >&2
+    exit 1
+}
+PROFDATA_BIN="$(find_llvm_profdata)"
+echo "using llvm-profdata: $PROFDATA_BIN"
+
+run_workload() {
+    # The replay mix: scenario presets drive the mix/fused/moment kernels
+    # through the production coordinator; the differential fuzz target
+    # adds all three time drivers plus parser/aggregator edge paths.
+    if [[ "${PGO_SMOKE:-0}" == "1" ]]; then
+        cargo run --release --quiet --bin fuzz_driver -- differential \
+            --seed 1 --iters 2 --max-len 64
+    else
+        cargo run --release --quiet --example scenario_tour
+        cargo run --release --quiet --bin fuzz_driver -- differential \
+            --seed 1 --iters 8 --max-len 64
+    fi
+}
+
+echo "== [1/4] baseline bench (no PGO) =="
+cargo bench --bench bench_compute
+cp BENCH_compute.json "$PGO_DIR/BENCH_compute.baseline.json"
+
+echo "== [2/4] instrumented build + workload replay =="
+rm -f "$PROF_RAW"/*.profraw
+RUSTFLAGS="${RUSTFLAGS:-} -Cprofile-generate=$PROF_RAW" \
+    LLVM_PROFILE_FILE="$PROF_RAW/fedasync-%p-%m.profraw" \
+    run_workload
+
+echo "== [3/4] merging profiles =="
+"$PROFDATA_BIN" merge -o "$PROF_DATA" "$PROF_RAW"/*.profraw
+echo "merged $(ls "$PROF_RAW"/*.profraw | wc -l) raw profile(s) -> $PROF_DATA"
+
+echo "== [4/4] PGO-optimized rebuild + bench =="
+RUSTFLAGS="${RUSTFLAGS:-} -Cprofile-use=$PWD/$PROF_DATA" \
+    cargo bench --bench bench_compute
+cp BENCH_compute.json "$PGO_DIR/BENCH_compute.pgo.json"
+
+# Side-by-side delta table (best effort; the JSON pair is the artifact).
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$PGO_DIR/BENCH_compute.baseline.json" \
+        "$PGO_DIR/BENCH_compute.pgo.json" >"$PGO_DIR/PGO_DELTA.md" <<'EOF'
+import json, sys
+base = json.load(open(sys.argv[1]))
+pgo = json.load(open(sys.argv[2]))
+print("| key | baseline | pgo | delta |")
+print("|---|---|---|---|")
+for k, b in base.items():
+    if k == "schema" or not isinstance(b, (int, float)):
+        continue
+    p = pgo.get(k)
+    if not isinstance(p, (int, float)) or b == 0:
+        continue
+    print(f"| {k} | {b:.3f} | {p:.3f} | {100.0 * (p - b) / b:+.1f}% |")
+EOF
+    echo "wrote $PGO_DIR/PGO_DELTA.md"
+fi
+
+echo "done: baseline + PGO BENCH_compute.json pairs in $PGO_DIR/"

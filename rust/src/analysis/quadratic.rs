@@ -45,6 +45,7 @@ use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::Dataset;
 use crate::federated::device::SimDevice;
 use crate::runtime::{EvalMetrics, ParamVec, RuntimeError};
+use crate::util::kernels;
 use crate::util::rng::Rng;
 
 /// Strongly convex per-device quadratics with a shared closed form.
@@ -103,13 +104,15 @@ impl QuadraticProblem {
         let mut m_dcc = vec![0.0f64; dim];
         for i in 0..n {
             let row = i * dim;
-            for j in 0..dim {
-                let d = curvatures[row + j] as f64;
-                let c = centers[row + j] as f64;
-                m_d[j] += d;
-                m_dc[j] += d * c;
-                m_dcc[j] += d * c * c;
-            }
+            // Per-coordinate accumulators, so the chunked kernel is
+            // bitwise identical to the seed's row-major scalar loop.
+            kernels::moment_accum(
+                &mut m_d,
+                &mut m_dc,
+                &mut m_dcc,
+                &centers[row..row + dim],
+                &curvatures[row..row + dim],
+            );
         }
         // x*_j = (Σ_i d_ij·c_ij) / (Σ_i d_ij); F* = F(x*).
         let x_star: Vec<f64> = (0..dim).map(|j| m_dc[j] / m_d[j]).collect();
@@ -176,13 +179,14 @@ impl QuadraticProblem {
     ///
     /// Within ~1e-7 relative of [`QuadraticProblem::global_f`] (the only
     /// difference is the f32 `x−c` subtraction the exact loop performs);
-    /// `rust/tests/proptests.rs` pins the 1e-6 bound.
+    /// `rust/tests/proptests.rs` pins the 1e-6 bound.  The Σ over
+    /// coordinates goes through [`kernels::moment_eval`]: under the
+    /// default `fast-kernels` feature that reduction is reassociated
+    /// across lanes (≤ 1e-6 relative of the serial order — the one
+    /// tolerance-banded kernel; everything else on the hot path is
+    /// bitwise).
     pub fn global_f_fast(&self, x: &[f32]) -> f64 {
-        let mut total = 0.0f64;
-        for j in 0..self.dim {
-            let xj = x[j] as f64;
-            total += self.m_d[j] * xj * xj - 2.0 * self.m_dc[j] * xj + self.m_dcc[j];
-        }
+        let total = kernels::moment_eval(x, &self.m_d, &self.m_dc, &self.m_dcc);
         0.5 * total / self.n as f64
     }
 
@@ -207,6 +211,14 @@ impl QuadraticProblem {
     /// entirely so the pure quadratic's sequence is untouched.  Keeping
     /// the op sequence in one function is what lets one bitwise property
     /// cover both trainers.
+    ///
+    /// The loop bodies live in [`kernels`]: the `fast-kernels` feature
+    /// (default) selects the lane-chunked variants — plus the H-tiled
+    /// single-memory-pass path when noise and ripple are both off — all
+    /// of which preserve the per-element op order and therefore the
+    /// bit-exact trajectory; `--no-default-features` selects the scalar
+    /// references.  The replay property below pins whichever is selected
+    /// against the seed path, bitwise.
     fn fused_local_train(
         &self,
         params: &[f32],
@@ -230,31 +242,28 @@ impl QuadraticProblem {
                 let (g, noise) = scratch.grad_and_noise(self.dim);
                 for k in 0..self.n {
                     let row = k * self.dim;
-                    for j in 0..self.dim {
-                        g[j] += self.curvatures[row + j] as f64
-                            * (x[j] - self.centers[row + j]) as f64;
-                    }
+                    kernels::grad_accum(
+                        g,
+                        &x,
+                        &self.centers[row..row + self.dim],
+                        &self.curvatures[row..row + self.dim],
+                    );
                 }
                 if self.noise_std > 0.0 {
                     rng.fill_gaussian(noise);
                 }
                 let n_f = self.n as f64;
-                for j in 0..self.dim {
-                    let mut gj = g[j] / n_f;
-                    if let Some(w) = ripple {
-                        // d/dx_j [w·cos(x_j)] = −w·sin(x_j)
-                        gj -= w * (x[j] as f64).sin();
-                    }
-                    gj += if self.noise_std > 0.0 {
-                        noise[j] * self.noise_std
-                    } else {
-                        0.0
-                    };
-                    if let Some(a) = anchor {
-                        gj += rho as f64 * (x[j] - a[j]) as f64;
-                    }
-                    x[j] -= gamma * gj as f32;
-                }
+                kernels::central_step(
+                    &mut x,
+                    g,
+                    n_f,
+                    noise,
+                    self.noise_std,
+                    ripple,
+                    anchor,
+                    rho,
+                    gamma,
+                );
             }
         } else {
             // One contiguous row per device (SoA): stream it with unit
@@ -263,25 +272,30 @@ impl QuadraticProblem {
             let row = i * self.dim;
             let cen = &self.centers[row..row + self.dim];
             let cur = &self.curvatures[row..row + self.dim];
-            for _ in 0..self.h {
-                let noise = scratch.noise(self.dim);
-                if self.noise_std > 0.0 {
-                    rng.fill_gaussian(noise);
-                }
-                for j in 0..self.dim {
-                    let mut gj = cur[j] as f64 * (x[j] - cen[j]) as f64;
-                    if let Some(w) = ripple {
-                        gj -= w * (x[j] as f64).sin();
+            if cfg!(feature = "fast-kernels") && self.noise_std == 0.0 && ripple.is_none() {
+                // No per-iteration RNG draws and no `sin` ⇒ the H local
+                // iterations can run register-tiled: one memory pass over
+                // the row instead of H, bitwise identical to the
+                // per-iteration loop below (each coordinate's op
+                // sequence is unchanged; kernels.rs pins it).
+                kernels::quad_train_tiled(&mut x, cen, cur, anchor, rho, gamma, self.h);
+            } else {
+                for _ in 0..self.h {
+                    let noise = scratch.noise(self.dim);
+                    if self.noise_std > 0.0 {
+                        rng.fill_gaussian(noise);
                     }
-                    gj += if self.noise_std > 0.0 {
-                        noise[j] * self.noise_std
-                    } else {
-                        0.0
-                    };
-                    if let Some(a) = anchor {
-                        gj += rho as f64 * (x[j] - a[j]) as f64;
-                    }
-                    x[j] -= gamma * gj as f32;
+                    kernels::quad_step(
+                        &mut x,
+                        cen,
+                        cur,
+                        noise,
+                        self.noise_std,
+                        ripple,
+                        anchor,
+                        rho,
+                        gamma,
+                    );
                 }
             }
         }

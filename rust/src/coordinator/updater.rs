@@ -25,6 +25,7 @@ use crate::coordinator::model_store::ModelStore;
 use crate::coordinator::snapshot::BufferPool;
 use crate::coordinator::Trainer;
 use crate::runtime::RuntimeError;
+use crate::util::kernels;
 
 /// Which implementation performs the blend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,14 +38,16 @@ pub enum MixEngine {
 
 /// In-place native mix: `x ← (1−α)·x + α·y`.
 ///
-/// Written as `x += α·(y − x)` — one multiply-add per element, which LLVM
-/// auto-vectorizes; no temporary allocation.
+/// Written as `x += α·(y − x)` — one multiply-add per element, no
+/// temporary allocation.  Delegates to [`kernels::mix`], which selects
+/// the [`LANES`](kernels::LANES)-chunked fast loop under the default
+/// `fast-kernels` feature and the scalar reference otherwise; the two
+/// are bitwise identical (elementwise, reassociation-free — see
+/// DESIGN.md §"Vectorized kernels"), so the golden trace is unaffected.
 #[inline]
 pub fn mix_inplace(x: &mut [f32], y: &[f32], alpha: f32) {
     debug_assert_eq!(x.len(), y.len());
-    for (a, &b) in x.iter_mut().zip(y) {
-        *a += alpha * (b - *a);
-    }
+    kernels::mix(x, y, alpha);
 }
 
 /// Minimum vector length before [`mix_inplace_sharded`] spawns threads;
@@ -113,19 +116,19 @@ fn hw_threads() -> usize {
 #[inline]
 pub fn mix_into(x: &[f32], y: &[f32], alpha: f32) -> Vec<f32> {
     debug_assert_eq!(x.len(), y.len());
-    x.iter()
-        .zip(y)
-        .map(|(&a, &b)| a + alpha * (b - a))
-        .collect()
+    let mut out = Vec::new();
+    kernels::mix_into(x, y, alpha, &mut out);
+    out
 }
 
 /// [`mix_into`] writing into a caller-provided (recycled) buffer instead
-/// of allocating — the pooled updater's per-epoch path.
+/// of allocating — the pooled updater's per-epoch path.  Same
+/// feature-dispatched kernel as [`mix_inplace`] (bitwise across both
+/// selections).
 #[inline]
 pub fn mix_into_buf(x: &[f32], y: &[f32], alpha: f32, out: &mut Vec<f32>) {
     debug_assert_eq!(x.len(), y.len());
-    out.clear();
-    out.extend(x.iter().zip(y).map(|(&a, &b)| a + alpha * (b - a)));
+    kernels::mix_into(x, y, alpha, out);
 }
 
 /// Outcome of offering one worker update to the updater.

@@ -25,6 +25,7 @@
 //! | `scenario`        | no panic; `Ok` implies `validate()` passes           |
 //! | `manifest`        | no panic on arbitrary manifest-shaped JSON           |
 //! | `event_queue`     | timer wheel ≡ retired heap ≡ model on (time, seq)    |
+//! | `kernel_equivalence` | scalar vs lane-chunked kernels agree (bitwise / ≤1e-6) |
 //! | `differential`    | sampled/emergent/threaded drivers agree (see below)  |
 //!
 //! The differential target is the headline: it draws a random valid
@@ -41,6 +42,7 @@ use std::sync::mpsc;
 use crate::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
 use crate::config::{AggregatorConfig, ExperimentConfig, LocalUpdate, StalenessFn};
 use crate::coordinator::server::{run_server_core, serve_native, ComputeJob};
+use crate::coordinator::updater::{mix_inplace_sharded, SHARD_MIN_LEN};
 use crate::coordinator::virtual_mode::{run_fedasync, StalenessSource};
 use crate::coordinator::Trainer;
 use crate::federated::data::FederatedData;
@@ -50,6 +52,7 @@ use crate::runtime::Manifest;
 use crate::scenario::{behavior_for, ChurnPhase, ScenarioConfig, SpeedTier};
 use crate::util::cli::{Args, CommandSpec};
 use crate::util::json::{Json, JsonErrorKind, JsonObj};
+use crate::util::kernels::{self, LANES};
 use crate::util::toml;
 
 /// One registered fuzz target.
@@ -69,7 +72,7 @@ pub fn find(name: &str) -> Option<&'static TargetSpec> {
     TARGETS.iter().find(|t| t.name == name)
 }
 
-static TARGETS: [TargetSpec; 8] = [
+static TARGETS: [TargetSpec; 9] = [
     TargetSpec {
         name: "toml",
         about: "util::toml::parse on raw and grammar-adjacent documents",
@@ -104,6 +107,11 @@ static TARGETS: [TargetSpec; 8] = [
         name: "event_queue",
         about: "timer-wheel EventQueue vs HeapEventQueue vs model pop order",
         run: event_queue_target,
+    },
+    TargetSpec {
+        name: "kernel_equivalence",
+        about: "scalar vs lane-chunked kernels: bitwise + tolerance contracts",
+        run: kernel_equivalence_target,
     },
     TargetSpec {
         name: "differential",
@@ -505,6 +513,99 @@ fn event_queue_target(src: &mut ByteSource) {
     }
 }
 
+// ------------------------------------------------------- kernel equivalence
+
+/// Differential check of `util::kernels`: the retained scalar reference
+/// paths vs the [`LANES`]-chunked fast paths, on random lengths that
+/// straddle the lane width and [`SHARD_MIN_LEN`].  The mix family
+/// (including the sharded tail-chunk-inline case), the fused quadratic
+/// step, the H-tiled trainer, and the moment accumulation must agree
+/// **bitwise**; only the chunked moment evaluator reassociates its
+/// reduction and is tolerance-banded at ≤ 1e-6 relative (DESIGN.md
+/// §"Vectorized kernels" documents the contract).
+fn kernel_equivalence_target(src: &mut ByteSource) {
+    let bits32 = |v: &[f32]| -> Vec<u32> { v.iter().map(|f| f.to_bits()).collect() };
+    let bits64 = |v: &[f64]| -> Vec<u64> { v.iter().map(|f| f.to_bits()).collect() };
+
+    // Length classes: straddle LANES, mid-size, and either side of the
+    // sharding story — just under SHARD_MIN_LEN (clamped-to-serial
+    // boundary) or 2·SHARD_MIN_LEN + odd (genuinely sharded, tail chunk
+    // runs inline, odd remainder exercises the scalar tail).
+    let n = match src.index(3) {
+        0 => src.index(3 * LANES + 1),
+        1 => 1 + src.index(1024),
+        _ => {
+            let base = if src.bool() { SHARD_MIN_LEN - 2 * LANES } else { 2 * SHARD_MIN_LEN + 1 };
+            base + src.index(4 * LANES + 1)
+        }
+    };
+    let alpha = src.f64_in(-0.5, 1.5) as f32;
+    let scale = if src.bool() { 1e30 } else { 3.0 };
+    let mut x: Vec<f32> = (0..n).map(|_| src.f64_in(-scale, scale) as f32).collect();
+    let y: Vec<f32> = (0..n).map(|_| src.f64_in(-scale, scale) as f32).collect();
+    if !x.is_empty() && src.bool() {
+        x[0] = -0.0; // signed-zero edge the step's `+0.0` normalizes
+    }
+
+    // Mix family: chunked == scalar == sharded == into-buffer, bitwise.
+    let mut want = x.clone();
+    kernels::mix_scalar(&mut want, &y, alpha);
+    let mut got = x.clone();
+    kernels::mix_chunked(&mut got, &y, alpha);
+    assert_eq!(bits32(&want), bits32(&got), "mix_chunked != mix_scalar at n={n}");
+    let mut out = vec![7.0f32; src.index(4)]; // dirty buffer: must be cleared
+    kernels::mix_into_chunked(&x, &y, alpha, &mut out);
+    assert_eq!(bits32(&want), bits32(&out), "mix_into_chunked != mix_scalar at n={n}");
+    let mut sharded = x.clone();
+    mix_inplace_sharded(&mut sharded, &y, alpha, 1 + src.index(8));
+    assert_eq!(bits32(&want), bits32(&sharded), "mix_inplace_sharded != mix_scalar at n={n}");
+
+    // Fused step: every optional-term combination, bitwise.
+    let cur: Vec<f32> = (0..n).map(|_| 0.25 + src.f64_in(0.0, 2.0) as f32).collect();
+    let noise: Vec<f64> = (0..n).map(|_| src.f64_in(-1.0, 1.0)).collect();
+    let noise_std = if src.bool() { 0.05 } else { 0.0 };
+    let ripple = if src.bool() { Some(0.2) } else { None };
+    let anchor = if src.bool() { Some(&y[..]) } else { None };
+    let mut want = x.clone();
+    kernels::quad_step_scalar(&mut want, &y, &cur, &noise, noise_std, ripple, anchor, 1.5, 0.05);
+    let mut got = x.clone();
+    kernels::quad_step_chunked(&mut got, &y, &cur, &noise, noise_std, ripple, anchor, 1.5, 0.05);
+    assert_eq!(bits32(&want), bits32(&got), "quad_step_chunked != scalar at n={n}");
+
+    // H-tiled trainer vs h repeated scalar steps (noise/ripple off).
+    let h = 1 + src.index(4);
+    let mut want = x.clone();
+    for _ in 0..h {
+        kernels::quad_step_scalar(&mut want, &y, &cur, &[], 0.0, None, anchor, 1.5, 0.05);
+    }
+    let mut got = x.clone();
+    kernels::quad_train_tiled(&mut got, &y, &cur, anchor, 1.5, 0.05, h);
+    assert_eq!(bits32(&want), bits32(&got), "quad_train_tiled != {h} scalar steps at n={n}");
+
+    // Moments: accumulation is bitwise; the evaluator reassociates and is
+    // tolerance-banded.  The 0.1 seeds stand in for prior rows (d = 0.1,
+    // c = 1), so every per-coordinate term stays a non-negative sum of
+    // squares and the relative bound is meaningful (no cancellation).
+    let mut md_s = vec![0.1f64; n];
+    let mut mdc_s = vec![0.1f64; n];
+    let mut mdcc_s = vec![0.1f64; n];
+    let mut md_c = md_s.clone();
+    let mut mdc_c = mdc_s.clone();
+    let mut mdcc_c = mdcc_s.clone();
+    kernels::moment_accum_scalar(&mut md_s, &mut mdc_s, &mut mdcc_s, &y, &cur);
+    kernels::moment_accum_chunked(&mut md_c, &mut mdc_c, &mut mdcc_c, &y, &cur);
+    assert_eq!(bits64(&md_s), bits64(&md_c), "moment Σd diverged at n={n}");
+    assert_eq!(bits64(&mdc_s), bits64(&mdc_c), "moment Σd·c diverged at n={n}");
+    assert_eq!(bits64(&mdcc_s), bits64(&mdcc_c), "moment Σd·c² diverged at n={n}");
+    let exact = kernels::moment_eval_scalar(&x, &md_s, &mdc_s, &mdcc_s);
+    let fast = kernels::moment_eval_chunked(&x, &md_s, &mdc_s, &mdcc_s);
+    let denom = exact.abs().max(1e-12);
+    assert!(
+        ((fast - exact) / denom).abs() <= 1e-6,
+        "moment evaluator drifted past 1e-6 relative at n={n}: {exact} vs {fast}"
+    );
+}
+
 // ------------------------------------------------------------- differential
 
 const DIFF_DEVICES: usize = 16;
@@ -742,6 +843,14 @@ mod tests {
         // in tier-1 without CI-scale cost.
         let mut src = ByteSource::from_seed(1, 32);
         differential_target(&mut src);
+    }
+
+    #[test]
+    fn kernel_equivalence_holds_on_a_seeded_sweep() {
+        for seed in 0..48 {
+            let mut src = ByteSource::from_seed(seed, 96);
+            kernel_equivalence_target(&mut src);
+        }
     }
 
     #[test]

@@ -1,0 +1,848 @@
+//! Explicit lane-width kernels for the compute plane's three hot loops.
+//!
+//! Every accepted update walks the full parameter vector at least twice
+//! (local train + server mix), so these loops are the throughput ceiling
+//! of the whole simulator.  This module holds each of them in two
+//! always-compiled forms:
+//!
+//! * **scalar** — the seed's reference loop, verbatim FP op order.  The
+//!   golden trace and every conformance fixture were blessed on this
+//!   sequence, and it never changes.
+//! * **chunked** — the same per-element op sequence restructured into
+//!   [`LANES`]-wide blocks with a scalar remainder, written so LLVM's
+//!   autovectorizer maps each block onto SIMD registers (no `std::simd`,
+//!   no nightly, no intrinsics).
+//!
+//! The public `mix` / `quad_step` / `moment_eval` / … wrappers dispatch
+//! on the `fast-kernels` cargo feature (on by default).  Both variants
+//! compile regardless of the feature — only the *selection* is gated —
+//! so neither path can rot unbuilt, and the equivalence property tests
+//! below (plus the `kernel_equivalence` fuzz target and
+//! `rust/tests/proptests.rs`) compare the two directly in every build.
+//!
+//! ## Equivalence contract (DESIGN.md §"Vectorized kernels")
+//!
+//! Chunking an **elementwise** loop does not reassociate anything: each
+//! element's FP op sequence is untouched, only the iteration order over
+//! *independent* elements changes.  The mix family, the fused quadratic
+//! step, the centralized gradient accumulation, the moment accumulation,
+//! and the H-tiled trainer are therefore **bitwise identical** to their
+//! scalar references, and the golden trace stays byte-identical with
+//! `fast-kernels` on.  The one true reduction — [`moment_eval`]'s Σ over
+//! coordinates — is reassociated across [`LANES`] partial accumulators,
+//! so [`moment_eval_chunked`] only promises ≤ 1e-6 relative agreement
+//! (its per-coordinate terms are sums of squares, hence non-negative,
+//! which keeps the reassociation error at ~n·ε with no cancellation
+//! blow-up).
+//!
+//! One IEEE subtlety worth naming: the scalar step *always* executes the
+//! noise add (`gj += 0.0` when noise is off).  `-0.0 + 0.0 == +0.0`, so
+//! that add normalizes a negative-zero gradient — and a `-0.0` iterate
+//! then steps to `-0.0` rather than `+0.0`.  The chunked and tiled paths
+//! keep the add for exactly that reason (pinned by a unit test below).
+
+/// Elements processed per chunk: 8 f32 lanes fill one AVX2 register (or
+/// two NEON quads), and the f64 gradient math splits into two 4-wide
+/// registers.  The reassociated evaluator's pairwise combine below is
+/// written for exactly this width.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------- mix family
+
+/// Scalar reference mix: `x ← x + α·(y − x)`, the seed's exact loop.
+#[inline]
+pub fn mix_scalar(x: &mut [f32], y: &[f32], alpha: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += alpha * (b - *a);
+    }
+}
+
+/// [`LANES`]-chunked mix; per-element ops identical to [`mix_scalar`],
+/// so the result is bitwise identical.
+#[inline]
+pub fn mix_chunked(x: &mut [f32], y: &[f32], alpha: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    let main = x.len() - x.len() % LANES;
+    let (xm, xt) = x.split_at_mut(main);
+    for (xc, yc) in xm.chunks_exact_mut(LANES).zip(y[..main].chunks_exact(LANES)) {
+        for j in 0..LANES {
+            xc[j] += alpha * (yc[j] - xc[j]);
+        }
+    }
+    mix_scalar(xt, &y[main..], alpha);
+}
+
+/// Feature-dispatched in-place mix (the server's commit kernel).
+#[inline]
+pub fn mix(x: &mut [f32], y: &[f32], alpha: f32) {
+    if cfg!(feature = "fast-kernels") {
+        mix_chunked(x, y, alpha)
+    } else {
+        mix_scalar(x, y, alpha)
+    }
+}
+
+/// Scalar reference out-of-place mix into a recycled buffer (clear +
+/// extend, preserving capacity) — the seed's `mix_into_buf` loop.
+#[inline]
+pub fn mix_into_scalar(x: &[f32], y: &[f32], alpha: f32, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), y.len());
+    out.clear();
+    out.extend(x.iter().zip(y).map(|(&a, &b)| a + alpha * (b - a)));
+}
+
+/// [`LANES`]-chunked out-of-place mix; bitwise identical to
+/// [`mix_into_scalar`] (elementwise, no reassociation).
+#[inline]
+pub fn mix_into_chunked(x: &[f32], y: &[f32], alpha: f32, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), y.len());
+    out.clear();
+    out.reserve(x.len());
+    let main = x.len() - x.len() % LANES;
+    for (xc, yc) in x[..main].chunks_exact(LANES).zip(y[..main].chunks_exact(LANES)) {
+        let mut lane = [0.0f32; LANES];
+        for j in 0..LANES {
+            lane[j] = xc[j] + alpha * (yc[j] - xc[j]);
+        }
+        out.extend_from_slice(&lane);
+    }
+    for (&a, &b) in x[main..].iter().zip(&y[main..]) {
+        out.push(a + alpha * (b - a));
+    }
+}
+
+/// Feature-dispatched out-of-place mix into a caller-provided buffer.
+#[inline]
+pub fn mix_into(x: &[f32], y: &[f32], alpha: f32, out: &mut Vec<f32>) {
+    if cfg!(feature = "fast-kernels") {
+        mix_into_chunked(x, y, alpha, out)
+    } else {
+        mix_into_scalar(x, y, alpha, out)
+    }
+}
+
+// --------------------------------------------------------- fused quad step
+
+/// Scalar reference for one fused local-SGD iteration over a device row:
+/// gradient + optional `−w·sin` ripple + noise (always added; `0.0` when
+/// off) + optional prox anchor + step, in the seed's exact op order.
+pub fn quad_step_scalar(
+    x: &mut [f32],
+    cen: &[f32],
+    cur: &[f32],
+    noise: &[f64],
+    noise_std: f64,
+    ripple: Option<f64>,
+    anchor: Option<&[f32]>,
+    rho: f32,
+    gamma: f32,
+) {
+    for j in 0..x.len() {
+        let mut gj = cur[j] as f64 * (x[j] - cen[j]) as f64;
+        if let Some(w) = ripple {
+            gj -= w * (x[j] as f64).sin();
+        }
+        gj += if noise_std > 0.0 { noise[j] * noise_std } else { 0.0 };
+        if let Some(a) = anchor {
+            gj += rho as f64 * (x[j] - a[j]) as f64;
+        }
+        x[j] -= gamma * gj as f32;
+    }
+}
+
+/// [`LANES`]-chunked fused step, monomorphized over the three optional
+/// terms so every selected variant is a branch-free block LLVM can
+/// vectorize.  Per-element ops identical to [`quad_step_scalar`] ⇒
+/// bitwise identical.
+pub fn quad_step_chunked(
+    x: &mut [f32],
+    cen: &[f32],
+    cur: &[f32],
+    noise: &[f64],
+    noise_std: f64,
+    ripple: Option<f64>,
+    anchor: Option<&[f32]>,
+    rho: f32,
+    gamma: f32,
+) {
+    let w = ripple.unwrap_or(0.0);
+    let a = anchor.unwrap_or(&[]);
+    match (noise_std > 0.0, ripple.is_some(), anchor.is_some()) {
+        (false, false, false) => {
+            quad_step_body::<false, false, false>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+        (false, false, true) => {
+            quad_step_body::<false, false, true>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+        (false, true, false) => {
+            quad_step_body::<false, true, false>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+        (false, true, true) => {
+            quad_step_body::<false, true, true>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, false, false) => {
+            quad_step_body::<true, false, false>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, false, true) => {
+            quad_step_body::<true, false, true>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, true, false) => {
+            quad_step_body::<true, true, false>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, true, true) => {
+            quad_step_body::<true, true, true>(x, cen, cur, noise, noise_std, w, a, rho, gamma)
+        }
+    }
+}
+
+/// Feature-dispatched fused per-device step.
+#[inline]
+pub fn quad_step(
+    x: &mut [f32],
+    cen: &[f32],
+    cur: &[f32],
+    noise: &[f64],
+    noise_std: f64,
+    ripple: Option<f64>,
+    anchor: Option<&[f32]>,
+    rho: f32,
+    gamma: f32,
+) {
+    if cfg!(feature = "fast-kernels") {
+        quad_step_chunked(x, cen, cur, noise, noise_std, ripple, anchor, rho, gamma)
+    } else {
+        quad_step_scalar(x, cen, cur, noise, noise_std, ripple, anchor, rho, gamma)
+    }
+}
+
+/// One element of the fused step *after* the gradient term `g0`: ripple,
+/// noise, prox, step — the shared tail of the device and centralized
+/// variants.  `gj += 0.0` when `!NOISE` is deliberate (see module docs).
+#[inline(always)]
+fn finish_elem<const NOISE: bool, const RIPPLE: bool, const ANCHOR: bool>(
+    g0: f64,
+    xj: f32,
+    nj: f64,
+    noise_std: f64,
+    w: f64,
+    aj: f32,
+    rho: f32,
+    gamma: f32,
+) -> f32 {
+    let mut gj = g0;
+    if RIPPLE {
+        gj -= w * (xj as f64).sin();
+    }
+    gj += if NOISE { nj * noise_std } else { 0.0 };
+    if ANCHOR {
+        gj += rho as f64 * (xj - aj) as f64;
+    }
+    xj - gamma * gj as f32
+}
+
+fn quad_step_body<const NOISE: bool, const RIPPLE: bool, const ANCHOR: bool>(
+    x: &mut [f32],
+    cen: &[f32],
+    cur: &[f32],
+    noise: &[f64],
+    noise_std: f64,
+    w: f64,
+    anchor: &[f32],
+    rho: f32,
+    gamma: f32,
+) {
+    let main = x.len() - x.len() % LANES;
+    let mut c = 0;
+    while c < main {
+        for j in c..c + LANES {
+            let g0 = cur[j] as f64 * (x[j] - cen[j]) as f64;
+            let nj = if NOISE { noise[j] } else { 0.0 };
+            let aj = if ANCHOR { anchor[j] } else { 0.0 };
+            x[j] = finish_elem::<NOISE, RIPPLE, ANCHOR>(g0, x[j], nj, noise_std, w, aj, rho, gamma);
+        }
+        c += LANES;
+    }
+    for j in main..x.len() {
+        let g0 = cur[j] as f64 * (x[j] - cen[j]) as f64;
+        let nj = if NOISE { noise[j] } else { 0.0 };
+        let aj = if ANCHOR { anchor[j] } else { 0.0 };
+        x[j] = finish_elem::<NOISE, RIPPLE, ANCHOR>(g0, x[j], nj, noise_std, w, aj, rho, gamma);
+    }
+}
+
+// ------------------------------------------------------------ tiled trainer
+
+/// All `h` local iterations for a [`LANES`]-wide block of coordinates in
+/// registers: one memory pass over the row instead of `h`.
+///
+/// Only valid when noise and ripple are off — noise would change the RNG
+/// draw order across iterations, and the ripple's `sin` defeats the
+/// point of register tiling.  Coordinates are independent and each one's
+/// per-iteration op sequence is exactly `h` repetitions of the scalar
+/// step, so the result is **bitwise identical** to `h` calls of
+/// [`quad_step_scalar`] with `noise_std = 0, ripple = None`.
+///
+/// This is the fast path's structural win over the scalar loop (which
+/// re-reads `x`/`cen`/`cur` from memory every iteration): 8 independent
+/// dependency chains and `3·dim·4` bytes of traffic total instead of
+/// per iteration — the source of the ≥1.5× `BENCH_compute.json` bound.
+pub fn quad_train_tiled(
+    x: &mut [f32],
+    cen: &[f32],
+    cur: &[f32],
+    anchor: Option<&[f32]>,
+    rho: f32,
+    gamma: f32,
+    h: usize,
+) {
+    let a = anchor.unwrap_or(&[]);
+    if anchor.is_some() {
+        quad_train_tiled_body::<true>(x, cen, cur, a, rho, gamma, h)
+    } else {
+        quad_train_tiled_body::<false>(x, cen, cur, a, rho, gamma, h)
+    }
+}
+
+fn quad_train_tiled_body<const ANCHOR: bool>(
+    x: &mut [f32],
+    cen: &[f32],
+    cur: &[f32],
+    anchor: &[f32],
+    rho: f32,
+    gamma: f32,
+    h: usize,
+) {
+    let main = x.len() - x.len() % LANES;
+    let mut c = 0;
+    while c < main {
+        let mut lx = [0.0f32; LANES];
+        let mut lcen = [0.0f32; LANES];
+        let mut lcur = [0.0f32; LANES];
+        let mut lanc = [0.0f32; LANES];
+        lx.copy_from_slice(&x[c..c + LANES]);
+        lcen.copy_from_slice(&cen[c..c + LANES]);
+        lcur.copy_from_slice(&cur[c..c + LANES]);
+        if ANCHOR {
+            lanc.copy_from_slice(&anchor[c..c + LANES]);
+        }
+        for _ in 0..h {
+            for j in 0..LANES {
+                let g0 = lcur[j] as f64 * (lx[j] - lcen[j]) as f64;
+                lx[j] = finish_elem::<false, false, ANCHOR>(
+                    g0, lx[j], 0.0, 0.0, 0.0, lanc[j], rho, gamma,
+                );
+            }
+        }
+        x[c..c + LANES].copy_from_slice(&lx);
+        c += LANES;
+    }
+    for j in main..x.len() {
+        let mut xj = x[j];
+        let aj = if ANCHOR { anchor[j] } else { 0.0 };
+        for _ in 0..h {
+            let g0 = cur[j] as f64 * (xj - cen[j]) as f64;
+            xj = finish_elem::<false, false, ANCHOR>(g0, xj, 0.0, 0.0, 0.0, aj, rho, gamma);
+        }
+        x[j] = xj;
+    }
+}
+
+// ------------------------------------------------------- centralized kernels
+
+/// Scalar reference gradient accumulation for one device row:
+/// `g[j] += d_ij·(x_j − c_ij)` in f64 — the centralized-SGD inner loop.
+#[inline]
+pub fn grad_accum_scalar(g: &mut [f64], x: &[f32], cen: &[f32], cur: &[f32]) {
+    for j in 0..x.len() {
+        g[j] += cur[j] as f64 * (x[j] - cen[j]) as f64;
+    }
+}
+
+/// [`LANES`]-chunked row accumulation; per-`j` add order is unchanged
+/// (each coordinate has its own accumulator) ⇒ bitwise identical.
+#[inline]
+pub fn grad_accum_chunked(g: &mut [f64], x: &[f32], cen: &[f32], cur: &[f32]) {
+    let main = x.len() - x.len() % LANES;
+    let mut c = 0;
+    while c < main {
+        for j in c..c + LANES {
+            g[j] += cur[j] as f64 * (x[j] - cen[j]) as f64;
+        }
+        c += LANES;
+    }
+    for j in main..x.len() {
+        g[j] += cur[j] as f64 * (x[j] - cen[j]) as f64;
+    }
+}
+
+/// Feature-dispatched centralized gradient-row accumulation.
+#[inline]
+pub fn grad_accum(g: &mut [f64], x: &[f32], cen: &[f32], cur: &[f32]) {
+    if cfg!(feature = "fast-kernels") {
+        grad_accum_chunked(g, x, cen, cur)
+    } else {
+        grad_accum_scalar(g, x, cen, cur)
+    }
+}
+
+/// Scalar reference centralized step: mean gradient `g[j]/n_f`, then the
+/// shared ripple/noise/prox/step tail in the seed's exact op order.
+pub fn central_step_scalar(
+    x: &mut [f32],
+    g: &[f64],
+    n_f: f64,
+    noise: &[f64],
+    noise_std: f64,
+    ripple: Option<f64>,
+    anchor: Option<&[f32]>,
+    rho: f32,
+    gamma: f32,
+) {
+    for j in 0..x.len() {
+        let mut gj = g[j] / n_f;
+        if let Some(w) = ripple {
+            gj -= w * (x[j] as f64).sin();
+        }
+        gj += if noise_std > 0.0 { noise[j] * noise_std } else { 0.0 };
+        if let Some(a) = anchor {
+            gj += rho as f64 * (x[j] - a[j]) as f64;
+        }
+        x[j] -= gamma * gj as f32;
+    }
+}
+
+/// [`LANES`]-chunked centralized step; bitwise identical to
+/// [`central_step_scalar`] (elementwise, no reassociation).
+pub fn central_step_chunked(
+    x: &mut [f32],
+    g: &[f64],
+    n_f: f64,
+    noise: &[f64],
+    noise_std: f64,
+    ripple: Option<f64>,
+    anchor: Option<&[f32]>,
+    rho: f32,
+    gamma: f32,
+) {
+    let w = ripple.unwrap_or(0.0);
+    let a = anchor.unwrap_or(&[]);
+    match (noise_std > 0.0, ripple.is_some(), anchor.is_some()) {
+        (false, false, false) => {
+            central_step_body::<false, false, false>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+        (false, false, true) => {
+            central_step_body::<false, false, true>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+        (false, true, false) => {
+            central_step_body::<false, true, false>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+        (false, true, true) => {
+            central_step_body::<false, true, true>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, false, false) => {
+            central_step_body::<true, false, false>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, false, true) => {
+            central_step_body::<true, false, true>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, true, false) => {
+            central_step_body::<true, true, false>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+        (true, true, true) => {
+            central_step_body::<true, true, true>(x, g, n_f, noise, noise_std, w, a, rho, gamma)
+        }
+    }
+}
+
+/// Feature-dispatched centralized step.
+#[inline]
+pub fn central_step(
+    x: &mut [f32],
+    g: &[f64],
+    n_f: f64,
+    noise: &[f64],
+    noise_std: f64,
+    ripple: Option<f64>,
+    anchor: Option<&[f32]>,
+    rho: f32,
+    gamma: f32,
+) {
+    if cfg!(feature = "fast-kernels") {
+        central_step_chunked(x, g, n_f, noise, noise_std, ripple, anchor, rho, gamma)
+    } else {
+        central_step_scalar(x, g, n_f, noise, noise_std, ripple, anchor, rho, gamma)
+    }
+}
+
+fn central_step_body<const NOISE: bool, const RIPPLE: bool, const ANCHOR: bool>(
+    x: &mut [f32],
+    g: &[f64],
+    n_f: f64,
+    noise: &[f64],
+    noise_std: f64,
+    w: f64,
+    anchor: &[f32],
+    rho: f32,
+    gamma: f32,
+) {
+    let main = x.len() - x.len() % LANES;
+    let mut c = 0;
+    while c < main {
+        for j in c..c + LANES {
+            let g0 = g[j] / n_f;
+            let nj = if NOISE { noise[j] } else { 0.0 };
+            let aj = if ANCHOR { anchor[j] } else { 0.0 };
+            x[j] = finish_elem::<NOISE, RIPPLE, ANCHOR>(g0, x[j], nj, noise_std, w, aj, rho, gamma);
+        }
+        c += LANES;
+    }
+    for j in main..x.len() {
+        let g0 = g[j] / n_f;
+        let nj = if NOISE { noise[j] } else { 0.0 };
+        let aj = if ANCHOR { anchor[j] } else { 0.0 };
+        x[j] = finish_elem::<NOISE, RIPPLE, ANCHOR>(g0, x[j], nj, noise_std, w, aj, rho, gamma);
+    }
+}
+
+// ----------------------------------------------------------- moment kernels
+
+/// Scalar reference moment accumulation for one device row:
+/// `Σd`, `Σd·c`, `Σd·c²` per coordinate (the `global_f_fast` moments).
+#[inline]
+pub fn moment_accum_scalar(
+    m_d: &mut [f64],
+    m_dc: &mut [f64],
+    m_dcc: &mut [f64],
+    cen: &[f32],
+    cur: &[f32],
+) {
+    for j in 0..cen.len() {
+        let d = cur[j] as f64;
+        let c = cen[j] as f64;
+        m_d[j] += d;
+        m_dc[j] += d * c;
+        m_dcc[j] += d * c * c;
+    }
+}
+
+/// [`LANES`]-chunked moment accumulation; per-coordinate accumulators ⇒
+/// bitwise identical to [`moment_accum_scalar`].
+#[inline]
+pub fn moment_accum_chunked(
+    m_d: &mut [f64],
+    m_dc: &mut [f64],
+    m_dcc: &mut [f64],
+    cen: &[f32],
+    cur: &[f32],
+) {
+    let main = cen.len() - cen.len() % LANES;
+    let mut blk = 0;
+    while blk < main {
+        for j in blk..blk + LANES {
+            let d = cur[j] as f64;
+            let c = cen[j] as f64;
+            m_d[j] += d;
+            m_dc[j] += d * c;
+            m_dcc[j] += d * c * c;
+        }
+        blk += LANES;
+    }
+    for j in main..cen.len() {
+        let d = cur[j] as f64;
+        let c = cen[j] as f64;
+        m_d[j] += d;
+        m_dc[j] += d * c;
+        m_dcc[j] += d * c * c;
+    }
+}
+
+/// Feature-dispatched moment-row accumulation.
+#[inline]
+pub fn moment_accum(
+    m_d: &mut [f64],
+    m_dc: &mut [f64],
+    m_dcc: &mut [f64],
+    cen: &[f32],
+    cur: &[f32],
+) {
+    if cfg!(feature = "fast-kernels") {
+        moment_accum_chunked(m_d, m_dc, m_dcc, cen, cur)
+    } else {
+        moment_accum_scalar(m_d, m_dc, m_dcc, cen, cur)
+    }
+}
+
+/// Scalar reference closed-form objective sum:
+/// `Σⱼ (Aⱼxⱼ² − 2Bⱼxⱼ + Cⱼ)` with one serial f64 accumulator.
+#[inline]
+pub fn moment_eval_scalar(x: &[f32], m_d: &[f64], m_dc: &[f64], m_dcc: &[f64]) -> f64 {
+    let mut total = 0.0f64;
+    for j in 0..x.len() {
+        let xj = x[j] as f64;
+        total += m_d[j] * xj * xj - 2.0 * m_dc[j] * xj + m_dcc[j];
+    }
+    total
+}
+
+/// [`LANES`]-accumulator evaluation of the same sum — the one kernel in
+/// this module that **reassociates** (the serial Σ becomes 8 partial
+/// sums combined pairwise), so it is tolerance-banded (≤ 1e-6 relative
+/// of [`moment_eval_scalar`]) rather than bitwise.  The per-coordinate
+/// terms are sums of squares (non-negative), so the bound is a real
+/// ~n·ε reassociation error, not a cancellation artifact.
+pub fn moment_eval_chunked(x: &[f32], m_d: &[f64], m_dc: &[f64], m_dcc: &[f64]) -> f64 {
+    let main = x.len() - x.len() % LANES;
+    let mut acc = [0.0f64; LANES];
+    let mut c = 0;
+    while c < main {
+        for j in 0..LANES {
+            let xj = x[c + j] as f64;
+            acc[j] += m_d[c + j] * xj * xj - 2.0 * m_dc[c + j] * xj + m_dcc[c + j];
+        }
+        c += LANES;
+    }
+    // Pairwise combine of the LANES=8 partials (better error growth than
+    // a serial fold, and a fixed tree so results are run-to-run stable).
+    let head = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let tail = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    let mut total = head + tail;
+    for j in main..x.len() {
+        let xj = x[j] as f64;
+        total += m_d[j] * xj * xj - 2.0 * m_dc[j] * xj + m_dcc[j];
+    }
+    total
+}
+
+/// Feature-dispatched objective sum (see the two variants for the
+/// bitwise-vs-tolerance contract).
+#[inline]
+pub fn moment_eval(x: &[f32], m_d: &[f64], m_dc: &[f64], m_dcc: &[f64]) -> f64 {
+    if cfg!(feature = "fast-kernels") {
+        moment_eval_chunked(x, m_d, m_dc, m_dcc)
+    } else {
+        moment_eval_scalar(x, m_d, m_dc, m_dcc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
+
+    fn bits32(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|f| f.to_bits()).collect()
+    }
+
+    fn bits64(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|f| f.to_bits()).collect()
+    }
+
+    #[test]
+    fn lanes_is_eight() {
+        // The evaluator's pairwise combine is written for this width.
+        assert_eq!(LANES, 8);
+    }
+
+    #[test]
+    fn prop_mix_kernels_bitwise_agree() {
+        check("mix-kernels-bitwise", 200, |g| {
+            // Lengths straddle LANES (incl. 0 and sub-lane), plus a
+            // guaranteed main-loop + remainder case.
+            let n = match g.index(3) {
+                0 => g.size(0, 3 * LANES),
+                1 => g.size(0, 1024),
+                _ => 8 * LANES + 1 + g.size(0, 2 * LANES),
+            };
+            let alpha = g.f64_in(-0.5, 1.5) as f32;
+            let x0 = g.vec_f32(n, 1e3);
+            let y = g.vec_f32(n, 1e3);
+            let mut want = x0.clone();
+            mix_scalar(&mut want, &y, alpha);
+            let mut got = x0.clone();
+            mix_chunked(&mut got, &y, alpha);
+            prop_ensure!(bits32(&want) == bits32(&got), "mix_chunked drifted at n={n}");
+            let mut dispatched = x0.clone();
+            mix(&mut dispatched, &y, alpha);
+            prop_ensure!(bits32(&want) == bits32(&dispatched), "mix dispatch drifted at n={n}");
+            // Out-of-place variants into a dirty recycled buffer.
+            let mut out = vec![9.0f32; g.size(0, 4)];
+            mix_into_scalar(&x0, &y, alpha, &mut out);
+            prop_ensure!(bits32(&want) == bits32(&out), "mix_into_scalar drifted at n={n}");
+            let mut out = vec![9.0f32; g.size(0, 4)];
+            mix_into_chunked(&x0, &y, alpha, &mut out);
+            prop_ensure!(bits32(&want) == bits32(&out), "mix_into_chunked drifted at n={n}");
+            let mut out = vec![9.0f32; g.size(0, 4)];
+            mix_into(&x0, &y, alpha, &mut out);
+            prop_ensure!(bits32(&want) == bits32(&out), "mix_into dispatch drifted at n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quad_step_chunked_bitwise_matches_scalar() {
+        check("quad-step-bitwise", 200, |g| {
+            let n = g.size(0, 4 * LANES + 3);
+            let x0 = g.vec_f32(n, 5.0);
+            let cen = g.vec_f32(n, 5.0);
+            let cur: Vec<f32> = (0..n).map(|_| g.f64_in(0.3, 2.0) as f32).collect();
+            let noise: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let noise_std = if g.bool() { 0.05 } else { 0.0 };
+            let ripple = g.bool().then(|| g.f64_in(0.0, 0.4));
+            let anchor_v = g.vec_f32(n, 5.0);
+            let anchor = g.bool().then(|| anchor_v.as_slice());
+            let mut want = x0.clone();
+            quad_step_scalar(&mut want, &cen, &cur, &noise, noise_std, ripple, anchor, 1.5, 0.1);
+            let mut got = x0.clone();
+            quad_step_chunked(&mut got, &cen, &cur, &noise, noise_std, ripple, anchor, 1.5, 0.1);
+            prop_ensure!(
+                bits32(&want) == bits32(&got),
+                "fused step drifted (n={n} noise={noise_std} ripple={ripple:?})"
+            );
+            let mut dispatched = x0.clone();
+            quad_step(&mut dispatched, &cen, &cur, &noise, noise_std, ripple, anchor, 1.5, 0.1);
+            prop_ensure!(bits32(&want) == bits32(&dispatched), "dispatch drifted (n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tiled_train_bitwise_matches_h_scalar_steps() {
+        check("tiled-train-bitwise", 150, |g| {
+            let n = g.size(0, 4 * LANES + 3);
+            let h = g.size(1, 6);
+            let x0 = g.vec_f32(n, 5.0);
+            let cen = g.vec_f32(n, 5.0);
+            let cur: Vec<f32> = (0..n).map(|_| g.f64_in(0.3, 2.0) as f32).collect();
+            let anchor_v = g.vec_f32(n, 5.0);
+            let anchor = g.bool().then(|| anchor_v.as_slice());
+            let mut want = x0.clone();
+            for _ in 0..h {
+                quad_step_scalar(&mut want, &cen, &cur, &[], 0.0, None, anchor, 1.5, 0.1);
+            }
+            let mut got = x0.clone();
+            quad_train_tiled(&mut got, &cen, &cur, anchor, 1.5, 0.1, h);
+            prop_ensure!(
+                bits32(&want) == bits32(&got),
+                "tiled train drifted from {h} scalar steps (n={n})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_centralized_kernels_bitwise_match_scalar() {
+        check("central-kernels-bitwise", 150, |g| {
+            let n = g.size(0, 4 * LANES + 3);
+            let x0 = g.vec_f32(n, 5.0);
+            let cen = g.vec_f32(n, 5.0);
+            let cur: Vec<f32> = (0..n).map(|_| g.f64_in(0.3, 2.0) as f32).collect();
+            // Accumulate two rows on top of a non-zero accumulator, so
+            // the `+=` semantics (not just the products) are compared.
+            let mut gw = vec![0.25f64; n];
+            grad_accum_scalar(&mut gw, &x0, &cen, &cur);
+            grad_accum_scalar(&mut gw, &x0, &cur, &cen);
+            let mut gc = vec![0.25f64; n];
+            grad_accum_chunked(&mut gc, &x0, &cen, &cur);
+            grad_accum_chunked(&mut gc, &x0, &cur, &cen);
+            prop_ensure!(bits64(&gw) == bits64(&gc), "grad_accum drifted at n={n}");
+            let noise: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let noise_std = if g.bool() { 0.05 } else { 0.0 };
+            let ripple = g.bool().then(|| g.f64_in(0.0, 0.4));
+            let anchor_v = g.vec_f32(n, 5.0);
+            let anchor = g.bool().then(|| anchor_v.as_slice());
+            let mut want = x0.clone();
+            central_step_scalar(&mut want, &gw, 4.0, &noise, noise_std, ripple, anchor, 1.5, 0.1);
+            let mut got = x0.clone();
+            central_step_chunked(&mut got, &gc, 4.0, &noise, noise_std, ripple, anchor, 1.5, 0.1);
+            prop_ensure!(
+                bits32(&want) == bits32(&got),
+                "central step drifted (n={n} noise={noise_std} ripple={ripple:?})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_moment_accum_chunked_bitwise_matches_scalar() {
+        check("moment-accum-bitwise", 150, |g| {
+            let n = g.size(0, 6 * LANES + 5);
+            let mut sw = (vec![0.5f64; n], vec![0.5f64; n], vec![0.5f64; n]);
+            let mut sc = (vec![0.5f64; n], vec![0.5f64; n], vec![0.5f64; n]);
+            for _ in 0..g.size(1, 3) {
+                let cen = g.vec_f32(n, 3.0);
+                let cur: Vec<f32> = (0..n).map(|_| g.f64_in(0.3, 2.0) as f32).collect();
+                moment_accum_scalar(&mut sw.0, &mut sw.1, &mut sw.2, &cen, &cur);
+                moment_accum_chunked(&mut sc.0, &mut sc.1, &mut sc.2, &cen, &cur);
+            }
+            prop_ensure!(bits64(&sw.0) == bits64(&sc.0), "m_d drifted at n={n}");
+            prop_ensure!(bits64(&sw.1) == bits64(&sc.1), "m_dc drifted at n={n}");
+            prop_ensure!(bits64(&sw.2) == bits64(&sc.2), "m_dcc drifted at n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_moment_eval_chunked_within_tolerance() {
+        check("moment-eval-tolerance", 120, |g| {
+            let n = match g.index(2) {
+                0 => g.size(0, 4 * LANES + 3),
+                _ => 4096 + g.size(0, 64),
+            };
+            // Moments built from real (cen, cur) rows through the
+            // accumulator (seeded at d=0.1, c=1), so every per-coordinate
+            // term is a sum of squares — non-negative, which is what
+            // makes the relative bound meaningful (module docs).
+            let mut m_d = vec![0.1f64; n];
+            let mut m_dc = vec![0.1f64; n];
+            let mut m_dcc = vec![0.1f64; n];
+            for _ in 0..g.size(1, 3) {
+                let cen = g.vec_f32(n, 3.0);
+                let cur: Vec<f32> = (0..n).map(|_| g.f64_in(0.3, 2.0) as f32).collect();
+                moment_accum_scalar(&mut m_d, &mut m_dc, &mut m_dcc, &cen, &cur);
+            }
+            let x = g.vec_f32(n, 3.0);
+            let exact = moment_eval_scalar(&x, &m_d, &m_dc, &m_dcc);
+            let fast = moment_eval_chunked(&x, &m_d, &m_dc, &m_dcc);
+            let denom = exact.abs().max(1e-12);
+            prop_ensure!(
+                ((fast - exact) / denom).abs() <= 1e-6,
+                "evaluator drifted past 1e-6 relative: scalar {exact} vs chunked {fast} (n={n})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn noise_off_add_keeps_signed_zero_semantics() {
+        // x = -0.0, cen = 0.0 ⇒ the gradient term is -0.0; the scalar
+        // reference's unconditional noise add flips it to +0.0, and the
+        // -0.0 iterate then steps to -0.0 (not +0.0).  A fast path that
+        // dropped the add would flip those signs — keep it honest.
+        let x0 = vec![-0.0f32; LANES + 3];
+        let cen = vec![0.0f32; LANES + 3];
+        let cur = vec![1.0f32; LANES + 3];
+        let mut want = x0.clone();
+        quad_step_scalar(&mut want, &cen, &cur, &[], 0.0, None, None, 0.0, 0.1);
+        let mut got = x0.clone();
+        quad_step_chunked(&mut got, &cen, &cur, &[], 0.0, None, None, 0.0, 0.1);
+        let mut tiled = x0.clone();
+        quad_train_tiled(&mut tiled, &cen, &cur, None, 0.0, 0.1, 1);
+        assert_eq!(bits32(&want), bits32(&got), "chunked signed-zero drift");
+        assert_eq!(bits32(&want), bits32(&tiled), "tiled signed-zero drift");
+    }
+
+    #[test]
+    fn mix_empty_and_sub_lane_lengths() {
+        for n in [0usize, 1, LANES - 1, LANES, LANES + 1] {
+            let x0: Vec<f32> = (0..n).map(|i| i as f32 - 2.0).collect();
+            let y: Vec<f32> = (0..n).map(|i| 1.0 - i as f32).collect();
+            let mut want = x0.clone();
+            mix_scalar(&mut want, &y, 0.37);
+            let mut got = x0.clone();
+            mix_chunked(&mut got, &y, 0.37);
+            assert_eq!(bits32(&want), bits32(&got), "n={n}");
+        }
+    }
+}

@@ -1,10 +1,11 @@
 //! Support substrates built in-tree (the offline environment has no
 //! crates.io access beyond the vendored set): PRNG, JSON, TOML-subset
-//! config parsing, CLI parsing, logging, statistics, and a property-based
-//! testing harness.
+//! config parsing, CLI parsing, logging, statistics, a property-based
+//! testing harness, and the lane-width compute kernels.
 
 pub mod cli;
 pub mod json;
+pub mod kernels;
 pub mod logging;
 pub mod prop;
 pub mod rng;

@@ -16,6 +16,7 @@ use fedasync::coordinator::updater::{
 use fedasync::federated::network::{EventQueue, HeapEventQueue};
 use fedasync::federated::{data, partition};
 use fedasync::prop_ensure;
+use fedasync::util::kernels;
 use fedasync::util::prop::{check, Gen};
 
 fn random_staleness_fn(g: &mut Gen) -> StalenessFn {
@@ -199,14 +200,20 @@ fn prop_mix_family_agrees_bitwise() {
     // a reordered reduction, an FMA sneaking into one path — would split
     // the execution modes' trajectories.  They must agree *bitwise* for
     // arbitrary lengths, alphas, and shard counts, with lengths straddling
-    // the `SHARD_MIN_LEN` boundary on both sides.
+    // the `SHARD_MIN_LEN` boundary on both sides.  The elementwise op is
+    // reassociation-free, so the `util::kernels` scalar reference and the
+    // LANES-chunked fast path join the bitwise family too — whichever one
+    // the `fast-kernels` feature dispatched (both build modes run this).
     check("mix-family-bitwise", 60, |g| {
-        let n = match g.index(3) {
+        let n = match g.index(4) {
             0 => g.size(1, 2048),
             // Within a few elements of the sharding threshold.
             1 => SHARD_MIN_LEN - 32 + g.size(0, 64),
             // Big enough to genuinely shard on multi-core machines.
-            _ => 2 * SHARD_MIN_LEN + g.size(0, 1024),
+            2 => 2 * SHARD_MIN_LEN + g.size(0, 1024),
+            // Guaranteed odd and sharded: the last shard chunk (run
+            // inline on the calling thread) ends in a scalar remainder.
+            _ => 2 * SHARD_MIN_LEN + 1 + 2 * g.size(0, 512),
         };
         let alpha = g.f64_in(0.0, 1.0) as f32;
         let x = g.vec_f32(n, 2.0);
@@ -237,6 +244,27 @@ fn prop_mix_family_agrees_bitwise() {
                 "mix_inplace_sharded(shards={shards}) != mix_into at n={n} alpha={alpha}"
             );
         }
+
+        // Both explicit kernel variants, regardless of which one the
+        // feature selected for the dispatched family above.
+        let mut scalar = x.clone();
+        kernels::mix_scalar(&mut scalar, &y, alpha);
+        prop_ensure!(
+            bits(&scalar) == bits(&reference),
+            "kernels::mix_scalar != mix_into at n={n} alpha={alpha}"
+        );
+        let mut chunked = x.clone();
+        kernels::mix_chunked(&mut chunked, &y, alpha);
+        prop_ensure!(
+            bits(&chunked) == bits(&reference),
+            "kernels::mix_chunked != mix_into at n={n} alpha={alpha}"
+        );
+        let mut into_chunked = vec![5.0f32; g.size(0, 8)];
+        kernels::mix_into_chunked(&x, &y, alpha, &mut into_chunked);
+        prop_ensure!(
+            bits(&into_chunked) == bits(&reference),
+            "kernels::mix_into_chunked != mix_into at n={n} alpha={alpha}"
+        );
         Ok(())
     });
 }
