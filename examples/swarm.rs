@@ -1,0 +1,188 @@
+//! A multi-process swarm against the TCP serving plane.
+//!
+//! The parent process binds a loopback listener, runs the FedAsync
+//! engine behind it (`serving::run_served_core`, native quadratic
+//! compute — no PJRT artifacts needed), and re-spawns *itself* four
+//! times in `--client` mode: each child is a real OS process that
+//! pulls the model over TCP, trains locally, pushes its update, and
+//! absorbs `Shed` retry-after frames with jittered exponential backoff.
+//! The accept queue is kept deliberately small so admission control is
+//! actually visible in the final tally.
+//!
+//! ```bash
+//! cargo run --release --example swarm
+//! ```
+//!
+//! The same wire protocol is available on the CLI: `fedasync train
+//! --threads --listen 127.0.0.1:7878` serves, and `fedasync train
+//! --connect 127.0.0.1:7878` joins as a swarm client.
+
+use std::net::TcpListener;
+use std::process::Command;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::config::{ExecMode, ExperimentConfig, LocalUpdate, ServingConfig, StalenessFn};
+use fedasync::coordinator::server::{serve_native, ComputeJob};
+use fedasync::coordinator::Trainer;
+use fedasync::scenario;
+use fedasync::serving::{run_quad_client, run_served_core, ClientLoop, ServingStats};
+
+const DEVICES: usize = 16;
+const EPOCHS: usize = 160;
+const CLIENTS: usize = 4;
+const SEED: u64 = 42;
+
+/// One config, derived identically in parent and children, so both
+/// sides of the wire agree on the population physics and γ/ρ.
+fn swarm_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.mode = ExecMode::Threads;
+    cfg.epochs = EPOCHS;
+    cfg.eval_every = EPOCHS / 4;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = DEVICES;
+    cfg.worker_threads = CLIENTS;
+    cfg.max_inflight = 4;
+    cfg.serving = Some(ServingConfig {
+        listen: "127.0.0.1:0".into(),
+        // Small on purpose: four pushy clients against two queue slots
+        // makes the shed/backoff path part of the demo, not dead code.
+        accept_queue: 2,
+        read_timeout_ms: 50,
+        retry_after_ms: 10,
+    });
+    cfg.validate().expect("swarm config");
+    cfg
+}
+
+fn problem() -> QuadraticProblem {
+    QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+/// Child mode: `swarm --client <addr> <seed>` — one swarm client,
+/// printing its tally before exit.
+fn run_client(addr: &str, seed: u64) {
+    let cfg = swarm_cfg();
+    let behavior = scenario::behavior_for(&cfg, DEVICES, SEED);
+    let trainer = problem();
+    let mut fleet = dummy_fleet(DEVICES, 7);
+    let data = dummy_dataset();
+    let loop_cfg = ClientLoop {
+        behavior: behavior.as_ref(),
+        devices: DEVICES,
+        epochs: EPOCHS as u64,
+        gamma: cfg.gamma,
+        rho: cfg.rho,
+        seed,
+        deadline: Duration::from_secs(45),
+    };
+    match run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg) {
+        Ok(r) => {
+            let p50 = percentile(&r.push_latency_ms, 0.50);
+            println!(
+                "client {seed}: pushed {} (applied {}), shed {} times, p50 push {:.2} ms",
+                r.pushed, r.applied, r.shed, p50
+            );
+        }
+        Err(e) => {
+            eprintln!("client {seed}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[((s.len() - 1) as f64 * q).round() as usize]
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() >= 4 && args[1] == "--client" {
+        run_client(&args[2], args[3].parse()?);
+        return Ok(());
+    }
+
+    fedasync::util::logging::init();
+    let cfg = swarm_cfg();
+    let p = problem();
+    let init = p.init_params(SEED as usize)?;
+    let h = p.local_iters();
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!(
+        "swarm: serving {EPOCHS} epochs on {addr}, accept queue {}, {CLIENTS} client processes",
+        cfg.serving.as_ref().map_or(0, |s| s.accept_queue)
+    );
+
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(problem(), DEVICES, job_rx));
+    let behavior = scenario::behavior_for(&cfg, DEVICES, SEED);
+    let stats = Arc::new(ServingStats::default());
+
+    // Re-spawn this binary in client mode: real processes, real sockets.
+    let exe = std::env::current_exe()?;
+    let children: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            Command::new(&exe)
+                .arg("--client")
+                .arg(addr.to_string())
+                .arg((SEED + 100 * (c as u64 + 1)).to_string())
+                .spawn()
+        })
+        .collect::<Result<_, _>>()?;
+
+    let t0 = std::time::Instant::now();
+    let test = dummy_dataset();
+    let log = run_served_core(
+        &cfg,
+        SEED,
+        &test,
+        init,
+        h,
+        job_tx,
+        behavior,
+        listener,
+        Arc::clone(&stats),
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    svc.join().expect("native service join");
+    for mut child in children {
+        let status = child.wait()?;
+        if !status.success() {
+            eprintln!("a swarm client exited with {status}");
+        }
+    }
+
+    println!("\n{:<6} {:>11} {:>10} {:>10}", "epoch", "train_loss", "mean α_t", "staleness");
+    for r in &log.rows {
+        println!(
+            "{:<6} {:>11.4} {:>10.4} {:>10.2}",
+            r.epoch, r.train_loss, r.alpha_eff, r.staleness
+        );
+    }
+    let last = log.rows.last().expect("rows");
+    let ld = std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "\n{} epochs in {wall:.1}s — {} connections, {} admitted, {} acked, {} shed \
+         (retry-after backoff absorbed the overflow).",
+        last.epoch,
+        stats.connections.load(ld),
+        stats.admitted.load(ld),
+        stats.acked.load(ld),
+        stats.shed.load(ld),
+    );
+    Ok(())
+}

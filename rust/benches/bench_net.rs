@@ -1,0 +1,168 @@
+//! Serving-plane perf snapshot, machine-readable: writes
+//! `BENCH_net.json` with requests/sec and p50/p99 push-to-ack latency
+//! for a full loopback run (engine behind a real `TcpListener`, swarm
+//! clients speaking the wire protocol) under the straggler and churn
+//! stress presets — the same closed-form quadratic compute plane the
+//! conformance suite uses, no PJRT artifacts needed.
+//!
+//! CI runs this and uploads the JSON next to `BENCH_engine.json`, so the
+//! serving plane's throughput and tail latency are trackable PR over PR.
+//!
+//! ```bash
+//! cargo bench --bench bench_net
+//! ```
+
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::config::{ExecMode, ExperimentConfig, LocalUpdate, ServingConfig, StalenessFn};
+use fedasync::coordinator::server::{serve_native, ComputeJob};
+use fedasync::coordinator::Trainer;
+use fedasync::scenario;
+use fedasync::serving::{run_quad_client, run_served_core, ClientLoop, ServingStats};
+
+const DEVICES: usize = 16;
+const EPOCHS: usize = 120;
+const CLIENTS: usize = 3;
+const SEED: u64 = 1;
+
+fn quad() -> QuadraticProblem {
+    QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+fn preset_cfg(name: &str) -> ExperimentConfig {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs").join(name);
+    let mut cfg =
+        ExperimentConfig::from_toml_file(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    cfg.mode = ExecMode::Threads;
+    cfg.epochs = EPOCHS;
+    cfg.eval_every = EPOCHS / 4;
+    cfg.repeats = 1;
+    cfg.seed = SEED;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = DEVICES;
+    cfg.worker_threads = CLIENTS;
+    cfg.max_inflight = 4;
+    cfg.serving = Some(ServingConfig::default());
+    cfg.validate().expect("bench serving config");
+    cfg
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+struct NetSample {
+    requests_per_s: f64,
+    push_p50_ms: f64,
+    push_p99_ms: f64,
+    acked: u64,
+    shed: u64,
+}
+
+/// One full served run over 127.0.0.1; requests = every answered push
+/// (acked or shed) plus every snapshot pull, latency = client-observed
+/// push → ack/shed round trip (includes the apply on the server).
+fn run_loopback(cfg: &ExperimentConfig) -> NetSample {
+    let p = quad();
+    let init = p.init_params(SEED as usize).expect("init");
+    let h = p.local_iters();
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(quad(), DEVICES, job_rx));
+    let behavior = scenario::behavior_for(cfg, DEVICES, SEED);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stats = Arc::new(ServingStats::default());
+
+    let t0 = Instant::now();
+    let server = {
+        let cfg = cfg.clone();
+        let behavior = Arc::clone(&behavior);
+        let stats = Arc::clone(&stats);
+        std::thread::spawn(move || {
+            let test = dummy_dataset();
+            run_served_core(&cfg, SEED, &test, init, h, job_tx, behavior, listener, stats)
+        })
+    };
+
+    let epochs = cfg.epochs as u64;
+    let (gamma, rho) = (cfg.gamma, cfg.rho);
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let behavior = Arc::clone(&behavior);
+            std::thread::spawn(move || {
+                let trainer = quad();
+                let mut fleet = dummy_fleet(DEVICES, 7);
+                let data = dummy_dataset();
+                let loop_cfg = ClientLoop {
+                    behavior: behavior.as_ref(),
+                    devices: DEVICES,
+                    epochs,
+                    gamma,
+                    rho,
+                    seed: SEED + 100 * (c as u64 + 1),
+                    deadline: Duration::from_secs(120),
+                };
+                run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
+                    .unwrap_or_else(|e| panic!("client {c}: {e}"))
+            })
+        })
+        .collect();
+
+    let log = server.join().expect("server join").expect("served run");
+    let wall = t0.elapsed().as_secs_f64();
+    let reports: Vec<_> = clients.into_iter().map(|c| c.join().expect("client join")).collect();
+    svc.join().expect("native service join");
+
+    assert!(log.rows.last().expect("rows").epoch >= EPOCHS, "run stopped early");
+    let pulls: u64 = reports.iter().map(|r| r.pushed).sum::<u64>(); // one pull per push
+    let answered = stats.acked.load(Ordering::Relaxed) + stats.shed.load(Ordering::Relaxed);
+    let mut lat: Vec<f64> =
+        reports.iter().flat_map(|r| r.push_latency_ms.iter().copied()).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    NetSample {
+        requests_per_s: (answered + pulls) as f64 / wall,
+        push_p50_ms: percentile(&lat, 0.50),
+        push_p99_ms: percentile(&lat, 0.99),
+        acked: stats.acked.load(Ordering::Relaxed),
+        shed: stats.shed.load(Ordering::Relaxed),
+    }
+}
+
+fn main() {
+    println!("== bench_net: serving-plane snapshot -> BENCH_net.json ==\n");
+    let mut fields: Vec<(String, f64)> = Vec::new();
+    for preset in ["scenario_straggler.toml", "scenario_churn.toml"] {
+        let key = preset.trim_start_matches("scenario_").trim_end_matches(".toml");
+        let s = run_loopback(&preset_cfg(preset));
+        println!(
+            "{key:<12} {:>8.1} req/s   push p50 {:>7.2} ms   p99 {:>7.2} ms   acked {} shed {}",
+            s.requests_per_s, s.push_p50_ms, s.push_p99_ms, s.acked, s.shed
+        );
+        fields.push((format!("{key}_requests_per_s"), s.requests_per_s));
+        fields.push((format!("{key}_push_p50_ms"), s.push_p50_ms));
+        fields.push((format!("{key}_push_p99_ms"), s.push_p99_ms));
+        fields.push((format!("{key}_acked"), s.acked as f64));
+        fields.push((format!("{key}_shed"), s.shed as f64));
+    }
+
+    let mut json = String::from("{\n  \"schema\": \"bench_net.v1\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let sep = if i + 1 == fields.len() { "" } else { "," };
+        json.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_net.json", &json).expect("write BENCH_net.json");
+    println!("\nwrote BENCH_net.json");
+}

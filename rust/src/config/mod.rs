@@ -278,6 +278,36 @@ pub enum ExecMode {
     Threads,
 }
 
+/// Serving-plane parameters (`--listen` / `[serving]`): where the TCP
+/// listener binds and how admission control behaves.  Only meaningful in
+/// [`ExecMode::Threads`] — the serving plane is a network front-end over
+/// the threaded server's core (see [`crate::serving`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Bind address for the listener (`host:port`; port 0 picks a free
+    /// one, announced on stderr).
+    pub listen: String,
+    /// Admission-control capacity: updates queued-or-resolving at once.
+    /// Arrivals beyond this are answered with a retry-after frame.
+    pub accept_queue: usize,
+    /// Per-connection socket read timeout — the bounded wait that lets a
+    /// handler observe shutdown when its peer goes silent.
+    pub read_timeout_ms: u64,
+    /// Retry delay suggested to shed clients.
+    pub retry_after_ms: u32,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            listen: "127.0.0.1:0".into(),
+            accept_queue: 32,
+            read_timeout_ms: 50,
+            retry_after_ms: 25,
+        }
+    }
+}
+
 /// Federation / data generation parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FederationConfig {
@@ -346,6 +376,9 @@ pub struct ExperimentConfig {
     pub worker_threads: usize,
     /// Max in-flight tasks the scheduler keeps outstanding (Threads mode).
     pub max_inflight: usize,
+    /// Serve the threaded core over TCP (`--listen` / `[serving]`);
+    /// `None` = in-process worker pool, the default.
+    pub serving: Option<ServingConfig>,
 }
 
 #[derive(Debug)]
@@ -395,6 +428,7 @@ impl Default for ExperimentConfig {
             eval_every: 20,
             worker_threads: 4,
             max_inflight: 8,
+            serving: None,
         }
     }
 }
@@ -458,6 +492,22 @@ impl ExperimentConfig {
         }
         if self.mode == ExecMode::Threads && self.worker_threads == 0 {
             return e("worker_threads must be > 0 in threads mode".into());
+        }
+        if let Some(sv) = &self.serving {
+            if self.mode != ExecMode::Threads {
+                return e("[serving] requires mode = \"threads\": the serving plane is a \
+                     network front-end over the threaded server"
+                    .into());
+            }
+            if sv.listen.is_empty() {
+                return e("serving.listen must be a host:port address".into());
+            }
+            if sv.accept_queue == 0 {
+                return e("serving.accept_queue must be >= 1".into());
+            }
+            if sv.read_timeout_ms == 0 {
+                return e("serving.read_timeout_ms must be >= 1".into());
+            }
         }
         if let Some(sc) = &self.scenario {
             sc.validate()?;
@@ -622,6 +672,54 @@ impl ExperimentConfig {
             ));
         }
 
+        let sv = v.get("serving");
+        if let Some(obj) = sv.as_obj() {
+            // Strict like [aggregator]: a typo'd admission-control knob
+            // must not silently run with the default.
+            let mut parsed = self.serving.take().unwrap_or_default();
+            for key in obj.keys() {
+                match key.as_str() {
+                    "listen" => {
+                        parsed.listen = sv
+                            .get("listen")
+                            .as_str()
+                            .ok_or_else(|| err("serving: listen must be a string".into()))?
+                            .to_string();
+                    }
+                    "accept_queue" => {
+                        parsed.accept_queue = sv.get("accept_queue").as_usize().ok_or_else(
+                            || err("serving: accept_queue must be an integer".into()),
+                        )?;
+                    }
+                    "read_timeout_ms" => {
+                        parsed.read_timeout_ms = sv
+                            .get("read_timeout_ms")
+                            .as_usize()
+                            .ok_or_else(|| {
+                                err("serving: read_timeout_ms must be an integer".into())
+                            })? as u64;
+                    }
+                    "retry_after_ms" => {
+                        parsed.retry_after_ms = sv
+                            .get("retry_after_ms")
+                            .as_usize()
+                            .ok_or_else(|| {
+                                err("serving: retry_after_ms must be an integer".into())
+                            })? as u32;
+                    }
+                    other => {
+                        return Err(err(format!(
+                            "serving: unknown key {other:?} (known: listen, accept_queue, \
+                             read_timeout_ms, retry_after_ms)"
+                        )))
+                    }
+                }
+            }
+            self.serving = Some(parsed);
+        } else if !matches!(sv, Json::Null) {
+            return Err(err("serving must be a [serving] table".into()));
+        }
+
         let sc = v.get("scenario");
         if let Some(name) = sc.as_str() {
             self.scenario = Some(crate::scenario::presets::named(name).ok_or_else(|| {
@@ -725,6 +823,15 @@ impl ExperimentConfig {
         }
         if let Some(sc) = &self.scenario {
             o.insert("scenario", sc.to_json());
+        }
+        if let Some(sv) = &self.serving {
+            // Full table so provenance round-trips through `apply_json`.
+            let mut s = JsonObj::new();
+            s.insert("listen", Json::Str(sv.listen.clone()));
+            s.insert("accept_queue", Json::Num(sv.accept_queue as f64));
+            s.insert("read_timeout_ms", Json::Num(sv.read_timeout_ms as f64));
+            s.insert("retry_after_ms", Json::Num(sv.retry_after_ms as f64));
+            o.insert("serving", Json::Obj(s));
         }
         o.insert("devices", Json::Num(self.federation.devices as f64));
         o.insert(
@@ -1050,6 +1157,65 @@ mod tests {
         c.algo = Algo::Sgd;
         c.local_update = LocalUpdate::Sgd;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn serving_table_overlay_and_validation() {
+        let doc = crate::util::toml::parse(
+            r#"
+            mode = "threads"
+
+            [serving]
+            listen = "127.0.0.1:4100"
+            accept_queue = 8
+            read_timeout_ms = 25
+            retry_after_ms = 10
+            "#,
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        cfg.validate().unwrap();
+        let sv = cfg.serving.as_ref().expect("serving parsed");
+        assert_eq!(sv.listen, "127.0.0.1:4100");
+        assert_eq!(sv.accept_queue, 8);
+        assert_eq!(sv.read_timeout_ms, 25);
+        assert_eq!(sv.retry_after_ms, 10);
+        // Provenance round-trips through apply_json.
+        let mut back = ExperimentConfig::default();
+        back.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.serving, cfg.serving);
+
+        // Partial table keeps defaults for the rest.
+        let doc =
+            crate::util::toml::parse("mode = \"threads\"\n[serving]\naccept_queue = 4").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        cfg.validate().unwrap();
+        let sv = cfg.serving.as_ref().unwrap();
+        assert_eq!(sv.accept_queue, 4);
+        assert_eq!(sv.listen, ServingConfig::default().listen);
+
+        // Strict table semantics: unknown keys and wrong types error.
+        let doc = crate::util::toml::parse("[serving]\nqueue = 4").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse("[serving]\naccept_queue = \"big\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse("serving = \"yes\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+
+        // Serving without threads mode, or with degenerate knobs, must
+        // not validate.
+        let mut cfg = ExperimentConfig::default();
+        cfg.serving = Some(ServingConfig::default());
+        assert!(cfg.validate().is_err(), "virtual mode cannot serve");
+        cfg.mode = ExecMode::Threads;
+        cfg.validate().unwrap();
+        cfg.serving.as_mut().unwrap().accept_queue = 0;
+        assert!(cfg.validate().is_err());
+        cfg.serving.as_mut().unwrap().accept_queue = 1;
+        cfg.serving.as_mut().unwrap().read_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -14,12 +14,15 @@
 //! | [`FedAsync`]                  | apply immediately with `α·s(t−τ)` (paper Alg. 1)   |
 //! | [`Buffered`]                  | stage K updates, apply one normalized blend        |
 //! | [`DistanceAdaptive`]          | α scaled by `‖x_new − x_t‖ / ‖x_t‖`, clamped       |
+//! | [`ShedGate`]                  | shed while the admission gate is saturated, else inner |
 //!
-//! The contract is a three-way decision per offered update — apply
+//! The contract is a four-way decision per offered update — apply
 //! (with an effective α), buffer (absorb into a staging blend, model
-//! unchanged), or drop (staleness cutoff) — plus a [`Aggregator::flush`]
-//! hook the engine calls at end-of-run so a partially filled staging
-//! buffer is committed rather than silently lost (*flush-on-drain*).
+//! unchanged), drop (staleness cutoff), or shed (admission control
+//! refused the update before it reached the aggregation pipeline) —
+//! plus a [`Aggregator::flush`] hook the engine calls at end-of-run so
+//! a partially filled staging buffer is committed rather than silently
+//! lost (*flush-on-drain*).
 //!
 //! [`FedAsync`] reproduces the pre-refactor updater decision-for-decision
 //! — the golden sampled trace (`rust/tests/golden_trace.rs`) pins it
@@ -35,10 +38,12 @@
 pub mod buffered;
 pub mod distance;
 pub mod fedasync;
+pub mod shed;
 
 pub use buffered::Buffered;
 pub use distance::DistanceAdaptive;
 pub use fedasync::FedAsync;
+pub use shed::{AdmissionGate, ShedGate};
 
 use std::sync::Arc;
 
@@ -67,6 +72,11 @@ pub enum AggregateDecision {
     Buffer,
     /// Update rejected (staleness above the strategy's cutoff).
     Drop,
+    /// Update refused by admission control before it entered the
+    /// aggregation pipeline (server over capacity).  Unlike `Drop`, a
+    /// shed update is *not* an arrival: the serving plane answers it
+    /// with a retry-after frame and the client re-offers later.
+    Shed,
 }
 
 /// One server aggregation rule, driven per offered update by

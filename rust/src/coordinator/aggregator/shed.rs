@@ -1,0 +1,218 @@
+//! Admission control for the serving plane: a bounded in-flight gate and
+//! an [`Aggregator`] wrapper that sheds offers while the gate is
+//! saturated.
+//!
+//! The serving plane ([`crate::serving`]) admits each incoming
+//! `ClientUpdate` through an [`AdmissionGate`]: a connection that cannot
+//! claim a slot answers the client with a retry-after frame immediately,
+//! so a flooded listener degrades by shedding load instead of queueing
+//! without bound.  The [`ShedGate`] wrapper carries the same policy into
+//! the aggregation layer — if the gate has re-saturated between
+//! admission and the engine's offer, the offer resolves to
+//! [`AggregateDecision::Shed`] and flows back to the client as the same
+//! retry-after frame.  In-process modes never construct a `ShedGate`,
+//! so their decision streams (and the golden trace) are untouched.
+//!
+//! Shed updates are deliberately *not* arrivals: they never reach the
+//! staleness histogram or the applied/buffered/dropped totals, so the
+//! conservation law `arrivals == applied + buffered + dropped` (per
+//! strategy) continues to hold with sheds accounted separately.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::aggregator::{AggregateDecision, Aggregator};
+use crate::runtime::ParamVec;
+
+/// Bounded count of updates admitted but not yet resolved (offered,
+/// shed, or abandoned).  Lock-free: connections race `try_enter` on the
+/// accept path while the engine releases slots on the offer path.
+#[derive(Debug)]
+pub struct AdmissionGate {
+    capacity: usize,
+    inflight: AtomicUsize,
+}
+
+impl AdmissionGate {
+    /// A gate admitting at most `capacity` concurrent updates
+    /// (`capacity` is clamped to ≥ 1: a gate that admits nothing would
+    /// wedge every client in retry loops forever).
+    pub fn new(capacity: usize) -> AdmissionGate {
+        AdmissionGate { capacity: capacity.max(1), inflight: AtomicUsize::new(0) }
+    }
+
+    /// The bound this gate enforces.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Updates currently holding a slot.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Every slot is taken right now.
+    pub fn is_saturated(&self) -> bool {
+        self.inflight() >= self.capacity
+    }
+
+    /// Claim a slot; `false` when the gate is full.  A successful claim
+    /// must be paired with exactly one [`AdmissionGate::leave`].
+    pub fn try_enter(&self) -> bool {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.capacity {
+                return false;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Release a slot claimed by [`AdmissionGate::try_enter`].
+    pub fn leave(&self) {
+        let prev = self.inflight.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "AdmissionGate::leave without a matching try_enter");
+        if prev == 0 {
+            // Release-without-enter in a release build: undo rather than
+            // letting the counter wrap to usize::MAX (a permanent shed).
+            self.inflight.store(0, Ordering::Release);
+        }
+    }
+}
+
+/// [`Aggregator`] wrapper that resolves offers to
+/// [`AggregateDecision::Shed`] while its [`AdmissionGate`] is saturated
+/// and delegates to the inner strategy otherwise.
+///
+/// The gate is shared with the serving plane's connection layer: the
+/// normal admission check happens there (a refused connection never
+/// reaches the engine at all), and this wrapper is the second line of
+/// defense for updates that were admitted while capacity was available
+/// but reached the updater after the gate re-filled.
+pub struct ShedGate {
+    inner: Box<dyn Aggregator>,
+    gate: Arc<AdmissionGate>,
+}
+
+impl ShedGate {
+    /// Wrap `inner` behind `gate`.
+    pub fn new(inner: Box<dyn Aggregator>, gate: Arc<AdmissionGate>) -> ShedGate {
+        ShedGate { inner, gate }
+    }
+
+    /// The shared gate (the serving plane's connection layer holds the
+    /// other reference).
+    pub fn gate(&self) -> &Arc<AdmissionGate> {
+        &self.gate
+    }
+}
+
+impl Aggregator for ShedGate {
+    fn name(&self) -> &'static str {
+        // Transparent for labels: the gate is an admission policy, not
+        // an aggregation rule.
+        self.inner.name()
+    }
+
+    fn offer(
+        &mut self,
+        x_new: &[f32],
+        current: &[f32],
+        staleness: u64,
+        t: u64,
+    ) -> AggregateDecision {
+        if self.gate.is_saturated() {
+            return AggregateDecision::Shed;
+        }
+        self.inner.offer(x_new, current, staleness, t)
+    }
+
+    fn take_staged(&mut self) -> Option<ParamVec> {
+        self.inner.take_staged()
+    }
+
+    fn flush(&mut self, t: u64) -> Option<(ParamVec, f64)> {
+        self.inner.flush(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{StalenessConfig, StalenessFn};
+    use crate::coordinator::aggregator::FedAsync;
+    use crate::coordinator::staleness::AlphaController;
+
+    fn inner() -> Box<dyn Aggregator> {
+        Box::new(FedAsync::new(AlphaController::new(
+            0.5,
+            1.0,
+            usize::MAX,
+            &StalenessConfig { max: 16, func: StalenessFn::Constant, drop_above: None },
+        )))
+    }
+
+    #[test]
+    fn gate_admits_exactly_capacity() {
+        let gate = AdmissionGate::new(3);
+        assert!(gate.try_enter() && gate.try_enter() && gate.try_enter());
+        assert!(gate.is_saturated());
+        assert!(!gate.try_enter(), "4th entry must be refused");
+        gate.leave();
+        assert!(gate.try_enter(), "released slot is reusable");
+        assert_eq!(gate.inflight(), 3);
+    }
+
+    #[test]
+    fn gate_capacity_floor_is_one() {
+        let gate = AdmissionGate::new(0);
+        assert_eq!(gate.capacity(), 1);
+        assert!(gate.try_enter());
+        assert!(!gate.try_enter());
+    }
+
+    #[test]
+    fn concurrent_entries_never_exceed_capacity() {
+        let gate = Arc::new(AdmissionGate::new(4));
+        let admitted: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..16)
+                .map(|_| {
+                    let gate = Arc::clone(&gate);
+                    s.spawn(move || gate.try_enter())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gate thread")).collect()
+        });
+        let entered = admitted.iter().filter(|&&a| a).count();
+        assert_eq!(entered, 4, "exactly capacity threads admitted");
+        assert_eq!(gate.inflight(), 4);
+    }
+
+    #[test]
+    fn shed_gate_sheds_only_while_saturated() {
+        let gate = Arc::new(AdmissionGate::new(1));
+        let mut agg = ShedGate::new(inner(), Arc::clone(&gate));
+        assert_eq!(agg.name(), "fedasync", "gate is transparent for labels");
+        // Gate free: delegates.
+        assert!(matches!(
+            agg.offer(&[1.0; 2], &[0.0; 2], 1, 1),
+            AggregateDecision::Apply { .. }
+        ));
+        // Gate saturated: sheds without consulting the inner strategy.
+        assert!(gate.try_enter());
+        assert_eq!(agg.offer(&[1.0; 2], &[0.0; 2], 1, 2), AggregateDecision::Shed);
+        gate.leave();
+        assert!(matches!(
+            agg.offer(&[1.0; 2], &[0.0; 2], 1, 2),
+            AggregateDecision::Apply { .. }
+        ));
+    }
+}

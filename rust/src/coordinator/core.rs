@@ -54,6 +54,22 @@ impl<'a> UpdaterCore<'a> {
     ) -> UpdaterCore<'a> {
         let pool = pool.unwrap_or_else(|| Arc::new(BufferPool::new(4)));
         let agg = aggregator::for_config(cfg, Some(Arc::clone(&pool)));
+        Self::with_aggregator(cfg, initial, history, test, pool, agg)
+    }
+
+    /// Like [`UpdaterCore::new`] but with an explicit aggregation
+    /// strategy instead of the config-selected one — the serving plane
+    /// uses this to wrap the configured strategy in a
+    /// [`ShedGate`](crate::coordinator::aggregator::ShedGate) without
+    /// changing any in-process mode's construction path.
+    pub fn with_aggregator(
+        cfg: &ExperimentConfig,
+        initial: ParamVec,
+        history: usize,
+        test: &'a Dataset,
+        pool: Arc<BufferPool>,
+        agg: Box<dyn aggregator::Aggregator>,
+    ) -> UpdaterCore<'a> {
         let updater = Updater::with_pool(agg, MixEngine::Native, pool);
         UpdaterCore {
             updater,
@@ -75,6 +91,17 @@ impl<'a> UpdaterCore<'a> {
         loss: f32,
     ) -> Result<UpdateOutcome, RuntimeError> {
         let out = self.updater.apply(trainer, &mut self.store, x_new, tau)?;
+        if out.shed {
+            // Admission control refused the update before it entered the
+            // aggregation pipeline: the round trip happened (2 comms) but
+            // this is not an arrival — no gradients, no histogram entry,
+            // no applied/buffered/dropped total.  The serving plane
+            // answers it with a retry-after frame and the client
+            // re-offers, at which point it is accounted normally.
+            self.rec.counters.shed += 1;
+            self.rec.counters.comms += 2;
+            return Ok(out);
+        }
         self.rec.counters.comms += 2;
         if out.applied || out.buffered {
             self.rec.counters.gradients += trainer.local_iters() as u64;

@@ -88,6 +88,7 @@ impl<'a> EvalRecorder<'a> {
             applied: counters.applied,
             buffered: counters.buffered,
             dropped: counters.dropped,
+            shed: counters.shed,
         };
         log.staleness_hist = counters.hist;
         log.sync_stream();

@@ -67,12 +67,27 @@ pub enum ComputeJob {
     Recycle(ParamVec),
 }
 
-/// Run the threaded FedAsync server; blocks until `cfg.epochs` updates.
-pub fn run_threaded(
+/// A running PJRT compute service: the job sender, the service thread's
+/// handle, the manifest's local iterations `H`, the generated federated
+/// data, and the manifest-selected initial parameters — everything a
+/// driver front-end (in-process threaded or the serving plane) needs to
+/// build a core and run the engine.
+pub(crate) struct PjrtService {
+    pub(crate) job_tx: mpsc::Sender<ComputeJob>,
+    pub(crate) svc: std::thread::JoinHandle<()>,
+    pub(crate) h: usize,
+    pub(crate) data: Arc<FederatedData>,
+    pub(crate) init: ParamVec,
+}
+
+/// Spawn the PJRT compute-service thread and wait for its ready
+/// handshake.  Shared by [`run_threaded`] and the serving plane's
+/// `--listen` entry ([`crate::serving::server::run_threaded_served`]).
+pub(crate) fn spawn_pjrt_service(
     model_dir: PathBuf,
     cfg: &ExperimentConfig,
     seed: u64,
-) -> Result<MetricsLog, RuntimeError> {
+) -> Result<PjrtService, RuntimeError> {
     let data = Arc::new(crate::federated::data::generate(&cfg.federation, seed));
     let part = crate::federated::partition::partition(
         &data.train,
@@ -81,7 +96,6 @@ pub fn run_threaded(
         seed,
     );
 
-    // ---------------------------------------------------- compute service
     let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
     let svc_data = Arc::clone(&data);
@@ -116,6 +130,16 @@ pub fn run_threaded(
             .collect::<Vec<f32>>()
     };
 
+    Ok(PjrtService { job_tx, svc, h, data, init })
+}
+
+/// Run the threaded FedAsync server; blocks until `cfg.epochs` updates.
+pub fn run_threaded(
+    model_dir: PathBuf,
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> Result<MetricsLog, RuntimeError> {
+    let PjrtService { job_tx, svc, h, data, init } = spawn_pjrt_service(model_dir, cfg, seed)?;
     let behavior = behavior_for(cfg, cfg.federation.devices, seed);
     let log = run_server_core(cfg, seed, &data.test, init, h, job_tx, behavior);
     let joined = svc.join();
@@ -132,10 +156,10 @@ pub fn run_threaded(
 /// `Arc` instead of copying the parameter vector — the engine always
 /// publishes before recording, so the cell's model *is* the one under
 /// evaluation (debug-asserted).
-struct ServiceTrainer {
-    job_tx: mpsc::Sender<ComputeJob>,
-    cell: Arc<SnapshotCell>,
-    h: usize,
+pub(crate) struct ServiceTrainer {
+    pub(crate) job_tx: mpsc::Sender<ComputeJob>,
+    pub(crate) cell: Arc<SnapshotCell>,
+    pub(crate) h: usize,
 }
 
 impl Trainer for ServiceTrainer {
@@ -216,6 +240,14 @@ pub fn run_server_core(
 /// into [`run_server_core`] (e.g. the closed-form quadratic problems in
 /// `analysis`).  Run it on its own thread and hand the matching sender to
 /// `run_server_core`.
+///
+/// Shutdown contract (drain-before-exit): when the last job sender
+/// drops, every job *already queued* in the channel is still answered
+/// before this loop returns — `recv` only disconnects once the queue is
+/// empty.  The serving plane leans on this: its shutdown path first
+/// resolves every admitted update (ack or retry-after) and only then
+/// drops the job sender, so a disconnecting swarm never loses an acked
+/// update (`rust/tests/serving.rs` pins both halves).
 pub fn serve_native<T: Trainer>(trainer: T, devices: usize, jobs: Receiver<ComputeJob>) {
     let data = crate::analysis::quadratic::dummy_dataset();
     let mut fleet = crate::analysis::quadratic::dummy_fleet(devices, 7);

@@ -140,6 +140,10 @@ pub struct UpdateOutcome {
     pub applied: bool,
     /// The update was absorbed into an aggregation staging buffer.
     pub buffered: bool,
+    /// Admission control refused the update ([`AggregateDecision::Shed`]):
+    /// it never entered the aggregation pipeline and does not count as an
+    /// arrival — the serving plane answers it with a retry-after frame.
+    pub shed: bool,
     /// α_t actually used (0 when dropped or merely buffered).
     pub alpha_eff: f64,
     /// Version distance `t − τ` of the offered update.
@@ -195,10 +199,19 @@ impl Updater {
         debug_assert!(tau < t_next, "update from the future: tau={tau} t={t_next}");
         let staleness = t_next.saturating_sub(tau);
         match self.agg.offer(x_new, store.current(), staleness, t_next) {
+            AggregateDecision::Shed => Ok(UpdateOutcome {
+                version: store.current_version(),
+                applied: false,
+                buffered: false,
+                shed: true,
+                alpha_eff: 0.0,
+                staleness,
+            }),
             AggregateDecision::Drop => Ok(UpdateOutcome {
                 version: store.current_version(),
                 applied: false,
                 buffered: false,
+                shed: false,
                 alpha_eff: 0.0,
                 staleness,
             }),
@@ -206,6 +219,7 @@ impl Updater {
                 version: store.current_version(),
                 applied: false,
                 buffered: true,
+                shed: false,
                 alpha_eff: 0.0,
                 staleness,
             }),
@@ -215,6 +229,7 @@ impl Updater {
                     version,
                     applied: true,
                     buffered: false,
+                    shed: false,
                     alpha_eff: alpha,
                     staleness,
                 })
@@ -233,6 +248,7 @@ impl Updater {
                     version,
                     applied: true,
                     buffered: true,
+                    shed: false,
                     alpha_eff: alpha,
                     staleness,
                 })
@@ -260,6 +276,7 @@ impl Updater {
             version,
             applied: true,
             buffered: false,
+            shed: false,
             alpha_eff: alpha,
             staleness: 0,
         }))

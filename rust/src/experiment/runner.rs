@@ -53,8 +53,15 @@ pub fn run_once<T: Trainer>(
         ),
         // Engine with the threaded driver; threads mode loads its own
         // runtime in the compute-service thread, `trainer` is unused.
+        // With a `[serving]` block the same engine goes behind a TCP
+        // listener instead of the in-process worker pool (`--listen`).
         (Algo::FedAsync, ExecMode::Threads) => {
-            server::run_threaded(crate::runtime::model_dir(&cfg.model), cfg, seed)
+            let dir = crate::runtime::model_dir(&cfg.model);
+            if cfg.serving.is_some() {
+                crate::serving::run_threaded_served(dir, cfg, seed)
+            } else {
+                server::run_threaded(dir, cfg, seed)
+            }
         }
         (Algo::FedAvg { k }, _) => fedavg::run_fedavg(
             trainer,

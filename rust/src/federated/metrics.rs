@@ -74,6 +74,11 @@ pub struct AccountingTotals {
     pub buffered: u64,
     /// Offers rejected outright by the staleness cutoff.
     pub dropped: u64,
+    /// Offers refused by serving-plane admission control *before* they
+    /// entered the aggregation pipeline.  Sheds are not arrivals — the
+    /// client re-offers after a retry-after delay — so they sit outside
+    /// the `arrivals == applied + buffered + dropped` conservation law.
+    pub shed: u64,
 }
 
 /// Incremental row emitter: rows are formatted into a reusable line
@@ -349,6 +354,7 @@ impl MetricsLog {
             totals.applied += r.totals.applied;
             totals.buffered += r.totals.buffered;
             totals.dropped += r.totals.dropped;
+            totals.shed += r.totals.shed;
         }
         MetricsLog {
             label,
@@ -533,6 +539,11 @@ pub struct RunningCounters {
     /// into rows (the CSV schema is golden-trace pinned); surfaced via
     /// [`AccountingTotals`] for conservation checks.
     pub dropped: u64,
+    /// Cumulative offers shed by serving-plane admission control.  Like
+    /// `dropped`, not a row column; surfaced via [`AccountingTotals`].
+    /// Sheds never reach `record_update`, so `hist.total()` keeps
+    /// counting true arrivals only.
+    pub shed: u64,
     /// Cumulative staleness distribution (never reset by `snapshot`).
     pub hist: StalenessHist,
     /// Sum/count of α_t since last snapshot.

@@ -26,6 +26,7 @@
 //! | `manifest`        | no panic on arbitrary manifest-shaped JSON           |
 //! | `event_queue`     | timer wheel ≡ retired heap ≡ model on (time, seq)    |
 //! | `kernel_equivalence` | scalar vs lane-chunked kernels agree (bitwise / ≤1e-6) |
+//! | `wire_codec`      | serving-plane frames: no panic/over-read; round-trip; truncation-safe |
 //! | `differential`    | sampled/emergent/threaded drivers agree (see below)  |
 //!
 //! The differential target is the headline: it draws a random valid
@@ -72,7 +73,7 @@ pub fn find(name: &str) -> Option<&'static TargetSpec> {
     TARGETS.iter().find(|t| t.name == name)
 }
 
-static TARGETS: [TargetSpec; 9] = [
+static TARGETS: [TargetSpec; 10] = [
     TargetSpec {
         name: "toml",
         about: "util::toml::parse on raw and grammar-adjacent documents",
@@ -112,6 +113,11 @@ static TARGETS: [TargetSpec; 9] = [
         name: "kernel_equivalence",
         about: "scalar vs lane-chunked kernels: bitwise + tolerance contracts",
         run: kernel_equivalence_target,
+    },
+    TargetSpec {
+        name: "wire_codec",
+        about: "serving-plane wire frames: decode totality, round-trip, truncation",
+        run: wire_codec_target,
     },
     TargetSpec {
         name: "differential",
@@ -603,6 +609,95 @@ fn kernel_equivalence_target(src: &mut ByteSource) {
     assert!(
         ((fast - exact) / denom).abs() <= 1e-6,
         "moment evaluator drifted past 1e-6 relative at n={n}: {exact} vs {fast}"
+    );
+}
+
+// --------------------------------------------------------------- wire codec
+
+/// Assemble a random (valid) serving-plane frame from source draws.
+fn gen_frame(src: &mut ByteSource) -> crate::serving::wire::Frame {
+    use crate::serving::wire::Frame;
+    let params = |src: &mut ByteSource| -> Vec<f32> {
+        (0..src.len_biased(24)).map(|_| src.f64_in(-1e6, 1e6) as f32).collect()
+    };
+    match src.index(7) {
+        0 => Frame::PullModel,
+        1 => Frame::ModelSnapshot { version: src.range_u64(0, 1 << 40), params: params(src) },
+        2 => Frame::ClientUpdate {
+            device: src.u32() % 4096,
+            tau: src.range_u64(0, 1 << 40),
+            loss: src.f64_in(-1e3, 1e3) as f32,
+            params: params(src),
+        },
+        3 => Frame::Ack {
+            version: src.range_u64(0, 1 << 40),
+            applied: src.bool(),
+            staleness: src.range_u64(0, 1 << 20),
+        },
+        4 => Frame::Shed { retry_after_ms: src.u32() % 100_000 },
+        5 => Frame::Control { body: gen_string(src) },
+        _ => Frame::ControlReply { body: gen_string(src) },
+    }
+}
+
+/// Serving-plane codec target.  Raw mode streams arbitrary bytes through
+/// [`decode`](crate::serving::wire::decode) — it must never panic, never
+/// consume more than it was given, and always make progress on a
+/// complete frame.  Structured mode builds valid frames and checks the
+/// encode→decode round trip plus the truncation contract: every strict
+/// prefix of a valid frame is `Ok(None)` (read more), never an error.
+fn wire_codec_target(src: &mut ByteSource) {
+    use crate::serving::wire::{decode, encode, HEADER_LEN};
+
+    if src.bool() {
+        // Raw: stream-decode the remaining budget as one hostile buffer.
+        let buf = src.rest();
+        let mut at = 0usize;
+        loop {
+            match decode(&buf[at..]) {
+                Ok(Some((_, consumed))) => {
+                    assert!(
+                        consumed >= HEADER_LEN && at + consumed <= buf.len(),
+                        "decode over-read: consumed {consumed} of {} at {at}",
+                        buf.len() - at
+                    );
+                    at += consumed;
+                }
+                Ok(None) | Err(_) => break, // incomplete prefix / hostile bytes
+            }
+        }
+        return;
+    }
+
+    // Structured: round-trip a batch of valid frames back-to-back, then
+    // re-check one of them under truncation and a flipped version byte.
+    let frames: Vec<_> = (0..1 + src.len_biased(4)).map(|_| gen_frame(src)).collect();
+    let mut bytes = Vec::new();
+    for f in &frames {
+        crate::serving::wire::encode_into(f, &mut bytes);
+    }
+    let mut at = 0usize;
+    for want in &frames {
+        let (got, n) = decode(&bytes[at..])
+            .expect("encoded frame failed to decode")
+            .expect("encoded frame decoded as incomplete");
+        assert_eq!(&got, want, "round trip changed the frame");
+        at += n;
+    }
+    assert_eq!(at, bytes.len(), "round trip left trailing bytes");
+
+    let one = encode(&frames[0]);
+    let cut = src.index(one.len());
+    assert_eq!(
+        decode(&one[..cut]).expect("strict prefix of a valid frame must not error"),
+        None,
+        "strict prefix decoded as complete"
+    );
+    let mut wrong = one.clone();
+    wrong[2] = wrong[2].wrapping_add(1 + (src.u8() % 0xFE));
+    assert!(
+        matches!(decode(&wrong), Err(crate::serving::wire::WireError::Version { .. })),
+        "flipped version byte must be a version error"
     );
 }
 

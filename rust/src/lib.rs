@@ -70,7 +70,10 @@
 //! substrates: rng, json, toml, cli, logging, stats, property testing),
 //! and [`fuzzing`] (deterministic structure-aware fuzz targets, the
 //! differential-execution harness, and the regression-corpus runner
-//! behind the `fuzz_driver` binary).
+//! behind the `fuzz_driver` binary).  The [`serving`] plane puts the
+//! threaded server behind a real `TcpListener` — a fuzzed pure-std wire
+//! codec, admission control with retry-after shedding, and a swarm
+//! client — without touching any of the accounting above.
 
 pub mod analysis;
 pub mod config;
@@ -80,4 +83,5 @@ pub mod federated;
 pub mod fuzzing;
 pub mod runtime;
 pub mod scenario;
+pub mod serving;
 pub mod util;

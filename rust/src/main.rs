@@ -105,6 +105,8 @@ fn train_spec() -> CommandSpec {
             None,
             "client population: preset name or TOML file with [scenario] keys",
         )
+        .opt("listen", None, "serve the wire protocol on ADDR (forces threads mode)")
+        .opt("connect", None, "join a served run at ADDR as a quadratic swarm client")
         .opt("out", Some("results/train"), "output directory")
         .flag("list-presets", "print preset names and exit")
         .flag("list-scenarios", "print scenario preset names and exit")
@@ -188,6 +190,15 @@ fn build_config(a: &Args) -> Result<ExperimentConfig, String> {
     if let Some(spec) = a.get("scenario") {
         cfg.scenario = Some(resolve_scenario(&spec)?);
     }
+    if let Some(addr) = a.get("listen") {
+        // `--listen` puts the threaded engine behind a TcpListener; the
+        // rest of a TOML `[serving]` block (queue depth, timeouts) is
+        // kept if the config carried one.
+        let mut serving = cfg.serving.take().unwrap_or_default();
+        serving.listen = addr;
+        cfg.mode = ExecMode::Threads;
+        cfg.serving = Some(serving);
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -247,6 +258,13 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     let cfg = build_config(&a)?;
     let out: PathBuf = a.str("out").map_err(cli_err)?.into();
 
+    if let Some(addr) = a.get("connect") {
+        if a.supplied("listen") {
+            return Err("--listen and --connect are mutually exclusive".into());
+        }
+        return run_swarm_client(&addr, &cfg);
+    }
+
     log_info!("train", "loading artifacts for model {:?}", cfg.model);
     let rt = ModelRuntime::load(&model_dir(&cfg.model)).map_err(|e| e.to_string())?;
     log_info!(
@@ -272,6 +290,38 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     log.write_csv(&out, &stem).map_err(|e| e.to_string())?;
     print_series_tail(&log);
     println!("wrote {}", out.join(format!("{stem}.csv")).display());
+    Ok(())
+}
+
+/// `train --connect ADDR`: join a served run as a swarm client instead
+/// of running an engine. Artifact-free — the client trains the
+/// closed-form quadratic plane (the same one `serve_native` and the
+/// swarm example use), so it needs no PJRT model directory.
+fn run_swarm_client(addr: &str, cfg: &ExperimentConfig) -> Result<(), String> {
+    use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+    use fedasync::serving::{run_quad_client, ClientLoop};
+
+    let devices = cfg.federation.devices;
+    let behavior = fedasync::scenario::behavior_for(cfg, devices, cfg.seed);
+    let trainer = QuadraticProblem::new(devices, 6, 0.5, 2.0, 2.0, 0.05, 5, 3);
+    let mut fleet = dummy_fleet(devices, 7);
+    let data = dummy_dataset();
+    let loop_cfg = ClientLoop {
+        behavior: behavior.as_ref(),
+        devices,
+        epochs: cfg.epochs as u64,
+        gamma: cfg.gamma,
+        rho: cfg.rho,
+        seed: cfg.seed,
+        deadline: std::time::Duration::from_secs(600),
+    };
+    log_info!("train", "joining served run at {addr} as a swarm client");
+    let r = run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "swarm client done: pushed {} (applied {}, acked {}), shed {} times",
+        r.pushed, r.applied, r.acked, r.shed
+    );
     Ok(())
 }
 

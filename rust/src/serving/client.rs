@@ -1,0 +1,320 @@
+//! Swarm client: pull / train / push over the wire protocol, with
+//! bounded exponential backoff on shed.
+//!
+//! [`SwarmClient`] is the thin blocking protocol driver (one frame out,
+//! one frame back).  [`run_quad_client`] is a full client loop over any
+//! in-process [`Trainer`]: it plays the in-process threaded mode's
+//! scheduler *and* worker for one connection — pick a present device,
+//! sleep the scenario's scaled link latencies, train locally, push, and
+//! back off when the server sheds — which is what lets the loopback
+//! conformance suite compare a served run against the in-process
+//! threaded driver band-for-band (`rust/tests/serving.rs`), and what
+//! `examples/swarm.rs` runs one-per-process.
+
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::engine::threaded::TIME_SCALE;
+use crate::coordinator::{TaskScratch, Trainer};
+use crate::federated::data::Dataset;
+use crate::federated::device::SimDevice;
+use crate::runtime::ParamVec;
+use crate::scenario::{pick_present, ClientBehavior};
+use crate::serving::wire::{write_frame, Frame, FrameReader, ServerStatus, WireError};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Bounded exponential backoff with multiplicative jitter.
+///
+/// Delays double from `base` up to `cap`; each draw is jittered in
+/// `[0.5, 1.5)×` so a shed swarm doesn't retry in lockstep.  [`reset`]
+/// after any accepted push.
+///
+/// [`reset`]: Backoff::reset
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// Backoff starting at `base`, never exceeding `cap`.
+    pub fn new(base: Duration, cap: Duration) -> Backoff {
+        Backoff { base, cap: cap.max(base), attempt: 0 }
+    }
+
+    /// Number of consecutive sheds absorbed since the last reset.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Next delay: `min(base · 2^attempt, cap)` with jitter, at least
+    /// the server's `retry_after` hint.
+    pub fn next_delay(&mut self, retry_after: Duration, rng: &mut Rng) -> Duration {
+        let exp = self.base.as_secs_f64() * 2f64.powi(self.attempt.min(16) as i32);
+        self.attempt = self.attempt.saturating_add(1);
+        let jittered = exp.min(self.cap.as_secs_f64()) * rng.uniform(0.5, 1.5);
+        Duration::from_secs_f64(jittered).max(retry_after).min(self.cap)
+    }
+
+    /// An offer got through: start the ladder over.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// What the server did with a pushed update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Admitted and resolved (applied into the model or not).
+    Acked {
+        /// Server version after resolution.
+        version: u64,
+        /// The update advanced the global model.
+        applied: bool,
+    },
+    /// Refused by admission control; retry after the given delay.
+    Shed {
+        /// Server's suggested backoff.
+        retry_after: Duration,
+    },
+}
+
+/// Blocking protocol driver over one TCP connection.
+pub struct SwarmClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    scratch: Vec<u8>,
+}
+
+impl SwarmClient {
+    /// Connect to a serving-plane listener.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<SwarmClient, WireError> {
+        let stream = TcpStream::connect(addr).map_err(|e| WireError::Io(e.to_string()))?;
+        Ok(SwarmClient { stream, reader: FrameReader::new(), scratch: Vec::new() })
+    }
+
+    /// One request/response round trip.  A read timeout on the socket
+    /// (`Ok(None)` from the reader) just keeps waiting: the serving
+    /// plane always answers or closes.
+    fn round_trip(&mut self, request: &Frame) -> Result<Frame, WireError> {
+        write_frame(&mut self.stream, request, &mut self.scratch)?;
+        self.stream.flush().map_err(|e| WireError::Io(e.to_string()))?;
+        loop {
+            if let Some(frame) = self.reader.read_frame(&mut self.stream)? {
+                return Ok(frame);
+            }
+        }
+    }
+
+    /// Fetch the current global model.
+    pub fn pull(&mut self) -> Result<(u64, ParamVec), WireError> {
+        match self.round_trip(&Frame::PullModel)? {
+            Frame::ModelSnapshot { version, params } => Ok((version, params)),
+            other => Err(WireError::Malformed(unexpected(&other))),
+        }
+    }
+
+    /// Offer one locally trained update.
+    pub fn push(
+        &mut self,
+        device: u32,
+        tau: u64,
+        loss: f32,
+        params: ParamVec,
+    ) -> Result<PushOutcome, WireError> {
+        let req = Frame::ClientUpdate { device, tau, loss, params };
+        match self.round_trip(&req)? {
+            Frame::Ack { version, applied, .. } => Ok(PushOutcome::Acked { version, applied }),
+            Frame::Shed { retry_after_ms } => Ok(PushOutcome::Shed {
+                retry_after: Duration::from_millis(retry_after_ms as u64),
+            }),
+            other => Err(WireError::Malformed(unexpected(&other))),
+        }
+    }
+
+    /// Query the JSON control endpoint for the server's live counters.
+    pub fn status(&mut self) -> Result<ServerStatus, WireError> {
+        let req = Frame::Control { body: r#"{"op":"status"}"#.into() };
+        let Frame::ControlReply { body } = self.round_trip(&req)? else {
+            return Err(WireError::Malformed("expected a control reply"));
+        };
+        let json =
+            Json::parse(&body).map_err(|_| WireError::Malformed("status reply is not JSON"))?;
+        ServerStatus::from_json(&json).map_err(|_| WireError::Malformed("status reply shape"))
+    }
+}
+
+fn unexpected(frame: &Frame) -> &'static str {
+    match frame {
+        Frame::PullModel => "unexpected PullModel reply",
+        Frame::ModelSnapshot { .. } => "unexpected ModelSnapshot reply",
+        Frame::ClientUpdate { .. } => "unexpected ClientUpdate reply",
+        Frame::Ack { .. } => "unexpected Ack reply",
+        Frame::Shed { .. } => "unexpected Shed reply",
+        Frame::Control { .. } => "unexpected Control reply",
+        Frame::ControlReply { .. } => "unexpected ControlReply reply",
+    }
+}
+
+/// What one client loop did, for conformance checks and `bench_net`.
+#[derive(Debug, Default)]
+pub struct ClientReport {
+    /// Updates pushed (each counted once, however many sheds preceded it).
+    pub pushed: u64,
+    /// Pushes the server acked.
+    pub acked: u64,
+    /// Acked pushes that advanced the global model.
+    pub applied: u64,
+    /// Shed replies absorbed (each triggers one backoff sleep).
+    pub shed: u64,
+    /// Per-push round-trip latency (send → ack/shed), milliseconds.
+    pub push_latency_ms: Vec<f64>,
+}
+
+/// Knobs for [`run_quad_client`].
+pub struct ClientLoop<'a> {
+    /// Scenario physics shared with the server (presence, slowdowns,
+    /// link latencies) — the client plays scheduler + worker.
+    pub behavior: &'a dyn ClientBehavior,
+    /// Fleet size (device ids are drawn from `0..devices`).
+    pub devices: usize,
+    /// The server's epoch target: the loop exits once the pulled
+    /// version reaches it.
+    pub epochs: u64,
+    /// Learning rate γ for local training.
+    pub gamma: f32,
+    /// Proximal weight ρ (0 disables the anchor — Algorithm 1 Option I).
+    pub rho: f32,
+    /// Rng seed for device picks, latencies, and backoff jitter.
+    pub seed: u64,
+    /// Hard wallclock bound: exit (cleanly) when exceeded even if the
+    /// target version was never observed — a liveness net for tests and
+    /// the swarm example.
+    pub deadline: Duration,
+}
+
+/// Run a full swarm-client loop over an in-process trainer until the
+/// server's epoch target is reached, the connection drops, or the
+/// deadline passes.  Connection loss after the first successful pull is
+/// a clean exit (the server tears the listener down once its target is
+/// met); before it, the error propagates.
+pub fn run_quad_client<T: Trainer>(
+    addr: impl ToSocketAddrs,
+    trainer: &T,
+    fleet: &mut [SimDevice],
+    data: &Dataset,
+    cfg: &ClientLoop<'_>,
+) -> Result<ClientReport, WireError> {
+    let mut client = SwarmClient::connect(addr)?;
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x51AB);
+    let mut backoff = Backoff::new(Duration::from_millis(5), Duration::from_millis(200));
+    let mut scratch = TaskScratch::new();
+    let mut report = ClientReport::default();
+    let started = Instant::now();
+    let mut ever_pulled = false;
+
+    while started.elapsed() < cfg.deadline {
+        let (tau, params) = match client.pull() {
+            Ok(snap) => snap,
+            Err(_) if ever_pulled => break, // server done and gone
+            Err(e) => return Err(e),
+        };
+        ever_pulled = true;
+        if tau >= cfg.epochs {
+            break;
+        }
+        // Scheduler half: a present device checks in, with jitter.
+        let p = (tau as f64 / cfg.epochs as f64).min(1.0);
+        let device = pick_present(cfg.devices, cfg.behavior, p, &mut rng);
+        sleep_scaled(rng.uniform(0.0, 0.02));
+        // Worker half: scaled downlink, local training, scaled uplink.
+        let slow = cfg.behavior.slowdown(device, p);
+        sleep_scaled(cfg.behavior.link_latency(device, &mut rng) * slow);
+        let anchor = if cfg.rho > 0.0 { Some(params.as_slice()) } else { None };
+        let Ok((x_new, loss)) = trainer.local_train(
+            &params,
+            anchor,
+            &mut fleet[device],
+            data,
+            cfg.gamma,
+            cfg.rho,
+            &mut scratch,
+        ) else {
+            return Err(WireError::Io("local training failed".into()));
+        };
+        sleep_scaled(cfg.behavior.link_latency(device, &mut rng) * slow);
+
+        // Push, absorbing sheds with bounded backoff.  The trained
+        // update is re-offered as-is (its τ ages, which is exactly the
+        // staleness the server's α function is there to discount).
+        let mut update = x_new;
+        loop {
+            if started.elapsed() >= cfg.deadline {
+                return Ok(report);
+            }
+            let t0 = Instant::now();
+            let outcome = match client.push(device as u32, tau, loss, update.clone()) {
+                Ok(o) => o,
+                Err(_) => return Ok(report), // server gone mid-push
+            };
+            report.push_latency_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            match outcome {
+                PushOutcome::Acked { applied, .. } => {
+                    report.pushed += 1;
+                    report.acked += 1;
+                    report.applied += applied as u64;
+                    backoff.reset();
+                    break;
+                }
+                PushOutcome::Shed { retry_after } => {
+                    report.shed += 1;
+                    std::thread::sleep(backoff.next_delay(retry_after, &mut rng));
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Same wallclock scaling as the in-process threaded worker pool.
+fn sleep_scaled(virtual_seconds: f64) {
+    let real = virtual_seconds * TIME_SCALE;
+    if real > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(real));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_jittered_and_caps() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(80));
+        let mut rng = Rng::seed_from(7);
+        let mut last = Duration::ZERO;
+        for _ in 0..10 {
+            let d = b.next_delay(Duration::ZERO, &mut rng);
+            assert!(d <= Duration::from_millis(80), "cap respected: {d:?}");
+            assert!(d >= Duration::from_millis(5), "jitter floor: {d:?}");
+            last = d;
+        }
+        // After many doublings the ladder sits at the (jittered) cap.
+        assert!(last >= Duration::from_millis(40));
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let d = b.next_delay(Duration::ZERO, &mut rng);
+        assert!(d < Duration::from_millis(16), "reset restarts the ladder: {d:?}");
+    }
+
+    #[test]
+    fn backoff_honours_the_server_hint() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(100));
+        let mut rng = Rng::seed_from(7);
+        let d = b.next_delay(Duration::from_millis(50), &mut rng);
+        assert!(d >= Duration::from_millis(50), "retry_after is a floor: {d:?}");
+    }
+}

@@ -1,0 +1,36 @@
+//! The serving plane: the threaded FedAsync server behind a real
+//! `std::net::TcpListener`.
+//!
+//! Everything the in-process threaded mode does stays where it was — the
+//! [`engine`](crate::coordinator::engine) owns the invariant update
+//! sequence, the [`UpdaterCore`](crate::coordinator::core::UpdaterCore)
+//! owns α/drop/mix accounting, and the PJRT (or native mock) compute
+//! service answers [`ComputeJob`](crate::coordinator::server::ComputeJob)s.
+//! This module adds only the three network-facing pieces:
+//!
+//! * [`wire`] — a compact, versioned, length-prefixed binary codec for
+//!   the update/snapshot protocol (pure std; fuzzed and property-pinned),
+//! * [`server`] — a [`TimeDriver`](crate::coordinator::engine::TimeDriver)
+//!   whose "worker pool" is whatever TCP clients connect: frames become
+//!   [`Arrival`](crate::coordinator::engine::Arrival)s on the exact
+//!   `UpdaterCore::offer` path the in-process modes use, plus admission
+//!   control (bounded accept queue → retry-after frames),
+//! * [`client`] — a swarm client: pull/train/push loop with bounded
+//!   exponential backoff on [`Frame::Shed`], used by the loopback
+//!   conformance suite (`rust/tests/serving.rs`), the multi-process
+//!   `examples/swarm.rs`, and `benches/bench_net.rs`.
+//!
+//! Because arrivals funnel into the same core, a served run's accounting
+//! (α_t, staleness histogram, applied/buffered/dropped conservation) is
+//! identical to in-process threaded mode's — the loopback conformance
+//! suite pins this under the straggler and churn stress presets.
+//! DESIGN.md §"Serving plane" documents the frame format and the
+//! admission-control state machine.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{run_quad_client, Backoff, ClientLoop, ClientReport, PushOutcome, SwarmClient};
+pub use server::{run_served_core, run_threaded_served, ServingStats};
+pub use wire::{Frame, FrameReader, ServerStatus, WireError};

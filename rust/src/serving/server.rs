@@ -1,0 +1,607 @@
+//! The network time driver: TCP clients are the worker pool.
+//!
+//! ```text
+//!  swarm clients ──TCP──▶ acceptor ──▶ conn handlers ──▶ bounded queue
+//!                                         ▲    │ admission gate  │
+//!                                         │    ▼ (Shed when full)▼
+//!  snapshot cell ◀── publish ── engine ◀──┴─── NetDriver (this) ─┘
+//! ```
+//!
+//! Each connection handler speaks the [`wire`] protocol: `PullModel` is
+//! answered straight from the [`SnapshotCell`] (an `Arc` load, no engine
+//! involvement), while `ClientUpdate` must pass the [`AdmissionGate`]
+//! before it is queued for the engine as an [`Arrival`].  A saturated
+//! gate answers [`Frame::Shed`] immediately — the bounded queue can
+//! therefore **never block a handler**: every queued update holds a gate
+//! slot until the driver pops it, so at most `accept_queue` updates are
+//! queued-or-sending at once, which is exactly the channel's capacity.
+//!
+//! The engine pops arrivals in [`TimeDriver::next_completion`] and runs
+//! the *unchanged* `UpdaterCore::offer` path, so α/staleness/drop/mix
+//! accounting is identical to in-process threaded mode.  The handler's
+//! reply (`Ack` applied/buffered, or `Shed` from the second-line
+//! [`ShedGate`]) is classified in `after_delivery` from the core's
+//! counter deltas — the driver never re-implements the decision.
+//!
+//! Shutdown (the drain-before-exit contract pinned by
+//! `rust/tests/serving.rs`): set `stop`, wake and join the acceptor,
+//! then drain the pending queue — answering every still-queued update
+//! with `Shed` so no handler is left blocked on a reply — and only then
+//! join the handlers and let the job sender drop.  An update is acked
+//! only *after* its offer resolved, so a disconnecting swarm never loses
+//! an acked update.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{ExperimentConfig, ServingConfig};
+use crate::coordinator::aggregator::{self, AdmissionGate, ShedGate};
+use crate::coordinator::core::UpdaterCore;
+use crate::coordinator::engine::threaded::TIME_SCALE;
+use crate::coordinator::engine::{Arrival, Clock, Engine, TimeDriver};
+use crate::coordinator::server::{spawn_pjrt_service, ComputeJob, PjrtService, ServiceTrainer};
+use crate::coordinator::snapshot::{BufferPool, SnapshotCell};
+use crate::coordinator::updater::UpdateOutcome;
+use crate::coordinator::Trainer;
+use crate::federated::data::Dataset;
+use crate::federated::metrics::MetricsLog;
+use crate::runtime::{ParamVec, RuntimeError};
+use crate::scenario::{behavior_for, ClientBehavior};
+use crate::serving::wire::{write_frame, Frame, FrameReader, ServerStatus, WireError};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Shared serving-plane counters, readable over the JSON control
+/// endpoint (`{"op":"status"}`) while a run is live.
+#[derive(Debug, Default)]
+pub struct ServingStats {
+    /// Connections accepted since the listener came up.
+    pub connections: AtomicU64,
+    /// Updates admitted through the gate.
+    pub admitted: AtomicU64,
+    /// Updates answered with an ack (applied or buffered/dropped).
+    pub acked: AtomicU64,
+    /// Updates answered with a retry-after frame.
+    pub shed: AtomicU64,
+}
+
+impl ServingStats {
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn status(&self, version: u64) -> ServerStatus {
+        ServerStatus {
+            version,
+            connections: self.connections.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            acked: self.acked.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An admitted update queued for the engine, with the reply channel its
+/// connection handler is blocked on.
+struct NetArrival {
+    arrival: Arrival,
+    reply: Sender<Frame>,
+}
+
+/// Counter snapshot used to classify what `offer` did with an arrival.
+#[derive(Clone, Copy)]
+struct CounterMark {
+    applied: u64,
+    buffered: u64,
+    shed: u64,
+}
+
+impl CounterMark {
+    fn of(core: &UpdaterCore<'_>) -> CounterMark {
+        CounterMark {
+            applied: core.rec.counters.applied,
+            buffered: core.rec.counters.buffered,
+            shed: core.rec.counters.shed,
+        }
+    }
+}
+
+/// In-flight reply state between `next_completion` and `after_delivery`.
+struct PendingReply {
+    reply: Sender<Frame>,
+    tau: u64,
+    mark: CounterMark,
+}
+
+/// [`TimeDriver`] over a TCP listener: arrivals come from the wire
+/// instead of an in-process worker pool.
+pub struct NetDriver {
+    listener: Option<TcpListener>,
+    addr: SocketAddr,
+    gate: Arc<AdmissionGate>,
+    stats: Arc<ServingStats>,
+    job_tx: Sender<ComputeJob>,
+    pool: Arc<BufferPool>,
+    cell: Arc<SnapshotCell>,
+    stop: Arc<AtomicBool>,
+    pending_rx: Option<Receiver<NetArrival>>,
+    acceptor: Option<JoinHandle<()>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    in_flight: Option<PendingReply>,
+    rng: Rng,
+    started: Instant,
+    eval_wall: f64,
+    epochs: u64,
+    n_devices: usize,
+    queue_cap: usize,
+    read_timeout: Duration,
+    retry_after_ms: u32,
+}
+
+impl NetDriver {
+    /// Wire a driver over an already-bound listener.  No thread exists
+    /// until [`TimeDriver::start`]; `cell` must hold the core's initial
+    /// model and `gate` must be the same gate the core's [`ShedGate`]
+    /// wraps (first- and second-line admission control share one count).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        cfg: &ExperimentConfig,
+        serving: &ServingConfig,
+        seed: u64,
+        job_tx: Sender<ComputeJob>,
+        pool: Arc<BufferPool>,
+        cell: Arc<SnapshotCell>,
+        gate: Arc<AdmissionGate>,
+        stats: Arc<ServingStats>,
+        listener: TcpListener,
+    ) -> Result<NetDriver, RuntimeError> {
+        let addr = listener
+            .local_addr()
+            .map_err(|e| RuntimeError::Channel(format!("listener has no local addr: {e}")))?;
+        Ok(NetDriver {
+            listener: Some(listener),
+            addr,
+            gate,
+            stats,
+            job_tx,
+            pool,
+            cell,
+            stop: Arc::new(AtomicBool::new(false)),
+            pending_rx: None,
+            acceptor: None,
+            conn_handles: Arc::new(Mutex::new(Vec::new())),
+            in_flight: None,
+            rng: Rng::seed_from(seed ^ 0x0DD5_FA17),
+            started: Instant::now(),
+            eval_wall: 0.0,
+            epochs: cfg.epochs as u64,
+            n_devices: cfg.federation.devices,
+            queue_cap: serving.accept_queue.max(1),
+            read_timeout: Duration::from_millis(serving.read_timeout_ms.max(1)),
+            retry_after_ms: serving.retry_after_ms,
+        })
+    }
+
+    /// Answer the queued update's handler so it is never left blocked;
+    /// reclaim the update buffer.
+    fn shed_queued(&self, queued: NetArrival) {
+        let _ = queued.reply.send(Frame::Shed { retry_after_ms: self.retry_after_ms });
+        ServingStats::bump(&self.stats.shed);
+        self.gate.leave();
+        self.pool.release(queued.arrival.x_new);
+    }
+}
+
+impl<T: Trainer> TimeDriver<T> for NetDriver {
+    fn clock(&self) -> Clock {
+        Clock::Versions
+    }
+
+    fn now(&mut self) -> f64 {
+        // Same virtual-seconds bookkeeping as the in-process threaded
+        // driver: wallclock net of evaluation, unscaled by TIME_SCALE.
+        (self.started.elapsed().as_secs_f64() - self.eval_wall).max(0.0) / TIME_SCALE
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    fn note_eval_wall(&mut self, secs: f64) {
+        self.eval_wall += secs;
+    }
+
+    fn start(&mut self, _trainer: &T, _core: &mut UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        let listener = self.listener.take().ok_or_else(|| {
+            RuntimeError::Channel("serving driver started twice".into())
+        })?;
+        // Capacity = gate capacity: every queued update holds a gate
+        // slot until the driver pops it, so `send` can never block (see
+        // module docs) — handlers always stay responsive to their peer.
+        let (pending_tx, pending_rx) = mpsc::sync_channel::<NetArrival>(self.queue_cap);
+        self.pending_rx = Some(pending_rx);
+
+        let ctx = ConnCtx {
+            cell: Arc::clone(&self.cell),
+            gate: Arc::clone(&self.gate),
+            stats: Arc::clone(&self.stats),
+            stop: Arc::clone(&self.stop),
+            pending_tx,
+            n_devices: self.n_devices,
+            retry_after_ms: self.retry_after_ms,
+        };
+        let stop = Arc::clone(&self.stop);
+        let stats = Arc::clone(&self.stats);
+        let handles = Arc::clone(&self.conn_handles);
+        let read_timeout = self.read_timeout;
+        self.acceptor = Some(
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || {
+                    let mut conn_id = 0u64;
+                    loop {
+                        let stream = match listener.accept() {
+                            Ok((s, _)) => s,
+                            Err(_) => {
+                                if stop.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                continue;
+                            }
+                        };
+                        if stop.load(Ordering::Relaxed) {
+                            return; // the shutdown wake-up connection
+                        }
+                        ServingStats::bump(&stats.connections);
+                        // Bounded reads: a silent peer cannot pin its
+                        // handler past shutdown.
+                        if stream.set_read_timeout(Some(read_timeout)).is_err() {
+                            continue;
+                        }
+                        let ctx = ctx.clone();
+                        conn_id += 1;
+                        let h = std::thread::Builder::new()
+                            .name(format!("serve-conn-{conn_id}"))
+                            .spawn(move || conn_loop(stream, ctx));
+                        if let Ok(h) = h {
+                            // Handles are parked, not joined, here:
+                            // joining would deadlock with handlers that
+                            // wait on engine replies.  `shutdown` joins
+                            // them after the drain.
+                            match handles.lock() {
+                                Ok(mut v) => v.push(h),
+                                Err(p) => p.into_inner().push(h),
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| RuntimeError::Thread(format!("spawn acceptor: {e}")))?,
+        );
+        Ok(())
+    }
+
+    fn next_completion(
+        &mut self,
+        _trainer: &T,
+        core: &mut UpdaterCore<'_>,
+        _progress: f64,
+    ) -> Result<Option<Arrival>, RuntimeError> {
+        let rx = self.pending_rx.as_ref().ok_or_else(|| {
+            RuntimeError::Channel("serving driver used before start".into())
+        })?;
+        let Ok(queued) = rx.recv() else {
+            // Acceptor and every handler exited with the target unmet;
+            // `shutdown` reports the failure.
+            return Ok(None);
+        };
+        // Popping releases the admission slot: the queue has room again
+        // before the (possibly slow) offer runs, so admission capacity
+        // bounds *queued* work, not server throughput.
+        self.gate.leave();
+        self.in_flight = Some(PendingReply {
+            reply: queued.reply,
+            tau: queued.arrival.tau,
+            mark: CounterMark::of(core),
+        });
+        Ok(Some(queued.arrival))
+    }
+
+    fn on_applied(&mut self, core: &mut UpdaterCore<'_>, out: &UpdateOutcome) {
+        self.cell.publish(out.version, core.store.current_arc());
+        if let Some(buf) = core.store.take_evicted() {
+            self.pool.release(buf);
+        }
+    }
+
+    fn after_delivery(
+        &mut self,
+        _trainer: &T,
+        core: &mut UpdaterCore<'_>,
+        spent: ParamVec,
+        _progress: f64,
+    ) -> Result<(), RuntimeError> {
+        // Classify what the offer(s) did from the counter deltas — the
+        // decision itself lives in the aggregator, never re-derived
+        // here.  Zero-copy deliveries (scenario drop faults) ack
+        // `applied: false`, mirroring threaded mode where a faulted
+        // update vanishes without a distinct signal.
+        if let Some(p) = self.in_flight.take() {
+            let now = CounterMark::of(core);
+            let version = core.store.current_version();
+            let frame = if now.applied > p.mark.applied || now.buffered > p.mark.buffered {
+                Frame::Ack {
+                    version,
+                    applied: now.applied > p.mark.applied,
+                    staleness: version.saturating_add(1).saturating_sub(p.tau),
+                }
+            } else if now.shed > p.mark.shed {
+                Frame::Shed { retry_after_ms: self.retry_after_ms }
+            } else {
+                Frame::Ack { version, applied: false, staleness: 0 }
+            };
+            if matches!(frame, Frame::Shed { .. }) {
+                ServingStats::bump(&self.stats.shed);
+            } else {
+                ServingStats::bump(&self.stats.acked);
+            }
+            let _ = p.reply.send(frame); // handler may have died: fine
+        }
+        // Same buffer economy as the threaded driver: keep the shared
+        // pool primed, ship surplus to the compute service's scratch.
+        if self.pool.pooled() == 0 {
+            self.pool.release(spent);
+            return Ok(());
+        }
+        match self.job_tx.send(ComputeJob::Recycle(spent)) {
+            Ok(()) => {}
+            Err(mpsc::SendError(ComputeJob::Recycle(buf))) => self.pool.release(buf),
+            Err(_) => {}
+        }
+        Ok(())
+    }
+
+    fn shutdown(&mut self, core: &mut UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the acceptor's blocking `accept` with a throwaway
+        // connection, then join it — it spawns no new handlers after
+        // seeing `stop`.
+        let _ = TcpStream::connect(self.addr);
+        let mut panicked: Option<&'static str> = None;
+        if let Some(h) = self.acceptor.take() {
+            if h.join().is_err() {
+                panicked = Some("acceptor");
+            }
+        }
+        // Drain-before-exit: answer every still-queued update with a
+        // retry-after frame.  This unblocks handlers waiting on replies;
+        // they then observe `stop` at their next read timeout and exit,
+        // disconnecting the channel.  Nothing acked is ever dropped —
+        // acks only happen after the offer resolved.
+        if let Some(p) = self.in_flight.take() {
+            let _ = p.reply.send(Frame::Shed { retry_after_ms: self.retry_after_ms });
+            ServingStats::bump(&self.stats.shed);
+        }
+        if let Some(rx) = self.pending_rx.take() {
+            loop {
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(queued) => self.shed_queued(queued),
+                    Err(RecvTimeoutError::Timeout) => {} // handlers mid-send
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        let handles = {
+            match self.conn_handles.lock() {
+                Ok(mut v) => std::mem::take(&mut *v),
+                Err(p) => std::mem::take(&mut *p.into_inner()),
+            }
+        };
+        for h in handles {
+            if h.join().is_err() && panicked.is_none() {
+                panicked = Some("connection handler");
+            }
+        }
+        if let Some(who) = panicked {
+            return Err(RuntimeError::Thread(format!("{who} thread panicked")));
+        }
+        if core.store.current_version() < self.epochs {
+            return Err(RuntimeError::Channel(format!(
+                "serving plane stopped after {} of {} epochs (clients gone or listener failed)",
+                core.store.current_version(),
+                self.epochs
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Everything a connection handler needs, cloned per connection.
+#[derive(Clone)]
+struct ConnCtx {
+    cell: Arc<SnapshotCell>,
+    gate: Arc<AdmissionGate>,
+    stats: Arc<ServingStats>,
+    stop: Arc<AtomicBool>,
+    pending_tx: SyncSender<NetArrival>,
+    n_devices: usize,
+    retry_after_ms: u32,
+}
+
+/// One connection's frame loop.  Exits on peer close, protocol error, or
+/// `stop` observed at a read timeout; never panics on wire input.
+fn conn_loop(mut stream: TcpStream, ctx: ConnCtx) {
+    let mut reader = FrameReader::new();
+    let mut scratch = Vec::new();
+    loop {
+        let frame = match reader.read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => {
+                // Read timeout: the bounded wait that lets a handler
+                // notice shutdown even when its peer goes silent.
+                if ctx.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return, // disconnect or garbage: drop the peer
+        };
+        match frame {
+            Frame::PullModel => {
+                let snap = ctx.cell.load();
+                let reply = Frame::ModelSnapshot {
+                    version: snap.version,
+                    params: (*snap.params).clone(),
+                };
+                if write_frame(&mut stream, &reply, &mut scratch).is_err() {
+                    return;
+                }
+            }
+            Frame::ClientUpdate { device, tau, loss, params } => {
+                // Validate against the live model before spending a
+                // gate slot; a mismatched dim is a protocol error.
+                let snap = ctx.cell.load();
+                if params.len() != snap.params.len() || (device as usize) >= ctx.n_devices {
+                    return;
+                }
+                if !ctx.gate.try_enter() {
+                    // First-line admission control: the bounded queue is
+                    // full, shed immediately — never block the peer.
+                    ServingStats::bump(&ctx.stats.shed);
+                    let shed = Frame::Shed { retry_after_ms: ctx.retry_after_ms };
+                    if write_frame(&mut stream, &shed, &mut scratch).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                ServingStats::bump(&ctx.stats.admitted);
+                let (reply_tx, reply_rx) = mpsc::channel();
+                let queued = NetArrival {
+                    arrival: Arrival {
+                        device: device as usize,
+                        tau,
+                        x_new: params,
+                        loss,
+                    },
+                    reply: reply_tx,
+                };
+                // Never blocks: the gate slot we hold is one of at most
+                // `accept_queue` outstanding, the channel's capacity.
+                if ctx.pending_tx.send(queued).is_err() {
+                    // Engine already gone (shutdown race).
+                    ctx.gate.leave();
+                    ServingStats::bump(&ctx.stats.shed);
+                    let shed = Frame::Shed { retry_after_ms: ctx.retry_after_ms };
+                    if write_frame(&mut stream, &shed, &mut scratch).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                // Block for the resolution: ack-after-offer is the
+                // drain-before-exit guarantee — a reply here means the
+                // update's fate is final.  Shutdown answers queued
+                // updates with Shed, so this recv always resolves.
+                let reply = match reply_rx.recv() {
+                    Ok(f) => f,
+                    Err(_) => Frame::Shed { retry_after_ms: ctx.retry_after_ms },
+                };
+                if write_frame(&mut stream, &reply, &mut scratch).is_err() {
+                    return;
+                }
+            }
+            Frame::Control { body } => {
+                let reply_body = control_reply(&body, &ctx);
+                let reply = Frame::ControlReply { body: reply_body };
+                if write_frame(&mut stream, &reply, &mut scratch).is_err() {
+                    return;
+                }
+            }
+            // Server-to-client frames arriving at the server are a
+            // protocol violation.
+            Frame::ModelSnapshot { .. }
+            | Frame::Ack { .. }
+            | Frame::Shed { .. }
+            | Frame::ControlReply { .. } => return,
+        }
+    }
+}
+
+/// Answer a JSON control request (currently just `{"op":"status"}`).
+fn control_reply(body: &str, ctx: &ConnCtx) -> String {
+    let op = Json::parse(body)
+        .ok()
+        .and_then(|j| j.get("op").as_str().map(str::to_owned));
+    match op.as_deref() {
+        Some("status") => ctx.stats.status(ctx.cell.load().version).to_json().to_string_compact(),
+        _ => r#"{"error":"unknown op"}"#.to_string(),
+    }
+}
+
+/// The serving-plane analogue of
+/// [`run_server_core`](crate::coordinator::server::run_server_core):
+/// build the pooled core — with the configured aggregation strategy
+/// wrapped in a [`ShedGate`] — the snapshot cell, and a [`NetDriver`]
+/// over the given pre-bound listener, then hand both to the shared
+/// engine.  Blocks until `cfg.epochs` versions have been applied from
+/// updates arriving over TCP.
+///
+/// Public (with a test-friendly signature) so the loopback conformance
+/// suite and `bench_net` can serve a native mock without PJRT.
+#[allow(clippy::too_many_arguments)]
+pub fn run_served_core(
+    cfg: &ExperimentConfig,
+    seed: u64,
+    test: &Dataset,
+    init: ParamVec,
+    h: usize,
+    job_tx: Sender<ComputeJob>,
+    behavior: Arc<dyn ClientBehavior>,
+    listener: TcpListener,
+    stats: Arc<ServingStats>,
+) -> Result<MetricsLog, RuntimeError> {
+    let serving = cfg.serving.clone().unwrap_or_default();
+    let pool = Arc::new(BufferPool::new(cfg.max_inflight.max(1) + 2));
+    let gate = Arc::new(AdmissionGate::new(serving.accept_queue));
+    // Same aggregation strategy the in-process modes would build, behind
+    // the admission gate: accounting stays identical because the gate
+    // only ever *refuses* offers (second line; the handlers' try_enter
+    // is the first), it never alters an accepted one.
+    let inner = aggregator::for_config(cfg, Some(Arc::clone(&pool)));
+    let gated = Box::new(ShedGate::new(inner, Arc::clone(&gate)));
+    let core = UpdaterCore::with_aggregator(cfg, init, 1, test, Arc::clone(&pool), gated);
+    let cell = Arc::new(SnapshotCell::new(0, core.store.current_arc()));
+    let svc_trainer = ServiceTrainer { job_tx: job_tx.clone(), cell: Arc::clone(&cell), h };
+    let driver =
+        NetDriver::new(cfg, &serving, seed, job_tx, pool, cell, gate, stats, listener)?;
+    Engine::new(&svc_trainer, cfg, behavior.as_ref()).run(core, driver)
+}
+
+/// `--listen` entry point: spawn the PJRT compute service, bind the
+/// configured address, announce it on stderr, and serve until
+/// `cfg.epochs` updates have arrived from the swarm.
+pub fn run_threaded_served(
+    model_dir: PathBuf,
+    cfg: &ExperimentConfig,
+    seed: u64,
+) -> Result<MetricsLog, RuntimeError> {
+    let serving = cfg.serving.clone().unwrap_or_default();
+    let listener = TcpListener::bind(&serving.listen)
+        .map_err(|e| RuntimeError::Channel(format!("bind {}: {e}", serving.listen)))?;
+    if let Ok(addr) = listener.local_addr() {
+        eprintln!("serving on {addr}");
+    }
+    let PjrtService { job_tx, svc, h, data, init } = spawn_pjrt_service(model_dir, cfg, seed)?;
+    let behavior = behavior_for(cfg, cfg.federation.devices, seed);
+    let stats = Arc::new(ServingStats::default());
+    let log = run_served_core(
+        cfg, seed, &data.test, init, h, job_tx, behavior, listener, stats,
+    );
+    let joined = svc.join();
+    let log = log?;
+    joined.map_err(|_| RuntimeError::Thread("compute service panicked".into()))?;
+    Ok(log)
+}

@@ -1,0 +1,593 @@
+//! Length-prefixed binary wire codec for the serving plane.
+//!
+//! Every frame is an 8-byte header followed by a bounded payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic   0xA5 0xFD
+//! 2       1     wire version (WIRE_VERSION)
+//! 3       1     frame kind
+//! 4       4     payload length, u32 LE (≤ MAX_PAYLOAD)
+//! 8       len   payload (per-kind layout, all integers LE)
+//! ```
+//!
+//! Design rules, in the spirit of the mik-sdk exemplar (ADR-002: a
+//! dependency-free serialization layer we fully control and can fuzz):
+//!
+//! * **Never panic, never over-read.** [`decode`] is total over arbitrary
+//!   bytes: malformed input is an [`Err`], an incomplete-but-consistent
+//!   prefix is `Ok(None)` (read more), and the declared length is
+//!   validated against [`MAX_PAYLOAD`] *before* any allocation — a hostile
+//!   4 GiB length prefix costs nothing.
+//! * **Exact payloads.** Each kind's payload must consume its declared
+//!   length exactly; trailing or missing bytes are malformed.
+//! * **Finite floats only.** Parameter vectors and losses reject NaN/∞ at
+//!   the codec boundary, so poison values cannot reach the updater.
+//!
+//! The `wire_codec` fuzz target and the round-trip/truncation proptests
+//! (`rust/tests/proptests.rs`) pin all three rules; the JSON control
+//! frames reuse [`crate::util::json`] with the [`json_struct!`]
+//! derive idiom for their typed bodies ([`ServerStatus`]).
+//!
+//! [`json_struct!`]: crate::json_struct
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::json_struct;
+use crate::runtime::ParamVec;
+
+/// First two bytes of every frame.
+pub const MAGIC: [u8; 2] = [0xA5, 0xFD];
+
+/// Protocol version this build speaks; bumped on any layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Header bytes before the payload.
+pub const HEADER_LEN: usize = 8;
+
+/// Hard ceiling on a frame's payload (64 MiB ≈ a 16M-parameter f32
+/// model).  Declared lengths above this are rejected before allocation.
+pub const MAX_PAYLOAD: usize = 1 << 26;
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: send me the current global model.
+    PullModel,
+    /// Server → client: the published model snapshot.
+    ModelSnapshot {
+        /// Version `t` of the snapshot.
+        version: u64,
+        /// The flat parameter vector `x_t`.
+        params: ParamVec,
+    },
+    /// Client → server: a completed local-training result.
+    ClientUpdate {
+        /// Device id that ran the task.
+        device: u32,
+        /// Model version the task trained from.
+        tau: u64,
+        /// Mean local training loss.
+        loss: f32,
+        /// The locally trained model.
+        params: ParamVec,
+    },
+    /// Server → client: the update was admitted and resolved.
+    Ack {
+        /// Server model version after resolution.
+        version: u64,
+        /// The update advanced the global model (directly or via a
+        /// staged blend); `false` for buffered/dropped resolutions.
+        applied: bool,
+        /// Version distance `t − τ` the server observed.
+        staleness: u64,
+    },
+    /// Server → client: admission control refused the update (or the
+    /// server is shutting down) — retry after the given delay.
+    Shed {
+        /// Suggested client backoff before re-offering, in ms.
+        retry_after_ms: u32,
+    },
+    /// Client → server: JSON control request (UTF-8 body).
+    Control {
+        /// Request body, e.g. `{"op":"status"}`.
+        body: String,
+    },
+    /// Server → client: JSON control reply (UTF-8 body).
+    ControlReply {
+        /// Reply body, e.g. a [`ServerStatus`] object.
+        body: String,
+    },
+}
+
+impl Frame {
+    /// The header kind byte for this frame.
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::PullModel => 0,
+            Frame::ModelSnapshot { .. } => 1,
+            Frame::ClientUpdate { .. } => 2,
+            Frame::Ack { .. } => 3,
+            Frame::Shed { .. } => 4,
+            Frame::Control { .. } => 5,
+            Frame::ControlReply { .. } => 6,
+        }
+    }
+}
+
+json_struct! {
+    /// Status report served on the JSON control endpoint
+    /// (`{"op":"status"}` → this object as a [`Frame::ControlReply`]).
+    pub struct ServerStatus {
+        /// Currently published model version.
+        pub version: u64,
+        /// Connections accepted since the listener came up.
+        pub connections: u64,
+        /// Updates admitted through the gate.
+        pub admitted: u64,
+        /// Updates answered with an ack.
+        pub acked: u64,
+        /// Updates answered with a retry-after frame.
+        pub shed: u64,
+    }
+}
+
+/// Why a byte sequence is not a frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// First bytes are not [`MAGIC`].
+    BadMagic,
+    /// Peer speaks a different [`WIRE_VERSION`].
+    Version {
+        /// Version byte received.
+        got: u8,
+    },
+    /// Header kind byte names no known frame.
+    UnknownKind(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// Payload bytes do not match the kind's layout.
+    Malformed(&'static str),
+    /// A parameter or loss value is NaN/∞.
+    NonFinite,
+    /// Socket-level failure (stream helpers only; includes peer close).
+    Io(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::Version { got } => {
+                write!(f, "wire version mismatch: got {got}, want {WIRE_VERSION}")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversized(n) => {
+                write!(f, "declared payload {n} exceeds max {MAX_PAYLOAD}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+            WireError::NonFinite => write!(f, "non-finite f32 in frame"),
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ------------------------------------------------------------- encoding
+
+/// Append one encoded frame to `out` (header + payload).
+pub fn encode_into(frame: &Frame, out: &mut Vec<u8>) {
+    let header_at = out.len();
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(frame.kind());
+    out.extend_from_slice(&[0; 4]); // length back-patched below
+    let payload_at = out.len();
+    match frame {
+        Frame::PullModel => {}
+        Frame::ModelSnapshot { version, params } => {
+            out.extend_from_slice(&version.to_le_bytes());
+            put_params(out, params);
+        }
+        Frame::ClientUpdate { device, tau, loss, params } => {
+            out.extend_from_slice(&device.to_le_bytes());
+            out.extend_from_slice(&tau.to_le_bytes());
+            out.extend_from_slice(&loss.to_le_bytes());
+            put_params(out, params);
+        }
+        Frame::Ack { version, applied, staleness } => {
+            out.extend_from_slice(&version.to_le_bytes());
+            out.push(u8::from(*applied));
+            out.extend_from_slice(&staleness.to_le_bytes());
+        }
+        Frame::Shed { retry_after_ms } => {
+            out.extend_from_slice(&retry_after_ms.to_le_bytes());
+        }
+        Frame::Control { body } | Frame::ControlReply { body } => {
+            out.extend_from_slice(body.as_bytes());
+        }
+    }
+    let len = (out.len() - payload_at) as u32;
+    out[header_at + 4..header_at + 8].copy_from_slice(&len.to_le_bytes());
+}
+
+/// One frame as a fresh byte vector.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(frame, &mut out);
+    out
+}
+
+fn put_params(out: &mut Vec<u8>, params: &[f32]) {
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for v in params {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ------------------------------------------------------------- decoding
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete frame; `consumed` bytes
+///   (header + payload) were read, never more than `buf.len()`.
+/// * `Ok(None)` — `buf` is a consistent prefix of a frame; read more.
+/// * `Err(_)` — `buf` can never become a valid frame; drop the peer.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
+    // Validate whatever prefix of the header is present, so garbage is
+    // rejected at the earliest byte and a truncated-but-valid prefix is
+    // "read more", never an error.
+    if !buf.is_empty() && buf[0] != MAGIC[0] {
+        return Err(WireError::BadMagic);
+    }
+    if buf.len() >= 2 && buf[1] != MAGIC[1] {
+        return Err(WireError::BadMagic);
+    }
+    if buf.len() >= 3 && buf[2] != WIRE_VERSION {
+        return Err(WireError::Version { got: buf[2] });
+    }
+    if buf.len() >= 4 && buf[3] > 6 {
+        return Err(WireError::UnknownKind(buf[3]));
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let kind = buf[3];
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    if len as usize > MAX_PAYLOAD {
+        return Err(WireError::Oversized(len));
+    }
+    let total = HEADER_LEN + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let mut p = Payload { bytes: &buf[HEADER_LEN..total], pos: 0 };
+    let frame = match kind {
+        0 => Frame::PullModel,
+        1 => {
+            let version = p.u64()?;
+            let params = p.params()?;
+            Frame::ModelSnapshot { version, params }
+        }
+        2 => {
+            let device = p.u32()?;
+            let tau = p.u64()?;
+            let loss = p.f32()?;
+            if !loss.is_finite() {
+                return Err(WireError::NonFinite);
+            }
+            let params = p.params()?;
+            Frame::ClientUpdate { device, tau, loss, params }
+        }
+        3 => {
+            let version = p.u64()?;
+            let applied = match p.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(WireError::Malformed("ack applied flag")),
+            };
+            let staleness = p.u64()?;
+            Frame::Ack { version, applied, staleness }
+        }
+        4 => Frame::Shed { retry_after_ms: p.u32()? },
+        5 => Frame::Control { body: p.utf8_rest()? },
+        6 => Frame::ControlReply { body: p.utf8_rest()? },
+        _ => unreachable!("kind validated above"),
+    };
+    if p.pos != p.bytes.len() {
+        return Err(WireError::Malformed("trailing payload bytes"));
+    }
+    Ok(Some((frame, total)))
+}
+
+/// Bounds-checked cursor over one payload.
+struct Payload<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Payload<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], WireError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or(WireError::Malformed("payload too short"))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// `dim: u32` then `dim` finite f32s; the dim must fit the payload
+    /// exactly as declared (checked here against the remaining bytes, so
+    /// a huge dim with a small payload fails before any allocation).
+    fn params(&mut self) -> Result<ParamVec, WireError> {
+        let dim = self.u32()? as usize;
+        let remaining = self.bytes.len() - self.pos;
+        if dim.checked_mul(4) != Some(remaining) {
+            return Err(WireError::Malformed("params length mismatch"));
+        }
+        let mut out = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            let v = self.f32()?;
+            if !v.is_finite() {
+                return Err(WireError::NonFinite);
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    fn utf8_rest(&mut self) -> Result<String, WireError> {
+        let rest = self.take(self.bytes.len() - self.pos)?;
+        String::from_utf8(rest.to_vec()).map_err(|_| WireError::Malformed("control body utf-8"))
+    }
+}
+
+// ------------------------------------------------------- stream helpers
+
+/// Write one frame to a stream, reusing `scratch` as the encode buffer.
+pub fn write_frame(
+    stream: &mut impl Write,
+    frame: &Frame,
+    scratch: &mut Vec<u8>,
+) -> Result<(), WireError> {
+    scratch.clear();
+    encode_into(frame, scratch);
+    stream.write_all(scratch).map_err(|e| WireError::Io(e.to_string()))
+}
+
+/// Incremental frame reader over a (possibly read-timeout) stream.
+///
+/// Partial reads are buffered across calls, so a read timeout mid-frame
+/// loses nothing: the caller checks its stop condition and calls again.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    /// An empty reader.
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Next frame from `stream`.  `Ok(None)` means the read timed out
+    /// (`WouldBlock`/`TimedOut`) — call again after checking for
+    /// shutdown.  Peer close and malformed bytes are `Err` (the caller
+    /// drops the connection either way).
+    pub fn read_frame(&mut self, stream: &mut impl Read) -> Result<Option<Frame>, WireError> {
+        loop {
+            if let Some((frame, consumed)) = decode(&self.buf)? {
+                self.buf.drain(..consumed);
+                return Ok(Some(frame));
+            }
+            let mut chunk = [0u8; 4096];
+            match stream.read(&mut chunk) {
+                Ok(0) => return Err(WireError::Io("peer closed the connection".into())),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(None)
+                }
+                Err(e) => return Err(WireError::Io(e.to_string())),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn samples() -> Vec<Frame> {
+        vec![
+            Frame::PullModel,
+            Frame::ModelSnapshot { version: 7, params: vec![1.0, -2.5, 0.0] },
+            Frame::ModelSnapshot { version: 0, params: vec![] },
+            Frame::ClientUpdate { device: 3, tau: 6, loss: 0.25, params: vec![0.5; 4] },
+            Frame::ClientUpdate { device: 0, tau: 0, loss: -1.0, params: vec![] },
+            Frame::Ack { version: 9, applied: true, staleness: 2 },
+            Frame::Ack { version: 0, applied: false, staleness: 0 },
+            Frame::Shed { retry_after_ms: 50 },
+            Frame::Control { body: r#"{"op":"status"}"#.into() },
+            Frame::ControlReply { body: "{}".into() },
+        ]
+    }
+
+    #[test]
+    fn round_trips_every_kind() {
+        for frame in samples() {
+            let bytes = encode(&frame);
+            let (back, n) = decode(&bytes).unwrap().expect("complete frame");
+            assert_eq!(n, bytes.len(), "consumed exactly the frame: {frame:?}");
+            assert_eq!(back, frame);
+        }
+    }
+
+    #[test]
+    fn every_strict_prefix_is_incomplete_not_an_error() {
+        for frame in samples() {
+            let bytes = encode(&frame);
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode(&bytes[..cut]).unwrap(),
+                    None,
+                    "prefix of len {cut} of {frame:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_sequence() {
+        let mut bytes = Vec::new();
+        for frame in samples() {
+            encode_into(&frame, &mut bytes);
+        }
+        let mut at = 0;
+        for want in samples() {
+            let (got, n) = decode(&bytes[at..]).unwrap().expect("complete");
+            assert_eq!(got, want);
+            at += n;
+        }
+        assert_eq!(at, bytes.len());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_kind_immediately() {
+        assert_eq!(decode(&[0x00]), Err(WireError::BadMagic));
+        assert_eq!(decode(&[MAGIC[0], 0x00]), Err(WireError::BadMagic));
+        assert_eq!(
+            decode(&[MAGIC[0], MAGIC[1], WIRE_VERSION + 1]),
+            Err(WireError::Version { got: WIRE_VERSION + 1 })
+        );
+        assert_eq!(
+            decode(&[MAGIC[0], MAGIC[1], WIRE_VERSION, 0x77]),
+            Err(WireError::UnknownKind(0x77))
+        );
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut bytes = vec![MAGIC[0], MAGIC[1], WIRE_VERSION, 2];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode(&bytes), Err(WireError::Oversized(u32::MAX)));
+    }
+
+    #[test]
+    fn rejects_non_finite_params_and_loss() {
+        let mut bytes = encode(&Frame::ClientUpdate {
+            device: 1,
+            tau: 0,
+            loss: 0.0,
+            params: vec![1.0],
+        });
+        // Patch the single param (last 4 bytes) to NaN.
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert_eq!(decode(&bytes), Err(WireError::NonFinite));
+
+        let mut bytes =
+            encode(&Frame::ClientUpdate { device: 1, tau: 0, loss: 0.0, params: vec![] });
+        // loss sits at payload offset 12 (device 4 + tau 8).
+        bytes[HEADER_LEN + 12..HEADER_LEN + 16]
+            .copy_from_slice(&f32::INFINITY.to_le_bytes());
+        assert_eq!(decode(&bytes), Err(WireError::NonFinite));
+    }
+
+    #[test]
+    fn rejects_dim_payload_mismatch_and_trailing_bytes() {
+        let mut bytes = encode(&Frame::ModelSnapshot { version: 1, params: vec![1.0, 2.0] });
+        // Claim 3 params while carrying 2.
+        bytes[HEADER_LEN + 8..HEADER_LEN + 12].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+
+        // A PullModel with payload bytes is malformed (exact payloads).
+        let mut bytes = encode(&Frame::PullModel);
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        bytes.push(0xAB);
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn frame_reader_reassembles_split_frames() {
+        // Simulate a stream delivering one byte at a time via a reader
+        // that yields WouldBlock between bytes.
+        struct Trickle {
+            bytes: Vec<u8>,
+            at: usize,
+            parity: bool,
+        }
+        impl Read for Trickle {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                self.parity = !self.parity;
+                if self.parity {
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                if self.at >= self.bytes.len() {
+                    return Ok(0);
+                }
+                out[0] = self.bytes[self.at];
+                self.at += 1;
+                Ok(1)
+            }
+        }
+        let want = Frame::ClientUpdate { device: 2, tau: 5, loss: 0.5, params: vec![1.0; 3] };
+        let mut stream = Trickle { bytes: encode(&want), at: 0, parity: false };
+        let mut reader = FrameReader::new();
+        let mut timeouts = 0;
+        loop {
+            match reader.read_frame(&mut stream) {
+                Ok(Some(frame)) => {
+                    assert_eq!(frame, want);
+                    break;
+                }
+                Ok(None) => timeouts += 1,
+                Err(e) => panic!("reader failed: {e}"),
+            }
+        }
+        assert!(timeouts > 0, "the trickle reader must have yielded mid-frame");
+        // Next read: clean close surfaces as Io.
+        assert!(matches!(reader.read_frame(&mut stream), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn server_status_round_trips_through_control_json() {
+        let status =
+            ServerStatus { version: 12, connections: 4, admitted: 40, acked: 38, shed: 2 };
+        let body = status.to_json().to_string_compact();
+        let frame = Frame::ControlReply { body };
+        let bytes = encode(&frame);
+        let (back, _) = decode(&bytes).unwrap().unwrap();
+        let Frame::ControlReply { body } = back else { panic!("wrong kind") };
+        let parsed = ServerStatus::from_json(&Json::parse(&body).unwrap()).unwrap();
+        assert_eq!(parsed, status);
+    }
+}

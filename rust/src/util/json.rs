@@ -512,9 +512,154 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------- derive
+
+/// Per-field (de)serialization behind [`json_struct!`] — the nanoserde
+/// derive idiom without a proc macro: one impl per primitive, and the
+/// macro stitches fields together positionally.
+pub trait JsonField: Sized {
+    /// This field as a [`Json`] value.
+    fn field_to_json(&self) -> Json;
+    /// Read this field back from a [`Json`] value; `None` on type mismatch.
+    fn field_from_json(v: &Json) -> Option<Self>;
+}
+
+impl JsonField for u64 {
+    fn field_to_json(&self) -> Json {
+        Json::Num(*self as f64)
+    }
+    fn field_from_json(v: &Json) -> Option<Self> {
+        v.as_i64().and_then(|x| u64::try_from(x).ok())
+    }
+}
+
+impl JsonField for usize {
+    fn field_to_json(&self) -> Json {
+        Json::Num(*self as f64)
+    }
+    fn field_from_json(v: &Json) -> Option<Self> {
+        v.as_usize()
+    }
+}
+
+impl JsonField for f64 {
+    fn field_to_json(&self) -> Json {
+        Json::Num(*self)
+    }
+    fn field_from_json(v: &Json) -> Option<Self> {
+        v.as_f64()
+    }
+}
+
+impl JsonField for bool {
+    fn field_to_json(&self) -> Json {
+        Json::Bool(*self)
+    }
+    fn field_from_json(v: &Json) -> Option<Self> {
+        v.as_bool()
+    }
+}
+
+impl JsonField for String {
+    fn field_to_json(&self) -> Json {
+        Json::Str(self.clone())
+    }
+    fn field_from_json(v: &Json) -> Option<Self> {
+        v.as_str().map(str::to_owned)
+    }
+}
+
+/// Declare a plain named-field struct with `to_json` / `from_json`
+/// derived over [`JsonField`] — the pure-std stand-in for nanoserde's
+/// `#[derive(SerJson, DeJson)]` (SNIPPETS.md, mik-sdk ADR-002).  Field
+/// order is preserved in the emitted object; `from_json` names the first
+/// missing or mistyped field in its error.
+#[macro_export]
+macro_rules! json_struct {
+    (
+        $(#[$meta:meta])*
+        pub struct $name:ident {
+            $($(#[$fmeta:meta])* pub $field:ident : $ty:ty,)+
+        }
+    ) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, PartialEq)]
+        pub struct $name {
+            $($(#[$fmeta])* pub $field: $ty,)+
+        }
+
+        impl $name {
+            /// Serialize as an insertion-ordered JSON object.
+            pub fn to_json(&self) -> $crate::util::json::Json {
+                let mut obj = $crate::util::json::JsonObj::new();
+                $(obj.insert(
+                    stringify!($field),
+                    $crate::util::json::JsonField::field_to_json(&self.$field),
+                );)+
+                $crate::util::json::Json::Obj(obj)
+            }
+
+            /// Deserialize from a JSON object parsed with
+            /// [`Json::parse`]($crate::util::json::Json::parse).
+            pub fn from_json(v: &$crate::util::json::Json) -> Result<Self, String> {
+                Ok(Self {
+                    $($field: $crate::util::json::JsonField::field_from_json(
+                        v.get(stringify!($field)),
+                    )
+                    .ok_or_else(|| {
+                        concat!(
+                            stringify!($name),
+                            ": missing or mistyped field `",
+                            stringify!($field),
+                            "`"
+                        )
+                        .to_string()
+                    })?,)+
+                })
+            }
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    json_struct! {
+        /// Round-trip guinea pig for the derive macro.
+        pub struct DeriveProbe {
+            /// Unsigned counter.
+            pub count: u64,
+            /// Scalar measurement.
+            pub ratio: f64,
+            /// A flag.
+            pub on: bool,
+            /// A label.
+            pub tag: String,
+        }
+    }
+
+    #[test]
+    fn json_struct_round_trips() {
+        let probe =
+            DeriveProbe { count: 42, ratio: 0.125, on: true, tag: "serving".into() };
+        let text = probe.to_json().to_string_compact();
+        // Insertion order follows field order.
+        assert_eq!(text, r#"{"count":42,"ratio":0.125,"on":true,"tag":"serving"}"#);
+        let back = DeriveProbe::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, probe);
+    }
+
+    #[test]
+    fn json_struct_names_missing_field() {
+        let v = Json::parse(r#"{"count": 1, "ratio": 2.0, "on": false}"#).unwrap();
+        let err = DeriveProbe::from_json(&v).unwrap_err();
+        assert!(err.contains("tag"), "error should name the field: {err}");
+        // Mistyped: count as string.
+        let v = Json::parse(r#"{"count": "x", "ratio": 2.0, "on": false, "tag": "t"}"#)
+            .unwrap();
+        assert!(DeriveProbe::from_json(&v).unwrap_err().contains("count"));
+    }
 
     #[test]
     fn parse_scalars() {

@@ -1030,6 +1030,177 @@ fn prop_wheel_matches_heap_pop_order() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Serving-plane properties (serving::wire, aggregator admission gate).
+// ---------------------------------------------------------------------
+
+fn gen_wire_params(g: &mut Gen) -> Vec<f32> {
+    // Dims include 0: an empty parameter vector is a legal frame.
+    let dim = g.size(0, 64);
+    g.vec_f32(dim, 1e6)
+}
+
+fn gen_wire_frame(g: &mut Gen) -> fedasync::serving::Frame {
+    use fedasync::serving::Frame;
+    match g.index(7) {
+        0 => Frame::PullModel,
+        1 => Frame::ModelSnapshot { version: g.rng.next_u64() >> 20, params: gen_wire_params(g) },
+        2 => Frame::ClientUpdate {
+            device: g.index(1 << 20) as u32,
+            tau: g.rng.next_u64() >> 20,
+            loss: g.f64_in(0.0, 1e6) as f32,
+            params: gen_wire_params(g),
+        },
+        3 => Frame::Ack {
+            version: g.rng.next_u64() >> 20,
+            applied: g.bool(),
+            staleness: g.index(1 << 16) as u64,
+        },
+        4 => Frame::Shed { retry_after_ms: g.index(1 << 16) as u32 },
+        5 => Frame::Control {
+            body: (0..g.size(0, 40)).map(|_| char::from(32 + g.index(90) as u8)).collect(),
+        },
+        _ => Frame::ControlReply {
+            body: (0..g.size(0, 40)).map(|_| char::from(32 + g.index(90) as u8)).collect(),
+        },
+    }
+}
+
+#[test]
+fn prop_wire_frames_roundtrip_and_truncate_safely() {
+    use fedasync::serving::wire::{decode, encode};
+    check("wire-roundtrip", 300, |g| {
+        let frame = gen_wire_frame(g);
+        let bytes = encode(&frame);
+        let (back, consumed) = decode(&bytes)
+            .map_err(|e| format!("{frame:?}: decode failed: {e}"))?
+            .ok_or_else(|| format!("{frame:?}: complete frame decoded as incomplete"))?;
+        prop_ensure!(back == frame, "round trip changed the frame: {frame:?} -> {back:?}");
+        prop_ensure!(
+            consumed == bytes.len(),
+            "consumed {consumed} of {} encoded bytes",
+            bytes.len()
+        );
+        // Any strict prefix is "wait for more bytes" — never an error,
+        // never a phantom frame.  A random cut plus the two canonical
+        // boundaries (empty, one-before-complete).
+        for cut in [0, g.index(bytes.len()), bytes.len() - 1] {
+            let got = decode(&bytes[..cut])
+                .map_err(|e| format!("{frame:?}: prefix [..{cut}] errored: {e}"))?;
+            prop_ensure!(got.is_none(), "{frame:?}: prefix [..{cut}] decoded as complete");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_rejects_non_finite_floats() {
+    use fedasync::serving::wire::{decode, encode, WireError};
+    use fedasync::serving::Frame;
+    check("wire-non-finite", 200, |g| {
+        let dim = g.size(1, 32);
+        let mut params = g.vec_f32(dim, 10.0);
+        let bad = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY][g.index(3)];
+        let poison_loss = g.bool();
+        let mut loss = g.f64_in(0.0, 10.0) as f32;
+        if poison_loss {
+            loss = bad;
+        } else {
+            params[g.index(dim)] = bad;
+        }
+        let frame = if poison_loss || g.bool() {
+            Frame::ClientUpdate { device: 0, tau: 1, loss, params }
+        } else {
+            Frame::ModelSnapshot { version: 1, params }
+        };
+        match decode(&encode(&frame)) {
+            Err(WireError::NonFinite) => Ok(()),
+            other => Err(format!("{bad} slipped through the codec: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_admission_gate_sheds_exactly_the_overflow() {
+    use fedasync::config::StalenessConfig;
+    use fedasync::coordinator::aggregator::{AdmissionGate, FedAsync, ShedGate};
+    use fedasync::coordinator::staleness::AlphaController;
+    use fedasync::coordinator::updater::{MixEngine, Updater};
+    use std::sync::{Arc, Barrier};
+
+    // Capacity Q, N > Q racing admissions: exactly Q enter and N − Q are
+    // refused — then, with the gate held saturated, every offer through a
+    // ShedGate-wrapped updater sheds (version frozen), and once the slots
+    // release every offer applies.  Totals reconcile exactly:
+    // offers == applied + shed, version == applied.
+    check("admission-backpressure", 60, |g| {
+        let q = g.size(1, 8);
+        let n = q + g.size(1, 8);
+        let gate = Arc::new(AdmissionGate::new(q));
+        let barrier = Arc::new(Barrier::new(n));
+        let admitted: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let gate = Arc::clone(&gate);
+                    let barrier = Arc::clone(&barrier);
+                    s.spawn(move || {
+                        barrier.wait();
+                        gate.try_enter()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gate thread")).collect()
+        });
+        let entered = admitted.iter().filter(|&&a| a).count();
+        prop_ensure!(entered == q, "{entered} of {n} admitted, want exactly {q}");
+        prop_ensure!(gate.inflight() == q && gate.is_saturated(), "gate not saturated");
+
+        let dim = g.size(1, 16);
+        let ctl = AlphaController::new(
+            g.f64_in(0.01, 1.0),
+            1.0,
+            usize::MAX,
+            &StalenessConfig { max: 64, func: random_staleness_fn(g), drop_above: None },
+        );
+        let shed_gate = ShedGate::new(Box::new(FedAsync::new(ctl)), Arc::clone(&gate));
+        let mut u = Updater::new(Box::new(shed_gate), MixEngine::Native);
+        let mut store = ModelStore::new(vec![0.0f32; dim], 4);
+        let (mut applied, mut shed) = (0usize, 0usize);
+        let while_full = g.size(1, 10);
+        for _ in 0..while_full {
+            let x = g.vec_f32(dim, 1.0);
+            let tau = store.current_version();
+            let out = u.apply(&NullTrainer, &mut store, &x, tau).map_err(|e| e.to_string())?;
+            prop_ensure!(out.shed && !out.applied && !out.buffered, "saturated offer not shed");
+            prop_ensure!(out.alpha_eff == 0.0, "shed leaked α = {}", out.alpha_eff);
+            shed += out.shed as usize;
+        }
+        prop_ensure!(store.current_version() == 0, "shed offers advanced the model");
+        for _ in 0..q {
+            gate.leave();
+        }
+        let after_release = g.size(1, 10);
+        for _ in 0..after_release {
+            let x = g.vec_f32(dim, 1.0);
+            let tau = store.current_version();
+            let out = u.apply(&NullTrainer, &mut store, &x, tau).map_err(|e| e.to_string())?;
+            prop_ensure!(out.applied && !out.shed, "free-gate offer refused");
+            applied += out.applied as usize;
+        }
+        prop_ensure!(
+            applied + shed == while_full + after_release,
+            "offers leaked: {applied} applied + {shed} shed != {}",
+            while_full + after_release
+        );
+        prop_ensure!(
+            store.current_version() == applied as u64,
+            "version {} != applied count {applied}",
+            store.current_version()
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_soa_behavior_matches_reference() {
     // The SoA-compiled ScenarioBehavior vs the retained per-client

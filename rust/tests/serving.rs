@@ -1,0 +1,296 @@
+//! Loopback conformance for the serving plane.
+//!
+//! A real `TcpListener` on 127.0.0.1, real swarm-client processes' worth
+//! of threads speaking the wire protocol, and the same closed-form
+//! quadratic compute plane the cross-mode conformance suite uses — so a
+//! *served* run can be banded directly against the in-process threaded
+//! driver under the stress presets (`scenario_straggler`,
+//! `scenario_churn`): every mode learns, final losses share a band, and
+//! the staleness histograms' supports overlap.  The accounting path is
+//! shared (`UpdaterCore::offer`), so any divergence here is a serving-
+//! plane bug, not a tolerance problem.
+//!
+//! Also pinned: the shutdown drain contract (every version increment was
+//! acked to exactly one client; nothing acked is ever lost), and that
+//! misbehaving peers — half-written headers, garbage bytes, mid-run
+//! disconnects — cannot wedge the drain or the epoch target.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::config::{ExecMode, ExperimentConfig, LocalUpdate, ServingConfig, StalenessFn};
+use fedasync::coordinator::server::{run_server_core, serve_native, ComputeJob};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::metrics::MetricsLog;
+use fedasync::scenario;
+use fedasync::serving::{
+    run_quad_client, run_served_core, ClientLoop, ClientReport, ServingStats, SwarmClient,
+};
+
+const CONF_DEVICES: usize = 16;
+const CONF_EPOCHS: usize = 120;
+const CONF_SEED: u64 = 1;
+const CLIENTS: usize = 3;
+
+fn conformance_quad() -> QuadraticProblem {
+    // Same problem as the cross-mode conformance suite in
+    // integration_training.rs: mild gradient noise gives every execution
+    // the same variance floor, keeping the shared loss band meaningful.
+    QuadraticProblem::new(CONF_DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+/// Same shrink the in-process conformance suite applies, plus the
+/// serving block (threads mode is a validation requirement to serve).
+fn conformance_shrink(cfg: &mut ExperimentConfig) {
+    cfg.mode = ExecMode::Threads;
+    cfg.epochs = CONF_EPOCHS;
+    cfg.eval_every = CONF_EPOCHS / 4;
+    cfg.repeats = 1;
+    cfg.seed = CONF_SEED;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = CONF_DEVICES;
+    cfg.worker_threads = CLIENTS;
+    cfg.max_inflight = 4;
+    cfg.serving = Some(ServingConfig::default());
+    cfg.validate().expect("conformance serving config");
+}
+
+fn preset_cfg(name: &str) -> ExperimentConfig {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs").join(name);
+    let mut cfg =
+        ExperimentConfig::from_toml_file(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    assert!(cfg.scenario.is_some(), "{path:?} must carry a [scenario] table");
+    conformance_shrink(&mut cfg);
+    cfg
+}
+
+/// Plain config (no scenario): uniform population, every delivery lands.
+fn plain_cfg(epochs: usize, eval_every: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    conformance_shrink(&mut cfg);
+    cfg.epochs = epochs;
+    cfg.eval_every = eval_every;
+    cfg.validate().expect("plain serving config");
+    cfg
+}
+
+/// The in-process threaded baseline over the native quadratic service.
+fn run_threaded_baseline(cfg: &ExperimentConfig) -> MetricsLog {
+    let p = conformance_quad();
+    let init = p.init_params(CONF_SEED as usize).expect("init");
+    let h = p.local_iters();
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(conformance_quad(), CONF_DEVICES, job_rx));
+    let behavior = scenario::behavior_for(cfg, CONF_DEVICES, CONF_SEED);
+    let test = dummy_dataset();
+    let log = run_server_core(cfg, CONF_SEED, &test, init, h, job_tx, behavior)
+        .unwrap_or_else(|e| panic!("threaded baseline: {e}"));
+    svc.join().expect("native service join");
+    log
+}
+
+/// A full served run over 127.0.0.1: the engine behind `run_served_core`,
+/// `clients` swarm-client threads doing pull → local-train → push with
+/// backoff, and an optional hook fed the live address (rogue peers,
+/// status probes).  Returns the server log, every client's report, and
+/// the serving counters.
+fn run_loopback(
+    cfg: &ExperimentConfig,
+    clients: usize,
+    rogue: impl FnOnce(std::net::SocketAddr) + Send + 'static,
+) -> (MetricsLog, Vec<ClientReport>, Arc<ServingStats>) {
+    let p = conformance_quad();
+    let init = p.init_params(CONF_SEED as usize).expect("init");
+    let h = p.local_iters();
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(conformance_quad(), CONF_DEVICES, job_rx));
+    let behavior = scenario::behavior_for(cfg, CONF_DEVICES, CONF_SEED);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stats = Arc::new(ServingStats::default());
+
+    let (done_tx, done_rx) = mpsc::channel();
+    {
+        let cfg = cfg.clone();
+        let behavior = Arc::clone(&behavior);
+        let stats = Arc::clone(&stats);
+        std::thread::spawn(move || {
+            let test = dummy_dataset();
+            let result =
+                run_served_core(&cfg, CONF_SEED, &test, init, h, job_tx, behavior, listener, stats);
+            let _ = done_tx.send(result);
+        });
+    }
+
+    let rogue_handle = std::thread::spawn(move || rogue(addr));
+
+    let epochs = cfg.epochs as u64;
+    let (gamma, rho) = (cfg.gamma, cfg.rho);
+    let client_handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let behavior = Arc::clone(&behavior);
+            std::thread::spawn(move || {
+                let trainer = conformance_quad();
+                let mut fleet = dummy_fleet(CONF_DEVICES, 7);
+                let data = dummy_dataset();
+                let loop_cfg = ClientLoop {
+                    behavior: behavior.as_ref(),
+                    devices: CONF_DEVICES,
+                    epochs,
+                    gamma,
+                    rho,
+                    seed: CONF_SEED + 100 * (c as u64 + 1),
+                    deadline: Duration::from_secs(120),
+                };
+                run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
+                    .unwrap_or_else(|e| panic!("client {c}: {e}"))
+            })
+        })
+        .collect();
+
+    // Watchdog: a wedged drain fails the test instead of hanging the
+    // suite (same idiom as server_core.rs).
+    let result = done_rx
+        .recv_timeout(Duration::from_secs(180))
+        .expect("served engine deadlocked during run/teardown");
+    let log = result.expect("served run failed");
+    let reports: Vec<ClientReport> =
+        client_handles.into_iter().map(|handle| handle.join().expect("client join")).collect();
+    rogue_handle.join().expect("rogue peer join");
+    svc.join().expect("native service join");
+    (log, reports, stats)
+}
+
+/// Conformance bands shared with `scenario_presets_conform_across_modes`:
+/// both runs learn, finals share a 100× band, staleness supports overlap.
+fn assert_conformant(preset: &str, served: &MetricsLog, threaded: &MetricsLog) {
+    let mut finals = Vec::new();
+    for (mode, log) in [("served", served), ("threaded", threaded)] {
+        let first = log.rows.first().expect("rows").test_loss;
+        let last = log.rows.last().expect("rows").test_loss;
+        assert!(
+            last.is_finite() && last < first * 0.5,
+            "{preset} {mode}: no learning ({first} -> {last})"
+        );
+        assert!(log.staleness_hist.total() > 0, "{preset} {mode}: empty staleness histogram");
+        assert!(log.rows.iter().all(|r| r.clients >= 1 && r.clients <= CONF_DEVICES));
+        finals.push(last);
+    }
+    let lo = finals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = finals.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        hi <= lo.max(1e-3) * 100.0,
+        "{preset}: served vs threaded final losses diverged: {finals:?}"
+    );
+    let a: std::collections::BTreeSet<u64> = served.staleness_hist.support().into_iter().collect();
+    let b: std::collections::BTreeSet<u64> =
+        threaded.staleness_hist.support().into_iter().collect();
+    assert!(
+        a.intersection(&b).next().is_some(),
+        "{preset}: staleness supports are disjoint: {a:?} vs {b:?}"
+    );
+}
+
+fn conformance_case(preset_file: &str) {
+    let cfg = preset_cfg(preset_file);
+    let (served, reports, stats) = run_loopback(&cfg, CLIENTS, |_| {});
+    let threaded = run_threaded_baseline(&cfg);
+    assert_conformant(preset_file, &served, &threaded);
+    // The serving counters and the client reports describe the same run.
+    let acked: u64 = reports.iter().map(|r| r.acked).sum();
+    assert!(acked > 0, "{preset_file}: no client push was ever acked");
+    assert!(
+        stats.acked.load(std::sync::atomic::Ordering::Relaxed) >= acked,
+        "{preset_file}: server acked fewer than clients observed"
+    );
+}
+
+#[test]
+fn loopback_conforms_on_straggler_preset() {
+    conformance_case("scenario_straggler.toml");
+}
+
+#[test]
+fn loopback_conforms_on_churn_preset() {
+    conformance_case("scenario_churn.toml");
+}
+
+#[test]
+fn drain_acks_every_version_increment_exactly_once() {
+    // The drain-before-exit contract: acks are sent only after an offer
+    // resolved, so summing the clients' `applied` acks re-derives the
+    // final model version exactly — nothing acked was lost in teardown,
+    // and nothing applied went unacked.  No scenario: every delivery is
+    // one copy, so applied acks and version increments are 1:1.
+    let cfg = plain_cfg(40, 10);
+    let (log, reports, stats) = run_loopback(&cfg, 2, |addr| {
+        // Live control probe while the run is in flight.
+        let mut probe = SwarmClient::connect(addr).expect("probe connect");
+        let status = probe.status().expect("status round trip");
+        assert!(status.version <= 40, "status version {} beyond target", status.version);
+    });
+    let last = log.rows.last().expect("rows");
+    assert!(last.epoch >= 40, "stopped early at {}", last.epoch);
+    let applied: u64 = reports.iter().map(|r| r.applied).sum();
+    assert_eq!(
+        applied,
+        last.epoch as u64,
+        "applied acks must re-derive the final version (drain lost or double-acked an update)"
+    );
+    let acked: u64 = reports.iter().map(|r| r.acked).sum();
+    assert!(acked >= applied, "acked {acked} < applied {applied}");
+    // Counter cross-check: the server never acks more than it admitted,
+    // and every admitted update was answered (acked or shed).
+    let s_admitted = stats.admitted.load(std::sync::atomic::Ordering::Relaxed);
+    let s_acked = stats.acked.load(std::sync::atomic::Ordering::Relaxed);
+    let s_shed = stats.shed.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(s_acked, acked, "server-side ack count must match the clients' view");
+    assert!(s_acked <= s_admitted, "acked {s_acked} > admitted {s_admitted}");
+    assert!(
+        s_acked + s_shed >= s_admitted,
+        "admitted updates left unanswered: admitted {s_admitted}, acked {s_acked}, shed {s_shed}"
+    );
+}
+
+#[test]
+fn hostile_peers_and_mid_run_disconnects_do_not_wedge_the_drain() {
+    // Three flavors of misbehaving peer against a live run: a half-written
+    // header (valid 3-byte prefix, then gone), pure garbage bytes, and a
+    // protocol-clean client that pulls once and vanishes.  The healthy
+    // clients must still carry the run to its epoch target and the
+    // shutdown drain must complete (watchdog-enforced inside
+    // run_loopback).
+    let cfg = plain_cfg(40, 10);
+    let (log, reports, stats) = run_loopback(&cfg, 2, |addr| {
+        let mut half = TcpStream::connect(addr).expect("half-frame peer connect");
+        half.write_all(&[0xA5, 0xFD, 0x01]).expect("half-frame write");
+        drop(half); // handler sees EOF mid-frame and must just drop us
+
+        let mut garbage = TcpStream::connect(addr).expect("garbage peer connect");
+        let _ = garbage.write_all(&[0u8; 16]); // BadMagic: peer gets dropped
+        drop(garbage);
+
+        let mut quitter = SwarmClient::connect(addr).expect("quitter connect");
+        let (version, params) = quitter.pull().expect("quitter pull");
+        assert!(version <= 40, "snapshot version {version} beyond the target");
+        assert!(!params.is_empty(), "snapshot carried no parameters");
+        drop(quitter); // mid-run disconnect with no goodbye
+    });
+    let last = log.rows.last().expect("rows");
+    assert!(last.epoch >= 40, "hostile peers stalled the run at {}", last.epoch);
+    assert!(reports.iter().map(|r| r.acked).sum::<u64>() > 0, "healthy clients starved");
+    // All five peers were accepted (2 healthy + 3 misbehaving), plus the
+    // shutdown self-connect; none of them wedged accounting.
+    assert!(
+        stats.connections.load(std::sync::atomic::Ordering::Relaxed) >= 5,
+        "expected every peer to reach the acceptor"
+    );
+}
