@@ -1,0 +1,181 @@
+//! Kill the server mid-run, resume it from its checkpoint, keep the
+//! same swarm — and prove nothing was lost or applied twice.
+//!
+//! Phase A serves the FedAsync engine behind a loopback listener with
+//! `checkpoint_every = 1` (every ack durable before it is sent) and an
+//! injected crash armed at a third of the epoch target.  Three tracked
+//! swarm clients — real TCP, exactly-once sequence numbers — hammer it
+//! until the crash tears the server down mid-ack.  Phase B restarts the
+//! server from the checkpoint on a *fresh* port; the clients redial
+//! through a shared [`AddrCell`] and re-offer their in-flight updates
+//! under the same sequence numbers, so the restored dedup table replays
+//! the dropped ack instead of double-applying the update.
+//!
+//! At the end the conservation law is checked and the process exits
+//! nonzero if it fails: Σ applied acks across both server lives must
+//! equal the final model version exactly.
+//!
+//! ```bash
+//! cargo run --release --example chaos_swarm
+//! ```
+
+use std::net::TcpListener;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::chaos::ChaosConfig;
+use fedasync::config::{ExecMode, ExperimentConfig, LocalUpdate, ServingConfig, StalenessFn};
+use fedasync::coordinator::server::{serve_native, ComputeJob};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::metrics::MetricsLog;
+use fedasync::runtime::RuntimeError;
+use fedasync::scenario;
+use fedasync::serving::{run_quad_client, run_served_core, AddrCell, ClientLoop, ServingStats};
+
+const DEVICES: usize = 16;
+const EPOCHS: usize = 90;
+const CRASH_AT: u64 = 30;
+const CLIENTS: usize = 3;
+const SEED: u64 = 42;
+
+fn problem() -> QuadraticProblem {
+    QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+fn base_cfg(ckpt: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.mode = ExecMode::Threads;
+    cfg.epochs = EPOCHS;
+    cfg.eval_every = EPOCHS / 3;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = DEVICES;
+    cfg.worker_threads = CLIENTS;
+    cfg.max_inflight = 4;
+    cfg.serving = Some(ServingConfig {
+        checkpoint_path: Some(ckpt.to_string()),
+        checkpoint_every: 1,
+        ..ServingConfig::default()
+    });
+    cfg.validate().expect("chaos swarm config");
+    cfg
+}
+
+/// One server life: the served engine on `listener` with its own native
+/// compute thread, joined to completion.
+fn serve_phase(
+    cfg: &ExperimentConfig,
+    listener: TcpListener,
+    stats: Arc<ServingStats>,
+) -> Result<MetricsLog, RuntimeError> {
+    let p = problem();
+    let init = p.init_params(SEED as usize).expect("init");
+    let h = p.local_iters();
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(problem(), DEVICES, job_rx));
+    let behavior = scenario::behavior_for(cfg, DEVICES, SEED);
+    let test = dummy_dataset();
+    let result = run_served_core(cfg, SEED, &test, init, h, job_tx, behavior, listener, stats);
+    svc.join().expect("native service join");
+    result
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    fedasync::util::logging::init();
+    let ckpt = std::env::temp_dir().join(format!("chaos-swarm-{}.ckpt", std::process::id()));
+    let _ = std::fs::remove_file(&ckpt);
+
+    let mut cfg_a = base_cfg(&ckpt.display().to_string());
+    cfg_a.chaos = Some(ChaosConfig { crash_at_version: Some(CRASH_AT), ..ChaosConfig::default() });
+    cfg_a.validate().expect("phase A config");
+
+    let listener_a = TcpListener::bind("127.0.0.1:0")?;
+    let cell = AddrCell::new(listener_a.local_addr()?);
+    println!(
+        "chaos_swarm: serving {EPOCHS} epochs on {}, crash armed at version {CRASH_AT}, \
+         checkpoint {}",
+        cell.get(),
+        ckpt.display()
+    );
+
+    // The swarm outlives the server: tracked resilient clients that
+    // redial through the cell and resume their sequence numbers.
+    let behavior = scenario::behavior_for(&cfg_a, DEVICES, SEED);
+    let (gamma, rho) = (cfg_a.gamma, cfg_a.rho);
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let behavior = Arc::clone(&behavior);
+            let cell = cell.clone();
+            std::thread::spawn(move || {
+                let trainer = problem();
+                let mut fleet = dummy_fleet(DEVICES, 7);
+                let data = dummy_dataset();
+                let loop_cfg = ClientLoop {
+                    behavior: behavior.as_ref(),
+                    devices: DEVICES,
+                    epochs: EPOCHS as u64,
+                    gamma,
+                    rho,
+                    seed: SEED + 100 * (c as u64 + 1),
+                    deadline: Duration::from_secs(90),
+                    client_id: c as u64 + 1,
+                    max_push_attempts: 0,
+                    chaos: None,
+                };
+                run_quad_client(cell, &trainer, &mut fleet, &data, &loop_cfg)
+                    .unwrap_or_else(|e| panic!("client {c}: {e}"))
+            })
+        })
+        .collect();
+
+    // Phase A: serve until the injected crash aborts the engine mid-ack.
+    let stats_a = Arc::new(ServingStats::default());
+    let crash = serve_phase(&cfg_a, listener_a, Arc::clone(&stats_a))
+        .expect_err("phase A should have crashed");
+    println!("\nphase A down: {crash}");
+    assert!(ckpt.exists(), "crash left no checkpoint behind");
+
+    // Phase B: resume from the checkpoint on a fresh port and repoint
+    // the swarm at it.
+    let mut cfg_b = base_cfg(&ckpt.display().to_string());
+    cfg_b.serving.as_mut().expect("serving block").resume = true;
+    cfg_b.validate().expect("phase B config");
+    let listener_b = TcpListener::bind("127.0.0.1:0")?;
+    cell.set(listener_b.local_addr()?);
+    println!("phase B resuming on {}\n", cell.get());
+    let stats_b = Arc::new(ServingStats::default());
+    let log = serve_phase(&cfg_b, listener_b, Arc::clone(&stats_b))?;
+
+    let reports: Vec<_> = clients.into_iter().map(|c| c.join().expect("client join")).collect();
+
+    println!("{:<6} {:>11} {:>10} {:>10}", "epoch", "train_loss", "mean α_t", "staleness");
+    for r in &log.rows {
+        println!(
+            "{:<6} {:>11.4} {:>10.4} {:>10.2}",
+            r.epoch, r.train_loss, r.alpha_eff, r.staleness
+        );
+    }
+
+    let last = log.rows.last().expect("rows");
+    let applied: u64 = reports.iter().map(|r| r.applied).sum();
+    let reconnects: u64 = reports.iter().map(|r| r.reconnects).sum();
+    let ld = std::sync::atomic::Ordering::Relaxed;
+    println!(
+        "\nfinal version {} — {applied} applied acks across both server lives, \
+         {reconnects} reconnects, {} replayed from the restored dedup table.",
+        last.epoch,
+        stats_b.deduped.load(ld),
+    );
+    let _ = std::fs::remove_file(&ckpt);
+    if applied != last.epoch as u64 {
+        eprintln!("CONSERVATION VIOLATED: {applied} applied acks != final version {}", last.epoch);
+        std::process::exit(1);
+    }
+    println!("conservation holds: every version increment was acked exactly once.");
+    Ok(())
+}

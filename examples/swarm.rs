@@ -57,6 +57,7 @@ fn swarm_cfg() -> ExperimentConfig {
         accept_queue: 2,
         read_timeout_ms: 50,
         retry_after_ms: 10,
+        ..ServingConfig::default()
     });
     cfg.validate().expect("swarm config");
     cfg
@@ -82,6 +83,9 @@ fn run_client(addr: &str, seed: u64) {
         rho: cfg.rho,
         seed,
         deadline: Duration::from_secs(45),
+        client_id: 0,
+        max_push_attempts: 0,
+        chaos: None,
     };
     match run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg) {
         Ok(r) => {

@@ -1,0 +1,260 @@
+//! Chaos-plane perf snapshot, machine-readable: writes
+//! `BENCH_chaos.json` with (a) checkpoint save/load latency at a
+//! 100k-parameter model — the durability tax a `checkpoint_every = 1`
+//! server pays on every ack — and (b) serving-plane throughput and push
+//! tail latency with the fault injector armed at increasing drop rates,
+//! against the same loopback harness `bench_net` measures clean.
+//!
+//! CI uploads the JSON next to `BENCH_net.json`, so the overhead of the
+//! chaos plane (and any regression in recovery-path costs) is trackable
+//! PR over PR.
+//!
+//! ```bash
+//! cargo bench --bench bench_chaos
+//! ```
+
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::chaos::{ChaosConfig, FaultPlan};
+use fedasync::config::{ExecMode, ExperimentConfig, LocalUpdate, ServingConfig, StalenessFn};
+use fedasync::coordinator::aggregator::StagedState;
+use fedasync::coordinator::server::{serve_native, ComputeJob};
+use fedasync::coordinator::Trainer;
+use fedasync::scenario;
+use fedasync::serving::{
+    run_quad_client, run_served_core, CheckpointData, CheckpointStore, ClientLoop, DedupEntry,
+    DedupRecord, ServingStats,
+};
+
+const DEVICES: usize = 16;
+const EPOCHS: usize = 80;
+const CLIENTS: usize = 3;
+const SEED: u64 = 1;
+const CKPT_DIM: usize = 100_000;
+const CKPT_REPS: u32 = 10;
+
+fn quad() -> QuadraticProblem {
+    QuadraticProblem::new(DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+fn bench_shrink(cfg: &mut ExperimentConfig) {
+    cfg.mode = ExecMode::Threads;
+    cfg.epochs = EPOCHS;
+    cfg.eval_every = EPOCHS / 4;
+    cfg.repeats = 1;
+    cfg.seed = SEED;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = DEVICES;
+    cfg.worker_threads = CLIENTS;
+    cfg.max_inflight = 4;
+    cfg.serving = Some(ServingConfig::default());
+}
+
+fn bench_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    bench_shrink(&mut cfg);
+    cfg.validate().expect("bench chaos config");
+    cfg
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+// ------------------------------------------------------ checkpoint costs
+
+/// A representative big checkpoint: 100k params, staged aggregator
+/// state, a 64-client dedup table.
+fn big_checkpoint() -> CheckpointData {
+    let wave = |i: usize| ((i as f32) * 0.001).sin();
+    CheckpointData {
+        version: 123_456,
+        params: (0..CKPT_DIM).map(wave).collect(),
+        staged: Some(StagedState {
+            staging: (0..CKPT_DIM).map(|i| wave(i) * 0.5).collect(),
+            weight_sum: 1.75,
+            count: 42,
+        }),
+        dedup: (0..64)
+            .map(|c| DedupRecord {
+                client: c as u64 + 1,
+                entry: DedupEntry {
+                    seq: 1000 + c as u64,
+                    version: 123_000 + c as u64,
+                    applied: c % 2 == 0,
+                    staleness: c as u64 % 7,
+                },
+            })
+            .collect(),
+    }
+}
+
+/// (save_ms, load_ms, bytes): atomic temp+fsync+rename save and
+/// checksum-verified load, averaged over `CKPT_REPS` rounds.
+fn bench_checkpoint() -> (f64, f64, f64) {
+    let path =
+        std::env::temp_dir().join(format!("fedasync-bench-chaos-{}.ckpt", std::process::id()));
+    let store = CheckpointStore::new(&path);
+    let data = big_checkpoint();
+    let mut save_s = 0.0;
+    let mut load_s = 0.0;
+    for _ in 0..CKPT_REPS {
+        let t0 = Instant::now();
+        store.save(&data).expect("checkpoint save");
+        save_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let back = store.load().expect("checkpoint load");
+        load_s += t1.elapsed().as_secs_f64();
+        assert_eq!(back.version, data.version, "round trip changed the checkpoint");
+    }
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&path);
+    (save_s * 1e3 / f64::from(CKPT_REPS), load_s * 1e3 / f64::from(CKPT_REPS), bytes as f64)
+}
+
+// --------------------------------------------------- faulted throughput
+
+struct ChaosSample {
+    requests_per_s: f64,
+    push_p50_ms: f64,
+    push_p99_ms: f64,
+    reconnects: u64,
+    deduped: u64,
+}
+
+/// One full served run over 127.0.0.1 with `plan` armed on both sides of
+/// every socket (`drop_prob = 0` means the injector is disarmed and this
+/// measures the clean path, directly comparable to `bench_net`).
+fn run_faulted(cfg: &ExperimentConfig, chaos: &ChaosConfig) -> ChaosSample {
+    let p = quad();
+    let init = p.init_params(SEED as usize).expect("init");
+    let h = p.local_iters();
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(quad(), DEVICES, job_rx));
+    let behavior = scenario::behavior_for(cfg, DEVICES, SEED);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stats = Arc::new(ServingStats::default());
+    let client_plan =
+        if chaos.has_stream_faults() { Some(FaultPlan::compile(chaos)) } else { None };
+
+    let t0 = Instant::now();
+    let server = {
+        let cfg = cfg.clone();
+        let behavior = Arc::clone(&behavior);
+        let stats = Arc::clone(&stats);
+        std::thread::spawn(move || {
+            let test = dummy_dataset();
+            run_served_core(&cfg, SEED, &test, init, h, job_tx, behavior, listener, stats)
+        })
+    };
+
+    let epochs = cfg.epochs as u64;
+    let (gamma, rho) = (cfg.gamma, cfg.rho);
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let behavior = Arc::clone(&behavior);
+            let plan = client_plan.clone();
+            std::thread::spawn(move || {
+                let trainer = quad();
+                let mut fleet = dummy_fleet(DEVICES, 7);
+                let data = dummy_dataset();
+                let loop_cfg = ClientLoop {
+                    behavior: behavior.as_ref(),
+                    devices: DEVICES,
+                    epochs,
+                    gamma,
+                    rho,
+                    seed: SEED + 100 * (c as u64 + 1),
+                    deadline: Duration::from_secs(120),
+                    client_id: c as u64 + 1,
+                    max_push_attempts: 0,
+                    chaos: plan,
+                };
+                run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
+                    .unwrap_or_else(|e| panic!("client {c}: {e}"))
+            })
+        })
+        .collect();
+
+    let log = server.join().expect("server join").expect("served run");
+    let wall = t0.elapsed().as_secs_f64();
+    let reports: Vec<_> = clients.into_iter().map(|c| c.join().expect("client join")).collect();
+    svc.join().expect("native service join");
+
+    assert!(log.rows.last().expect("rows").epoch >= EPOCHS, "run stopped early");
+    let pulls: u64 = reports.iter().map(|r| r.pushed).sum::<u64>();
+    let ld = Ordering::Relaxed;
+    let answered = stats.acked.load(ld) + stats.shed.load(ld);
+    let mut lat: Vec<f64> =
+        reports.iter().flat_map(|r| r.push_latency_ms.iter().copied()).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    ChaosSample {
+        requests_per_s: (answered + pulls) as f64 / wall,
+        push_p50_ms: percentile(&lat, 0.50),
+        push_p99_ms: percentile(&lat, 0.99),
+        reconnects: reports.iter().map(|r| r.reconnects).sum(),
+        deduped: stats.deduped.load(ld),
+    }
+}
+
+fn main() {
+    println!("== bench_chaos: fault-injection + recovery snapshot -> BENCH_chaos.json ==\n");
+    let mut fields: Vec<(String, f64)> = Vec::new();
+
+    let (save_ms, load_ms, bytes) = bench_checkpoint();
+    println!(
+        "checkpoint {CKPT_DIM} params: save {save_ms:>7.2} ms   load {load_ms:>7.2} ms   \
+         {bytes:.0} bytes"
+    );
+    fields.push(("checkpoint_save_ms_100k".into(), save_ms));
+    fields.push(("checkpoint_load_ms_100k".into(), load_ms));
+    fields.push(("checkpoint_bytes_100k".into(), bytes));
+
+    let cfg = bench_cfg();
+    for pct in [0u32, 5, 10] {
+        let ch = ChaosConfig {
+            seed: 7,
+            drop_prob: f64::from(pct) / 100.0,
+            delay_prob: if pct > 0 { 0.05 } else { 0.0 },
+            delay_ms: 1,
+            ..ChaosConfig::default()
+        };
+        let mut cfg = cfg.clone();
+        cfg.chaos = Some(ch.clone());
+        cfg.validate().expect("faulted bench config");
+        let s = run_faulted(&cfg, &ch);
+        println!(
+            "drop {pct:>2}% {:>9.1} req/s   push p50 {:>7.2} ms   p99 {:>7.2} ms   \
+             reconnects {}   deduped {}",
+            s.requests_per_s, s.push_p50_ms, s.push_p99_ms, s.reconnects, s.deduped
+        );
+        let key = format!("fault{pct}");
+        fields.push((format!("{key}_requests_per_s"), s.requests_per_s));
+        fields.push((format!("{key}_push_p50_ms"), s.push_p50_ms));
+        fields.push((format!("{key}_push_p99_ms"), s.push_p99_ms));
+        fields.push((format!("{key}_reconnects"), s.reconnects as f64));
+        fields.push((format!("{key}_deduped"), s.deduped as f64));
+    }
+
+    let mut json = String::from("{\n  \"schema\": \"bench_chaos.v1\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let sep = if i + 1 == fields.len() { "" } else { "," };
+        json.push_str(&format!("  \"{k}\": {v:.3}{sep}\n"));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_chaos.json", &json).expect("write BENCH_chaos.json");
+    println!("\nwrote BENCH_chaos.json");
+}

@@ -113,6 +113,9 @@ fn run_loopback(cfg: &ExperimentConfig) -> NetSample {
                     rho,
                     seed: SEED + 100 * (c as u64 + 1),
                     deadline: Duration::from_secs(120),
+                    client_id: 0,
+                    max_push_attempts: 0,
+                    chaos: None,
                 };
                 run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
                     .unwrap_or_else(|e| panic!("client {c}: {e}"))

@@ -1,0 +1,578 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! Real edge fleets crash, partition, duplicate, and corrupt; the
+//! paper's staleness tolerance is only credible if the serving plane
+//! survives all of that *continuously*, not just in a one-off soak.
+//! This module makes failure a first-class, seed-driven input:
+//!
+//! * [`ChaosConfig`] — the knob set (`[chaos]` TOML table or the
+//!   `--chaos k=v,...` CLI flag): per-event probabilities for each fault
+//!   class plus an optional injected server crash at a model version.
+//! * [`FaultPlan`] — the compiled, shareable plan.  Each stream draws a
+//!   decorrelated RNG from `plan seed ⊕ stream id`, so a run's fault
+//!   sequence is a pure function of `(seed, stream id, call sequence)` —
+//!   a red chaos test replays bit-for-bit.
+//! * [`FaultyStream`] — a `Read + Write` wrapper interposed at the
+//!   socket boundary (server acceptor and swarm client both wrap their
+//!   `TcpStream`s).  Faults fire per `write` call, which is per frame:
+//!   the serving plane writes each frame with a single `write_all`.
+//!
+//! Fault taxonomy (write side, mutually exclusive per frame; the
+//! probabilities must sum to ≤ 1):
+//!
+//! | fault       | wire effect                                   | exercises                    |
+//! |-------------|-----------------------------------------------|------------------------------|
+//! | `reset`     | `ECONNRESET` now; stream dead after           | reconnect-with-resume        |
+//! | `truncate`  | partial write, then the stream goes dead      | partial-frame reassembly + retry |
+//! | `drop`      | frame silently swallowed (reported as sent)   | reply timeouts, retry path   |
+//! | `duplicate` | frame written twice                           | dedup table (exactly-once)   |
+//! | `corrupt`   | one byte flipped                              | codec totality, peer drop    |
+//! | `delay`     | sleep `delay_ms` before the write (read too)  | stragglers, timeout tuning   |
+//!
+//! The exactly-once protocol this plane stresses lives in
+//! [`crate::serving::dedup`] and [`crate::serving::checkpoint`]; see
+//! DESIGN.md §"Chaos & recovery" for the full argument.
+
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::ConfigError;
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Rng;
+
+/// Fault-injection knobs (`[chaos]` / `--chaos`).  All probabilities are
+/// per frame-write; the five exclusive write faults must sum to ≤ 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Root seed for the fault streams (independent of the experiment
+    /// seed, so the same training run can be replayed under different
+    /// fault sequences).
+    pub seed: u64,
+    /// Probability of sleeping `delay_ms` around a read/write.
+    pub delay_prob: f64,
+    /// Injected latency per delay event, milliseconds.
+    pub delay_ms: u64,
+    /// Probability a written frame is silently swallowed.
+    pub drop_prob: f64,
+    /// Probability a write fails with `ECONNRESET` (stream dead after).
+    pub reset_prob: f64,
+    /// Probability a write is cut short mid-frame (stream dead after).
+    pub truncate_prob: f64,
+    /// Probability a written frame is sent twice.
+    pub duplicate_prob: f64,
+    /// Probability one byte of a written frame is flipped.
+    pub corrupt_prob: f64,
+    /// Simulated server crash: the engine aborts (without acking the
+    /// in-flight update) once this model version is reached.  Pairs with
+    /// checkpointing + `--resume` to test crash recovery.
+    pub crash_at_version: Option<u64>,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            delay_prob: 0.0,
+            delay_ms: 1,
+            drop_prob: 0.0,
+            reset_prob: 0.0,
+            truncate_prob: 0.0,
+            duplicate_prob: 0.0,
+            corrupt_prob: 0.0,
+            crash_at_version: None,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Sanity-check the knobs: probabilities in `[0, 1]`, the exclusive
+    /// write faults summing to ≤ 1, bounded delay.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let probs = [
+            ("delay_prob", self.delay_prob),
+            ("drop_prob", self.drop_prob),
+            ("reset_prob", self.reset_prob),
+            ("truncate_prob", self.truncate_prob),
+            ("duplicate_prob", self.duplicate_prob),
+            ("corrupt_prob", self.corrupt_prob),
+        ];
+        for (name, p) in probs {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(ConfigError(format!("chaos: {name}={p} must be in [0, 1]")));
+            }
+        }
+        let excl = self.drop_prob
+            + self.reset_prob
+            + self.truncate_prob
+            + self.duplicate_prob
+            + self.corrupt_prob;
+        if excl > 1.0 {
+            return Err(ConfigError(format!(
+                "chaos: exclusive write-fault probabilities sum to {excl} > 1"
+            )));
+        }
+        if self.delay_ms > 60_000 {
+            return Err(ConfigError(format!(
+                "chaos: delay_ms={} exceeds the 60s sanity bound",
+                self.delay_ms
+            )));
+        }
+        Ok(())
+    }
+
+    /// Any stream-level fault enabled (crash injection alone does not
+    /// need the socket wrapper)?
+    pub fn has_stream_faults(&self) -> bool {
+        self.delay_prob > 0.0
+            || self.drop_prob > 0.0
+            || self.reset_prob > 0.0
+            || self.truncate_prob > 0.0
+            || self.duplicate_prob > 0.0
+            || self.corrupt_prob > 0.0
+    }
+
+    /// Strict `[chaos]` table: unknown keys are errors, like
+    /// `[serving]` — a typo'd fault knob must not silently run clean.
+    pub fn from_json(v: &Json) -> Result<ChaosConfig, ConfigError> {
+        let Some(obj) = v.as_obj() else {
+            return Err(ConfigError("chaos must be a [chaos] table".into()));
+        };
+        let mut cfg = ChaosConfig::default();
+        for key in obj.keys() {
+            match key.as_str() {
+                "seed" => {
+                    cfg.seed = v
+                        .get("seed")
+                        .as_usize()
+                        .ok_or_else(|| ConfigError("chaos: seed must be an integer".into()))?
+                        as u64;
+                }
+                "delay_ms" => {
+                    cfg.delay_ms = v.get("delay_ms").as_usize().ok_or_else(|| {
+                        ConfigError("chaos: delay_ms must be an integer".into())
+                    })? as u64;
+                }
+                "crash_at_version" => {
+                    cfg.crash_at_version =
+                        Some(v.get("crash_at_version").as_usize().ok_or_else(|| {
+                            ConfigError("chaos: crash_at_version must be an integer".into())
+                        })? as u64);
+                }
+                "delay_prob" | "drop_prob" | "reset_prob" | "truncate_prob"
+                | "duplicate_prob" | "corrupt_prob" => {
+                    let p = v.get(key).as_f64().ok_or_else(|| {
+                        ConfigError(format!("chaos: {key} must be a number"))
+                    })?;
+                    match key.as_str() {
+                        "delay_prob" => cfg.delay_prob = p,
+                        "drop_prob" => cfg.drop_prob = p,
+                        "reset_prob" => cfg.reset_prob = p,
+                        "truncate_prob" => cfg.truncate_prob = p,
+                        "duplicate_prob" => cfg.duplicate_prob = p,
+                        _ => cfg.corrupt_prob = p,
+                    }
+                }
+                other => {
+                    return Err(ConfigError(format!(
+                        "chaos: unknown key {other:?} (known: seed, delay_prob, delay_ms, \
+                         drop_prob, reset_prob, truncate_prob, duplicate_prob, corrupt_prob, \
+                         crash_at_version)"
+                    )))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Full table so provenance round-trips through `apply_json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("seed", Json::Num(self.seed as f64));
+        o.insert("delay_prob", Json::Num(self.delay_prob));
+        o.insert("delay_ms", Json::Num(self.delay_ms as f64));
+        o.insert("drop_prob", Json::Num(self.drop_prob));
+        o.insert("reset_prob", Json::Num(self.reset_prob));
+        o.insert("truncate_prob", Json::Num(self.truncate_prob));
+        o.insert("duplicate_prob", Json::Num(self.duplicate_prob));
+        o.insert("corrupt_prob", Json::Num(self.corrupt_prob));
+        if let Some(v) = self.crash_at_version {
+            o.insert("crash_at_version", Json::Num(v as f64));
+        }
+        Json::Obj(o)
+    }
+
+    /// Parse the `--chaos` CLI value: a `key=value` comma list over the
+    /// same keys as the `[chaos]` table, e.g.
+    /// `--chaos seed=7,drop_prob=0.05,delay_prob=0.2,delay_ms=2`.
+    pub fn parse_spec(spec: &str) -> Result<ChaosConfig, ConfigError> {
+        let mut obj = JsonObj::new();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((k, raw)) = part.split_once('=') else {
+                return Err(ConfigError(format!(
+                    "chaos spec entry {part:?} is not key=value"
+                )));
+            };
+            let n: f64 = raw.trim().parse().map_err(|_| {
+                ConfigError(format!("chaos spec {k}={raw:?} is not a number"))
+            })?;
+            obj.insert(k.trim(), Json::Num(n));
+        }
+        ChaosConfig::from_json(&Json::Obj(obj))
+    }
+}
+
+/// A compiled, shareable fault plan.  Cheap to clone behind an `Arc`;
+/// hand each socket its own [`StreamFaults`] via [`FaultPlan::stream`].
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    cfg: ChaosConfig,
+}
+
+impl FaultPlan {
+    /// Compile a validated config into a plan.
+    pub fn compile(cfg: &ChaosConfig) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan { cfg: cfg.clone() })
+    }
+
+    /// The injected-crash version, if configured.
+    pub fn crash_at_version(&self) -> Option<u64> {
+        self.cfg.crash_at_version
+    }
+
+    /// Whether any socket-level fault can fire (if not, streams need no
+    /// wrapping at all — the fast path stays untouched).
+    pub fn has_stream_faults(&self) -> bool {
+        self.cfg.has_stream_faults()
+    }
+
+    /// Per-stream fault state.  `stream_id` decorrelates streams (use
+    /// distinct ids for server connection n, client connection n, …);
+    /// the same `(plan seed, stream_id)` pair always yields the same
+    /// fault sequence.
+    pub fn stream(&self, stream_id: u64) -> StreamFaults {
+        StreamFaults {
+            rng: Rng::seed_from(
+                self.cfg.seed ^ stream_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+            cfg: self.cfg.clone(),
+            dead: false,
+        }
+    }
+}
+
+/// What a write draw decided.
+enum WriteFault {
+    None,
+    Drop,
+    Reset,
+    Truncate,
+    Duplicate,
+    Corrupt,
+}
+
+/// Deterministic per-stream fault state (one per wrapped socket).
+#[derive(Debug)]
+pub struct StreamFaults {
+    rng: Rng,
+    cfg: ChaosConfig,
+    /// A reset/truncate fired: every later operation fails, like a
+    /// torn-down TCP connection.
+    dead: bool,
+}
+
+impl StreamFaults {
+    /// One cumulative draw over the exclusive write faults, so at most
+    /// one fires per frame and the per-class rates match the config.
+    fn draw_write(&mut self) -> WriteFault {
+        let u = self.rng.f64();
+        let mut edge = self.cfg.reset_prob;
+        if u < edge {
+            return WriteFault::Reset;
+        }
+        edge += self.cfg.truncate_prob;
+        if u < edge {
+            return WriteFault::Truncate;
+        }
+        edge += self.cfg.drop_prob;
+        if u < edge {
+            return WriteFault::Drop;
+        }
+        edge += self.cfg.duplicate_prob;
+        if u < edge {
+            return WriteFault::Duplicate;
+        }
+        edge += self.cfg.corrupt_prob;
+        if u < edge {
+            return WriteFault::Corrupt;
+        }
+        WriteFault::None
+    }
+
+    fn maybe_delay(&mut self) {
+        if self.cfg.delay_prob > 0.0 && self.rng.f64() < self.cfg.delay_prob {
+            std::thread::sleep(Duration::from_millis(self.cfg.delay_ms));
+        }
+    }
+}
+
+/// `Read + Write` wrapper that injects the plan's faults at the socket
+/// boundary.  Wrap server-side in the acceptor (after the timeouts are
+/// set) and client-side in [`SwarmClient`](crate::serving::SwarmClient).
+#[derive(Debug)]
+pub struct FaultyStream<S> {
+    inner: S,
+    faults: StreamFaults,
+    /// Scratch for the corrupt fault (copy + flip, never mutate the
+    /// caller's buffer).
+    scratch: Vec<u8>,
+}
+
+impl<S> FaultyStream<S> {
+    /// Interpose `faults` on `inner`.
+    pub fn new(inner: S, faults: StreamFaults) -> FaultyStream<S> {
+        FaultyStream { inner, faults, scratch: Vec::new() }
+    }
+
+    /// The wrapped stream (e.g. to reach `TcpStream` socket options).
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+}
+
+fn dead_err() -> io::Error {
+    io::Error::new(io::ErrorKind::BrokenPipe, "chaos: stream killed by injected fault")
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.faults.dead {
+            return Err(dead_err());
+        }
+        self.faults.maybe_delay();
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.faults.dead {
+            return Err(dead_err());
+        }
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        self.faults.maybe_delay();
+        match self.faults.draw_write() {
+            WriteFault::None => self.inner.write(buf),
+            // Swallowed whole: the peer never sees the frame but the
+            // writer believes it was sent — the lost-frame case reply
+            // timeouts and retries exist for.
+            WriteFault::Drop => Ok(buf.len()),
+            WriteFault::Reset => {
+                self.faults.dead = true;
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    "chaos: injected connection reset",
+                ))
+            }
+            // A partial frame reaches the peer, then the connection
+            // dies: `write_all`'s retry hits the dead stream.
+            WriteFault::Truncate => {
+                let n = (buf.len() / 2).max(1);
+                self.inner.write_all(&buf[..n])?;
+                self.faults.dead = true;
+                Ok(n)
+            }
+            WriteFault::Duplicate => {
+                self.inner.write_all(buf)?;
+                self.inner.write_all(buf)?;
+                Ok(buf.len())
+            }
+            WriteFault::Corrupt => {
+                self.scratch.clear();
+                self.scratch.extend_from_slice(buf);
+                let at = (self.faults.rng.next_u64() as usize) % buf.len();
+                let flip = 1 + (self.faults.rng.next_u64() % 255) as u8;
+                self.scratch[at] ^= flip;
+                self.inner.write_all(&self.scratch)?;
+                Ok(buf.len())
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.faults.dead {
+            return Err(dead_err());
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An in-memory sink/source standing in for a socket.
+    struct Duplex {
+        wrote: Vec<u8>,
+        feed: Vec<u8>,
+        at: usize,
+    }
+
+    impl Duplex {
+        fn new() -> Duplex {
+            Duplex { wrote: Vec::new(), feed: Vec::new(), at: 0 }
+        }
+    }
+
+    impl Read for Duplex {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let n = (self.feed.len() - self.at).min(buf.len());
+            buf[..n].copy_from_slice(&self.feed[self.at..self.at + n]);
+            self.at += n;
+            Ok(n)
+        }
+    }
+
+    impl Write for Duplex {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.wrote.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn noisy() -> ChaosConfig {
+        let mut c = ChaosConfig::default();
+        c.seed = 11;
+        c.drop_prob = 0.2;
+        c.duplicate_prob = 0.2;
+        c.corrupt_prob = 0.2;
+        c.reset_prob = 0.05;
+        c.truncate_prob = 0.05;
+        c
+    }
+
+    #[test]
+    fn same_seed_and_stream_id_replay_identical_faults() {
+        let plan = FaultPlan::compile(&noisy());
+        let run = |faults: StreamFaults| {
+            let mut s = FaultyStream::new(Duplex::new(), faults);
+            let mut log = Vec::new();
+            for i in 0..200u32 {
+                let frame = i.to_le_bytes();
+                match s.write(&frame) {
+                    Ok(n) => log.push(Ok(n)),
+                    Err(e) => {
+                        log.push(Err(e.kind()));
+                        break;
+                    }
+                }
+            }
+            (log, s.inner.wrote)
+        };
+        let (log_a, wrote_a) = run(plan.stream(3));
+        let (log_b, wrote_b) = run(plan.stream(3));
+        assert_eq!(log_a, log_b, "fault sequence must be deterministic");
+        assert_eq!(wrote_a, wrote_b, "wire bytes must be deterministic");
+        let (log_c, wrote_c) = run(plan.stream(4));
+        assert!(
+            log_a != log_c || wrote_a != wrote_c,
+            "distinct stream ids must decorrelate"
+        );
+    }
+
+    #[test]
+    fn quiet_plan_is_a_transparent_wrapper() {
+        let cfg = ChaosConfig::default();
+        assert!(!cfg.has_stream_faults());
+        let plan = FaultPlan::compile(&cfg);
+        let mut s = FaultyStream::new(Duplex::new(), plan.stream(0));
+        for _ in 0..50 {
+            s.write_all(b"hello frame").unwrap();
+        }
+        assert_eq!(s.inner.wrote.len(), 50 * 11, "no fault may fire at zero probability");
+    }
+
+    #[test]
+    fn reset_and_truncate_kill_the_stream() {
+        let mut cfg = ChaosConfig::default();
+        cfg.reset_prob = 1.0;
+        let plan = FaultPlan::compile(&cfg);
+        let mut s = FaultyStream::new(Duplex::new(), plan.stream(0));
+        let err = s.write(b"x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        assert_eq!(s.write(b"x").unwrap_err().kind(), io::ErrorKind::BrokenPipe);
+        let mut buf = [0u8; 4];
+        assert!(s.read(&mut buf).is_err(), "dead stream fails reads too");
+
+        let mut cfg = ChaosConfig::default();
+        cfg.truncate_prob = 1.0;
+        let plan = FaultPlan::compile(&cfg);
+        let mut s = FaultyStream::new(Duplex::new(), plan.stream(0));
+        let n = s.write(b"0123456789").unwrap();
+        assert!(n >= 1 && n < 10, "truncation is a strict partial write: {n}");
+        assert_eq!(s.inner.wrote.len(), n);
+        assert!(s.write(b"rest").is_err(), "stream is dead after the cut");
+    }
+
+    #[test]
+    fn duplicate_and_corrupt_shape_the_bytes_as_documented() {
+        let mut cfg = ChaosConfig::default();
+        cfg.duplicate_prob = 1.0;
+        let plan = FaultPlan::compile(&cfg);
+        let mut s = FaultyStream::new(Duplex::new(), plan.stream(0));
+        assert_eq!(s.write(b"abc").unwrap(), 3);
+        assert_eq!(s.inner.wrote, b"abcabc");
+
+        let mut cfg = ChaosConfig::default();
+        cfg.corrupt_prob = 1.0;
+        let plan = FaultPlan::compile(&cfg);
+        let mut s = FaultyStream::new(Duplex::new(), plan.stream(0));
+        assert_eq!(s.write(b"abcd").unwrap(), 4);
+        assert_eq!(s.inner.wrote.len(), 4);
+        let diff = s.inner.wrote.iter().zip(b"abcd").filter(|(a, b)| a != b).count();
+        assert_eq!(diff, 1, "corrupt flips exactly one byte");
+    }
+
+    #[test]
+    fn drop_swallows_the_frame_but_reports_success() {
+        let mut cfg = ChaosConfig::default();
+        cfg.drop_prob = 1.0;
+        let plan = FaultPlan::compile(&cfg);
+        let mut s = FaultyStream::new(Duplex::new(), plan.stream(0));
+        s.write_all(b"vanishes").unwrap();
+        assert!(s.inner.wrote.is_empty());
+    }
+
+    #[test]
+    fn spec_and_json_round_trip() {
+        let cfg =
+            ChaosConfig::parse_spec("seed=7, drop_prob=0.05, delay_prob=0.2, delay_ms=2")
+                .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.delay_ms, 2);
+        assert!((cfg.drop_prob - 0.05).abs() < 1e-12);
+        let back = ChaosConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        let crash = ChaosConfig::parse_spec("crash_at_version=40").unwrap();
+        assert_eq!(crash.crash_at_version, Some(40));
+        assert!(!crash.has_stream_faults(), "crash alone needs no socket wrapper");
+        let back = ChaosConfig::from_json(&crash.to_json()).unwrap();
+        assert_eq!(back, crash);
+    }
+
+    #[test]
+    fn hostile_specs_are_rejected() {
+        assert!(ChaosConfig::parse_spec("drop_prob=1.5").is_err());
+        assert!(ChaosConfig::parse_spec("drop_prob=0.6,reset_prob=0.6").is_err());
+        assert!(ChaosConfig::parse_spec("nonsense=1").is_err());
+        assert!(ChaosConfig::parse_spec("drop_prob").is_err());
+        assert!(ChaosConfig::parse_spec("delay_ms=99999999").is_err());
+    }
+}

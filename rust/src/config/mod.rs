@@ -293,8 +293,22 @@ pub struct ServingConfig {
     /// Per-connection socket read timeout — the bounded wait that lets a
     /// handler observe shutdown when its peer goes silent.
     pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout — bounds how long a handler
+    /// can wedge on a peer that stops draining its receive buffer (a
+    /// stalled reader would otherwise pin the handler thread forever).
+    pub write_timeout_ms: u64,
     /// Retry delay suggested to shed clients.
     pub retry_after_ms: u32,
+    /// Durable checkpoint file (model + staged aggregator state + dedup
+    /// table), written atomically; `None` disables checkpointing.
+    pub checkpoint_path: Option<String>,
+    /// Checkpoint cadence in acked resolutions; `1` persists after every
+    /// ack, the strongest exactly-once-across-crashes setting.
+    pub checkpoint_every: u64,
+    /// Restore from `checkpoint_path` before serving.  Requires the file
+    /// to exist and decode — a missing or corrupt checkpoint is a hard
+    /// error, never a silent cold start.
+    pub resume: bool,
 }
 
 impl Default for ServingConfig {
@@ -303,7 +317,11 @@ impl Default for ServingConfig {
             listen: "127.0.0.1:0".into(),
             accept_queue: 32,
             read_timeout_ms: 50,
+            write_timeout_ms: 1000,
             retry_after_ms: 25,
+            checkpoint_path: None,
+            checkpoint_every: 1,
+            resume: false,
         }
     }
 }
@@ -379,6 +397,10 @@ pub struct ExperimentConfig {
     /// Serve the threaded core over TCP (`--listen` / `[serving]`);
     /// `None` = in-process worker pool, the default.
     pub serving: Option<ServingConfig>,
+    /// Deterministic fault injection (`--chaos` / `[chaos]`): socket
+    /// faults on the serving plane plus an optional injected crash.
+    /// `None` = no faults, the default.
+    pub chaos: Option<crate::chaos::ChaosConfig>,
 }
 
 #[derive(Debug)]
@@ -429,6 +451,7 @@ impl Default for ExperimentConfig {
             worker_threads: 4,
             max_inflight: 8,
             serving: None,
+            chaos: None,
         }
     }
 }
@@ -507,6 +530,25 @@ impl ExperimentConfig {
             }
             if sv.read_timeout_ms == 0 {
                 return e("serving.read_timeout_ms must be >= 1".into());
+            }
+            if sv.write_timeout_ms == 0 {
+                return e("serving.write_timeout_ms must be >= 1".into());
+            }
+            if sv.checkpoint_every == 0 {
+                return e("serving.checkpoint_every must be >= 1".into());
+            }
+            if sv.resume && sv.checkpoint_path.is_none() {
+                return e("serving.resume requires serving.checkpoint_path: there is \
+                     nothing to restore from"
+                    .into());
+            }
+        }
+        if let Some(ch) = &self.chaos {
+            ch.validate()?;
+            if self.serving.is_none() {
+                return e("[chaos] requires [serving]: faults are injected at the \
+                     socket boundary of the serving plane"
+                    .into());
             }
         }
         if let Some(sc) = &self.scenario {
@@ -707,10 +749,42 @@ impl ExperimentConfig {
                                 err("serving: retry_after_ms must be an integer".into())
                             })? as u32;
                     }
+                    "write_timeout_ms" => {
+                        parsed.write_timeout_ms = sv
+                            .get("write_timeout_ms")
+                            .as_usize()
+                            .ok_or_else(|| {
+                                err("serving: write_timeout_ms must be an integer".into())
+                            })? as u64;
+                    }
+                    "checkpoint_path" => {
+                        parsed.checkpoint_path = Some(
+                            sv.get("checkpoint_path")
+                                .as_str()
+                                .ok_or_else(|| {
+                                    err("serving: checkpoint_path must be a string".into())
+                                })?
+                                .to_string(),
+                        );
+                    }
+                    "checkpoint_every" => {
+                        parsed.checkpoint_every = sv
+                            .get("checkpoint_every")
+                            .as_usize()
+                            .ok_or_else(|| {
+                                err("serving: checkpoint_every must be an integer".into())
+                            })? as u64;
+                    }
+                    "resume" => {
+                        parsed.resume = sv.get("resume").as_bool().ok_or_else(|| {
+                            err("serving: resume must be a boolean".into())
+                        })?;
+                    }
                     other => {
                         return Err(err(format!(
                             "serving: unknown key {other:?} (known: listen, accept_queue, \
-                             read_timeout_ms, retry_after_ms)"
+                             read_timeout_ms, write_timeout_ms, retry_after_ms, \
+                             checkpoint_path, checkpoint_every, resume)"
                         )))
                     }
                 }
@@ -718,6 +792,13 @@ impl ExperimentConfig {
             self.serving = Some(parsed);
         } else if !matches!(sv, Json::Null) {
             return Err(err("serving must be a [serving] table".into()));
+        }
+
+        let ch = v.get("chaos");
+        if ch.as_obj().is_some() {
+            self.chaos = Some(crate::chaos::ChaosConfig::from_json(ch)?);
+        } else if !matches!(ch, Json::Null) {
+            return Err(err("chaos must be a [chaos] table".into()));
         }
 
         let sc = v.get("scenario");
@@ -830,8 +911,17 @@ impl ExperimentConfig {
             s.insert("listen", Json::Str(sv.listen.clone()));
             s.insert("accept_queue", Json::Num(sv.accept_queue as f64));
             s.insert("read_timeout_ms", Json::Num(sv.read_timeout_ms as f64));
+            s.insert("write_timeout_ms", Json::Num(sv.write_timeout_ms as f64));
             s.insert("retry_after_ms", Json::Num(sv.retry_after_ms as f64));
+            if let Some(p) = &sv.checkpoint_path {
+                s.insert("checkpoint_path", Json::Str(p.clone()));
+            }
+            s.insert("checkpoint_every", Json::Num(sv.checkpoint_every as f64));
+            s.insert("resume", Json::Bool(sv.resume));
             o.insert("serving", Json::Obj(s));
+        }
+        if let Some(ch) = &self.chaos {
+            o.insert("chaos", ch.to_json());
         }
         o.insert("devices", Json::Num(self.federation.devices as f64));
         o.insert(
@@ -1169,7 +1259,10 @@ mod tests {
             listen = "127.0.0.1:4100"
             accept_queue = 8
             read_timeout_ms = 25
+            write_timeout_ms = 500
             retry_after_ms = 10
+            checkpoint_path = "artifacts/ckpt.bin"
+            checkpoint_every = 3
             "#,
         )
         .unwrap();
@@ -1180,7 +1273,11 @@ mod tests {
         assert_eq!(sv.listen, "127.0.0.1:4100");
         assert_eq!(sv.accept_queue, 8);
         assert_eq!(sv.read_timeout_ms, 25);
+        assert_eq!(sv.write_timeout_ms, 500);
         assert_eq!(sv.retry_after_ms, 10);
+        assert_eq!(sv.checkpoint_path.as_deref(), Some("artifacts/ckpt.bin"));
+        assert_eq!(sv.checkpoint_every, 3);
+        assert!(!sv.resume);
         // Provenance round-trips through apply_json.
         let mut back = ExperimentConfig::default();
         back.apply_json(&cfg.to_json()).unwrap();
@@ -1216,6 +1313,62 @@ mod tests {
         cfg.serving.as_mut().unwrap().accept_queue = 1;
         cfg.serving.as_mut().unwrap().read_timeout_ms = 0;
         assert!(cfg.validate().is_err());
+        cfg.serving.as_mut().unwrap().read_timeout_ms = 25;
+        cfg.serving.as_mut().unwrap().write_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
+        cfg.serving.as_mut().unwrap().write_timeout_ms = 1000;
+        cfg.serving.as_mut().unwrap().checkpoint_every = 0;
+        assert!(cfg.validate().is_err());
+        cfg.serving.as_mut().unwrap().checkpoint_every = 1;
+        cfg.serving.as_mut().unwrap().resume = true;
+        assert!(cfg.validate().is_err(), "resume without a checkpoint path");
+        cfg.serving.as_mut().unwrap().checkpoint_path = Some("c.bin".into());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn chaos_table_overlay_and_validation() {
+        let doc = crate::util::toml::parse(
+            r#"
+            mode = "threads"
+
+            [serving]
+            listen = "127.0.0.1:0"
+
+            [chaos]
+            seed = 7
+            delay_prob = 0.1
+            delay_ms = 2
+            drop_prob = 0.05
+            crash_at_version = 40
+            "#,
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&doc).unwrap();
+        cfg.validate().unwrap();
+        let ch = cfg.chaos.as_ref().expect("chaos parsed");
+        assert_eq!(ch.seed, 7);
+        assert_eq!(ch.delay_ms, 2);
+        assert_eq!(ch.crash_at_version, Some(40));
+        // Provenance round-trips through apply_json.
+        let mut back = ExperimentConfig::default();
+        back.apply_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.chaos, cfg.chaos);
+
+        // Strict table semantics: unknown keys and non-table values error.
+        let doc = crate::util::toml::parse("[chaos]\ndropp_prob = 0.1").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+        let doc = crate::util::toml::parse("chaos = \"on\"").unwrap();
+        assert!(ExperimentConfig::default().apply_json(&doc).is_err());
+
+        // Chaos without a serving plane has nowhere to inject faults.
+        let mut cfg = ExperimentConfig::default();
+        cfg.mode = ExecMode::Threads;
+        cfg.chaos = Some(crate::chaos::ChaosConfig::default());
+        assert!(cfg.validate().is_err(), "chaos requires [serving]");
+        cfg.serving = Some(ServingConfig::default());
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -30,7 +30,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::aggregator::{AggregateDecision, Aggregator};
+use crate::coordinator::aggregator::{AggregateDecision, Aggregator, StagedState};
 use crate::coordinator::snapshot::BufferPool;
 use crate::coordinator::staleness::{AlphaController, AlphaDecision};
 use crate::coordinator::updater::mix_inplace;
@@ -144,5 +144,25 @@ impl Aggregator for Buffered {
         let alpha = self.blend_alpha(t);
         let staged = self.take_staged()?;
         Some((staged, alpha))
+    }
+
+    fn staged_state(&self) -> Option<StagedState> {
+        let staging = self.staging.as_ref()?;
+        Some(StagedState {
+            staging: staging.clone(),
+            weight_sum: self.weight_sum,
+            count: self.count as u64,
+        })
+    }
+
+    fn restore_staged(&mut self, st: StagedState) {
+        self.weight_sum = st.weight_sum;
+        self.count = st.count as usize;
+        let mut buf = match &self.pool {
+            Some(pool) => pool.acquire_clear(st.staging.len()),
+            None => Vec::with_capacity(st.staging.len()),
+        };
+        buf.extend_from_slice(&st.staging);
+        self.staging = Some(buf);
     }
 }

@@ -79,6 +79,19 @@ pub enum AggregateDecision {
     Shed,
 }
 
+/// A buffering aggregator's staging state, as captured in (and restored
+/// from) a serving-plane checkpoint — enough to resume mid-buffer after
+/// a crash without losing the absorbed-but-uncommitted updates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagedState {
+    /// The running weighted-mean blend.
+    pub staging: ParamVec,
+    /// Σ wᵢ over the staged updates.
+    pub weight_sum: f64,
+    /// Updates absorbed into the blend.
+    pub count: u64,
+}
+
 /// One server aggregation rule, driven per offered update by
 /// [`Updater::apply`](crate::coordinator::updater::Updater::apply).
 ///
@@ -110,6 +123,16 @@ pub trait Aggregator: Send {
     /// or `None` when nothing is pending.  The engine commits this as one
     /// final update so no accepted update is lost at shutdown.
     fn flush(&mut self, t: u64) -> Option<(ParamVec, f64)>;
+
+    /// A copy of the staging state for checkpointing; `None` for
+    /// strategies that never buffer (the default).
+    fn staged_state(&self) -> Option<StagedState> {
+        None
+    }
+
+    /// Adopt checkpointed staging state on resume.  Strategies without a
+    /// buffer ignore it (the default).
+    fn restore_staged(&mut self, _st: StagedState) {}
 }
 
 /// Build the strategy object an experiment config asks for.

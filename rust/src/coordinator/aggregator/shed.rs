@@ -21,7 +21,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::aggregator::{AggregateDecision, Aggregator};
+use crate::coordinator::aggregator::{AggregateDecision, Aggregator, StagedState};
 use crate::runtime::ParamVec;
 
 /// Bounded count of updates admitted but not yet resolved (offered,
@@ -141,6 +141,16 @@ impl Aggregator for ShedGate {
 
     fn flush(&mut self, t: u64) -> Option<(ParamVec, f64)> {
         self.inner.flush(t)
+    }
+
+    // Checkpointing must see through the gate to the inner strategy's
+    // buffer — the defaults would silently hide (and lose) it.
+    fn staged_state(&self) -> Option<StagedState> {
+        self.inner.staged_state()
+    }
+
+    fn restore_staged(&mut self, st: StagedState) {
+        self.inner.restore_staged(st);
     }
 }
 

@@ -147,6 +147,17 @@ impl ModelStore {
     pub fn retained(&self) -> usize {
         self.ring.len()
     }
+
+    /// Relabel the current model as version `v` — the serving plane's
+    /// checkpoint resume, called before any update is applied, so the
+    /// ring holds exactly the restored parameters.  Staleness arithmetic
+    /// (`oldest_version`, `get`) keys off the current version and stays
+    /// consistent: older versions simply aren't resident after a
+    /// restart, exactly as if they had been evicted.
+    pub fn restore_version(&mut self, v: u64) {
+        debug_assert_eq!(self.ring.len(), 1, "restore_version is a fresh-store operation");
+        self.current_version = v;
+    }
 }
 
 #[cfg(test)]

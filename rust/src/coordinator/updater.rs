@@ -182,6 +182,17 @@ impl Updater {
         self.agg.name()
     }
 
+    /// The aggregator's staging state for checkpointing (see
+    /// [`Aggregator::staged_state`]).
+    pub fn staged_state(&self) -> Option<crate::coordinator::aggregator::StagedState> {
+        self.agg.staged_state()
+    }
+
+    /// Restore checkpointed staging state into the aggregator on resume.
+    pub fn restore_staged(&mut self, st: crate::coordinator::aggregator::StagedState) {
+        self.agg.restore_staged(st);
+    }
+
     /// Offer `(x_new, τ)` to the server at the next epoch (paper
     /// Algorithm 1, updater thread body): the aggregator decides, this
     /// method commits.

@@ -27,6 +27,7 @@
 //! | `event_queue`     | timer wheel ≡ retired heap ≡ model on (time, seq)    |
 //! | `kernel_equivalence` | scalar vs lane-chunked kernels agree (bitwise / ≤1e-6) |
 //! | `wire_codec`      | serving-plane frames: no panic/over-read; round-trip; truncation-safe |
+//! | `checkpoint_decode` | crash-recovery checkpoints: decode totality; checksum catches any flip |
 //! | `differential`    | sampled/emergent/threaded drivers agree (see below)  |
 //!
 //! The differential target is the headline: it draws a random valid
@@ -73,7 +74,7 @@ pub fn find(name: &str) -> Option<&'static TargetSpec> {
     TARGETS.iter().find(|t| t.name == name)
 }
 
-static TARGETS: [TargetSpec; 10] = [
+static TARGETS: [TargetSpec; 11] = [
     TargetSpec {
         name: "toml",
         about: "util::toml::parse on raw and grammar-adjacent documents",
@@ -118,6 +119,11 @@ static TARGETS: [TargetSpec; 10] = [
         name: "wire_codec",
         about: "serving-plane wire frames: decode totality, round-trip, truncation",
         run: wire_codec_target,
+    },
+    TargetSpec {
+        name: "checkpoint_decode",
+        about: "crash-recovery checkpoints: decode totality, checksum, round-trip",
+        run: checkpoint_decode_target,
     },
     TargetSpec {
         name: "differential",
@@ -620,15 +626,22 @@ fn gen_frame(src: &mut ByteSource) -> crate::serving::wire::Frame {
     let params = |src: &mut ByteSource| -> Vec<f32> {
         (0..src.len_biased(24)).map(|_| src.f64_in(-1e6, 1e6) as f32).collect()
     };
-    match src.index(7) {
+    match src.index(8) {
         0 => Frame::PullModel,
         1 => Frame::ModelSnapshot { version: src.range_u64(0, 1 << 40), params: params(src) },
-        2 => Frame::ClientUpdate {
-            device: src.u32() % 4096,
-            tau: src.range_u64(0, 1 << 40),
-            loss: src.f64_in(-1e3, 1e3) as f32,
-            params: params(src),
-        },
+        2 => {
+            // Untracked (legacy kind-2) update: client mirrors the device
+            // and seq is 0, so the codec keeps the short encoding.
+            let device = src.u32() % 4096;
+            Frame::ClientUpdate {
+                device,
+                tau: src.range_u64(0, 1 << 40),
+                loss: src.f64_in(-1e3, 1e3) as f32,
+                client: u64::from(device),
+                seq: 0,
+                params: params(src),
+            }
+        }
         3 => Frame::Ack {
             version: src.range_u64(0, 1 << 40),
             applied: src.bool(),
@@ -636,7 +649,17 @@ fn gen_frame(src: &mut ByteSource) -> crate::serving::wire::Frame {
         },
         4 => Frame::Shed { retry_after_ms: src.u32() % 100_000 },
         5 => Frame::Control { body: gen_string(src) },
-        _ => Frame::ControlReply { body: gen_string(src) },
+        6 => Frame::ControlReply { body: gen_string(src) },
+        // Tracked (kind-7) update: a stable client id with a nonzero
+        // sequence number forces the extended encoding.
+        _ => Frame::ClientUpdate {
+            device: src.u32() % 4096,
+            tau: src.range_u64(0, 1 << 40),
+            loss: src.f64_in(-1e3, 1e3) as f32,
+            client: 1 + src.range_u64(0, 1 << 32),
+            seq: 1 + src.range_u64(0, 1 << 20),
+            params: params(src),
+        },
     }
 }
 
@@ -699,6 +722,79 @@ fn wire_codec_target(src: &mut ByteSource) {
         matches!(decode(&wrong), Err(crate::serving::wire::WireError::Version { .. })),
         "flipped version byte must be a version error"
     );
+}
+
+// --------------------------------------------------------- checkpoint codec
+
+/// Assemble a random (valid) crash-recovery checkpoint from source draws.
+fn gen_checkpoint(src: &mut ByteSource) -> crate::serving::checkpoint::CheckpointData {
+    use crate::coordinator::aggregator::StagedState;
+    use crate::serving::checkpoint::CheckpointData;
+    use crate::serving::dedup::{DedupEntry, DedupRecord};
+
+    let params = |src: &mut ByteSource| -> Vec<f32> {
+        (0..src.len_biased(24)).map(|_| src.f64_in(-1e6, 1e6) as f32).collect()
+    };
+    let version = src.range_u64(0, 1 << 40);
+    let model = params(src);
+    let staged = if src.bool() {
+        Some(StagedState {
+            staging: params(src),
+            weight_sum: src.f64_in(0.0, 1e3),
+            count: src.range_u64(0, 1 << 20),
+        })
+    } else {
+        None
+    };
+    let dedup = (0..src.len_biased(6))
+        .map(|i| DedupRecord {
+            client: 1 + i as u64, // distinct, sorted, as snapshot() emits
+            entry: DedupEntry {
+                seq: src.range_u64(0, 1 << 20),
+                version: src.range_u64(0, 1 << 40),
+                applied: src.bool(),
+                staleness: src.range_u64(0, 1 << 20),
+            },
+        })
+        .collect();
+    CheckpointData { version, params: model, staged, dedup }
+}
+
+/// Crash-recovery checkpoint codec target.  Raw mode feeds arbitrary
+/// bytes to [`decode`](crate::serving::checkpoint::decode) — it must
+/// never panic, and anything it accepts must re-encode to an equivalent
+/// checkpoint.  Structured mode builds valid checkpoints and checks the
+/// encode→decode round trip plus the self-authentication contract:
+/// every strict prefix and every single-byte damage is a clean error
+/// (this is what makes a torn or bit-rotted resume impossible).
+fn checkpoint_decode_target(src: &mut ByteSource) {
+    use crate::serving::checkpoint::{decode, encode};
+
+    if src.bool() {
+        let buf = src.rest();
+        if let Ok(data) = decode(&buf) {
+            assert_eq!(
+                decode(&encode(&data)),
+                Ok(data),
+                "re-encode of a decoded checkpoint changed it"
+            );
+        }
+        return;
+    }
+
+    let data = gen_checkpoint(src);
+    let bytes = encode(&data);
+    assert_eq!(
+        decode(&bytes).expect("valid checkpoint failed to decode"),
+        data,
+        "round trip changed the checkpoint"
+    );
+    let cut = src.index(bytes.len());
+    assert!(decode(&bytes[..cut]).is_err(), "strict prefix of len {cut} decoded as valid");
+    let mut bad = bytes.clone();
+    let at = src.index(bytes.len());
+    bad[at] ^= 1u8 << src.index(8);
+    assert!(decode(&bad).is_err(), "single-byte damage at {at} went undetected");
 }
 
 // ------------------------------------------------------------- differential

@@ -73,9 +73,14 @@
 //! behind the `fuzz_driver` binary).  The [`serving`] plane puts the
 //! threaded server behind a real `TcpListener` — a fuzzed pure-std wire
 //! codec, admission control with retry-after shedding, and a swarm
-//! client — without touching any of the accounting above.
+//! client — without touching any of the accounting above.  The [`chaos`]
+//! plane makes failure a first-class input: seed-driven socket fault
+//! injection ([`chaos::FaultPlan`]), an exactly-once update protocol
+//! ([`serving::dedup`]), and crash-recovery checkpoints
+//! ([`serving::checkpoint`]) with a `--resume` restart path.
 
 pub mod analysis;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod experiment;

@@ -107,6 +107,15 @@ fn train_spec() -> CommandSpec {
         )
         .opt("listen", None, "serve the wire protocol on ADDR (forces threads mode)")
         .opt("connect", None, "join a served run at ADDR as a quadratic swarm client")
+        .opt(
+            "chaos",
+            None,
+            "fault injection: k=v,... over seed/delay_prob/delay_ms/drop_prob/reset_prob/\
+             truncate_prob/duplicate_prob/corrupt_prob/crash_at_version",
+        )
+        .opt("checkpoint", None, "durable checkpoint file (server; forces threads mode)")
+        .opt("client-id", None, "stable client id for exactly-once pushes (with --connect)")
+        .flag("resume", "restore server state from --checkpoint before serving")
         .opt("out", Some("results/train"), "output directory")
         .flag("list-presets", "print preset names and exit")
         .flag("list-scenarios", "print scenario preset names and exit")
@@ -199,7 +208,32 @@ fn build_config(a: &Args) -> Result<ExperimentConfig, String> {
         cfg.mode = ExecMode::Threads;
         cfg.serving = Some(serving);
     }
-    cfg.validate().map_err(|e| e.to_string())?;
+    if let Some(path) = a.get("checkpoint") {
+        let mut serving = cfg.serving.take().unwrap_or_default();
+        serving.checkpoint_path = Some(path);
+        cfg.mode = ExecMode::Threads;
+        cfg.serving = Some(serving);
+    }
+    if a.flag("resume") {
+        let mut serving = cfg.serving.take().unwrap_or_default();
+        serving.resume = true;
+        cfg.mode = ExecMode::Threads;
+        cfg.serving = Some(serving);
+    }
+    if let Some(spec) = a.get("chaos") {
+        cfg.chaos = Some(
+            fedasync::chaos::ChaosConfig::parse_spec(&spec).map_err(|e| e.to_string())?,
+        );
+    }
+    if a.supplied("connect") {
+        // A swarm client injects chaos on its own socket — no [serving]
+        // table to anchor it to; validate the rest of the config.
+        let mut server_side = cfg.clone();
+        server_side.chaos = None;
+        server_side.validate().map_err(|e| e.to_string())?;
+    } else {
+        cfg.validate().map_err(|e| e.to_string())?;
+    }
     Ok(cfg)
 }
 
@@ -262,7 +296,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         if a.supplied("listen") {
             return Err("--listen and --connect are mutually exclusive".into());
         }
-        return run_swarm_client(&addr, &cfg);
+        let client_id =
+            if a.supplied("client-id") { a.u64("client-id").map_err(cli_err)? } else { 0 };
+        return run_swarm_client(&addr, &cfg, client_id);
     }
 
     log_info!("train", "loading artifacts for model {:?}", cfg.model);
@@ -297,8 +333,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
 /// of running an engine. Artifact-free — the client trains the
 /// closed-form quadratic plane (the same one `serve_native` and the
 /// swarm example use), so it needs no PJRT model directory.
-fn run_swarm_client(addr: &str, cfg: &ExperimentConfig) -> Result<(), String> {
+fn run_swarm_client(addr: &str, cfg: &ExperimentConfig, client_id: u64) -> Result<(), String> {
     use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+    use fedasync::chaos::FaultPlan;
     use fedasync::serving::{run_quad_client, ClientLoop};
 
     let devices = cfg.federation.devices;
@@ -314,13 +351,17 @@ fn run_swarm_client(addr: &str, cfg: &ExperimentConfig) -> Result<(), String> {
         rho: cfg.rho,
         seed: cfg.seed,
         deadline: std::time::Duration::from_secs(600),
+        client_id,
+        max_push_attempts: 0,
+        chaos: cfg.chaos.as_ref().map(FaultPlan::compile),
     };
     log_info!("train", "joining served run at {addr} as a swarm client");
     let r = run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
         .map_err(|e| e.to_string())?;
     println!(
-        "swarm client done: pushed {} (applied {}, acked {}), shed {} times",
-        r.pushed, r.applied, r.acked, r.shed
+        "swarm client done: pushed {} (applied {}, acked {}), shed {} times, \
+         reconnected {}, abandoned {}",
+        r.pushed, r.applied, r.acked, r.shed, r.reconnects, r.abandoned
     );
     Ok(())
 }

@@ -1,0 +1,443 @@
+//! Crash-consistent server checkpoints.
+//!
+//! A checkpoint is everything the serving plane needs to resume as if
+//! the crash never happened: the model version and parameters, the
+//! aggregator's staged (buffered) state, and the dedup table.  The
+//! dedup rows are the load-bearing part — a client whose ack was lost
+//! to the crash retries the same `(client, seq)` against the resumed
+//! process, and only the checkpointed table lets it replay the recorded
+//! ack instead of applying the update twice.
+//!
+//! On-disk layout (all integers LE), self-authenticating:
+//!
+//! ```text
+//! "FACP"                           magic
+//! u8    format version (1)
+//! u64   model version
+//! u32   dim, then dim × f32        model parameters (finite)
+//! u8    staged flag; if 1:
+//!   u32 dim, then dim × f32        aggregator staging buffer (finite)
+//!   f64 weight_sum                 staged blend weight (finite)
+//!   u64 count                      staged update count
+//! u32   dedup rows, each:
+//!   u64 client, u64 seq, u64 version, u8 applied, u64 staleness
+//! u64   FNV-1a-64 over every preceding byte
+//! ```
+//!
+//! [`decode`] verifies the checksum *before* parsing: a truncated or
+//! bit-flipped file is a clean [`CheckpointError`], never a panic and
+//! never a silently-wrong resume.  [`CheckpointStore::save`] is atomic
+//! (temp file + fsync + rename + directory fsync), so a crash mid-save
+//! leaves the previous checkpoint intact.  The `checkpoint_decode` fuzz
+//! target pins totality over arbitrary bytes.
+
+use std::fmt;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::aggregator::StagedState;
+use crate::runtime::ParamVec;
+use crate::serving::dedup::{DedupEntry, DedupRecord};
+
+/// First four bytes of every checkpoint file.
+pub const CKPT_MAGIC: [u8; 4] = *b"FACP";
+
+/// Checkpoint format version this build writes.
+pub const CKPT_FORMAT: u8 = 1;
+
+/// Everything needed to resume a served run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointData {
+    /// Model version at capture time.
+    pub version: u64,
+    /// The published parameter vector.
+    pub params: ParamVec,
+    /// Aggregator staging state, if the aggregator buffers.
+    pub staged: Option<StagedState>,
+    /// Dedup table rows (sorted by client id).
+    pub dedup: Vec<DedupRecord>,
+}
+
+/// Why bytes are not a checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckpointError {
+    /// Shorter than the fixed envelope (magic + checksum).
+    Truncated,
+    /// First bytes are not [`CKPT_MAGIC`].
+    BadMagic,
+    /// Written by a different [`CKPT_FORMAT`].
+    Format(u8),
+    /// Checksum mismatch — the file is damaged.
+    Corrupt,
+    /// Checksum passed but the body does not parse (writer bug).
+    Malformed(&'static str),
+    /// A parameter or weight is NaN/∞.
+    NonFinite,
+    /// Filesystem failure while saving/loading.
+    Io(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Truncated => write!(f, "checkpoint truncated"),
+            CheckpointError::BadMagic => write!(f, "bad checkpoint magic"),
+            CheckpointError::Format(got) => {
+                write!(f, "checkpoint format {got}, want {CKPT_FORMAT}")
+            }
+            CheckpointError::Corrupt => write!(f, "checkpoint checksum mismatch"),
+            CheckpointError::Malformed(what) => write!(f, "malformed checkpoint: {what}"),
+            CheckpointError::NonFinite => write!(f, "non-finite value in checkpoint"),
+            CheckpointError::Io(e) => write!(f, "checkpoint i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ------------------------------------------------------------- encoding
+
+fn put_params(out: &mut Vec<u8>, params: &[f32]) {
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for v in params {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a checkpoint (body + checksum trailer).
+pub fn encode(data: &CheckpointData) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + data.params.len() * 4);
+    out.extend_from_slice(&CKPT_MAGIC);
+    out.push(CKPT_FORMAT);
+    out.extend_from_slice(&data.version.to_le_bytes());
+    put_params(&mut out, &data.params);
+    match &data.staged {
+        None => out.push(0),
+        Some(st) => {
+            out.push(1);
+            put_params(&mut out, &st.staging);
+            out.extend_from_slice(&st.weight_sum.to_le_bytes());
+            out.extend_from_slice(&st.count.to_le_bytes());
+        }
+    }
+    out.extend_from_slice(&(data.dedup.len() as u32).to_le_bytes());
+    for r in &data.dedup {
+        out.extend_from_slice(&r.client.to_le_bytes());
+        out.extend_from_slice(&r.entry.seq.to_le_bytes());
+        out.extend_from_slice(&r.entry.version.to_le_bytes());
+        out.push(u8::from(r.entry.applied));
+        out.extend_from_slice(&r.entry.staleness.to_le_bytes());
+    }
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+// ------------------------------------------------------------- decoding
+
+/// Bounds-checked cursor, in the wire codec's style.
+struct Cur<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Cur<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], CheckpointError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or(CheckpointError::Malformed("body too short"))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, CheckpointError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn params(&mut self) -> Result<ParamVec, CheckpointError> {
+        let dim = self.u32()? as usize;
+        // Bound the allocation by what the body can actually hold.
+        if dim.checked_mul(4).filter(|&n| self.pos + n <= self.bytes.len()).is_none() {
+            return Err(CheckpointError::Malformed("params dim exceeds body"));
+        }
+        let mut out = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            let b = self.take(4)?;
+            let v = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            if !v.is_finite() {
+                return Err(CheckpointError::NonFinite);
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Parse a checkpoint from arbitrary bytes.  Total: truncated input,
+/// wrong magic/format, damaged bytes, and writer bugs each map to their
+/// own error; the checksum is verified before any parsing, so a single
+/// flipped bit anywhere is always caught.
+pub fn decode(bytes: &[u8]) -> Result<CheckpointData, CheckpointError> {
+    if bytes.len() < CKPT_MAGIC.len() + 1 + 8 {
+        return Err(CheckpointError::Truncated);
+    }
+    if bytes[..4] != CKPT_MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let (body, trailer) = bytes.split_at(bytes.len() - 8);
+    let declared = u64::from_le_bytes(trailer.try_into().expect("8-byte trailer"));
+    if fnv1a64(body) != declared {
+        return Err(CheckpointError::Corrupt);
+    }
+    let mut c = Cur { bytes: body, pos: 4 };
+    let fmt = c.u8()?;
+    if fmt != CKPT_FORMAT {
+        return Err(CheckpointError::Format(fmt));
+    }
+    let version = c.u64()?;
+    let params = c.params()?;
+    let staged = match c.u8()? {
+        0 => None,
+        1 => {
+            let staging = c.params()?;
+            let weight_sum = c.f64()?;
+            if !weight_sum.is_finite() {
+                return Err(CheckpointError::NonFinite);
+            }
+            let count = c.u64()?;
+            Some(StagedState { staging, weight_sum, count })
+        }
+        _ => return Err(CheckpointError::Malformed("staged flag")),
+    };
+    let rows = c.u32()? as usize;
+    // Each row is 33 bytes; bound the allocation by the body.
+    if rows.checked_mul(33).filter(|&n| c.pos + n <= body.len()).is_none() {
+        return Err(CheckpointError::Malformed("dedup rows exceed body"));
+    }
+    let mut dedup = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let client = c.u64()?;
+        let seq = c.u64()?;
+        let version = c.u64()?;
+        let applied = match c.u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(CheckpointError::Malformed("dedup applied flag")),
+        };
+        let staleness = c.u64()?;
+        dedup.push(DedupRecord {
+            client,
+            entry: DedupEntry { seq, version, applied, staleness },
+        });
+    }
+    if c.pos != body.len() {
+        return Err(CheckpointError::Malformed("trailing body bytes"));
+    }
+    Ok(CheckpointData { version, params, staged, dedup })
+}
+
+// --------------------------------------------------------------- storage
+
+/// Atomic on-disk home for checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    path: PathBuf,
+}
+
+impl CheckpointStore {
+    /// A store writing to `path` (parent directory must exist or be
+    /// creatable).
+    pub fn new(path: impl Into<PathBuf>) -> CheckpointStore {
+        CheckpointStore { path: path.into() }
+    }
+
+    /// The checkpoint's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Whether a checkpoint file exists.
+    pub fn exists(&self) -> bool {
+        self.path.exists()
+    }
+
+    /// Persist `data` atomically: write a sibling temp file, fsync it,
+    /// rename over the target, fsync the directory.  A crash at any
+    /// point leaves either the old checkpoint or the new one — never a
+    /// torn file (and [`decode`]'s checksum catches torn media anyway).
+    pub fn save(&self, data: &CheckpointData) -> Result<(), CheckpointError> {
+        let io = |e: std::io::Error| CheckpointError::Io(e.to_string());
+        let dir = self.path.parent().filter(|p| !p.as_os_str().is_empty());
+        if let Some(dir) = dir {
+            fs::create_dir_all(dir).map_err(io)?;
+        }
+        let bytes = encode(data);
+        let tmp = self.path.with_extension("tmp");
+        {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)
+                .map_err(io)?;
+            f.write_all(&bytes).map_err(io)?;
+            f.sync_all().map_err(io)?;
+        }
+        fs::rename(&tmp, &self.path).map_err(io)?;
+        if let Some(dir) = dir {
+            // Durability of the rename itself.
+            File::open(dir).and_then(|d| d.sync_all()).map_err(io)?;
+        }
+        Ok(())
+    }
+
+    /// Load and verify the checkpoint.
+    pub fn load(&self) -> Result<CheckpointData, CheckpointError> {
+        let bytes =
+            fs::read(&self.path).map_err(|e| CheckpointError::Io(e.to_string()))?;
+        decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CheckpointData {
+        CheckpointData {
+            version: 41,
+            params: vec![1.0, -2.5, 0.0, 3.25],
+            staged: Some(StagedState {
+                staging: vec![0.5, 0.5, -1.0, 2.0],
+                weight_sum: 1.75,
+                count: 3,
+            }),
+            dedup: vec![
+                DedupRecord {
+                    client: 2,
+                    entry: DedupEntry { seq: 7, version: 39, applied: true, staleness: 1 },
+                },
+                DedupRecord {
+                    client: 5,
+                    entry: DedupEntry { seq: 3, version: 40, applied: false, staleness: 0 },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trips_with_and_without_staged_state() {
+        let full = sample();
+        assert_eq!(decode(&encode(&full)).unwrap(), full);
+        let bare = CheckpointData {
+            version: 0,
+            params: vec![],
+            staged: None,
+            dedup: vec![],
+        };
+        assert_eq!(decode(&encode(&bare)).unwrap(), bare);
+    }
+
+    #[test]
+    fn every_strict_prefix_is_rejected() {
+        let bytes = encode(&sample());
+        for cut in 0..bytes.len() {
+            assert!(
+                decode(&bytes[..cut]).is_err(),
+                "prefix of len {cut} must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn any_single_byte_flip_is_caught() {
+        let bytes = encode(&sample());
+        // Flips in the body break the checksum; flips in the trailer
+        // break the comparison — either way, a deterministic error.
+        for at in 4..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x40;
+            assert!(decode(&bad).is_err(), "flip at byte {at} must be caught");
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_format_are_distinct_errors() {
+        let mut bytes = encode(&sample());
+        bytes[0] = b'X';
+        assert_eq!(decode(&bytes), Err(CheckpointError::BadMagic));
+
+        // A future format version with a valid checksum: re-seal it.
+        let mut body = encode(&sample());
+        body.truncate(body.len() - 8);
+        body[4] = CKPT_FORMAT + 1;
+        let sum = fnv1a64(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode(&body), Err(CheckpointError::Format(CKPT_FORMAT + 1)));
+        assert_eq!(decode(&[]), Err(CheckpointError::Truncated));
+    }
+
+    #[test]
+    fn save_is_atomic_and_load_verifies() {
+        let dir = std::env::temp_dir().join(format!(
+            "fedasync-ckpt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let store = CheckpointStore::new(dir.join("model.ckpt"));
+        assert!(!store.exists());
+        assert!(matches!(store.load(), Err(CheckpointError::Io(_))));
+
+        let data = sample();
+        store.save(&data).unwrap();
+        assert!(store.exists());
+        assert_eq!(store.load().unwrap(), data);
+        assert!(
+            !store.path().with_extension("tmp").exists(),
+            "temp file must not outlive the rename"
+        );
+
+        // Overwrite with new state; the latest wins.
+        let mut next = data.clone();
+        next.version = 42;
+        next.staged = None;
+        store.save(&next).unwrap();
+        assert_eq!(store.load().unwrap(), next);
+
+        // Damage on disk is caught at load.
+        let mut raw = fs::read(store.path()).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x01;
+        fs::write(store.path(), &raw).unwrap();
+        assert_eq!(store.load(), Err(CheckpointError::Corrupt));
+
+        fs::remove_dir_all(&dir).ok();
+    }
+}

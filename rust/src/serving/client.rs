@@ -1,20 +1,32 @@
 //! Swarm client: pull / train / push over the wire protocol, with
-//! bounded exponential backoff on shed.
+//! bounded exponential backoff on shed and reconnect-with-resume under
+//! faults.
 //!
 //! [`SwarmClient`] is the thin blocking protocol driver (one frame out,
-//! one frame back).  [`run_quad_client`] is a full client loop over any
+//! one frame back).  With a nonzero [`ClientOpts::client_id`] it speaks
+//! the exactly-once extension: every *trained* update gets a fresh
+//! sequence number from [`SwarmClient::push`], and every retry — shed,
+//! lost ack, reconnect — goes through [`SwarmClient::retry_push`] with
+//! the *same* number, so the server can deduplicate instead of
+//! double-applying.  [`run_quad_client`] is a full client loop over any
 //! in-process [`Trainer`]: it plays the in-process threaded mode's
 //! scheduler *and* worker for one connection — pick a present device,
 //! sleep the scenario's scaled link latencies, train locally, push, and
 //! back off when the server sheds — which is what lets the loopback
 //! conformance suite compare a served run against the in-process
 //! threaded driver band-for-band (`rust/tests/serving.rs`), and what
-//! `examples/swarm.rs` runs one-per-process.
+//! `examples/swarm.rs` runs one-per-process.  In resilient mode (a
+//! tracked client id or an attached [`FaultPlan`]) the loop treats
+//! transport errors as retries: it redials the address — an [`AddrCell`]
+//! lets a restarted server move — and re-offers the in-flight update
+//! under its original sequence number.
 
-use std::io::Write;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::chaos::{FaultPlan, FaultyStream};
 use crate::coordinator::engine::threaded::TIME_SCALE;
 use crate::coordinator::{TaskScratch, Trainer};
 use crate::federated::data::Dataset;
@@ -82,29 +94,146 @@ pub enum PushOutcome {
     },
 }
 
+/// A mutable server address shared between a swarm and whoever restarts
+/// the server: resilient clients redial through it, so a resumed server
+/// on a fresh port (std's `TcpListener` has no `SO_REUSEADDR`) picks up
+/// its old fleet without any client-side coordination.
+#[derive(Debug, Clone)]
+pub struct AddrCell(Arc<Mutex<SocketAddr>>);
+
+impl AddrCell {
+    /// A cell initially pointing at `addr`.
+    pub fn new(addr: SocketAddr) -> AddrCell {
+        AddrCell(Arc::new(Mutex::new(addr)))
+    }
+
+    /// Point the swarm at a new address (a restarted server).
+    pub fn set(&self, addr: SocketAddr) {
+        *self.0.lock().unwrap_or_else(|p| p.into_inner()) = addr;
+    }
+
+    /// The current address.
+    pub fn get(&self) -> SocketAddr {
+        *self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl ToSocketAddrs for AddrCell {
+    type Iter = std::option::IntoIter<SocketAddr>;
+
+    fn to_socket_addrs(&self) -> io::Result<Self::Iter> {
+        Ok(Some(self.get()).into_iter())
+    }
+}
+
+/// The client's transport: a bare socket, or one wrapped in the chaos
+/// plane's fault injector.
+enum Conn {
+    Plain(TcpStream),
+    Faulty(FaultyStream<TcpStream>),
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Plain(s) => s.read(buf),
+            Conn::Faulty(f) => f.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Plain(s) => s.write(buf),
+            Conn::Faulty(f) => f.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Plain(s) => s.flush(),
+            Conn::Faulty(f) => f.flush(),
+        }
+    }
+}
+
+/// Per-client protocol options.
+#[derive(Debug, Default, Clone)]
+pub struct ClientOpts {
+    /// Stable identity for the exactly-once protocol; 0 = anonymous
+    /// (legacy wire frames, no dedup, no sequence numbers).
+    pub client_id: u64,
+    /// Inject this fault plan on the client side of the socket.
+    pub chaos: Option<Arc<FaultPlan>>,
+    /// Give up on a reply after this long (a lost request or lost ack
+    /// surfaces as an error the caller can retry) instead of blocking
+    /// forever.  `None` = wait indefinitely.
+    pub reply_timeout: Option<Duration>,
+}
+
 /// Blocking protocol driver over one TCP connection.
 pub struct SwarmClient {
-    stream: TcpStream,
+    conn: Conn,
     reader: FrameReader,
     scratch: Vec<u8>,
+    opts: ClientOpts,
+    /// Last sequence number handed out by [`SwarmClient::push`];
+    /// survives reconnects — that continuity *is* resume.
+    seq: u64,
+    /// Connections made so far (decorrelates per-connection fault
+    /// streams).
+    conns: u64,
 }
 
 impl SwarmClient {
-    /// Connect to a serving-plane listener.
+    /// Connect to a serving-plane listener (anonymous, no options).
     pub fn connect(addr: impl ToSocketAddrs) -> Result<SwarmClient, WireError> {
-        let stream = TcpStream::connect(addr).map_err(|e| WireError::Io(e.to_string()))?;
-        Ok(SwarmClient { stream, reader: FrameReader::new(), scratch: Vec::new() })
+        SwarmClient::connect_with(&addr, ClientOpts::default())
+    }
+
+    /// Connect with explicit identity / chaos / timeout options.
+    pub fn connect_with(
+        addr: &impl ToSocketAddrs,
+        opts: ClientOpts,
+    ) -> Result<SwarmClient, WireError> {
+        let conn = open(addr, &opts, 1)?;
+        Ok(SwarmClient {
+            conn,
+            reader: FrameReader::new(),
+            scratch: Vec::new(),
+            opts,
+            seq: 0,
+            conns: 1,
+        })
+    }
+
+    /// Drop the current connection and dial `addr` again, keeping the
+    /// client identity and sequence position — the in-flight update (if
+    /// any) can be re-offered with [`SwarmClient::retry_push`] and the
+    /// server will recognize it.
+    pub fn reconnect(&mut self, addr: &impl ToSocketAddrs) -> Result<(), WireError> {
+        self.conns += 1;
+        self.conn = open(addr, &self.opts, self.conns)?;
+        // A fresh connection has no half-read frame.
+        self.reader = FrameReader::new();
+        Ok(())
     }
 
     /// One request/response round trip.  A read timeout on the socket
-    /// (`Ok(None)` from the reader) just keeps waiting: the serving
-    /// plane always answers or closes.
+    /// (`Ok(None)` from the reader) keeps waiting until
+    /// [`ClientOpts::reply_timeout`] (if set) has elapsed; without one,
+    /// the serving plane always answers or closes.
     fn round_trip(&mut self, request: &Frame) -> Result<Frame, WireError> {
-        write_frame(&mut self.stream, request, &mut self.scratch)?;
-        self.stream.flush().map_err(|e| WireError::Io(e.to_string()))?;
+        write_frame(&mut self.conn, request, &mut self.scratch)?;
+        self.conn.flush().map_err(|e| WireError::Io(e.to_string()))?;
+        let deadline = self.opts.reply_timeout.map(|t| Instant::now() + t);
         loop {
-            if let Some(frame) = self.reader.read_frame(&mut self.stream)? {
+            if let Some(frame) = self.reader.read_frame(&mut self.conn)? {
                 return Ok(frame);
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Err(WireError::Io("reply timed out".into()));
             }
         }
     }
@@ -117,7 +246,10 @@ impl SwarmClient {
         }
     }
 
-    /// Offer one locally trained update.
+    /// Offer one *newly trained* update.  Tracked clients stamp it with
+    /// the next sequence number — the number is consumed even if the
+    /// send fails, so any retry of this same update must go through
+    /// [`SwarmClient::retry_push`].
     pub fn push(
         &mut self,
         device: u32,
@@ -125,7 +257,39 @@ impl SwarmClient {
         loss: f32,
         params: ParamVec,
     ) -> Result<PushOutcome, WireError> {
-        let req = Frame::ClientUpdate { device, tau, loss, params };
+        if self.opts.client_id != 0 {
+            self.seq += 1;
+        }
+        self.push_seq(device, tau, loss, params)
+    }
+
+    /// Re-offer the most recent update under its original sequence
+    /// number (shed retry, lost ack, post-reconnect resume).  The server
+    /// either resolves it for the first time or replays the recorded
+    /// ack — never both.
+    pub fn retry_push(
+        &mut self,
+        device: u32,
+        tau: u64,
+        loss: f32,
+        params: ParamVec,
+    ) -> Result<PushOutcome, WireError> {
+        self.push_seq(device, tau, loss, params)
+    }
+
+    fn push_seq(
+        &mut self,
+        device: u32,
+        tau: u64,
+        loss: f32,
+        params: ParamVec,
+    ) -> Result<PushOutcome, WireError> {
+        let (client, seq) = if self.opts.client_id != 0 {
+            (self.opts.client_id, self.seq)
+        } else {
+            (u64::from(device), 0) // legacy kind-2 frame
+        };
+        let req = Frame::ClientUpdate { device, tau, loss, client, seq, params };
         match self.round_trip(&req)? {
             Frame::Ack { version, applied, .. } => Ok(PushOutcome::Acked { version, applied }),
             Frame::Shed { retry_after_ms } => Ok(PushOutcome::Shed {
@@ -144,6 +308,26 @@ impl SwarmClient {
         let json =
             Json::parse(&body).map_err(|_| WireError::Malformed("status reply is not JSON"))?;
         ServerStatus::from_json(&json).map_err(|_| WireError::Malformed("status reply shape"))
+    }
+}
+
+/// Dial and dress a socket per the options: read timeout for bounded
+/// reply waits, fault wrapper when a chaos plan carries stream faults.
+fn open(addr: &impl ToSocketAddrs, opts: &ClientOpts, conn_no: u64) -> Result<Conn, WireError> {
+    let stream = TcpStream::connect(addr).map_err(|e| WireError::Io(e.to_string()))?;
+    if let Some(t) = opts.reply_timeout {
+        stream
+            .set_read_timeout(Some(t))
+            .map_err(|e| WireError::Io(e.to_string()))?;
+    }
+    match opts.chaos.as_ref().filter(|p| p.has_stream_faults()) {
+        Some(plan) => {
+            // Client stream ids stay in the low id space (servers mark
+            // bit 63), fresh per connection so a redial redraws faults.
+            let sid = opts.client_id.wrapping_shl(8) | (conn_no & 0xFF);
+            Ok(Conn::Faulty(FaultyStream::new(stream, plan.stream(sid))))
+        }
+        None => Ok(Conn::Plain(stream)),
     }
 }
 
@@ -170,6 +354,10 @@ pub struct ClientReport {
     pub applied: u64,
     /// Shed replies absorbed (each triggers one backoff sleep).
     pub shed: u64,
+    /// Reconnects performed after transport errors (resilient mode).
+    pub reconnects: u64,
+    /// Updates given up on after `max_push_attempts` refusals.
+    pub abandoned: u64,
     /// Per-push round-trip latency (send → ack/shed), milliseconds.
     pub push_latency_ms: Vec<f64>,
 }
@@ -194,13 +382,36 @@ pub struct ClientLoop<'a> {
     /// target version was never observed — a liveness net for tests and
     /// the swarm example.
     pub deadline: Duration,
+    /// Exactly-once identity; 0 = anonymous legacy client.  Nonzero
+    /// (or an attached fault plan) turns on resilient mode: transport
+    /// errors become redial-and-retry instead of a clean exit.
+    pub client_id: u64,
+    /// Give up on an update after this many refused attempts (shed or
+    /// transport), counting it in [`ClientReport::abandoned`].
+    /// 0 = retry without an attempt cap.
+    pub max_push_attempts: u32,
+    /// Client-side fault injection.
+    pub chaos: Option<Arc<FaultPlan>>,
+}
+
+/// Bounded redial: a restarted server needs a moment to come back (and
+/// may come back on a different address via an [`AddrCell`]).
+fn reconnect_with_patience(client: &mut SwarmClient, addr: &impl ToSocketAddrs) -> bool {
+    for _ in 0..100 {
+        if client.reconnect(addr).is_ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
 }
 
 /// Run a full swarm-client loop over an in-process trainer until the
 /// server's epoch target is reached, the connection drops, or the
-/// deadline passes.  Connection loss after the first successful pull is
-/// a clean exit (the server tears the listener down once its target is
-/// met); before it, the error propagates.
+/// deadline passes.  Anonymous clients treat connection loss after the
+/// first successful pull as a clean exit (the server tears the listener
+/// down once its target is met); resilient clients redial with bounded
+/// patience and resume their in-flight update first.
 pub fn run_quad_client<T: Trainer>(
     addr: impl ToSocketAddrs,
     trainer: &T,
@@ -208,7 +419,15 @@ pub fn run_quad_client<T: Trainer>(
     data: &Dataset,
     cfg: &ClientLoop<'_>,
 ) -> Result<ClientReport, WireError> {
-    let mut client = SwarmClient::connect(addr)?;
+    let resilient = cfg.client_id != 0 || cfg.chaos.is_some();
+    let opts = ClientOpts {
+        client_id: cfg.client_id,
+        chaos: cfg.chaos.clone(),
+        // A lost request or lost ack must surface as a retryable error;
+        // anonymous clients keep the wait-forever contract.
+        reply_timeout: resilient.then(|| Duration::from_millis(750)),
+    };
+    let mut client = SwarmClient::connect_with(&addr, opts)?;
     let mut rng = Rng::seed_from(cfg.seed ^ 0x51AB);
     let mut backoff = Backoff::new(Duration::from_millis(5), Duration::from_millis(200));
     let mut scratch = TaskScratch::new();
@@ -219,6 +438,13 @@ pub fn run_quad_client<T: Trainer>(
     while started.elapsed() < cfg.deadline {
         let (tau, params) = match client.pull() {
             Ok(snap) => snap,
+            Err(_) if resilient => {
+                if !reconnect_with_patience(&mut client, &addr) {
+                    return Ok(report); // server gone for good
+                }
+                report.reconnects += 1;
+                continue;
+            }
             Err(_) if ever_pulled => break, // server done and gone
             Err(e) => return Err(e),
         };
@@ -247,17 +473,41 @@ pub fn run_quad_client<T: Trainer>(
         };
         sleep_scaled(cfg.behavior.link_latency(device, &mut rng) * slow);
 
-        // Push, absorbing sheds with bounded backoff.  The trained
-        // update is re-offered as-is (its τ ages, which is exactly the
-        // staleness the server's α function is there to discount).
-        let mut update = x_new;
+        // Push, absorbing sheds and transport faults with bounded
+        // backoff.  The trained update is re-offered as-is (its τ ages,
+        // which is exactly the staleness the server's α function is
+        // there to discount) and — critically — under its original
+        // sequence number: the first attempt consumed it, every retry
+        // reuses it, so a retried-after-lost-ack push deduplicates
+        // instead of double-applying.
+        let update = x_new;
+        let mut attempts: u32 = 0;
+        let mut first = true;
         loop {
             if started.elapsed() >= cfg.deadline {
                 return Ok(report);
             }
+            if cfg.max_push_attempts > 0 && attempts >= cfg.max_push_attempts {
+                report.abandoned += 1;
+                break;
+            }
+            attempts += 1;
             let t0 = Instant::now();
-            let outcome = match client.push(device as u32, tau, loss, update.clone()) {
+            let sent = if first {
+                client.push(device as u32, tau, loss, update.clone())
+            } else {
+                client.retry_push(device as u32, tau, loss, update.clone())
+            };
+            first = false;
+            let outcome = match sent {
                 Ok(o) => o,
+                Err(_) if resilient => {
+                    if !reconnect_with_patience(&mut client, &addr) {
+                        return Ok(report);
+                    }
+                    report.reconnects += 1;
+                    continue; // same seq: dedup makes this idempotent
+                }
                 Err(_) => return Ok(report), // server gone mid-push
             };
             report.push_latency_ms.push(t0.elapsed().as_secs_f64() * 1e3);
@@ -316,5 +566,19 @@ mod tests {
         let mut rng = Rng::seed_from(7);
         let d = b.next_delay(Duration::from_millis(50), &mut rng);
         assert!(d >= Duration::from_millis(50), "retry_after is a floor: {d:?}");
+    }
+
+    #[test]
+    fn addr_cell_redirects_lookups() {
+        let a: SocketAddr = "127.0.0.1:4000".parse().unwrap();
+        let b: SocketAddr = "127.0.0.1:4001".parse().unwrap();
+        let cell = AddrCell::new(a);
+        let seen: Vec<_> = cell.to_socket_addrs().unwrap().collect();
+        assert_eq!(seen, vec![a]);
+        let clone = cell.clone();
+        clone.set(b);
+        let seen: Vec<_> = cell.to_socket_addrs().unwrap().collect();
+        assert_eq!(seen, vec![b], "clones share the cell");
+        assert_eq!(cell.get(), b);
     }
 }

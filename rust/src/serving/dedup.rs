@@ -1,0 +1,209 @@
+//! Bounded per-client deduplication for the exactly-once protocol.
+//!
+//! The serving plane is stop-and-wait per connection: a client pushes
+//! one tracked update (`client`, `seq`) and blocks for its resolution.
+//! If the ack is lost — faulted socket, server crash after the apply —
+//! the client retries the *same* `seq`.  The server records every acked
+//! resolution here, so a retry is answered from the table instead of
+//! being applied a second time.  That single rule is what makes
+//! `Σ applied acks == final model version` hold under chaos: each
+//! tracked `(client, seq)` contributes at most one applied resolution,
+//! no matter how many times the bytes crossed the wire.
+//!
+//! The table is bounded (insertion-order eviction) and part of every
+//! checkpoint, so the guarantee survives a server restart: a retry
+//! against the resumed process still finds the recorded ack.  See
+//! DESIGN.md §"Chaos & recovery" for the end-to-end argument.
+
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+
+/// Default capacity: comfortably above `clients × in-flight (1)` for
+/// every shipped scenario while bounding resident memory.
+pub const DEFAULT_DEDUP_CAPACITY: usize = 4096;
+
+/// A recorded resolution for a client's most recent acked update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DedupEntry {
+    /// Highest acked sequence number for this client.
+    pub seq: u64,
+    /// Model version the recorded ack reported.
+    pub version: u64,
+    /// Whether that ack reported `applied`.
+    pub applied: bool,
+    /// Staleness the recorded ack reported.
+    pub staleness: u64,
+}
+
+/// One client's row in a checkpoint snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DedupRecord {
+    /// Client id the entry belongs to.
+    pub client: u64,
+    /// The recorded resolution.
+    pub entry: DedupEntry,
+}
+
+/// Bounded `client → last acked resolution` map.
+///
+/// Sequence numbers are monotone per client and at most one update is
+/// in flight per client (stop-and-wait), so one entry per client is
+/// enough: a retry always carries the client's highest seq.
+#[derive(Debug)]
+pub struct DedupTable {
+    entries: HashMap<u64, DedupEntry>,
+    /// Insertion order for eviction; a client is queued once, on first
+    /// sight, so eviction is oldest-first-seen.
+    order: VecDeque<u64>,
+    capacity: usize,
+}
+
+impl DedupTable {
+    /// An empty table bounded at `capacity` clients (min 1).
+    pub fn new(capacity: usize) -> DedupTable {
+        DedupTable {
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The recorded resolution to replay for `(client, seq)`, if this
+    /// push is a duplicate of an already-acked update.
+    ///
+    /// `stored.seq >= seq` covers both the exact retry and the pathological
+    /// re-send of an older seq; either way the update was already
+    /// resolved once and must not be applied again.  The replayed ack is
+    /// the *recorded* one — same version, same `applied` — so a client
+    /// summing applied acks counts each update exactly once.
+    pub fn check(&self, client: u64, seq: u64) -> Option<DedupEntry> {
+        if client == 0 || seq == 0 {
+            return None;
+        }
+        self.entries.get(&client).filter(|e| e.seq >= seq).copied()
+    }
+
+    /// Record an acked resolution for `(client, seq)`.
+    ///
+    /// Only acks are recorded — a shed update was *not* resolved and
+    /// its retry must go through admission again.  Stale records (seq
+    /// lower than what is stored) are ignored.
+    pub fn record(&mut self, client: u64, seq: u64, entry: DedupEntry) {
+        if client == 0 || seq == 0 {
+            return;
+        }
+        debug_assert_eq!(entry.seq, seq);
+        match self.entries.entry(client) {
+            Entry::Occupied(mut o) => {
+                if o.get().seq < seq {
+                    o.insert(entry);
+                }
+            }
+            Entry::Vacant(v) => {
+                v.insert(entry);
+                self.order.push_back(client);
+                if self.entries.len() > self.capacity {
+                    if let Some(evict) = self.order.pop_front() {
+                        self.entries.remove(&evict);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tracked clients currently resident.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the table holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All rows, sorted by client id — deterministic checkpoint bytes.
+    pub fn snapshot(&self) -> Vec<DedupRecord> {
+        let mut rows: Vec<DedupRecord> = self
+            .entries
+            .iter()
+            .map(|(&client, &entry)| DedupRecord { client, entry })
+            .collect();
+        rows.sort_by_key(|r| r.client);
+        rows
+    }
+
+    /// Rebuild the table from checkpointed rows (replaces all state).
+    pub fn restore(&mut self, rows: &[DedupRecord]) {
+        self.entries.clear();
+        self.order.clear();
+        for r in rows.iter().take(self.capacity) {
+            if self.entries.insert(r.client, r.entry).is_none() {
+                self.order.push_back(r.client);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(seq: u64, version: u64, applied: bool) -> DedupEntry {
+        DedupEntry { seq, version, applied, staleness: 0 }
+    }
+
+    #[test]
+    fn retry_replays_the_recorded_ack_exactly() {
+        let mut t = DedupTable::new(8);
+        assert_eq!(t.check(1, 1), None, "first sight is not a duplicate");
+        t.record(1, 1, entry(1, 5, true));
+        assert_eq!(t.check(1, 1), Some(entry(1, 5, true)), "retry hits the record");
+        assert_eq!(t.check(1, 2), None, "the next seq is new work");
+        t.record(1, 2, entry(2, 6, false));
+        assert_eq!(t.check(1, 1), Some(entry(2, 6, false)), "older seq is still a dup");
+        assert_eq!(t.check(2, 1), None, "other clients are independent");
+    }
+
+    #[test]
+    fn anonymous_and_untracked_pushes_bypass_the_table() {
+        let mut t = DedupTable::new(8);
+        t.record(0, 1, entry(1, 1, true));
+        t.record(1, 0, entry(0, 1, true));
+        assert!(t.is_empty());
+        assert_eq!(t.check(0, 1), None);
+        assert_eq!(t.check(1, 0), None);
+    }
+
+    #[test]
+    fn stale_records_never_roll_back() {
+        let mut t = DedupTable::new(8);
+        t.record(1, 3, entry(3, 9, true));
+        t.record(1, 2, entry(2, 7, true));
+        assert_eq!(t.check(1, 3), Some(entry(3, 9, true)));
+    }
+
+    #[test]
+    fn eviction_is_bounded_and_oldest_first() {
+        let mut t = DedupTable::new(2);
+        t.record(1, 1, entry(1, 1, true));
+        t.record(2, 1, entry(1, 2, true));
+        t.record(3, 1, entry(1, 3, true));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.check(1, 1), None, "oldest client evicted");
+        assert!(t.check(2, 1).is_some());
+        assert!(t.check(3, 1).is_some());
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_sorted() {
+        let mut t = DedupTable::new(8);
+        t.record(9, 4, entry(4, 11, true));
+        t.record(2, 7, entry(7, 12, false));
+        let snap = t.snapshot();
+        assert_eq!(snap.iter().map(|r| r.client).collect::<Vec<_>>(), vec![2, 9]);
+        let mut back = DedupTable::new(8);
+        back.restore(&snap);
+        assert_eq!(back.snapshot(), snap);
+        assert_eq!(back.check(9, 4), Some(entry(4, 11, true)));
+    }
+}

@@ -18,19 +18,34 @@
 //! * [`client`] — a swarm client: pull/train/push loop with bounded
 //!   exponential backoff on [`Frame::Shed`], used by the loopback
 //!   conformance suite (`rust/tests/serving.rs`), the multi-process
-//!   `examples/swarm.rs`, and `benches/bench_net.rs`.
+//!   `examples/swarm.rs`, and `benches/bench_net.rs`,
+//! * [`dedup`] + [`checkpoint`] — the chaos-and-recovery layer: a
+//!   bounded dedup table makes retried pushes idempotent (exactly-once
+//!   under lost acks and reconnects), and atomic checkpoints of model +
+//!   staged aggregator state + dedup table make a `--resume` restart
+//!   continue where the crashed process stopped.  Fault injection
+//!   itself lives in [`crate::chaos`].
 //!
 //! Because arrivals funnel into the same core, a served run's accounting
 //! (α_t, staleness histogram, applied/buffered/dropped conservation) is
 //! identical to in-process threaded mode's — the loopback conformance
-//! suite pins this under the straggler and churn stress presets.
-//! DESIGN.md §"Serving plane" documents the frame format and the
-//! admission-control state machine.
+//! suite pins this under the straggler and churn stress presets, with
+//! and without fault plans (`rust/tests/chaos.rs`).  DESIGN.md
+//! §"Serving plane" documents the frame format and the admission-control
+//! state machine; §"Chaos & recovery" documents the fault taxonomy, the
+//! checkpoint format, and the exactly-once argument.
 
+pub mod checkpoint;
 pub mod client;
+pub mod dedup;
 pub mod server;
 pub mod wire;
 
-pub use client::{run_quad_client, Backoff, ClientLoop, ClientReport, PushOutcome, SwarmClient};
+pub use checkpoint::{CheckpointData, CheckpointError, CheckpointStore};
+pub use client::{
+    run_quad_client, AddrCell, Backoff, ClientLoop, ClientOpts, ClientReport, PushOutcome,
+    SwarmClient,
+};
+pub use dedup::{DedupEntry, DedupRecord, DedupTable};
 pub use server::{run_served_core, run_threaded_served, ServingStats};
 pub use wire::{Frame, FrameReader, ServerStatus, WireError};

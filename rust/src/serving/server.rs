@@ -31,6 +31,7 @@
 //! only *after* its offer resolved, so a disconnecting swarm never loses
 //! an acked update.
 
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -39,6 +40,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::chaos::{FaultPlan, FaultyStream};
 use crate::config::{ExperimentConfig, ServingConfig};
 use crate::coordinator::aggregator::{self, AdmissionGate, ShedGate};
 use crate::coordinator::core::UpdaterCore;
@@ -52,6 +54,8 @@ use crate::federated::data::Dataset;
 use crate::federated::metrics::MetricsLog;
 use crate::runtime::{ParamVec, RuntimeError};
 use crate::scenario::{behavior_for, ClientBehavior};
+use crate::serving::checkpoint::{CheckpointData, CheckpointStore};
+use crate::serving::dedup::{DedupEntry, DedupTable, DEFAULT_DEDUP_CAPACITY};
 use crate::serving::wire::{write_frame, Frame, FrameReader, ServerStatus, WireError};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -68,6 +72,9 @@ pub struct ServingStats {
     pub acked: AtomicU64,
     /// Updates answered with a retry-after frame.
     pub shed: AtomicU64,
+    /// Retried pushes answered from the dedup table (exactly-once
+    /// replays, never re-applied).
+    pub deduped: AtomicU64,
 }
 
 impl ServingStats {
@@ -82,8 +89,15 @@ impl ServingStats {
             admitted: self.admitted.load(Ordering::Relaxed),
             acked: self.acked.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            deduped: self.deduped.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Lock a mutex, riding through poisoning — a panicked handler must not
+/// wedge the driver (the panic itself is still surfaced at join time).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// An admitted update queued for the engine, with the reply channel its
@@ -91,6 +105,9 @@ impl ServingStats {
 struct NetArrival {
     arrival: Arrival,
     reply: Sender<Frame>,
+    /// Exactly-once identity of the update (0/0 = untracked).
+    client: u64,
+    seq: u64,
 }
 
 /// Counter snapshot used to classify what `offer` did with an arrival.
@@ -116,6 +133,8 @@ struct PendingReply {
     reply: Sender<Frame>,
     tau: u64,
     mark: CounterMark,
+    client: u64,
+    seq: u64,
 }
 
 /// [`TimeDriver`] over a TCP listener: arrivals come from the wire
@@ -140,7 +159,22 @@ pub struct NetDriver {
     n_devices: usize,
     queue_cap: usize,
     read_timeout: Duration,
+    write_timeout: Duration,
     retry_after_ms: u32,
+    /// Shared with every connection handler: handlers *check* for
+    /// replays, the driver *records* resolutions.
+    dedup: Arc<Mutex<DedupTable>>,
+    /// Durable recovery, when a checkpoint path is configured.
+    ckpt: Option<CheckpointStore>,
+    /// Acked resolutions per checkpoint save (`checkpoint_every`).
+    ckpt_every: u64,
+    acks_since_save: u64,
+    /// Injected crash (chaos): abort without acking once the model
+    /// reaches this version.
+    crash_at: Option<u64>,
+    crashed: bool,
+    /// Socket-level fault injection for accepted connections.
+    plan: Option<Arc<FaultPlan>>,
 }
 
 impl NetDriver {
@@ -159,6 +193,9 @@ impl NetDriver {
         gate: Arc<AdmissionGate>,
         stats: Arc<ServingStats>,
         listener: TcpListener,
+        dedup: Arc<Mutex<DedupTable>>,
+        ckpt: Option<CheckpointStore>,
+        plan: Option<Arc<FaultPlan>>,
     ) -> Result<NetDriver, RuntimeError> {
         let addr = listener
             .local_addr()
@@ -183,8 +220,35 @@ impl NetDriver {
             n_devices: cfg.federation.devices,
             queue_cap: serving.accept_queue.max(1),
             read_timeout: Duration::from_millis(serving.read_timeout_ms.max(1)),
+            write_timeout: Duration::from_millis(serving.write_timeout_ms.max(1)),
             retry_after_ms: serving.retry_after_ms,
+            dedup,
+            ckpt,
+            ckpt_every: serving.checkpoint_every.max(1),
+            acks_since_save: 0,
+            crash_at: plan.as_ref().and_then(|p| p.crash_at_version()),
+            crashed: false,
+            plan,
         })
+    }
+
+    /// Capture the serving plane's durable state: model, staged blend,
+    /// dedup table — one consistent cut, taken between offers (the
+    /// engine is single-threaded through the driver, so nothing moves
+    /// while this runs).
+    fn save_checkpoint(&mut self, core: &UpdaterCore<'_>) -> Result<(), RuntimeError> {
+        let Some(store) = &self.ckpt else { return Ok(()) };
+        let data = CheckpointData {
+            version: core.store.current_version(),
+            params: core.store.current().clone(),
+            staged: core.updater.staged_state(),
+            dedup: lock(&self.dedup).snapshot(),
+        };
+        store
+            .save(&data)
+            .map_err(|e| RuntimeError::Channel(format!("checkpoint save: {e}")))?;
+        self.acks_since_save = 0;
+        Ok(())
     }
 
     /// Answer the queued update's handler so it is never left blocked;
@@ -234,11 +298,14 @@ impl<T: Trainer> TimeDriver<T> for NetDriver {
             pending_tx,
             n_devices: self.n_devices,
             retry_after_ms: self.retry_after_ms,
+            dedup: Arc::clone(&self.dedup),
         };
         let stop = Arc::clone(&self.stop);
         let stats = Arc::clone(&self.stats);
         let handles = Arc::clone(&self.conn_handles);
         let read_timeout = self.read_timeout;
+        let write_timeout = self.write_timeout;
+        let plan = self.plan.clone().filter(|p| p.has_stream_faults());
         self.acceptor = Some(
             std::thread::Builder::new()
                 .name("serve-accept".into())
@@ -258,16 +325,31 @@ impl<T: Trainer> TimeDriver<T> for NetDriver {
                             return; // the shutdown wake-up connection
                         }
                         ServingStats::bump(&stats.connections);
-                        // Bounded reads: a silent peer cannot pin its
-                        // handler past shutdown.
-                        if stream.set_read_timeout(Some(read_timeout)).is_err() {
+                        // Bounded reads *and writes*: a silent peer
+                        // cannot pin its handler past shutdown, and a
+                        // peer that stops reading cannot wedge a handler
+                        // mid-reply (its socket buffer fills, the write
+                        // times out, the handler drops the peer).
+                        if stream.set_read_timeout(Some(read_timeout)).is_err()
+                            || stream.set_write_timeout(Some(write_timeout)).is_err()
+                        {
                             continue;
                         }
                         let ctx = ctx.clone();
                         conn_id += 1;
                         let h = std::thread::Builder::new()
                             .name(format!("serve-conn-{conn_id}"))
-                            .spawn(move || conn_loop(stream, ctx));
+                            .spawn({
+                                // Server-side fault streams live in the
+                                // high id space; clients use their own
+                                // ids below it.
+                                let faults =
+                                    plan.as_ref().map(|p| p.stream(conn_id | (1 << 63)));
+                                move || match faults {
+                                    Some(f) => conn_loop(FaultyStream::new(stream, f), ctx),
+                                    None => conn_loop(stream, ctx),
+                                }
+                            });
                         if let Ok(h) = h {
                             // Handles are parked, not joined, here:
                             // joining would deadlock with handlers that
@@ -307,6 +389,8 @@ impl<T: Trainer> TimeDriver<T> for NetDriver {
             reply: queued.reply,
             tau: queued.arrival.tau,
             mark: CounterMark::of(core),
+            client: queued.client,
+            seq: queued.seq,
         });
         Ok(Some(queued.arrival))
     }
@@ -344,6 +428,44 @@ impl<T: Trainer> TimeDriver<T> for NetDriver {
             } else {
                 Frame::Ack { version, applied: false, staleness: 0 }
             };
+            // Exactly-once bookkeeping, in crash-consistent order:
+            // record the resolution in the dedup table, make it durable
+            // if the checkpoint cadence is due, and only then release
+            // the ack to the wire.  A crash between "durable" and "ack
+            // sent" is the recovered case: the client sees the lost
+            // reply as a retry, and the resumed server replays the
+            // recorded ack instead of applying the update again.
+            if let Frame::Ack { version, applied, staleness } = &frame {
+                if p.client != 0 && p.seq != 0 {
+                    lock(&self.dedup).record(
+                        p.client,
+                        p.seq,
+                        DedupEntry {
+                            seq: p.seq,
+                            version: *version,
+                            applied: *applied,
+                            staleness: *staleness,
+                        },
+                    );
+                }
+                self.acks_since_save += 1;
+                if self.ckpt.is_some() && self.acks_since_save >= self.ckpt_every {
+                    self.save_checkpoint(core)?;
+                }
+            }
+            if let Some(k) = self.crash_at {
+                if core.store.current_version() >= k {
+                    // Injected crash: drop the in-flight ack on the
+                    // floor and abort the engine — exactly what a kill
+                    // between durable-write and reply looks like.
+                    self.crashed = true;
+                    drop(p);
+                    self.pool.release(spent);
+                    return Err(RuntimeError::Channel(format!(
+                        "chaos: injected crash at version {k}"
+                    )));
+                }
+            }
             if matches!(frame, Frame::Shed { .. }) {
                 ServingStats::bump(&self.stats.shed);
             } else {
@@ -406,6 +528,14 @@ impl<T: Trainer> TimeDriver<T> for NetDriver {
                 panicked = Some("connection handler");
             }
         }
+        // Final durable cut on an orderly stop, so `--resume` after a
+        // clean shutdown (or a later cold restart) starts from the very
+        // last state.  Skipped on an injected crash: a killed process
+        // would not have run this, and the test for exactly-once is
+        // precisely that the *cadence* checkpoints suffice.
+        if !self.crashed {
+            self.save_checkpoint(core)?;
+        }
         if let Some(who) = panicked {
             return Err(RuntimeError::Thread(format!("{who} thread panicked")));
         }
@@ -430,11 +560,14 @@ struct ConnCtx {
     pending_tx: SyncSender<NetArrival>,
     n_devices: usize,
     retry_after_ms: u32,
+    dedup: Arc<Mutex<DedupTable>>,
 }
 
 /// One connection's frame loop.  Exits on peer close, protocol error, or
 /// `stop` observed at a read timeout; never panics on wire input.
-fn conn_loop(mut stream: TcpStream, ctx: ConnCtx) {
+/// Generic over the stream so the chaos plane can interpose a
+/// [`FaultyStream`] without a separate code path.
+fn conn_loop<S: Read + Write>(mut stream: S, ctx: ConnCtx) {
     let mut reader = FrameReader::new();
     let mut scratch = Vec::new();
     loop {
@@ -461,13 +594,40 @@ fn conn_loop(mut stream: TcpStream, ctx: ConnCtx) {
                     return;
                 }
             }
-            Frame::ClientUpdate { device, tau, loss, params } => {
+            Frame::ClientUpdate { device, tau, loss, client, seq, params } => {
                 // Validate against the live model before spending a
                 // gate slot; a mismatched dim is a protocol error.
                 let snap = ctx.cell.load();
                 if params.len() != snap.params.len() || (device as usize) >= ctx.n_devices {
                     return;
                 }
+                // Exactly-once: a retry of an already-acked update is
+                // answered from the dedup table — never re-applied, and
+                // never charged a gate slot.  Replaying the *recorded*
+                // ack keeps the client's applied count honest.
+                if client != 0 && seq != 0 {
+                    if let Some(e) = lock(&ctx.dedup).check(client, seq) {
+                        ServingStats::bump(&ctx.stats.deduped);
+                        let ack = Frame::Ack {
+                            version: e.version,
+                            // An older seq's exact resolution is gone
+                            // (superseded); it was certainly resolved,
+                            // so answer un-applied rather than risk
+                            // double-counting.
+                            applied: e.applied && e.seq == seq,
+                            staleness: e.staleness,
+                        };
+                        if write_frame(&mut stream, &ack, &mut scratch).is_err() {
+                            return;
+                        }
+                        continue;
+                    }
+                }
+                // A resumed server can restart below a client's τ (the
+                // snapshot it trained from died with the old process);
+                // clamp so staleness stays well-defined instead of
+                // asserting an update "from the future".
+                let tau = tau.min(snap.version);
                 if !ctx.gate.try_enter() {
                     // First-line admission control: the bounded queue is
                     // full, shed immediately — never block the peer.
@@ -488,6 +648,8 @@ fn conn_loop(mut stream: TcpStream, ctx: ConnCtx) {
                         loss,
                     },
                     reply: reply_tx,
+                    client,
+                    seq,
                 };
                 // Never blocks: the gate slot we hold is one of at most
                 // `accept_queue` outstanding, the channel's capacity.
@@ -564,6 +726,43 @@ pub fn run_served_core(
     stats: Arc<ServingStats>,
 ) -> Result<MetricsLog, RuntimeError> {
     let serving = cfg.serving.clone().unwrap_or_default();
+    let ckpt = serving.checkpoint_path.as_deref().map(CheckpointStore::new);
+
+    // `--resume`: adopt the checkpoint's state wholesale before the core
+    // exists.  A missing or damaged checkpoint is a hard error — a
+    // silent cold start would *look* like recovery while discarding the
+    // fleet's progress.
+    let mut init = init;
+    let mut resume_version = 0u64;
+    let mut staged = None;
+    let mut dedup_rows = Vec::new();
+    if serving.resume {
+        let store = ckpt.as_ref().ok_or_else(|| {
+            RuntimeError::Channel("resume requires serving.checkpoint_path".into())
+        })?;
+        let data = store
+            .load()
+            .map_err(|e| RuntimeError::Channel(format!("resume from checkpoint: {e}")))?;
+        if data.params.len() != init.len() {
+            return Err(RuntimeError::Channel(format!(
+                "resume dim mismatch: checkpoint {} vs model {}",
+                data.params.len(),
+                init.len()
+            )));
+        }
+        init = data.params;
+        resume_version = data.version;
+        staged = data.staged;
+        dedup_rows = data.dedup;
+    }
+
+    let dedup = {
+        let mut t = DedupTable::new(DEFAULT_DEDUP_CAPACITY);
+        t.restore(&dedup_rows);
+        Arc::new(Mutex::new(t))
+    };
+    let plan = cfg.chaos.as_ref().map(FaultPlan::compile);
+
     let pool = Arc::new(BufferPool::new(cfg.max_inflight.max(1) + 2));
     let gate = Arc::new(AdmissionGate::new(serving.accept_queue));
     // Same aggregation strategy the in-process modes would build, behind
@@ -572,11 +771,16 @@ pub fn run_served_core(
     // is the first), it never alters an accepted one.
     let inner = aggregator::for_config(cfg, Some(Arc::clone(&pool)));
     let gated = Box::new(ShedGate::new(inner, Arc::clone(&gate)));
-    let core = UpdaterCore::with_aggregator(cfg, init, 1, test, Arc::clone(&pool), gated);
-    let cell = Arc::new(SnapshotCell::new(0, core.store.current_arc()));
+    let mut core = UpdaterCore::with_aggregator(cfg, init, 1, test, Arc::clone(&pool), gated);
+    core.store.restore_version(resume_version);
+    if let Some(st) = staged {
+        core.updater.restore_staged(st);
+    }
+    let cell = Arc::new(SnapshotCell::new(resume_version, core.store.current_arc()));
     let svc_trainer = ServiceTrainer { job_tx: job_tx.clone(), cell: Arc::clone(&cell), h };
-    let driver =
-        NetDriver::new(cfg, &serving, seed, job_tx, pool, cell, gate, stats, listener)?;
+    let driver = NetDriver::new(
+        cfg, &serving, seed, job_tx, pool, cell, gate, stats, listener, dedup, ckpt, plan,
+    )?;
     Engine::new(&svc_trainer, cfg, behavior.as_ref()).run(core, driver)
 }
 

@@ -63,6 +63,13 @@ pub enum Frame {
         params: ParamVec,
     },
     /// Client → server: a completed local-training result.
+    ///
+    /// `client`/`seq` are the exactly-once identity: a client bumps
+    /// `seq` once per *trained* update and reuses it on every retry, so
+    /// the server's dedup table can replay a lost ack instead of
+    /// applying the update twice.  Frames with `seq == 0 &&
+    /// client == device` encode as the legacy kind-2 layout (old peers
+    /// interoperate); anything else uses the extended kind-7 layout.
     ClientUpdate {
         /// Device id that ran the task.
         device: u32,
@@ -70,6 +77,11 @@ pub enum Frame {
         tau: u64,
         /// Mean local training loss.
         loss: f32,
+        /// Stable client identity for deduplication (0 = anonymous,
+        /// no exactly-once tracking).
+        client: u64,
+        /// Monotone per-client sequence number (0 = untracked).
+        seq: u64,
         /// The locally trained model.
         params: ParamVec,
     },
@@ -107,7 +119,15 @@ impl Frame {
         match self {
             Frame::PullModel => 0,
             Frame::ModelSnapshot { .. } => 1,
-            Frame::ClientUpdate { .. } => 2,
+            // Untracked updates keep the legacy kind-2 layout so old
+            // peers interoperate; tracked ones need the wider kind 7.
+            Frame::ClientUpdate { device, client, seq, .. } => {
+                if *seq == 0 && *client == u64::from(*device) {
+                    2
+                } else {
+                    7
+                }
+            }
             Frame::Ack { .. } => 3,
             Frame::Shed { .. } => 4,
             Frame::Control { .. } => 5,
@@ -130,6 +150,9 @@ json_struct! {
         pub acked: u64,
         /// Updates answered with a retry-after frame.
         pub shed: u64,
+        /// Retried pushes answered from the dedup table instead of
+        /// being applied again.
+        pub deduped: u64,
     }
 }
 
@@ -191,10 +214,14 @@ pub fn encode_into(frame: &Frame, out: &mut Vec<u8>) {
             out.extend_from_slice(&version.to_le_bytes());
             put_params(out, params);
         }
-        Frame::ClientUpdate { device, tau, loss, params } => {
+        Frame::ClientUpdate { device, tau, loss, client, seq, params } => {
             out.extend_from_slice(&device.to_le_bytes());
             out.extend_from_slice(&tau.to_le_bytes());
             out.extend_from_slice(&loss.to_le_bytes());
+            if frame.kind() == 7 {
+                out.extend_from_slice(&client.to_le_bytes());
+                out.extend_from_slice(&seq.to_le_bytes());
+            }
             put_params(out, params);
         }
         Frame::Ack { version, applied, staleness } => {
@@ -248,7 +275,7 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
     if buf.len() >= 3 && buf[2] != WIRE_VERSION {
         return Err(WireError::Version { got: buf[2] });
     }
-    if buf.len() >= 4 && buf[3] > 6 {
+    if buf.len() >= 4 && buf[3] > 7 {
         return Err(WireError::UnknownKind(buf[3]));
     }
     if buf.len() < HEADER_LEN {
@@ -271,15 +298,17 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
             let params = p.params()?;
             Frame::ModelSnapshot { version, params }
         }
-        2 => {
+        2 | 7 => {
             let device = p.u32()?;
             let tau = p.u64()?;
             let loss = p.f32()?;
             if !loss.is_finite() {
                 return Err(WireError::NonFinite);
             }
+            let (client, seq) =
+                if kind == 7 { (p.u64()?, p.u64()?) } else { (u64::from(device), 0) };
             let params = p.params()?;
-            Frame::ClientUpdate { device, tau, loss, params }
+            Frame::ClientUpdate { device, tau, loss, client, seq, params }
         }
         3 => {
             let version = p.u64()?;
@@ -431,8 +460,40 @@ mod tests {
             Frame::PullModel,
             Frame::ModelSnapshot { version: 7, params: vec![1.0, -2.5, 0.0] },
             Frame::ModelSnapshot { version: 0, params: vec![] },
-            Frame::ClientUpdate { device: 3, tau: 6, loss: 0.25, params: vec![0.5; 4] },
-            Frame::ClientUpdate { device: 0, tau: 0, loss: -1.0, params: vec![] },
+            Frame::ClientUpdate {
+                device: 3,
+                tau: 6,
+                loss: 0.25,
+                client: 3,
+                seq: 0,
+                params: vec![0.5; 4],
+            },
+            Frame::ClientUpdate {
+                device: 0,
+                tau: 0,
+                loss: -1.0,
+                client: 0,
+                seq: 0,
+                params: vec![],
+            },
+            // Extended kind-7 layouts: tracked seq, and a client id
+            // decoupled from the device id.
+            Frame::ClientUpdate {
+                device: 3,
+                tau: 6,
+                loss: 0.25,
+                client: 3,
+                seq: 42,
+                params: vec![0.5; 4],
+            },
+            Frame::ClientUpdate {
+                device: 1,
+                tau: 2,
+                loss: 0.0,
+                client: 9001,
+                seq: 0,
+                params: vec![-1.0],
+            },
             Frame::Ack { version: 9, applied: true, staleness: 2 },
             Frame::Ack { version: 0, applied: false, staleness: 0 },
             Frame::Shed { retry_after_ms: 50 },
@@ -507,6 +568,8 @@ mod tests {
             device: 1,
             tau: 0,
             loss: 0.0,
+            client: 1,
+            seq: 0,
             params: vec![1.0],
         });
         // Patch the single param (last 4 bytes) to NaN.
@@ -514,8 +577,14 @@ mod tests {
         bytes[n - 4..].copy_from_slice(&f32::NAN.to_le_bytes());
         assert_eq!(decode(&bytes), Err(WireError::NonFinite));
 
-        let mut bytes =
-            encode(&Frame::ClientUpdate { device: 1, tau: 0, loss: 0.0, params: vec![] });
+        let mut bytes = encode(&Frame::ClientUpdate {
+            device: 1,
+            tau: 0,
+            loss: 0.0,
+            client: 1,
+            seq: 0,
+            params: vec![],
+        });
         // loss sits at payload offset 12 (device 4 + tau 8).
         bytes[HEADER_LEN + 12..HEADER_LEN + 16]
             .copy_from_slice(&f32::INFINITY.to_le_bytes());
@@ -559,7 +628,14 @@ mod tests {
                 Ok(1)
             }
         }
-        let want = Frame::ClientUpdate { device: 2, tau: 5, loss: 0.5, params: vec![1.0; 3] };
+        let want = Frame::ClientUpdate {
+            device: 2,
+            tau: 5,
+            loss: 0.5,
+            client: 2,
+            seq: 11,
+            params: vec![1.0; 3],
+        };
         let mut stream = Trickle { bytes: encode(&want), at: 0, parity: false };
         let mut reader = FrameReader::new();
         let mut timeouts = 0;
@@ -579,9 +655,53 @@ mod tests {
     }
 
     #[test]
+    fn tracked_updates_extend_the_wire_without_breaking_legacy_kind_2() {
+        // Untracked updates still hit the legacy layout byte-for-byte.
+        let legacy = Frame::ClientUpdate {
+            device: 5,
+            tau: 9,
+            loss: 0.5,
+            client: 5,
+            seq: 0,
+            params: vec![1.0, 2.0],
+        };
+        let bytes = encode(&legacy);
+        assert_eq!(bytes[3], 2, "untracked update must stay kind 2");
+        let mut want = vec![MAGIC[0], MAGIC[1], WIRE_VERSION, 2];
+        want.extend_from_slice(&24u32.to_le_bytes());
+        want.extend_from_slice(&5u32.to_le_bytes());
+        want.extend_from_slice(&9u64.to_le_bytes());
+        want.extend_from_slice(&0.5f32.to_le_bytes());
+        want.extend_from_slice(&2u32.to_le_bytes());
+        want.extend_from_slice(&1.0f32.to_le_bytes());
+        want.extend_from_slice(&2.0f32.to_le_bytes());
+        assert_eq!(bytes, want, "legacy kind-2 layout must be unchanged");
+
+        // Tracked updates pick the extended kind and round-trip.
+        let tracked = Frame::ClientUpdate {
+            device: 5,
+            tau: 9,
+            loss: 0.5,
+            client: 31,
+            seq: 4,
+            params: vec![1.0, 2.0],
+        };
+        let bytes = encode(&tracked);
+        assert_eq!(bytes[3], 7, "tracked update must use kind 7");
+        let (back, _) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(back, tracked);
+    }
+
+    #[test]
     fn server_status_round_trips_through_control_json() {
-        let status =
-            ServerStatus { version: 12, connections: 4, admitted: 40, acked: 38, shed: 2 };
+        let status = ServerStatus {
+            version: 12,
+            connections: 4,
+            admitted: 40,
+            acked: 38,
+            shed: 2,
+            deduped: 3,
+        };
         let body = status.to_json().to_string_compact();
         let frame = Frame::ControlReply { body };
         let bytes = encode(&frame);

@@ -1,0 +1,599 @@
+//! Chaos-plane conformance: the serving plane under injected faults.
+//!
+//! Everything here runs the same loopback harness as `serving.rs` — a
+//! real `TcpListener`, swarm-client threads speaking the wire protocol,
+//! the closed-form quadratic compute plane — but with the fault
+//! injector armed on one or both sides of the socket, and with the
+//! crash/checkpoint/resume machinery in the loop:
+//!
+//! * kill the server at a chosen model version and resume it from its
+//!   checkpoint on a fresh port — training completes, and summing the
+//!   clients' `applied` acks re-derives the final model version exactly
+//!   (nothing lost, nothing double-applied, across a process boundary);
+//! * a drop/delay-only fault plan on both sides of every socket still
+//!   lands inside the cross-mode conformance band on the straggler and
+//!   churn presets;
+//! * retried pushes under one sequence number are answered from the
+//!   dedup table — byte-identical acks, model version untouched;
+//! * the client's attempt cap terminates retry loops against a server
+//!   that sheds forever;
+//! * a plan with every fault type armed (resets, truncations, duplicated
+//!   frames, bit flips) cannot wedge the run or over-count applies.
+
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use fedasync::analysis::quadratic::{dummy_dataset, dummy_fleet, QuadraticProblem};
+use fedasync::chaos::{ChaosConfig, FaultPlan};
+use fedasync::config::{ExecMode, ExperimentConfig, LocalUpdate, ServingConfig, StalenessFn};
+use fedasync::coordinator::server::{run_server_core, serve_native, ComputeJob};
+use fedasync::coordinator::Trainer;
+use fedasync::federated::metrics::MetricsLog;
+use fedasync::runtime::RuntimeError;
+use fedasync::scenario;
+use fedasync::serving::wire::write_frame;
+use fedasync::serving::{
+    run_quad_client, run_served_core, AddrCell, ClientLoop, ClientOpts, ClientReport, Frame,
+    FrameReader, PushOutcome, ServingStats, SwarmClient,
+};
+
+const CONF_DEVICES: usize = 16;
+const CONF_EPOCHS: usize = 120;
+const CONF_SEED: u64 = 1;
+const CLIENTS: usize = 3;
+
+fn conformance_quad() -> QuadraticProblem {
+    // Same problem as serving.rs / integration_training.rs, so the
+    // shared loss band means the same thing here.
+    QuadraticProblem::new(CONF_DEVICES, 6, 0.5, 2.0, 2.0, 0.05, 5, 3)
+}
+
+fn conformance_shrink(cfg: &mut ExperimentConfig) {
+    cfg.mode = ExecMode::Threads;
+    cfg.epochs = CONF_EPOCHS;
+    cfg.eval_every = CONF_EPOCHS / 4;
+    cfg.repeats = 1;
+    cfg.seed = CONF_SEED;
+    cfg.gamma = 0.05;
+    cfg.alpha = 0.6;
+    cfg.alpha_decay = 1.0;
+    cfg.alpha_decay_at = usize::MAX;
+    cfg.local_update = LocalUpdate::Sgd;
+    cfg.staleness.func = StalenessFn::Poly { a: 0.5 };
+    cfg.federation.devices = CONF_DEVICES;
+    cfg.worker_threads = CLIENTS;
+    cfg.max_inflight = 4;
+    cfg.serving = Some(ServingConfig::default());
+    cfg.validate().expect("conformance serving config");
+}
+
+fn preset_cfg(name: &str) -> ExperimentConfig {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs").join(name);
+    let mut cfg =
+        ExperimentConfig::from_toml_file(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    assert!(cfg.scenario.is_some(), "{path:?} must carry a [scenario] table");
+    conformance_shrink(&mut cfg);
+    cfg
+}
+
+/// Plain config (no scenario): uniform population, every delivery lands.
+fn plain_cfg(epochs: usize, eval_every: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    conformance_shrink(&mut cfg);
+    cfg.epochs = epochs;
+    cfg.eval_every = eval_every;
+    cfg.validate().expect("plain serving config");
+    cfg
+}
+
+/// The in-process threaded baseline over the native quadratic service.
+fn run_threaded_baseline(cfg: &ExperimentConfig) -> MetricsLog {
+    let p = conformance_quad();
+    let init = p.init_params(CONF_SEED as usize).expect("init");
+    let h = p.local_iters();
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(conformance_quad(), CONF_DEVICES, job_rx));
+    let behavior = scenario::behavior_for(cfg, CONF_DEVICES, CONF_SEED);
+    let test = dummy_dataset();
+    let log = run_server_core(cfg, CONF_SEED, &test, init, h, job_tx, behavior)
+        .unwrap_or_else(|e| panic!("threaded baseline: {e}"));
+    svc.join().expect("native service join");
+    log
+}
+
+/// Spawn the served engine behind `listener` (with its own native
+/// compute thread) and hand back the completion channel — the caller
+/// decides the watchdog budget and whether an `Err` is expected (the
+/// crash/resume test *wants* one).
+fn spawn_served(
+    cfg: &ExperimentConfig,
+    listener: TcpListener,
+    stats: Arc<ServingStats>,
+) -> (mpsc::Receiver<Result<MetricsLog, RuntimeError>>, std::thread::JoinHandle<()>) {
+    let p = conformance_quad();
+    let init = p.init_params(CONF_SEED as usize).expect("init");
+    let h = p.local_iters();
+    let (job_tx, job_rx) = mpsc::channel::<ComputeJob>();
+    let svc = std::thread::spawn(move || serve_native(conformance_quad(), CONF_DEVICES, job_rx));
+    let behavior = scenario::behavior_for(cfg, CONF_DEVICES, CONF_SEED);
+    let (done_tx, done_rx) = mpsc::channel();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let test = dummy_dataset();
+        let result =
+            run_served_core(&cfg, CONF_SEED, &test, init, h, job_tx, behavior, listener, stats);
+        let _ = done_tx.send(result);
+    });
+    (done_rx, svc)
+}
+
+/// A full served run with tracked (exactly-once) clients and an optional
+/// client-side fault plan; the server-side plan rides in `cfg.chaos`.
+fn run_chaos_loopback(
+    cfg: &ExperimentConfig,
+    client_plan: Option<Arc<FaultPlan>>,
+    clients: usize,
+    deadline: Duration,
+    watchdog: Duration,
+) -> (MetricsLog, Vec<ClientReport>, Arc<ServingStats>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stats = Arc::new(ServingStats::default());
+    let (done_rx, svc) = spawn_served(cfg, listener, Arc::clone(&stats));
+
+    let behavior = scenario::behavior_for(cfg, CONF_DEVICES, CONF_SEED);
+    let epochs = cfg.epochs as u64;
+    let (gamma, rho) = (cfg.gamma, cfg.rho);
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let behavior = Arc::clone(&behavior);
+            let plan = client_plan.clone();
+            std::thread::spawn(move || {
+                let trainer = conformance_quad();
+                let mut fleet = dummy_fleet(CONF_DEVICES, 7);
+                let data = dummy_dataset();
+                let loop_cfg = ClientLoop {
+                    behavior: behavior.as_ref(),
+                    devices: CONF_DEVICES,
+                    epochs,
+                    gamma,
+                    rho,
+                    seed: CONF_SEED + 100 * (c as u64 + 1),
+                    deadline,
+                    client_id: c as u64 + 1,
+                    max_push_attempts: 0,
+                    chaos: plan,
+                };
+                run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
+                    .unwrap_or_else(|e| panic!("client {c}: {e}"))
+            })
+        })
+        .collect();
+
+    let result = done_rx.recv_timeout(watchdog).expect("served engine deadlocked under chaos");
+    let log = result.expect("served run failed");
+    let reports: Vec<ClientReport> =
+        handles.into_iter().map(|h| h.join().expect("client join")).collect();
+    svc.join().expect("native service join");
+    (log, reports, stats)
+}
+
+/// Conformance bands shared with serving.rs: both runs learn, finals
+/// share a 100× band, staleness supports overlap.
+fn assert_conformant(preset: &str, served: &MetricsLog, threaded: &MetricsLog) {
+    let mut finals = Vec::new();
+    for (mode, log) in [("chaos-served", served), ("threaded", threaded)] {
+        let first = log.rows.first().expect("rows").test_loss;
+        let last = log.rows.last().expect("rows").test_loss;
+        assert!(
+            last.is_finite() && last < first * 0.5,
+            "{preset} {mode}: no learning ({first} -> {last})"
+        );
+        assert!(log.staleness_hist.total() > 0, "{preset} {mode}: empty staleness histogram");
+        finals.push(last);
+    }
+    let lo = finals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = finals.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        hi <= lo.max(1e-3) * 100.0,
+        "{preset}: faulted served vs threaded final losses diverged: {finals:?}"
+    );
+    let a: std::collections::BTreeSet<u64> = served.staleness_hist.support().into_iter().collect();
+    let b: std::collections::BTreeSet<u64> =
+        threaded.staleness_hist.support().into_iter().collect();
+    assert!(
+        a.intersection(&b).next().is_some(),
+        "{preset}: staleness supports are disjoint: {a:?} vs {b:?}"
+    );
+}
+
+// ---------------------------------------------------------------- tentpole
+
+#[test]
+fn crash_and_resume_preserves_exactly_once() {
+    // Kill the server (injected crash, ack dropped on the floor) once the
+    // model reaches version 25, restart it on a *different* port from its
+    // checkpoint, and let the same swarm finish the run through an
+    // AddrCell redial.  With checkpoint_every = 1 every ack the clients
+    // ever saw is durable, so the conservation law must hold across the
+    // crash: Σ applied acks == final model version.  The ack in flight at
+    // the crash is replayed from the restored dedup table — the update is
+    // *not* applied twice.
+    const EPOCHS: usize = 60;
+    const CRASH_AT: u64 = 25;
+    let ckpt =
+        std::env::temp_dir().join(format!("fedasync-chaos-resume-{}.ckpt", std::process::id()));
+    let _ = std::fs::remove_file(&ckpt);
+
+    let mut cfg_a = plain_cfg(EPOCHS, EPOCHS / 4);
+    {
+        let sv = cfg_a.serving.as_mut().expect("serving block");
+        sv.checkpoint_path = Some(ckpt.display().to_string());
+        sv.checkpoint_every = 1;
+    }
+    cfg_a.chaos =
+        Some(ChaosConfig { crash_at_version: Some(CRASH_AT), ..ChaosConfig::default() });
+    cfg_a.validate().expect("phase A config");
+
+    let listener_a = TcpListener::bind("127.0.0.1:0").expect("bind phase A");
+    let cell = AddrCell::new(listener_a.local_addr().expect("phase A addr"));
+
+    // Tracked resilient clients, shared across both server lives: they
+    // redial through the cell and resume in-flight sequence numbers.
+    let behavior = scenario::behavior_for(&cfg_a, CONF_DEVICES, CONF_SEED);
+    let (gamma, rho) = (cfg_a.gamma, cfg_a.rho);
+    let client_handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let behavior = Arc::clone(&behavior);
+            let cell = cell.clone();
+            std::thread::spawn(move || {
+                let trainer = conformance_quad();
+                let mut fleet = dummy_fleet(CONF_DEVICES, 7);
+                let data = dummy_dataset();
+                let loop_cfg = ClientLoop {
+                    behavior: behavior.as_ref(),
+                    devices: CONF_DEVICES,
+                    epochs: EPOCHS as u64,
+                    gamma,
+                    rho,
+                    seed: CONF_SEED + 100 * (c as u64 + 1),
+                    deadline: Duration::from_secs(120),
+                    client_id: c as u64 + 1,
+                    max_push_attempts: 0,
+                    chaos: None,
+                };
+                run_quad_client(cell, &trainer, &mut fleet, &data, &loop_cfg)
+                    .unwrap_or_else(|e| panic!("client {c}: {e}"))
+            })
+        })
+        .collect();
+
+    // Phase A: serve until the injected crash aborts the engine.
+    let stats_a = Arc::new(ServingStats::default());
+    let (done_a, svc_a) = spawn_served(&cfg_a, listener_a, Arc::clone(&stats_a));
+    let crash = done_a
+        .recv_timeout(Duration::from_secs(120))
+        .expect("phase A deadlocked before the injected crash");
+    let err = crash.expect_err("phase A must abort at the injected crash");
+    assert!(format!("{err}").contains("injected crash"), "unexpected phase A error: {err}");
+    svc_a.join().expect("phase A service join");
+    assert!(ckpt.exists(), "the crash left no checkpoint behind");
+
+    // Phase B: resume from the checkpoint on a fresh port, repoint the
+    // swarm, finish the run.  This must start inside the clients' redial
+    // patience window (~2s), which binding a socket comfortably is.
+    let mut cfg_b = cfg_a.clone();
+    cfg_b.chaos = None;
+    cfg_b.serving.as_mut().expect("serving block").resume = true;
+    cfg_b.validate().expect("phase B config");
+    let listener_b = TcpListener::bind("127.0.0.1:0").expect("bind phase B");
+    cell.set(listener_b.local_addr().expect("phase B addr"));
+    let stats_b = Arc::new(ServingStats::default());
+    let (done_b, svc_b) = spawn_served(&cfg_b, listener_b, Arc::clone(&stats_b));
+    let log = done_b
+        .recv_timeout(Duration::from_secs(180))
+        .expect("resumed engine deadlocked")
+        .expect("resumed run failed");
+    svc_b.join().expect("phase B service join");
+    let reports: Vec<ClientReport> =
+        client_handles.into_iter().map(|h| h.join().expect("client join")).collect();
+
+    let last = log.rows.last().expect("rows");
+    assert!(last.epoch >= EPOCHS, "resumed run stopped early at {}", last.epoch);
+    // The conservation law, across a crash: every version increment was
+    // acked to exactly one client, in exactly one server life.
+    let applied: u64 = reports.iter().map(|r| r.applied).sum();
+    assert_eq!(
+        applied,
+        last.epoch as u64,
+        "applied acks must re-derive the final version across the crash \
+         (an update was lost or applied twice)"
+    );
+    // The ack dropped at the crash was re-offered against phase B and
+    // answered from the *restored* dedup table, not re-applied.
+    let deduped_b = stats_b.deduped.load(Ordering::Relaxed);
+    assert!(deduped_b >= 1, "the in-flight update was never replayed from the checkpoint");
+    // The fleet actually survived a server death: someone redialed.
+    let reconnects: u64 = reports.iter().map(|r| r.reconnects).sum();
+    assert!(reconnects >= 1, "no client ever reconnected across the restart");
+
+    // Same problem, no crash: the resumed trajectory's final loss must
+    // land in the shared band (recovery, not just completion).
+    let (clean_log, _, _) = run_chaos_loopback(
+        &plain_cfg(EPOCHS, EPOCHS / 4),
+        None,
+        CLIENTS,
+        Duration::from_secs(120),
+        Duration::from_secs(180),
+    );
+    let resumed = last.test_loss;
+    let clean = clean_log.rows.last().expect("rows").test_loss;
+    assert!(resumed.is_finite() && clean.is_finite(), "non-finite final losses");
+    let lo = resumed.min(clean);
+    let hi = resumed.max(clean);
+    assert!(
+        hi <= lo.max(1e-3) * 100.0,
+        "crash/resume final loss diverged from the uninterrupted run: {resumed} vs {clean}"
+    );
+
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+// ------------------------------------------------------- conformance soak
+
+fn faulted_conformance_case(preset_file: &str) {
+    // Drop/delay-only plan (no stream-killing faults), both sides of
+    // every socket: lost requests and lost acks become retries under the
+    // exactly-once protocol, so the run must still land inside the same
+    // conformance band as the in-process threaded driver.
+    let ch = ChaosConfig {
+        seed: 7,
+        delay_prob: 0.10,
+        delay_ms: 1,
+        drop_prob: 0.03,
+        ..ChaosConfig::default()
+    };
+
+    let mut cfg = preset_cfg(preset_file);
+    cfg.chaos = Some(ch.clone());
+    cfg.validate().expect("faulted conformance config");
+    let plan = FaultPlan::compile(&ch);
+    let (served, reports, stats) = run_chaos_loopback(
+        &cfg,
+        Some(plan),
+        CLIENTS,
+        Duration::from_secs(150),
+        Duration::from_secs(240),
+    );
+
+    let mut clean = cfg.clone();
+    clean.chaos = None;
+    let threaded = run_threaded_baseline(&clean);
+    assert_conformant(preset_file, &served, &threaded);
+
+    // Exactly-once accounting under frame loss: clients may miss acks
+    // they were owed at shutdown (the retry has nowhere to go), but can
+    // never observe more applies than the model has version increments.
+    let applied: u64 = reports.iter().map(|r| r.applied).sum();
+    let last = served.rows.last().expect("rows").epoch as u64;
+    assert!(applied <= last, "{preset_file}: {applied} applied acks for {last} versions");
+    assert!(applied > 0, "{preset_file}: no client ever observed an applied ack");
+    // The server answered every admitted update it didn't crash on.
+    let ld = Ordering::Relaxed;
+    let (adm, ack, shed) = (stats.admitted.load(ld), stats.acked.load(ld), stats.shed.load(ld));
+    assert!(ack + shed >= adm, "{preset_file}: admitted updates left unanswered");
+}
+
+#[test]
+fn faulted_loopback_conforms_on_straggler_preset() {
+    faulted_conformance_case("scenario_straggler.toml");
+}
+
+#[test]
+fn faulted_loopback_conforms_on_churn_preset() {
+    faulted_conformance_case("scenario_churn.toml");
+}
+
+// ------------------------------------------------------- dedup property
+
+#[test]
+fn retried_pushes_are_replayed_not_reapplied() {
+    // One tracked client drives every epoch by hand and storms each
+    // update's sequence number after the ack: every retry must come back
+    // byte-identical to the original ack, from the dedup table, with the
+    // model version pinned in place.
+    const EPOCHS: usize = 30;
+    let cfg = plain_cfg(EPOCHS, EPOCHS / 2);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let stats = Arc::new(ServingStats::default());
+    let (done_rx, svc) = spawn_served(&cfg, listener, Arc::clone(&stats));
+
+    let opts = ClientOpts {
+        client_id: 77,
+        chaos: None,
+        reply_timeout: Some(Duration::from_secs(5)),
+    };
+    let mut client = SwarmClient::connect_with(&addr, opts).expect("connect");
+    let mut applied_acks: u64 = 0;
+    let mut storms: u64 = 0;
+    loop {
+        // After the final ack the server tears down, so a failed pull is
+        // the normal end of the conversation.
+        let (tau, params) = match client.pull() {
+            Ok(snap) => snap,
+            Err(_) => break,
+        };
+        if tau >= EPOCHS as u64 {
+            break;
+        }
+        let device = (tau % CONF_DEVICES as u64) as u32;
+        let loss = 1.0f32;
+        let outcome = client.push(device, tau, loss, params.clone()).expect("push");
+        let PushOutcome::Acked { version, applied } = outcome else {
+            panic!("the only client in the world was shed: {outcome:?}");
+        };
+        assert!(applied, "a fresh update from the only client must apply");
+        applied_acks += 1;
+        // Storm only while the server is guaranteed alive (the ack that
+        // reaches the epoch target triggers teardown).
+        if version < EPOCHS as u64 {
+            for _ in 0..2 {
+                let replay = client.retry_push(device, tau, loss, params.clone()).expect("retry");
+                assert_eq!(
+                    replay,
+                    PushOutcome::Acked { version, applied: true },
+                    "a replayed ack must be identical to the original"
+                );
+                storms += 1;
+            }
+            let status = client.status().expect("status round trip");
+            assert_eq!(status.version, version, "a retry storm advanced the model");
+        }
+    }
+    drop(client);
+    let log = done_rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("served engine deadlocked")
+        .expect("served run failed");
+    svc.join().expect("native service join");
+
+    let last = log.rows.last().expect("rows");
+    assert_eq!(last.epoch, EPOCHS, "every distinct update applies exactly once");
+    assert_eq!(applied_acks, EPOCHS as u64, "one applied ack per distinct update");
+    let ld = Ordering::Relaxed;
+    assert_eq!(
+        stats.deduped.load(ld),
+        storms,
+        "every retry must be answered from the dedup table, none applied"
+    );
+    assert_eq!(
+        stats.acked.load(ld),
+        EPOCHS as u64,
+        "the engine resolved exactly one ack per distinct update"
+    );
+}
+
+// --------------------------------------------------- backoff termination
+
+#[test]
+fn attempt_cap_terminates_retry_loops_under_persistent_shed() {
+    // A stub server that sheds every update, forever.  The client's
+    // attempt cap must turn each update into a bounded retry ladder —
+    // exactly `max_push_attempts` sheds, then the update is abandoned and
+    // counted — instead of an unbounded backoff loop.
+    const CAP: u32 = 4;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind stub");
+    let addr = listener.local_addr().expect("stub addr");
+    let stub = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().expect("stub accept");
+        let mut reader = FrameReader::new();
+        let mut scratch = Vec::new();
+        let mut sheds: u64 = 0;
+        loop {
+            match reader.read_frame(&mut stream) {
+                Ok(Some(Frame::PullModel)) => {
+                    let snap = Frame::ModelSnapshot { version: 0, params: vec![0.0; 6] };
+                    if write_frame(&mut stream, &snap, &mut scratch).is_err() {
+                        break;
+                    }
+                }
+                Ok(Some(Frame::ClientUpdate { .. })) => {
+                    sheds += 1;
+                    if write_frame(&mut stream, &Frame::Shed { retry_after_ms: 1 }, &mut scratch)
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                Ok(Some(_)) => break,
+                Ok(None) => continue,
+                Err(_) => break, // client hung up: done
+            }
+        }
+        sheds
+    });
+
+    let cfg = plain_cfg(CONF_EPOCHS, CONF_EPOCHS / 4);
+    let behavior = scenario::behavior_for(&cfg, CONF_DEVICES, CONF_SEED);
+    let trainer = conformance_quad();
+    let mut fleet = dummy_fleet(CONF_DEVICES, 7);
+    let data = dummy_dataset();
+    let loop_cfg = ClientLoop {
+        behavior: behavior.as_ref(),
+        devices: CONF_DEVICES,
+        epochs: CONF_EPOCHS as u64,
+        gamma: cfg.gamma,
+        rho: cfg.rho,
+        seed: 9,
+        deadline: Duration::from_secs(4),
+        client_id: 5,
+        max_push_attempts: CAP,
+        chaos: None,
+    };
+    let report =
+        run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg).expect("client loop");
+    let stub_sheds = stub.join().expect("stub join");
+
+    assert!(report.abandoned >= 1, "no update was ever abandoned: {report:?}");
+    assert_eq!(report.acked, 0, "the stub never acks, yet the client recorded acks");
+    assert_eq!(report.pushed, 0, "pushed counts accepted updates only");
+    // The cap is exact per abandoned update; the deadline may interrupt
+    // one final ladder partway.
+    assert!(
+        report.shed >= report.abandoned * u64::from(CAP),
+        "an update was abandoned after fewer than {CAP} attempts: {report:?}"
+    );
+    assert!(
+        stub_sheds >= report.shed,
+        "client observed more sheds ({}) than the server sent ({stub_sheds})",
+        report.shed
+    );
+}
+
+// ------------------------------------------------------- hostile smoke
+
+#[test]
+fn hostile_fault_plan_cannot_wedge_or_overcount() {
+    // Every fault type armed at low rates on both sides: resets and
+    // truncations kill streams mid-frame, duplicated frames desync the
+    // reply stream, bit flips feed the decoder garbage.  Resilient
+    // clients absorb all of it by redialing; the run must still reach its
+    // target, and the exactly-once bound must hold.
+    let ch = ChaosConfig {
+        seed: 11,
+        delay_prob: 0.05,
+        delay_ms: 1,
+        drop_prob: 0.02,
+        reset_prob: 0.01,
+        truncate_prob: 0.01,
+        duplicate_prob: 0.02,
+        corrupt_prob: 0.01,
+        ..ChaosConfig::default()
+    };
+
+    const EPOCHS: usize = 40;
+    let mut cfg = plain_cfg(EPOCHS, EPOCHS / 4);
+    cfg.chaos = Some(ch.clone());
+    cfg.validate().expect("hostile chaos config");
+    let plan = FaultPlan::compile(&ch);
+    let (log, reports, stats) = run_chaos_loopback(
+        &cfg,
+        Some(plan),
+        CLIENTS,
+        Duration::from_secs(150),
+        Duration::from_secs(240),
+    );
+
+    let last = log.rows.last().expect("rows");
+    assert!(last.epoch >= EPOCHS, "hostile plan stalled the run at {}", last.epoch);
+    let applied: u64 = reports.iter().map(|r| r.applied).sum();
+    assert!(applied <= last.epoch as u64, "more applied acks than version increments");
+    assert!(applied > 0, "no update ever got through the fault plan");
+    assert!(
+        stats.acked.load(Ordering::Relaxed) >= applied,
+        "server acked fewer than clients observed"
+    );
+}

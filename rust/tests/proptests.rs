@@ -1042,15 +1042,22 @@ fn gen_wire_params(g: &mut Gen) -> Vec<f32> {
 
 fn gen_wire_frame(g: &mut Gen) -> fedasync::serving::Frame {
     use fedasync::serving::Frame;
-    match g.index(7) {
+    match g.index(8) {
         0 => Frame::PullModel,
         1 => Frame::ModelSnapshot { version: g.rng.next_u64() >> 20, params: gen_wire_params(g) },
-        2 => Frame::ClientUpdate {
-            device: g.index(1 << 20) as u32,
-            tau: g.rng.next_u64() >> 20,
-            loss: g.f64_in(0.0, 1e6) as f32,
-            params: gen_wire_params(g),
-        },
+        2 => {
+            // Untracked update: client == device, seq == 0 keeps the
+            // legacy kind-2 short encoding.
+            let device = g.index(1 << 20) as u32;
+            Frame::ClientUpdate {
+                device,
+                tau: g.rng.next_u64() >> 20,
+                loss: g.f64_in(0.0, 1e6) as f32,
+                client: u64::from(device),
+                seq: 0,
+                params: gen_wire_params(g),
+            }
+        }
         3 => Frame::Ack {
             version: g.rng.next_u64() >> 20,
             applied: g.bool(),
@@ -1060,8 +1067,17 @@ fn gen_wire_frame(g: &mut Gen) -> fedasync::serving::Frame {
         5 => Frame::Control {
             body: (0..g.size(0, 40)).map(|_| char::from(32 + g.index(90) as u8)).collect(),
         },
-        _ => Frame::ControlReply {
+        6 => Frame::ControlReply {
             body: (0..g.size(0, 40)).map(|_| char::from(32 + g.index(90) as u8)).collect(),
+        },
+        // Tracked update: nonzero seq forces the extended kind-7 frame.
+        _ => Frame::ClientUpdate {
+            device: g.index(1 << 20) as u32,
+            tau: g.rng.next_u64() >> 20,
+            loss: g.f64_in(0.0, 1e6) as f32,
+            client: 1 + (g.rng.next_u64() >> 32),
+            seq: 1 + g.index(1 << 20) as u64,
+            params: gen_wire_params(g),
         },
     }
 }
@@ -1109,7 +1125,7 @@ fn prop_wire_rejects_non_finite_floats() {
             params[g.index(dim)] = bad;
         }
         let frame = if poison_loss || g.bool() {
-            Frame::ClientUpdate { device: 0, tau: 1, loss, params }
+            Frame::ClientUpdate { device: 0, tau: 1, loss, client: 0, seq: 0, params }
         } else {
             Frame::ModelSnapshot { version: 1, params }
         };

@@ -26,8 +26,9 @@ use fedasync::coordinator::server::{run_server_core, serve_native, ComputeJob};
 use fedasync::coordinator::Trainer;
 use fedasync::federated::metrics::MetricsLog;
 use fedasync::scenario;
+use fedasync::serving::wire::encode;
 use fedasync::serving::{
-    run_quad_client, run_served_core, ClientLoop, ClientReport, ServingStats, SwarmClient,
+    run_quad_client, run_served_core, ClientLoop, ClientReport, Frame, ServingStats, SwarmClient,
 };
 
 const CONF_DEVICES: usize = 16;
@@ -149,6 +150,9 @@ fn run_loopback(
                     rho,
                     seed: CONF_SEED + 100 * (c as u64 + 1),
                     deadline: Duration::from_secs(120),
+                    client_id: 0,
+                    max_push_attempts: 0,
+                    chaos: None,
                 };
                 run_quad_client(addr, &trainer, &mut fleet, &data, &loop_cfg)
                     .unwrap_or_else(|e| panic!("client {c}: {e}"))
@@ -258,6 +262,34 @@ fn drain_acks_every_version_increment_exactly_once() {
         s_acked + s_shed >= s_admitted,
         "admitted updates left unanswered: admitted {s_admitted}, acked {s_acked}, shed {s_shed}"
     );
+}
+
+#[test]
+fn stalled_reader_cannot_pin_a_handler_past_its_write_timeout() {
+    // A peer that pumps requests but never drains replies: the handler's
+    // reply writes back up through both TCP windows and block.  Without a
+    // write timeout that handler thread is pinned forever (and the
+    // shutdown drain would wedge joining it); with one, the write fails,
+    // the peer is dropped, and the run finishes on the healthy clients.
+    let mut cfg = plain_cfg(40, 10);
+    cfg.serving.as_mut().expect("serving block").write_timeout_ms = 150;
+    let (log, reports, _stats) = run_loopback(&cfg, 2, |addr| {
+        let mut stall = TcpStream::connect(addr).expect("staller connect");
+        // Our own writes must also fail once the request direction backs
+        // up, or this hook would block in write_all instead of stalling.
+        stall
+            .set_write_timeout(Some(Duration::from_millis(100)))
+            .expect("staller write timeout");
+        let frame = encode(&Frame::PullModel);
+        while stall.write_all(&frame).is_ok() {}
+        // Keep the wedged socket open while the server recovers: the
+        // handler must escape via its write timeout, not via our EOF.
+        std::thread::sleep(Duration::from_millis(500));
+        drop(stall);
+    });
+    let last = log.rows.last().expect("rows");
+    assert!(last.epoch >= 40, "a stalled reader pinned the run at {}", last.epoch);
+    assert!(reports.iter().map(|r| r.acked).sum::<u64>() > 0, "healthy clients starved");
 }
 
 #[test]
